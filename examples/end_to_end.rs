@@ -1,0 +1,169 @@
+//! **End-to-end driver** — exercises every layer of the stack on a real
+//! small workload and reports the paper's headline metric (compression
+//! ratios) plus serving latency/throughput:
+//!
+//! 1. L2/L1 artifacts: the XLA runtime loads the AOT-compiled JAX+Pallas
+//!    Lloyd step (`make artifacts`) — clustering below runs through PJRT;
+//! 2. forest substrate: trains `treeBagger`-style forests on three
+//!    synthetic datasets (regression + binary + multiclass);
+//! 3. Algorithm 1: compresses each, verifies bit-exact reconstruction,
+//!    reports standard/light/ours sizes — the Table-2 metric;
+//! 4. §7 lossy: quantizes + subsamples the regression forest and reports
+//!    the rate/distortion point;
+//! 5. L3 serving: loads everything into the model store, serves a batched
+//!    TCP workload from the compressed bytes, and reports latency and
+//!    throughput.
+//!
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example end_to_end
+//! cargo run --release --example end_to_end -- --trees 100 --requests 500
+//! ```
+
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::server::{Client, Server};
+use rf_compress::coordinator::store::ModelStore;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::{synthetic, Column, Dataset};
+use rf_compress::lossy;
+use rf_compress::util::cli::Args;
+use rf_compress::util::stats::{human_bytes, OnlineStats};
+use rf_compress::util::Pcg64;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn wire_row(ds: &Dataset, row: usize) -> String {
+    ds.features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => format!("{}", v[row]),
+            Column::Categorical { values, .. } => format!("c{}", values[row]),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let trees = args.get_or("trees", 60usize);
+    let n_requests = args.get_or("requests", 300usize);
+    let total_t0 = Instant::now();
+
+    // ---- 1. runtime + coordinator ----
+    let mut coord = Coordinator::new();
+    println!("[1/5] clustering engine: {}", coord.engine_name());
+
+    // ---- 2+3. train + compress + verify three workloads ----
+    let workloads: Vec<(&str, Dataset)> = vec![
+        ("airfoil+ (regression)", synthetic::airfoil_regression(1234)),
+        ("naval* (binary)", synthetic::naval_classification(1234)),
+        ("iris (3-class)", synthetic::iris(1234)),
+    ];
+    let store = Arc::new(ModelStore::new());
+    let mut datasets = Vec::new();
+    println!("[2/5] training {} trees per forest; [3/5] compressing:", trees);
+    for (name, ds) in workloads {
+        let (forest, cf, report) =
+            coord.train_and_compress(&ds, trees, 7, &CompressOptions::default())?;
+        let restored = cf.decompress()?;
+        assert!(restored.identical(&forest), "{name}: losslessness violated");
+        println!(
+            "  {name:<24} {} nodes  standard {:>10}  light {:>10}  ours {:>10}  (1:{:.1}/1:{:.1})  lossless ✓",
+            report.total_nodes,
+            human_bytes(report.standard_bytes),
+            human_bytes(report.light_bytes),
+            human_bytes(report.ours_bytes),
+            report.standard_ratio(),
+            report.light_ratio()
+        );
+        let key = name.split_whitespace().next().unwrap();
+        store.insert(key, &cf)?;
+        datasets.push((key.to_string(), ds, forest));
+    }
+
+    // ---- 4. lossy point on the regression forest ----
+    let (_, airfoil_ds, airfoil_forest) = &datasets[0];
+    let mut rng = Pcg64::new(3);
+    let tt = airfoil_ds.train_test_split(0.8, &mut rng);
+    let eval_forest = coord.train(&tt.train, trees, 7);
+    let full_mse = eval_forest.test_error(&tt.test);
+    let (qf, _) = lossy::quantize_fits(&eval_forest, 7, lossy::QuantizeMethod::Uniform)?;
+    let sub = lossy::subsample_trees(&qf, (trees / 4).max(2), 5);
+    let lossy_mse = sub.test_error(&tt.test);
+    let (cf_lossless, _) = coord.run_job(&tt.train, &eval_forest, &CompressOptions::default(), 0.0)?;
+    let (cf_lossy, _) = coord.run_job(&tt.train, &sub, &CompressOptions::default(), 0.0)?;
+    println!(
+        "[4/5] lossy (7-bit fits, |A0|={}): {} → {} ({:.1}x), MSE {:.4} → {:.4}",
+        sub.num_trees(),
+        human_bytes(cf_lossless.total_bytes()),
+        human_bytes(cf_lossy.total_bytes()),
+        cf_lossless.total_bytes() as f64 / cf_lossy.total_bytes() as f64,
+        full_mse,
+        lossy_mse
+    );
+    let _ = airfoil_forest;
+
+    // ---- 5. serve a batched TCP workload ----
+    let server = Server::start(store.clone(), 0)?;
+    println!("[5/5] serving {} models ({}) on {}", store.len(), human_bytes(store.resident_bytes()), server.addr());
+    let addr = server.addr();
+    let t0 = Instant::now();
+    let mut latency = OnlineStats::new();
+    let n_clients = 4usize;
+    let per_client = n_requests / n_clients;
+    let stats: Vec<OnlineStats> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let datasets = &datasets;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut rng = Pcg64::new(100 + c as u64);
+                    let mut local = OnlineStats::new();
+                    for _ in 0..per_client {
+                        let (key, ds, forest) = &datasets[rng.gen_index(datasets.len())];
+                        let row = rng.gen_index(ds.num_rows());
+                        let req = format!("PREDICT {key} {}", wire_row(ds, row));
+                        let q0 = Instant::now();
+                        let reply = client.request(&req).unwrap();
+                        local.push(q0.elapsed().as_secs_f64() * 1e3);
+                        assert!(reply.starts_with("OK "), "{reply}");
+                        // verify against the original forest
+                        let expect = if forest.classification {
+                            format!("OK {}", forest.predict_class(ds, row))
+                        } else {
+                            format!("OK {}", forest.predict_regression(ds, row))
+                        };
+                        assert_eq!(reply, expect, "prediction from compressed store differs");
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for s in &stats {
+        latency.merge(s);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let served = latency.count();
+    println!(
+        "      {served} requests / {n_clients} clients in {wall:.2}s → {:.0} req/s",
+        served as f64 / wall
+    );
+    println!(
+        "      latency: mean {:.2} ms, max {:.2} ms (every reply verified against the uncompressed forest)",
+        latency.mean(),
+        latency.max()
+    );
+    let st = store.stats();
+    println!(
+        "      store: {} requests in {} batches (mean batch {:.1})",
+        st.requests,
+        st.batches,
+        st.requests as f64 / st.batches.max(1) as f64
+    );
+    server.stop();
+    println!("\nend-to-end OK in {:.1}s — all layers composed", total_t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! The subscriber-device scenario (paper §1): a model store holding many
+//! compressed per-user forests, serving predictions over TCP straight from
+//! the compressed bytes. Starts a server, drives a short client session,
+//! prints store stats, and exits (pass `--keep-running` to stay up).
+//!
+//! ```text
+//! cargo run --release --example model_store_server
+//! cargo run --release --example model_store_server -- --port 7878 --keep-running
+//! ```
+
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::server::{Client, Server};
+use rf_compress::coordinator::store::ModelStore;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::{synthetic, Column};
+use rf_compress::util::cli::Args;
+use rf_compress::util::stats::human_bytes;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let trees = args.get_or("trees", 30usize);
+    let port: u16 = args.get_or("port", 0u16);
+
+    // each "subscriber" gets a personal model
+    let store = Arc::new(ModelStore::new());
+    let mut coord = Coordinator::new();
+    for (user, ds) in [
+        ("alice", synthetic::iris(1)),
+        ("bob", synthetic::wages(2)),
+        ("carol", synthetic::airfoil_classification(3)),
+    ] {
+        let (_, cf, report) =
+            coord.train_and_compress(&ds, trees, 7, &CompressOptions::default())?;
+        store.insert(user, &cf)?;
+        println!(
+            "{user}: {} model stored ({} vs light {})",
+            ds.name,
+            human_bytes(report.ours_bytes),
+            human_bytes(report.light_bytes)
+        );
+    }
+    println!("store resident: {}\n", human_bytes(store.resident_bytes()));
+
+    let server = Server::start(store.clone(), port)?;
+    println!("serving on {}", server.addr());
+
+    // client session
+    let mut client = Client::connect(server.addr())?;
+    println!("> LIST\n< {}", client.request("LIST")?);
+    // query alice's model with a row from her dataset
+    let ds = synthetic::iris(1);
+    let wire = |row: usize| {
+        ds.features
+            .iter()
+            .map(|f| match &f.column {
+                Column::Numeric(v) => format!("{}", v[row]),
+                Column::Categorical { values, .. } => format!("c{}", values[row]),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    for row in [0, 50, 100] {
+        let req = format!("PREDICT alice {}", wire(row));
+        println!("> {req}\n< {}", client.request(&req)?);
+    }
+    println!("> STATS\n< {}", client.request("STATS")?);
+    println!("> BYTES\n< {}", client.request("BYTES")?);
+
+    if args.flag("keep-running") {
+        println!("(press ctrl-c to stop)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    server.stop();
+    Ok(())
+}

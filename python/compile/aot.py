@@ -1,0 +1,57 @@
+"""AOT lowering: jax → HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes one `lloyd_step_{M}x{B}x{K}.hlo.txt` per shape bucket plus a
+`manifest.txt` (one line per artifact: M B K filename) the rust runtime
+reads to pick the smallest bucket that fits a clustering problem.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for m, b, k in model.BUCKETS:
+        fname = f"lloyd_step_{m}x{b}x{k}.hlo.txt"
+        lowered = jax.jit(lambda p, w, q: model.lloyd_step(p, w, q, interpret=True)).lower(
+            *model.example_args(m, b, k)
+        )
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{m} {b} {k} {fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the weighted cross-entropy matmul at the heart of the
+Bregman clustering objective (paper eq. 6).
+
+The M×K divergence matrix decomposes as
+
+    n_i * D_KL(P_i || Q_k) = selfh_i  -  CE[i, k]
+    selfh_i  = n_i * sum_b P_ib * log2(P_ib)          (assignment-invariant)
+    CE[i, k] = sum_b W_ib * LQ_kb,   W = n[:, None] * P,  LQ = log2(clamp(Q))
+
+so the hot spot is `CE = W @ LQ.T` — an (M×B)·(B×K) matmul that maps onto
+the TPU MXU. This kernel computes exactly that contraction.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (M/TM, K/TK, B/TB); the B axis is innermost so each (i, k) output
+    tile accumulates across B-tiles while staying resident in VMEM.
+  * BlockSpecs stream (TM×TB) slabs of W and (TK×TB) slabs of LQ from HBM;
+    Pallas double-buffers the HBM→VMEM copies across grid steps.
+  * VMEM footprint per step = TM*TB + TK*TB + TM*TK floats
+    (128*256 + 16*256 + 128*16 = 38,912 f32 ≈ 152 KiB — far under the
+    ~16 MiB VMEM budget; the tile sizes trade pipelining depth against MXU
+    occupancy: TM=128 feeds full 128-lane MXU rows).
+  * `interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf.
+
+Correctness oracle: `ref.cross_entropy_matrix` (pure jnp); pytest sweeps
+shapes/dtypes with hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. B and K bucket sizes in aot.py are multiples of these; M
+# buckets are multiples of TILE_M.
+TILE_M = 128
+TILE_K = 16
+TILE_B = 256
+# §Perf iterations 2–3: when the padded shape allows, use wider M/B tiles —
+# fewer grid steps (fewer HBM↔VMEM round-trips per output tile on TPU;
+# fewer interpret-mode dispatches on CPU). VMEM/step at (TM,TB)=(256,512):
+# 256*512 + 16*512 + 256*16 = 143,360 f32 ≈ 560 KiB — still ≪ 16 MiB.
+TILE_B_WIDE = 512
+TILE_M_WIDE = 256
+
+# Floor for log2 of centroid entries: zero-probability (padding) entries
+# clamp here, making padded clusters maximally unattractive (the rust
+# coordinator relies on this to mask padded K rows).
+LOG_CLAMP = 1e-30
+
+
+def _ce_kernel(w_ref, lq_ref, o_ref):
+    """One grid step: accumulate a (TM, TK) output tile over one B-slab."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TM, TB) @ (TB, TK) -> (TM, TK); jnp.dot on the MXU in f32
+    o_ref[...] += jnp.dot(
+        w_ref[...], lq_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cross_entropy_matrix(w, lq, *, interpret=True):
+    """CE[i, k] = sum_b w[i, b] * lq[k, b] via the Pallas kernel.
+
+    Args:
+      w:  (M, B) float32 — weight-scaled distributions (n_i * P_i).
+      lq: (K, B) float32 — log2 of (clamped) centroids.
+    Returns:
+      (M, K) float32.
+    """
+    m, b = w.shape
+    k, b2 = lq.shape
+    assert b == b2, f"alphabet mismatch {b} vs {b2}"
+    tb = TILE_B_WIDE if b % TILE_B_WIDE == 0 else TILE_B
+    tm = TILE_M_WIDE if m % TILE_M_WIDE == 0 else TILE_M
+    assert m % tm == 0, f"M={m} must be a multiple of {tm}"
+    assert k % TILE_K == 0, f"K={k} must be a multiple of {TILE_K}"
+    assert b % tb == 0, f"B={b} must be a multiple of {tb}"
+    grid = (m // tm, k // TILE_K, b // tb)
+    return pl.pallas_call(
+        _ce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tb), lambda i, j, bb: (i, bb)),
+            pl.BlockSpec((TILE_K, tb), lambda i, j, bb: (j, bb)),
+        ],
+        out_specs=pl.BlockSpec((tm, TILE_K), lambda i, j, bb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(w, lq)
+
+
+def log2_clamped(q):
+    """log2 with the padding clamp the kernel contract expects."""
+    return jnp.log2(jnp.maximum(q, LOG_CLAMP))

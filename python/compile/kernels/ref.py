@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the L2 Lloyd step.
+
+These are the ground truth the pytest suite checks against; they use no
+Pallas and no tiling, just dense jnp ops.
+"""
+
+import jax.numpy as jnp
+
+LOG_CLAMP = 1e-30
+
+
+def cross_entropy_matrix(w, lq):
+    """CE[i, k] = sum_b w[i, b] * lq[k, b] — the kernel's contract."""
+    return w @ lq.T
+
+
+def _one_hot(idx, k):
+    return (idx[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+
+
+def lloyd_step(p, w, q):
+    """One weighted-KL Lloyd iteration, dense reference.
+
+    Args:
+      p: (M, B) distributions (rows sum to 1; padded rows all-zero).
+      w: (M,) sequence-length weights (0 = padded row).
+      q: (K, B) centroids (zero rows = padded clusters).
+    Returns:
+      assign: (M,) int32 argmin_k of n_i*KL(P_i||Q_k)
+      new_q:  (K, B) weighted member means (zero rows for empty clusters)
+      obj:    () float32 — sum_i n_i * KL(P_i || Q_assign_i)
+    """
+    wp = p * w[:, None]
+    lq = jnp.log2(jnp.maximum(q, LOG_CLAMP))
+    ce = cross_entropy_matrix(wp, lq)  # (M, K)
+    logp = jnp.where(p > 0, jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+    selfh = jnp.sum(wp * logp, axis=1)  # (M,)
+    d = selfh[:, None] - ce  # (M, K): n_i * KL(P_i || Q_k)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    obj = jnp.sum(jnp.min(d, axis=1))
+    onehot = _one_hot(assign, q.shape[0])  # (M, K)
+    mass = onehot.T @ w  # (K,)
+    raw = onehot.T @ wp  # (K, B)
+    new_q = jnp.where(mass[:, None] > 0, raw / jnp.maximum(mass[:, None], 1e-30), 0.0)
+    return assign, new_q, obj

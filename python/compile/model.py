@@ -1,0 +1,68 @@
+"""L2: the JAX compute graph AOT-compiled for the rust coordinator — one
+weighted-KL Lloyd iteration (assignment + centroid update + objective),
+built on the L1 Pallas cross-entropy kernel.
+
+The rust side (`rust/src/runtime/xla_engine.rs`) drives the host-side loop
+(convergence test, empty-cluster repair, K sweep); this graph is the
+matmul-shaped inner step. Padding contract (shared with rust):
+
+  * padded rows   : p = 0, w = 0   → contribute 0 to the objective, argmin
+                    value irrelevant (rust ignores them);
+  * padded columns: p = 0 and q = 0 beyond the real alphabet → zero weight
+                    ⇒ no contribution;
+  * padded clusters: q rows all-zero → log2(clamp) ≈ −99.7 makes them
+                    maximally unattractive, so real rows never pick them.
+
+Fusion notes (§Perf): the divergence matrix `d` feeds both the argmin and
+the min; XLA fuses `selfh` broadcast + subtraction + both reductions into
+the kernel's consumer, so the M×K matrix is produced once (verified on the
+lowered HLO by `tests/test_model.py::test_single_ce_matmul_in_hlo`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kl_matrix
+from .kernels.kl_matrix import LOG_CLAMP
+
+
+def lloyd_step(p, w, q, *, interpret=True):
+    """One Lloyd iteration. Shapes: p (M,B) f32, w (M,) f32, q (K,B) f32.
+
+    Returns (assign (M,) i32, new_q (K,B) f32, obj () f32).
+    """
+    m, b = p.shape
+    k, _ = q.shape
+    wp = p * w[:, None]
+    lq = kl_matrix.log2_clamped(q)
+    ce = kl_matrix.cross_entropy_matrix(wp, lq, interpret=interpret)  # (M, K)
+    logp = jnp.where(p > 0, jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+    selfh = jnp.sum(wp * logp, axis=1)
+    d = selfh[:, None] - ce
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    obj = jnp.sum(jnp.min(d, axis=1))
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    mass = onehot.T @ w
+    raw = onehot.T @ wp
+    new_q = jnp.where(mass[:, None] > 0, raw / jnp.maximum(mass[:, None], 1e-30), 0.0)
+    return assign, new_q, obj
+
+
+# Shape buckets lowered by aot.py. (M, B, K) — M, B, K must be multiples of
+# the kernel tiles (128, 256, 16). Larger alphabets (huge regression fit
+# tables) fall back to the rust NativeEngine; DESIGN.md §2 records this.
+BUCKETS = [
+    (128, 256, 16),
+    (512, 256, 16),
+    (512, 1024, 16),
+    (2048, 2048, 16),
+]
+
+
+def example_args(m, b, k):
+    spec = jax.ShapeDtypeStruct
+    return (
+        spec((m, b), jnp.float32),
+        spec((m,), jnp.float32),
+        spec((k, b), jnp.float32),
+    )

@@ -1,0 +1,2 @@
+# makes `pytest python/tests/` work from the repo root: pytest inserts
+# this directory (python/) into sys.path, so `compile.*` imports resolve.

@@ -1,0 +1,81 @@
+"""L1 kernel correctness: Pallas cross-entropy matmul vs the pure-jnp
+oracle, swept over shapes and data distributions with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import kl_matrix, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_inputs(rng, m, b, k, sparsity=0.0):
+    w = rng.random((m, b), dtype=np.float32)
+    if sparsity > 0:
+        w *= rng.random((m, b)) > sparsity
+    q = rng.random((k, b), dtype=np.float32) + 1e-6
+    q /= q.sum(axis=1, keepdims=True)
+    lq = np.log2(np.maximum(q, kl_matrix.LOG_CLAMP)).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(lq)
+
+
+TILE_SHAPES = [
+    (128, 256, 16),
+    (256, 256, 16),
+    (128, 512, 16),
+    (128, 256, 32),
+    (384, 768, 48),
+]
+
+
+@pytest.mark.parametrize("m,b,k", TILE_SHAPES)
+def test_kernel_matches_ref(m, b, k):
+    rng = np.random.default_rng(m * 31 + b * 7 + k)
+    w, lq = rand_inputs(rng, m, b, k)
+    got = kl_matrix.cross_entropy_matrix(w, lq)
+    want = ref.cross_entropy_matrix(w, lq)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@hypothesis.given(
+    mi=st.integers(1, 3),
+    bi=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    sparsity=st.sampled_from([0.0, 0.5, 0.95]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_kernel_matches_ref_hypothesis(mi, bi, ki, seed, sparsity):
+    m, b, k = 128 * mi, 256 * bi, 16 * ki
+    rng = np.random.default_rng(seed)
+    w, lq = rand_inputs(rng, m, b, k, sparsity)
+    got = kl_matrix.cross_entropy_matrix(w, lq)
+    want = ref.cross_entropy_matrix(w, lq)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_zero_weight_rows_give_zero():
+    m, b, k = 128, 256, 16
+    rng = np.random.default_rng(0)
+    _, lq = rand_inputs(rng, m, b, k)
+    w = jnp.zeros((m, b), jnp.float32)
+    got = kl_matrix.cross_entropy_matrix(w, lq)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((m, k), np.float32))
+
+
+def test_kernel_rejects_unaligned_shapes():
+    w = jnp.zeros((100, 256), jnp.float32)  # M not multiple of 128
+    lq = jnp.zeros((16, 256), jnp.float32)
+    with pytest.raises(AssertionError):
+        kl_matrix.cross_entropy_matrix(w, lq)
+
+
+def test_log2_clamped_padding_contract():
+    q = jnp.array([[0.0, 0.5, 0.5]], jnp.float32)
+    lq = np.asarray(kl_matrix.log2_clamped(q))
+    assert lq[0, 0] < -90.0, "zero centroid entries must clamp very negative"
+    np.testing.assert_allclose(lq[0, 1], -1.0, rtol=1e-6)

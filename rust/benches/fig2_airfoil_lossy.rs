@@ -1,0 +1,140 @@
+//! **Figure 2** — lossy compression of the Airfoil Self Noise regression
+//! forest: (upper chart) MSE + compressed size vs fit-quantization bits;
+//! (lower chart) MSE + size vs number of subsampled trees at the knee
+//! bit-width. The paper's headline: 7-bit fits shrink 340 KB → ~47 KB and
+//! 250/1000 trees reach ~11 KB, both without meaningful MSE loss.
+//!
+//! ```text
+//! cargo bench --bench fig2_airfoil_lossy                 # 200 trees
+//! cargo bench --bench fig2_airfoil_lossy -- --paper-scale
+//! ```
+//!
+//! The σ²-theory overlay (eq. 7) is printed next to the measured MSE.
+
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic;
+use rf_compress::forest::Fit;
+use rf_compress::lossy::{self, theory};
+use rf_compress::util::bench::{bench_config, Table};
+use rf_compress::util::stats::human_bytes;
+use rf_compress::util::Pcg64;
+
+fn main() {
+    let cfg = bench_config(200);
+    println!("== Figure 2: Airfoil Self Noise lossy compression, {} trees ==", cfg.trees);
+    let ds = synthetic::airfoil_regression(cfg.args.get_or("data-seed", 1234));
+    let mut rng = Pcg64::new(cfg.seed);
+    let tt = ds.train_test_split(0.8, &mut rng);
+    let mut coord = if cfg.args.flag("native") {
+        Coordinator::native_only()
+    } else {
+        Coordinator::new()
+    };
+    let forest = coord.train(&tt.train, cfg.trees, cfg.seed);
+    let full_mse = forest.test_error(&tt.test);
+    let opts = CompressOptions::default();
+    let (cf_full, _) = coord.run_job(&tt.train, &forest, &opts, 0.0).unwrap();
+    println!(
+        "lossless baseline: test MSE {full_mse:.4}, size {} (paper: 340 KB at 1000 trees)\n",
+        human_bytes(cf_full.total_bytes())
+    );
+
+    // ---- upper chart: fits quantization ----
+    println!("-- upper chart: fit quantization (all {} trees) --", cfg.trees);
+    let fit_range = fit_range(&forest);
+    let mut t = Table::new(&["bits", "test MSE", "MSE/lossless", "size", "theory ΔMSE (eq.7)"]);
+    let bits_list: Vec<u32> = cfg.args.get_list("bits").unwrap_or_else(|| vec![2, 3, 4, 5, 6, 7, 8, 10, 12, 16]);
+    for &bits in &bits_list {
+        let (qf, _) = lossy::quantize_fits(&forest, bits, lossy::QuantizeMethod::Uniform).unwrap();
+        let mse = qf.test_error(&tt.test);
+        let (cf, _) = coord.run_job(&tt.train, &qf, &opts, 0.0).unwrap();
+        t.row(&[
+            bits.to_string(),
+            format!("{mse:.4}"),
+            format!("{:.3}", mse / full_mse.max(1e-12)),
+            human_bytes(cf.total_bytes()),
+            format!("{:.2e}", theory::quantization_mse(fit_range, bits)),
+        ]);
+    }
+    t.print();
+
+    // ---- lower chart: tree subsampling at the knee bit-width ----
+    let knee_bits: u32 = cfg.args.get_or("knee-bits", 7);
+    println!("\n-- lower chart: subsampling ({knee_bits}-bit fits) --");
+    let (qf, _) = lossy::quantize_fits(&forest, knee_bits, lossy::QuantizeMethod::Uniform).unwrap();
+    // σ² estimate from per-tree mean errors (paper §7 construction)
+    let sigma2 = estimate_sigma2(&qf, &tt.test);
+    let mut t = Table::new(&["trees |A0|", "test MSE", "MSE/lossless", "size", "σ²/|A0|+σ²/|A| (eq.7)"]);
+    let keeps: Vec<usize> = cfg
+        .args
+        .get_list("keep")
+        .unwrap_or_else(|| {
+            let n = cfg.trees;
+            vec![n, n * 3 / 4, n / 2, n / 4, n / 8, (n / 16).max(2)]
+        });
+    let mut sizes = Vec::new();
+    for &keep in &keeps {
+        let sub = lossy::subsample_trees(&qf, keep, cfg.seed ^ 0xa0);
+        let mse = sub.test_error(&tt.test);
+        let (cf, _) = coord.run_job(&tt.train, &sub, &opts, 0.0).unwrap();
+        sizes.push((keep, cf.total_bytes()));
+        t.row(&[
+            keep.to_string(),
+            format!("{mse:.4}"),
+            format!("{:.3}", mse / full_mse.max(1e-12)),
+            human_bytes(cf.total_bytes()),
+            format!("{:.2e}", theory::subsample_distortion_approx(cfg.trees, keep, sigma2)),
+        ]);
+    }
+    t.print();
+
+    // the paper's "linear threads": size ≈ linear in |A0|
+    if sizes.len() >= 3 {
+        let (k1, s1) = sizes[0];
+        let (k2, s2) = *sizes.last().unwrap();
+        let per_tree = (s1 - s2) as f64 / (k1 - k2) as f64;
+        println!(
+            "\nlinearity check: marginal size ≈ {:.0} B/tree (paper: size curves are linear in |A0|)",
+            per_tree
+        );
+    }
+    println!(
+        "paper endpoint: 250/1000 trees at 7 bits → 11 KB with no significant MSE change"
+    );
+}
+
+fn fit_range(forest: &rf_compress::forest::Forest) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for t in &forest.trees {
+        for n in &t.nodes {
+            if let Fit::Regression(v) = n.fit {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    (hi - lo).max(0.0)
+}
+
+/// σ² from per-tree mean deviation against the ensemble (paper §7).
+fn estimate_sigma2(forest: &rf_compress::forest::Forest, test: &rf_compress::data::Dataset) -> f64 {
+    let n = test.num_rows();
+    let ens: Vec<f64> = (0..n).map(|r| forest.predict_regression(test, r)).collect();
+    let per_tree: Vec<f64> = forest
+        .trees
+        .iter()
+        .map(|t| {
+            let mut acc = 0.0;
+            for r in 0..n {
+                match t.predict_row(test, r) {
+                    Fit::Regression(v) => acc += v - ens[r],
+                    _ => unreachable!(),
+                }
+            }
+            acc / n as f64
+        })
+        .collect();
+    theory::estimate_sigma2(&per_tree)
+}

@@ -1,0 +1,109 @@
+//! **Figure 3** — lossy compression of the Bike Sharing regression forest
+//! (same two sweeps as Figure 2 on a larger dataset). The paper's headline:
+//! 2.38 MB → ~300 KB at 12-bit fits + 600/1000 trees with no significant
+//! generalization change.
+//!
+//! ```text
+//! cargo bench --bench fig3_bike_lossy                 # 150 trees (scaled)
+//! cargo bench --bench fig3_bike_lossy -- --paper-scale
+//! ```
+
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic;
+use rf_compress::lossy::{self, theory};
+use rf_compress::util::bench::{bench_config, Table};
+use rf_compress::util::stats::human_bytes;
+use rf_compress::util::Pcg64;
+
+fn main() {
+    let cfg = bench_config(150);
+    println!("== Figure 3: Bike Sharing lossy compression, {} trees ==", cfg.trees);
+    let ds = synthetic::bike_sharing(cfg.args.get_or("data-seed", 1234));
+    let mut rng = Pcg64::new(cfg.seed);
+    let tt = ds.train_test_split(0.8, &mut rng);
+    let mut coord = if cfg.args.flag("native") {
+        Coordinator::native_only()
+    } else {
+        Coordinator::new()
+    };
+    let t0 = std::time::Instant::now();
+    let forest = coord.train(&tt.train, cfg.trees, cfg.seed);
+    println!("train: {:.1}s", t0.elapsed().as_secs_f64());
+    let full_mse = forest.test_error(&tt.test);
+    let opts = CompressOptions::default();
+    let (cf_full, _) = coord.run_job(&tt.train, &forest, &opts, 0.0).unwrap();
+    println!(
+        "lossless baseline: test MSE {full_mse:.4}, size {} (paper: 2.38 MB at 1000 trees)\n",
+        human_bytes(cf_full.total_bytes())
+    );
+
+    println!("-- upper chart: fit quantization --");
+    let mut t = Table::new(&["bits", "test MSE", "MSE/lossless", "size"]);
+    for &bits in &cfg.args.get_list("bits").unwrap_or_else(|| vec![4, 6, 8, 10, 12, 14, 16]) {
+        let (qf, _) = lossy::quantize_fits(&forest, bits, lossy::QuantizeMethod::Uniform).unwrap();
+        let mse = qf.test_error(&tt.test);
+        let (cf, _) = coord.run_job(&tt.train, &qf, &opts, 0.0).unwrap();
+        t.row(&[
+            bits.to_string(),
+            format!("{mse:.4}"),
+            format!("{:.3}", mse / full_mse.max(1e-12)),
+            human_bytes(cf.total_bytes()),
+        ]);
+    }
+    t.print();
+
+    // paper setting: 12-bit fits, subsample
+    let knee_bits: u32 = cfg.args.get_or("knee-bits", 12);
+    println!("\n-- lower chart: subsampling ({knee_bits}-bit fits; paper keeps 600/1000) --");
+    let (qf, _) = lossy::quantize_fits(&forest, knee_bits, lossy::QuantizeMethod::Uniform).unwrap();
+    let mut t = Table::new(&["trees |A0|", "test MSE", "MSE/lossless", "size", "eq.7 bound"]);
+    let n = cfg.trees;
+    // σ² via per-tree deviations
+    let sigma2 = {
+        let rows = tt.test.num_rows();
+        let ens: Vec<f64> = (0..rows).map(|r| qf.predict_regression(&tt.test, r)).collect();
+        let per_tree: Vec<f64> = qf
+            .trees
+            .iter()
+            .map(|t| {
+                (0..rows)
+                    .map(|r| match t.predict_row(&tt.test, r) {
+                        rf_compress::forest::Fit::Regression(v) => v - ens[r],
+                        _ => unreachable!(),
+                    })
+                    .sum::<f64>()
+                    / rows as f64
+            })
+            .collect();
+        theory::estimate_sigma2(&per_tree)
+    };
+    for keep in [n, n * 6 / 10, n * 4 / 10, n / 4, n / 10].into_iter().filter(|&k| k >= 2) {
+        let sub = lossy::subsample_trees(&qf, keep, cfg.seed ^ 0xb1);
+        let mse = sub.test_error(&tt.test);
+        let (cf, _) = coord.run_job(&tt.train, &sub, &opts, 0.0).unwrap();
+        t.row(&[
+            keep.to_string(),
+            format!("{mse:.4}"),
+            format!("{:.3}", mse / full_mse.max(1e-12)),
+            human_bytes(cf.total_bytes()),
+            format!("{:.2e}", theory::combined_loss_bound(keep, sigma2, fit_range(&qf), knee_bits)),
+        ]);
+    }
+    t.print();
+    println!("\npaper endpoint: 12-bit fits + 600/1000 trees → 300 KB, MSE unchanged");
+}
+
+fn fit_range(forest: &rf_compress::forest::Forest) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for t in &forest.trees {
+        for n in &t.nodes {
+            if let rf_compress::forest::Fit::Regression(v) = n.fit {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    (hi - lo).max(0.0)
+}

@@ -1,0 +1,221 @@
+//! §Perf hot paths:
+//!
+//! * cluster-step: native vs XLA engine at each artifact bucket size
+//! * compression throughput (trees/s) end to end
+//! * prediction latency: compressed prefix-decode vs decompressed forest
+//! * codec microbenches: Huffman encode/decode, arith, LZSS
+//!
+//! Run: `cargo bench --bench hotpath` (add `-- cluster|compress|predict|codec`)
+
+use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
+use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor};
+use rf_compress::data::synthetic;
+use rf_compress::forest::{Forest, ForestParams};
+use rf_compress::runtime::XlaRuntime;
+use rf_compress::util::bench::{bench_config, time_it, Table};
+use rf_compress::util::Pcg64;
+
+fn main() {
+    let cfg = bench_config(40);
+    let which = cfg.args.positional(0).map(|s| s.to_string());
+    let run = |name: &str| which.as_deref().map_or(true, |w| w == name);
+    if run("cluster") {
+        bench_cluster();
+    }
+    if run("compress") {
+        bench_compress(&cfg);
+    }
+    if run("predict") {
+        bench_predict(&cfg);
+    }
+    if run("codec") {
+        bench_codec();
+    }
+}
+
+fn random_problem(seed: u64, m: usize, b: usize, k: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let mut p = vec![0.0; m * b];
+    for i in 0..m {
+        let row = &mut p[i * b..(i + 1) * b];
+        let mut total = 0.0;
+        for x in row.iter_mut() {
+            *x = rng.gen_f64().powi(3);
+            total += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= total;
+        }
+    }
+    let w: Vec<f64> = (0..m).map(|_| (1 + rng.gen_range(999)) as f64).collect();
+    let mut q = vec![0.0; k * b];
+    for i in 0..k {
+        let row = &mut q[i * b..(i + 1) * b];
+        let mut total = 0.0;
+        for x in row.iter_mut() {
+            *x = rng.gen_f64() + 1e-3;
+            total += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= total;
+        }
+    }
+    (p, w, q)
+}
+
+fn bench_cluster() {
+    println!("== cluster step: native vs XLA artifact ==");
+    let rt = XlaRuntime::load_default().ok();
+    if rt.is_none() {
+        println!("(artifacts not built; native only — run `make artifacts`)");
+    }
+    let mut t = Table::new(&["problem (M×B×K)", "native", "xla", "xla/native"]);
+    for &(m, b, k) in &[(128usize, 256usize, 8usize), (512, 256, 8), (512, 1024, 12), (2048, 2048, 12)] {
+        let (p, w, q) = random_problem(1, m, b, k);
+        let mut native = NativeEngine;
+        let tn = time_it(0.4, 3, || {
+            native.step(&p, &w, &q, m, b, k).unwrap();
+        });
+        let (tx_s, ratio) = if let Some(rt) = &rt {
+            if rt.fits(m, b, k) {
+                let tx = time_it(0.4, 3, || {
+                    rt.try_step(&p, &w, &q, m, b, k).unwrap().unwrap();
+                });
+                (format!("{tx}"), format!("{:.2}x", tx.median / tn.median))
+            } else {
+                ("no bucket".into(), "-".into())
+            }
+        } else {
+            ("-".into(), "-".into())
+        };
+        t.row(&[format!("{m}×{b}×{k}"), format!("{tn}"), tx_s, ratio]);
+    }
+    t.print();
+    println!();
+}
+
+fn bench_compress(cfg: &rf_compress::util::bench::BenchConfig) {
+    println!("== end-to-end compression throughput ==");
+    let mut t = Table::new(&["dataset", "trees", "nodes", "compress", "trees/s", "Mnodes/s"]);
+    for (name, ds) in [
+        ("wages", synthetic::wages(1234)),
+        ("airfoil*", synthetic::airfoil_classification(1234)),
+        ("naval*", synthetic::naval_classification(1234)),
+    ] {
+        let n = cfg.trees;
+        let params = ForestParams::classification(n);
+        let forest = Forest::train(&ds, &params, cfg.seed);
+        let opts = CompressOptions::default();
+        let tc = time_it(1.0, 3, || {
+            CompressedForest::compress(&forest, &ds, &opts).unwrap();
+        });
+        t.row(&[
+            name.into(),
+            n.to_string(),
+            forest.total_nodes().to_string(),
+            format!("{tc}"),
+            format!("{:.0}", tc.per_sec(n as f64)),
+            format!("{:.2}", tc.per_sec(forest.total_nodes() as f64) / 1e6),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+fn bench_predict(cfg: &rf_compress::util::bench::BenchConfig) {
+    println!("== prediction latency: compressed vs decompressed ==");
+    let ds = synthetic::airfoil_classification(1234);
+    let forest = Forest::train(&ds, &ForestParams::classification(cfg.trees), cfg.seed);
+    let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let pc = cf.parse().unwrap();
+    let predictor = CompressedPredictor::new(pc).unwrap();
+    let decompressed = cf.decompress().unwrap();
+
+    let rows: Vec<usize> = (0..ds.num_rows()).step_by(37).collect();
+    let mut i = 0usize;
+    let t_comp = time_it(1.0, 5, || {
+        let row = rows[i % rows.len()];
+        i += 1;
+        predictor.predict_row(&ds, row).unwrap();
+    });
+    let mut j = 0usize;
+    let t_full = time_it(1.0, 5, || {
+        let row = rows[j % rows.len()];
+        j += 1;
+        decompressed.predict_class(&ds, row);
+    });
+    let t_batch = time_it(1.0, 3, || {
+        predictor.predict_all(&ds).unwrap();
+    });
+    let mut t = Table::new(&["mode", "latency/query", "notes"]);
+    t.row(&["decompressed forest".into(), format!("{t_full}"), "full tree walk".into()]);
+    t.row(&[
+        "compressed, per-row".into(),
+        format!("{t_comp}"),
+        format!("{:.0}x full-walk cost (prefix decode)", t_comp.median / t_full.median),
+    ]);
+    t.row(&[
+        "compressed, batch".into(),
+        format!("{:.2} µs/row", t_batch.median * 1e6 / ds.num_rows() as f64),
+        "per-tree decode amortized over all rows".into(),
+    ]);
+    t.print();
+    println!(
+        "memory: container {} vs decompressed forest ~{} nodes\n",
+        rf_compress::util::stats::human_bytes(cf.total_bytes()),
+        decompressed.total_nodes()
+    );
+}
+
+fn bench_codec() {
+    println!("== codec microbenches ==");
+    let mut rng = Pcg64::new(3);
+    // skewed 64-symbol alphabet
+    let weights: Vec<f64> = (0..64).map(|i| 1.0 / (i + 1) as f64).collect();
+    let code = rf_compress::coding::huffman::HuffmanCode::from_weights(&weights).unwrap();
+    let syms: Vec<u32> = (0..100_000)
+        .map(|_| {
+            let mut u = rng.gen_f64() * weights.iter().sum::<f64>();
+            for (i, &w) in weights.iter().enumerate() {
+                if u < w {
+                    return i as u32;
+                }
+                u -= w;
+            }
+            63
+        })
+        .collect();
+    let mut w = rf_compress::coding::bitio::BitWriter::new();
+    code.encode_all(&syms, &mut w).unwrap();
+    let bytes = w.as_bytes().to_vec();
+    let dec = code.decoder();
+
+    let t_enc = time_it(0.5, 3, || {
+        let mut w = rf_compress::coding::bitio::BitWriter::new();
+        code.encode_all(&syms, &mut w).unwrap();
+    });
+    let t_dec = time_it(0.5, 3, || {
+        let mut r = rf_compress::coding::bitio::BitReader::new(&bytes);
+        dec.decode_all(&mut r, syms.len()).unwrap();
+    });
+
+    // LZ on repetitive input
+    let data: Vec<u8> = b"1111001001001111001000".iter().cycle().take(200_000).copied().collect();
+    let t_lz = time_it(0.5, 3, || {
+        rf_compress::coding::lz::compress_to_bytes(&data);
+    });
+
+    let model = rf_compress::coding::arith::FreqModel::from_freqs(&[95, 5]).unwrap();
+    let bits: Vec<u32> = (0..100_000).map(|_| rng.gen_bool(0.05) as u32).collect();
+    let t_arith = time_it(0.5, 3, || {
+        let mut w = rf_compress::coding::bitio::BitWriter::new();
+        rf_compress::coding::arith::encode_sequence(&model, &bits, &mut w).unwrap();
+    });
+
+    let mut t = Table::new(&["codec", "time", "Msym/s"]);
+    t.row(&["huffman encode (100k syms)".into(), format!("{t_enc}"), format!("{:.1}", t_enc.per_sec(0.1))]);
+    t.row(&["huffman decode (100k syms)".into(), format!("{t_dec}"), format!("{:.1}", t_dec.per_sec(0.1))]);
+    t.row(&["lzss compress (200 KB)".into(), format!("{t_lz}"), format!("{:.1} MB/s", t_lz.per_sec(0.2))]);
+    t.row(&["arith encode (100k bits)".into(), format!("{t_arith}"), format!("{:.1}", t_arith.per_sec(0.1))]);
+    t.print();
+}

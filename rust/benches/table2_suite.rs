@@ -1,0 +1,120 @@
+//! **Table 2** — compression of 1000-tree forests over the 13 evaluation
+//! datasets: standard vs light vs Algorithm 1.
+//!
+//! ```text
+//! cargo bench --bench table2_suite               # 30 trees/forest (scaled)
+//! cargo bench --bench table2_suite -- --trees 100
+//! cargo bench --bench table2_suite -- --paper-scale    # 1000 trees (slow)
+//! cargo bench --bench table2_suite -- --only iris,wages
+//! ```
+//!
+//! Reproduced quantities (synthetic data, scaled tree counts): the ordering
+//! ours < light < standard on every row, larger ratios for classification
+//! than regression (the 64-bit fits dominate regression, §6), and ratios
+//! that grow toward the paper's 1:6 (light) / 1:70 (standard) as `--trees`
+//! rises. Paper MBs are printed alongside for reference.
+
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic::table2_suite;
+use rf_compress::util::bench::{bench_config, Table};
+use rf_compress::util::stats::human_bytes;
+
+fn main() {
+    let cfg = bench_config(30);
+    let only: Option<Vec<String>> = cfg.args.get_list("only");
+    println!("== Table 2: {} trees per forest ==", cfg.trees);
+    let mut coord = if cfg.args.flag("native") {
+        Coordinator::native_only()
+    } else {
+        Coordinator::new()
+    };
+    println!("engine: {}\n", coord.engine_name());
+
+    let mut t = Table::new(&[
+        "dataset",
+        "obs×vars",
+        "standard",
+        "light",
+        "ours",
+        "vs std",
+        "vs light",
+        "paper std→ours",
+    ]);
+    let mut ratios_std_cls = Vec::new();
+    let mut ratios_light_cls = Vec::new();
+    let mut ratios_std_reg = Vec::new();
+    let mut ratios_light_reg = Vec::new();
+
+    for entry in table2_suite() {
+        if let Some(only) = &only {
+            if !only.iter().any(|k| k == entry.key) {
+                continue;
+            }
+        }
+        let ds = (entry.make)(cfg.args.get_or("data-seed", 1234));
+        let classification = ds.target.is_classification();
+        // paper accounting by default: numeric split values are coded as
+        // observation ranks with the training data as side information,
+        // exactly how Tables 1–2 count bytes; `--self-contained` opts out
+        let opts = CompressOptions {
+            dataset_indexed_splits: !cfg.args.flag("self-contained"),
+            ..Default::default()
+        };
+        let (forest, cf, report) =
+            match coord.train_and_compress(&ds, cfg.trees, cfg.seed, &opts) {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("{}: {e:#}", entry.key);
+                    continue;
+                }
+            };
+        // verify losslessness on every row
+        let restored = if opts.dataset_indexed_splits {
+            cf.decompress_with_dataset(&ds).unwrap()
+        } else {
+            cf.decompress().unwrap()
+        };
+        assert!(restored.identical(&forest), "{}", entry.key);
+        eprintln!(
+            "  [{}] train {:.1}s compress {:.1}s",
+            entry.key, report.train_s, report.compress_s
+        );
+        t.row(&[
+            ds.name.clone(),
+            format!("{}×{}", ds.num_rows(), ds.num_features()),
+            human_bytes(report.standard_bytes),
+            human_bytes(report.light_bytes),
+            human_bytes(report.ours_bytes),
+            format!("1:{:.1}", report.standard_ratio()),
+            format!("1:{:.1}", report.light_ratio()),
+            format!("{}→{} MB", entry.paper_standard_mb, entry.paper_ours_mb),
+        ]);
+        if classification {
+            ratios_std_cls.push(report.standard_ratio());
+            ratios_light_cls.push(report.light_ratio());
+        } else {
+            ratios_std_reg.push(report.standard_ratio());
+            ratios_light_reg.push(report.light_ratio());
+        }
+    }
+    t.print();
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!("\nmean ratios, classification: 1:{:.1} vs standard, 1:{:.1} vs light   (paper: ~1:70, ~1:6 at 1000 trees)",
+        mean(&ratios_std_cls), mean(&ratios_light_cls));
+    println!("mean ratios, regression:     1:{:.1} vs standard, 1:{:.1} vs light   (paper: ~1:4.1, ~1:1.45)",
+        mean(&ratios_std_reg), mean(&ratios_light_reg));
+    if !ratios_light_cls.is_empty() && !ratios_light_reg.is_empty() {
+        // the paper's fits effect: classification compresses better than
+        // regression vs the *standard* baseline (where verbose fits cost
+        // most). At scaled-down tree counts this holds on the full suite;
+        // warn instead of assert so `--only` subsets stay usable.
+        if mean(&ratios_std_cls) > mean(&ratios_std_reg) {
+            println!("\nshape check PASSED: classification ratios > regression ratios (the paper's fits effect)");
+        } else {
+            println!("\nshape check NOT met at this scale/subset (classification {:.1} vs regression {:.1} vs standard)",
+                mean(&ratios_std_cls), mean(&ratios_std_reg));
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! gzip (and zstd, as an ablation) wrappers over `flate2`/`zstd`.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+
+/// gzip-compress at the default level (6), like the paper's off-the-shelf
+/// `gzip` step.
+pub fn gzip(data: &[u8]) -> Vec<u8> {
+    let mut enc =
+        flate2::write::GzEncoder::new(Vec::new(), flate2::Compression::default());
+    enc.write_all(data).expect("in-memory write");
+    enc.finish().expect("in-memory finish")
+}
+
+pub fn gunzip(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = flate2::read::GzDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out).context("gunzip")?;
+    Ok(out)
+}
+
+/// zstd at level 19 — a stronger general-purpose comparator for the
+/// ablation bench (how much of our gain is just a better entropy coder?).
+pub fn zstd_strong(data: &[u8]) -> Vec<u8> {
+    zstd::encode_all(data, 19).expect("in-memory zstd")
+}
+
+pub fn unzstd(data: &[u8]) -> Result<Vec<u8>> {
+    zstd::decode_all(data).context("unzstd")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gzip_roundtrip() {
+        let data = b"the quick brown fox jumps over the lazy dog".repeat(50);
+        let c = gzip(&data);
+        assert!(c.len() < data.len());
+        assert_eq!(gunzip(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn zstd_roundtrip() {
+        let data = vec![7u8; 10_000];
+        let c = zstd_strong(&data);
+        assert!(c.len() < 100);
+        assert_eq!(unzstd(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn gunzip_garbage_errors() {
+        assert!(gunzip(b"not gzip at all").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's two baseline compressors (§6):
+//!
+//! * **standard** — a verbose tree serialization carrying the bookkeeping a
+//!   Matlab `compact(tree)` object keeps (node ids, parent/child pointers,
+//!   per-node variable-name *strings*, per-node fits and summary fields),
+//!   followed by gzip;
+//! * **light**    — only the fields needed for prediction, strings replaced
+//!   by numeric ids ("elementary adjustments" per the paper), followed by
+//!   gzip.
+//!
+//! Both are lossless (round-trip tested) so the comparison with Algorithm 1
+//! is apples-to-apples.
+
+pub mod gzip;
+pub mod serialize;
+
+pub use serialize::{light_representation, standard_representation, LightSections};

@@ -1,0 +1,437 @@
+//! Weighted-KL K-means (Lloyd) at fixed K.
+//!
+//! Input: M empirical distributions `P_i` over a common alphabet of size B,
+//! with sequence-length weights `n_i`. Distortion: `n_i · D_KL(P_i ‖ Q_k)`.
+//! Centroids: weighted means of members (the KL/Bregman centroid).
+//!
+//! The inner iteration — the M×K divergence matrix, the argmin assignment,
+//! and the centroid update — is behind the [`LloydEngine`] trait. The
+//! [`NativeEngine`] here is the reference implementation; the AOT-compiled
+//! JAX/Pallas version (`runtime::xla_engine`) must match it to ~1e-6
+//! (asserted by integration tests).
+
+use crate::util::Pcg64;
+use anyhow::Result;
+
+/// Smoothing mixed into centroids for divergence computation, keeping
+/// `D_KL(P_i ‖ Q_k)` finite when a candidate cluster lacks a member's
+/// support. Final codebooks are built from exact member counts, so this
+/// never affects losslessness — only assignment decisions at the margin.
+pub const CENTROID_EPS: f64 = 1e-9;
+
+/// One Lloyd iteration's outputs.
+#[derive(Debug, Clone)]
+pub struct LloydStep {
+    /// Per-input cluster assignment.
+    pub assign: Vec<u32>,
+    /// Updated centroids, row-major K×B (weighted means of members).
+    pub new_q: Vec<f64>,
+    /// Data term of the objective: `Σᵢ nᵢ·D_KL(Pᵢ‖Q_{aᵢ})` in bits,
+    /// evaluated at the *input* centroids.
+    pub objective: f64,
+}
+
+/// The inner-iteration engine: everything that is matmul-shaped and worth
+/// offloading to the AOT XLA artifact.
+pub trait LloydEngine {
+    /// One iteration. `p` is M×B row-major, `w` has length M, `q` is K×B
+    /// row-major (already smoothed/normalized).
+    fn step(&mut self, p: &[f64], w: &[f64], q: &[f64], m: usize, b: usize, k: usize)
+        -> Result<LloydStep>;
+
+    /// Engine label for logs/benches.
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pure-rust reference engine.
+///
+/// Uses the cross-entropy decomposition the Pallas kernel also uses:
+/// `n_i·KL(P_i‖Q_k) = n_i·Σ_b P_ib·log(P_ib) − Σ_b (n_i·P_ib)·log(Q_kb)` —
+/// the first term is assignment-invariant, the second is a weighted matmul
+/// against `log Q`.
+#[derive(Debug, Default, Clone)]
+pub struct NativeEngine;
+
+impl LloydEngine for NativeEngine {
+    fn step(
+        &mut self,
+        p: &[f64],
+        w: &[f64],
+        q: &[f64],
+        m: usize,
+        b: usize,
+        k: usize,
+    ) -> Result<LloydStep> {
+        debug_assert_eq!(p.len(), m * b);
+        debug_assert_eq!(w.len(), m);
+        debug_assert_eq!(q.len(), k * b);
+        // precompute log q (clamped: q is smoothed so strictly positive)
+        let log_q: Vec<f64> = q.iter().map(|&x| x.max(f64::MIN_POSITIVE).log2()).collect();
+        let mut assign = vec![0u32; m];
+        let mut objective = 0.0;
+        // §Perf: split-value distributions are extremely sparse over large
+        // alphabets (a (depth, father) context uses a handful of the
+        // feature's thresholds), so gather each row's support once and run
+        // the K-way cross-entropy over the non-zeros only.
+        let mut support: Vec<(u32, f64)> = Vec::with_capacity(b.min(64));
+        for i in 0..m {
+            let pi = &p[i * b..(i + 1) * b];
+            support.clear();
+            let mut self_term = 0.0;
+            for (j, &x) in pi.iter().enumerate() {
+                if x > 0.0 {
+                    support.push((j as u32, x));
+                    self_term += x * x.log2();
+                }
+            }
+            let mut best = f64::INFINITY;
+            let mut best_k = 0u32;
+            for kk in 0..k {
+                let lq = &log_q[kk * b..(kk + 1) * b];
+                let mut ce = 0.0;
+                for &(j, x) in &support {
+                    ce += x * lq[j as usize];
+                }
+                let kl = self_term - ce;
+                if kl < best {
+                    best = kl;
+                    best_k = kk as u32;
+                }
+            }
+            assign[i] = best_k;
+            objective += w[i] * best.max(0.0);
+        }
+        // centroid update: weighted mean of members (sparse rows again)
+        let mut new_q = vec![0.0f64; k * b];
+        let mut mass = vec![0.0f64; k];
+        for i in 0..m {
+            let kk = assign[i] as usize;
+            mass[kk] += w[i];
+            let pi = &p[i * b..(i + 1) * b];
+            let row = &mut new_q[kk * b..(kk + 1) * b];
+            for (j, &x) in pi.iter().enumerate() {
+                if x > 0.0 {
+                    row[j] += w[i] * x;
+                }
+            }
+        }
+        for kk in 0..k {
+            if mass[kk] > 0.0 {
+                for x in new_q[kk * b..(kk + 1) * b].iter_mut() {
+                    *x /= mass[kk];
+                }
+            }
+        }
+        Ok(LloydStep { assign, new_q, objective })
+    }
+}
+
+/// A fixed-K clustering result.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub k: usize,
+    pub assignments: Vec<u32>,
+    /// Final centroids (K×B row-major), un-smoothed weighted means.
+    pub centroids: Vec<f64>,
+    /// Data term `Σᵢ nᵢ·D_KL` in bits at convergence.
+    pub data_bits: f64,
+}
+
+/// Smooth + renormalize a centroid matrix for divergence computation.
+fn smooth(q: &[f64], k: usize, b: usize) -> Vec<f64> {
+    let mut out = vec![0.0; k * b];
+    for kk in 0..k {
+        let row = &q[kk * b..(kk + 1) * b];
+        let total: f64 = row.iter().sum();
+        let out_row = &mut out[kk * b..(kk + 1) * b];
+        if total <= 0.0 {
+            for x in out_row.iter_mut() {
+                *x = 1.0 / b as f64;
+            }
+        } else {
+            let scale = 1.0 / (total * (1.0 + CENTROID_EPS * b as f64));
+            for (o, &x) in out_row.iter_mut().zip(row) {
+                *o = (x + total * CENTROID_EPS) * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Cluster M weighted distributions into (at most) `k` groups.
+///
+/// `p` is M×B row-major with rows summing to 1; `w` are the sequence
+/// lengths `n_i`. Deterministic in `seed`.
+pub fn cluster_k(
+    p: &[f64],
+    w: &[f64],
+    m: usize,
+    b: usize,
+    k: usize,
+    seed: u64,
+    engine: &mut dyn LloydEngine,
+) -> Result<Clustering> {
+    assert!(m > 0 && b > 0);
+    let k = k.clamp(1, m);
+    let mut rng = Pcg64::with_stream(seed, 0xc1u64);
+
+    // --- k-means++ init over KL distance ---
+    let mut centroid_rows: Vec<usize> = Vec::with_capacity(k);
+    // first: weight-proportional draw
+    let total_w: f64 = w.iter().sum();
+    let first = weighted_pick(&mut rng, w, total_w);
+    centroid_rows.push(first);
+    let mut min_d: Vec<f64> = (0..m)
+        .map(|i| kl_rows(p, i, p, first, b).max(0.0) * w[i])
+        .collect();
+    while centroid_rows.len() < k {
+        let total: f64 = min_d.iter().sum();
+        let next = if total <= 0.0 {
+            // all points identical to chosen centroids: pick arbitrary distinct
+            (0..m).find(|i| !centroid_rows.contains(i)).unwrap_or(0)
+        } else {
+            weighted_pick(&mut rng, &min_d, total)
+        };
+        centroid_rows.push(next);
+        for i in 0..m {
+            let d = kl_rows(p, i, p, next, b).max(0.0) * w[i];
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+        }
+    }
+    let mut q: Vec<f64> = Vec::with_capacity(k * b);
+    for &r in &centroid_rows {
+        q.extend_from_slice(&p[r * b..(r + 1) * b]);
+    }
+
+    // --- Lloyd iterations ---
+    let mut prev_assign: Option<Vec<u32>> = None;
+    let mut prev_obj = f64::INFINITY;
+    let mut last = LloydStep { assign: vec![0; m], new_q: q.clone(), objective: f64::INFINITY };
+    for _iter in 0..40 {
+        let sq = smooth(&q, k, b);
+        let mut step = engine.step(p, w, &sq, m, b, k)?;
+        // empty-cluster repair: move the worst-fitting point into the hole
+        let mut counts = vec![0usize; k];
+        for &a in &step.assign {
+            counts[a as usize] += 1;
+        }
+        for kk in 0..k {
+            if counts[kk] == 0 {
+                // point with max weighted divergence from its centroid
+                let sq2 = smooth(&step.new_q, k, b);
+                let worst = (0..m)
+                    .max_by(|&a2, &b2| {
+                        let da = w[a2] * kl_rows(p, a2, &sq2, step.assign[a2] as usize, b);
+                        let db = w[b2] * kl_rows(p, b2, &sq2, step.assign[b2] as usize, b);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if counts[step.assign[worst] as usize] > 1 {
+                    counts[step.assign[worst] as usize] -= 1;
+                    step.assign[worst] = kk as u32;
+                    counts[kk] = 1;
+                    // recompute centroids for the affected clusters
+                    recompute_centroids(p, w, &step.assign, m, b, k, &mut step.new_q);
+                }
+            }
+        }
+        // converged when assignments are stable or the objective stops
+        // moving (relative 1e-6 — avoids oscillation on near-ties)
+        let converged = prev_assign.as_ref() == Some(&step.assign)
+            || (prev_obj - step.objective).abs() <= 1e-6 * prev_obj.abs().max(1.0);
+        prev_obj = step.objective;
+        q = step.new_q.clone();
+        prev_assign = Some(step.assign.clone());
+        last = step;
+        if converged {
+            break;
+        }
+    }
+
+    // final data term evaluated at the final (smoothed) centroids
+    let sq = smooth(&q, k, b);
+    let mut data_bits = 0.0;
+    for i in 0..m {
+        data_bits += w[i] * kl_rows(p, i, &sq, last.assign[i] as usize, b).max(0.0);
+    }
+    Ok(Clustering { k, assignments: last.assign, centroids: q, data_bits })
+}
+
+fn recompute_centroids(
+    p: &[f64],
+    w: &[f64],
+    assign: &[u32],
+    m: usize,
+    b: usize,
+    k: usize,
+    q: &mut Vec<f64>,
+) {
+    q.iter_mut().for_each(|x| *x = 0.0);
+    let mut mass = vec![0.0f64; k];
+    for i in 0..m {
+        let kk = assign[i] as usize;
+        mass[kk] += w[i];
+        for (dst, x) in q[kk * b..(kk + 1) * b].iter_mut().zip(&p[i * b..(i + 1) * b]) {
+            *dst += w[i] * x;
+        }
+    }
+    for kk in 0..k {
+        if mass[kk] > 0.0 {
+            for x in q[kk * b..(kk + 1) * b].iter_mut() {
+                *x /= mass[kk];
+            }
+        }
+    }
+}
+
+#[inline]
+fn kl_rows(p: &[f64], i: usize, q: &[f64], kk: usize, b: usize) -> f64 {
+    let pi = &p[i * b..(i + 1) * b];
+    let qk = &q[kk * b..(kk + 1) * b];
+    let mut d = 0.0;
+    for (&x, &y) in pi.iter().zip(qk) {
+        if x > 0.0 {
+            if y <= 0.0 {
+                return f64::INFINITY;
+            }
+            d += x * (x / y).log2();
+        }
+    }
+    d
+}
+
+fn weighted_pick(rng: &mut Pcg64, weights: &[f64], total: f64) -> usize {
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut u = rng.gen_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        if u < w {
+            return i;
+        }
+        u -= w;
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three obvious groups of distributions.
+    fn three_groups() -> (Vec<f64>, Vec<f64>, usize, usize) {
+        let rows: Vec<[f64; 4]> = vec![
+            [0.97, 0.01, 0.01, 0.01],
+            [0.94, 0.02, 0.02, 0.02],
+            [0.95, 0.03, 0.01, 0.01],
+            [0.01, 0.97, 0.01, 0.01],
+            [0.02, 0.94, 0.02, 0.02],
+            [0.25, 0.25, 0.25, 0.25],
+            [0.22, 0.28, 0.25, 0.25],
+        ];
+        let p: Vec<f64> = rows.iter().flatten().copied().collect();
+        let w = vec![100.0, 90.0, 80.0, 100.0, 95.0, 50.0, 40.0];
+        (p, w, rows.len(), 4)
+    }
+
+    #[test]
+    fn recovers_three_groups() {
+        let (p, w, m, b) = three_groups();
+        let mut eng = NativeEngine;
+        let c = cluster_k(&p, &w, m, b, 3, 7, &mut eng).unwrap();
+        assert_eq!(c.assignments[0], c.assignments[1]);
+        assert_eq!(c.assignments[1], c.assignments[2]);
+        assert_eq!(c.assignments[3], c.assignments[4]);
+        assert_eq!(c.assignments[5], c.assignments[6]);
+        assert_ne!(c.assignments[0], c.assignments[3]);
+        assert_ne!(c.assignments[0], c.assignments[5]);
+        // clean separation ⇒ tiny data term
+        assert!(c.data_bits < 10.0, "data_bits={}", c.data_bits);
+    }
+
+    #[test]
+    fn k1_centroid_is_weighted_mean() {
+        let (p, w, m, b) = three_groups();
+        let mut eng = NativeEngine;
+        let c = cluster_k(&p, &w, m, b, 1, 3, &mut eng).unwrap();
+        let total_w: f64 = w.iter().sum();
+        for bb in 0..b {
+            let expect: f64 =
+                (0..m).map(|i| w[i] * p[i * b + bb]).sum::<f64>() / total_w;
+            assert!((c.centroids[bb] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn objective_decreases_with_k() {
+        let (p, w, m, b) = three_groups();
+        let mut eng = NativeEngine;
+        let mut prev = f64::INFINITY;
+        for k in 1..=4 {
+            let c = cluster_k(&p, &w, m, b, k, 5, &mut eng).unwrap();
+            assert!(
+                c.data_bits <= prev + 1e-9,
+                "data term must be monotone in K: k={k} {} > {prev}",
+                c.data_bits
+            );
+            prev = c.data_bits;
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_m() {
+        let p = vec![0.5, 0.5, 0.9, 0.1];
+        let w = vec![1.0, 1.0];
+        let mut eng = NativeEngine;
+        let c = cluster_k(&p, &w, 2, 2, 10, 1, &mut eng).unwrap();
+        assert_eq!(c.k, 2);
+    }
+
+    #[test]
+    fn identical_inputs_one_effective_cluster() {
+        let p = vec![0.3, 0.7].repeat(5);
+        let w = vec![1.0; 5];
+        let mut eng = NativeEngine;
+        let c = cluster_k(&p, &w, 5, 2, 3, 2, &mut eng).unwrap();
+        assert!(c.data_bits < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (p, w, m, b) = three_groups();
+        let mut eng = NativeEngine;
+        let a = cluster_k(&p, &w, m, b, 3, 11, &mut eng).unwrap();
+        let c = cluster_k(&p, &w, m, b, 3, 11, &mut eng).unwrap();
+        assert_eq!(a.assignments, c.assignments);
+    }
+
+    #[test]
+    fn sparse_support_handled() {
+        // members with disjoint support: smoothing must keep KL finite and
+        // clustering must separate them
+        let p = vec![
+            1.0, 0.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, 1.0,
+        ];
+        let w = vec![10.0, 10.0];
+        let mut eng = NativeEngine;
+        let c = cluster_k(&p, &w, 2, 4, 2, 3, &mut eng).unwrap();
+        assert_ne!(c.assignments[0], c.assignments[1]);
+        assert!(c.data_bits.is_finite());
+    }
+
+    #[test]
+    fn native_step_objective_matches_manual_kl() {
+        let p = vec![0.8, 0.2, 0.3, 0.7];
+        let w = vec![5.0, 2.0];
+        let q = smooth(&[0.5, 0.5], 1, 2);
+        let mut eng = NativeEngine;
+        let s = eng.step(&p, &w, &q, 2, 2, 1).unwrap();
+        let manual = 5.0 * kl_rows(&p, 0, &q, 0, 2) + 2.0 * kl_rows(&p, 1, &q, 0, 2);
+        assert!((s.objective - manual).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! Model clustering under weighted KL divergence with a dictionary-cost
+//! penalty — eq. (6) of the paper, the "Bregman divergence clustering" of
+//! its title. The cluster means under KL are plain weighted averages
+//! (Banerjee et al. 2005), so this is a K-means variant with KL as the
+//! distortion.
+//!
+//! * [`kmeans`] — one clustering at fixed K (Lloyd iterations, k-means++
+//!   init, empty-cluster repair), generic over a [`LloydEngine`] so the
+//!   inner iteration can run natively or on the AOT-compiled XLA artifact
+//!   (see `runtime::xla_engine`)
+//! * [`sweep`]  — the K sweep of Algorithm 1 (lines 22–30): minimize
+//!   `Σᵢ nᵢ·D_KL(Pᵢ‖Q_{aᵢ}) + α·B·K` over K
+//!
+//! The data term is in bits (log₂), matching the α constants of
+//! [`crate::coding::entropy::DictCost`].
+
+pub mod kmeans;
+pub mod sweep;
+
+pub use kmeans::{cluster_k, Clustering, LloydEngine, LloydStep, NativeEngine};
+pub use sweep::{sweep_k, SweepResult};

@@ -1,0 +1,449 @@
+//! Integer arithmetic coding (static-model range coder).
+//!
+//! The paper (§4, Algorithm 1 line 40) prefers an arithmetic encoder over
+//! Huffman for the fits of two-class classification problems: a binary
+//! alphabet with a skewed distribution costs ≥ 1 bit/symbol under Huffman but
+//! approaches the entropy under arithmetic coding (§2.2: within 2 bits of the
+//! empirical entropy *for the whole sequence*).
+//!
+//! Implementation: classic 32-bit-precision carry-free coder (CACM'87 style,
+//! cf. Sayood ch. 4) over a static cumulative-frequency model. The model is
+//! the cluster centroid `Q_k`, quantized to integer frequencies, so the
+//! decoder rebuilds it from the serialized dictionary exactly.
+
+use super::bitio::{BitReader, BitWriter};
+use anyhow::{bail, Context, Result};
+
+const PRECISION: u32 = 32;
+const TOP: u64 = 1 << PRECISION;
+const HALF: u64 = TOP >> 1;
+const QUARTER: u64 = TOP >> 2;
+const THREE_QUARTER: u64 = HALF + QUARTER;
+/// Maximum model total so that `range / total` never underflows.
+pub const MAX_TOTAL: u64 = 1 << 16;
+
+/// A static frequency model over symbols `0..n`, stored cumulatively.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FreqModel {
+    /// cum[i] = sum of freqs of symbols < i; cum[n] = total
+    cum: Vec<u64>,
+}
+
+impl FreqModel {
+    /// Quantize a probability vector to integer frequencies summing to at
+    /// most [`MAX_TOTAL`], giving every *positive*-probability symbol a
+    /// nonzero frequency (losslessness guard).
+    pub fn from_probs(p: &[f64]) -> Result<Self> {
+        if p.is_empty() {
+            bail!("empty alphabet");
+        }
+        let total_p: f64 = p.iter().sum();
+        if total_p <= 0.0 {
+            bail!("all probabilities zero");
+        }
+        let budget = MAX_TOTAL - p.len() as u64; // reserve 1 per symbol
+        let mut freqs: Vec<u64> = p
+            .iter()
+            .map(|&pi| {
+                if pi <= 0.0 {
+                    0
+                } else {
+                    1 + ((pi / total_p) * budget as f64) as u64
+                }
+            })
+            .collect();
+        // ensure at least one active symbol
+        if freqs.iter().all(|&f| f == 0) {
+            freqs[0] = 1;
+        }
+        Self::from_freqs(&freqs)
+    }
+
+    /// Build from explicit integer frequencies (0 = absent symbol).
+    pub fn from_freqs(freqs: &[u64]) -> Result<Self> {
+        if freqs.is_empty() {
+            bail!("empty alphabet");
+        }
+        let total: u64 = freqs.iter().sum();
+        if total == 0 {
+            bail!("zero total frequency");
+        }
+        if total > MAX_TOTAL {
+            bail!("total frequency {total} exceeds MAX_TOTAL");
+        }
+        let mut cum = Vec::with_capacity(freqs.len() + 1);
+        let mut acc = 0u64;
+        cum.push(0);
+        for &f in freqs {
+            acc += f;
+            cum.push(acc);
+        }
+        Ok(FreqModel { cum })
+    }
+
+    pub fn alphabet_size(&self) -> usize {
+        self.cum.len() - 1
+    }
+
+    pub fn total(&self) -> u64 {
+        *self.cum.last().unwrap()
+    }
+
+    pub fn freq(&self, sym: u32) -> u64 {
+        self.cum[sym as usize + 1] - self.cum[sym as usize]
+    }
+
+    fn interval(&self, sym: u32) -> (u64, u64) {
+        (self.cum[sym as usize], self.cum[sym as usize + 1])
+    }
+
+    /// Find the symbol whose cumulative interval contains `target`.
+    fn lookup(&self, target: u64) -> u32 {
+        // binary search over cum
+        let mut lo = 0usize;
+        let mut hi = self.cum.len() - 1;
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.cum[mid] <= target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u32
+    }
+
+    /// Serialize: varint n, then varint freq per symbol (run-length for 0s).
+    pub fn write(&self, out: &mut BitWriter) {
+        let n = self.alphabet_size();
+        out.write_varint(n as u64);
+        let mut i = 0usize;
+        while i < n {
+            let f = self.cum[i + 1] - self.cum[i];
+            if f == 0 {
+                // zero run
+                let mut run = 1usize;
+                while i + run < n && self.cum[i + run + 1] - self.cum[i + run] == 0 {
+                    run += 1;
+                }
+                out.write_bit(false);
+                out.write_varint(run as u64);
+                i += run;
+            } else {
+                out.write_bit(true);
+                out.write_varint(f);
+                i += 1;
+            }
+        }
+    }
+
+    pub fn read(r: &mut BitReader) -> Result<Self> {
+        let n = r.read_varint().context("freq model: n")? as usize;
+        if n == 0 || n > 100_000_000 {
+            bail!("freq model: implausible alphabet size {n}");
+        }
+        let mut freqs = Vec::with_capacity(n);
+        while freqs.len() < n {
+            let nonzero = r.read_bit().context("freq model: tag")?;
+            if nonzero {
+                freqs.push(r.read_varint().context("freq model: freq")?);
+            } else {
+                let run = r.read_varint().context("freq model: run")? as usize;
+                if freqs.len() + run > n {
+                    bail!("freq model: zero-run overflow");
+                }
+                freqs.extend(std::iter::repeat(0).take(run));
+            }
+        }
+        Self::from_freqs(&freqs)
+    }
+}
+
+/// Arithmetic encoder writing to a [`BitWriter`].
+pub struct ArithEncoder<'a> {
+    low: u64,
+    high: u64,
+    pending: u64,
+    out: &'a mut BitWriter,
+}
+
+impl<'a> ArithEncoder<'a> {
+    pub fn new(out: &'a mut BitWriter) -> Self {
+        ArithEncoder {
+            low: 0,
+            high: TOP - 1,
+            pending: 0,
+            out,
+        }
+    }
+
+    fn emit(&mut self, bit: bool) {
+        self.out.write_bit(bit);
+        while self.pending > 0 {
+            self.out.write_bit(!bit);
+            self.pending -= 1;
+        }
+    }
+
+    /// Encode one symbol under a static model.
+    pub fn encode(&mut self, model: &FreqModel, sym: u32) -> Result<()> {
+        let (c_lo, c_hi) = model.interval(sym);
+        if c_lo == c_hi {
+            bail!("symbol {sym} has zero frequency");
+        }
+        let total = model.total();
+        let range = self.high - self.low + 1;
+        self.high = self.low + range * c_hi / total - 1;
+        self.low += range * c_lo / total;
+        loop {
+            if self.high < HALF {
+                self.emit(false);
+            } else if self.low >= HALF {
+                self.emit(true);
+                self.low -= HALF;
+                self.high -= HALF;
+            } else if self.low >= QUARTER && self.high < THREE_QUARTER {
+                self.pending += 1;
+                self.low -= QUARTER;
+                self.high -= QUARTER;
+            } else {
+                break;
+            }
+            self.low <<= 1;
+            self.high = (self.high << 1) | 1;
+        }
+        Ok(())
+    }
+
+    /// Flush the final interval (call exactly once).
+    pub fn finish(mut self) {
+        self.pending += 1;
+        if self.low < QUARTER {
+            self.emit(false);
+        } else {
+            self.emit(true);
+        }
+    }
+}
+
+/// Arithmetic decoder owning a [`BitReader`] (reads zeros past the end of
+/// its slice, matching the encoder's implicit zero padding — which is why
+/// per-tree arith streams are stored byte-aligned in their own slices).
+pub struct ArithDecoder<'b> {
+    low: u64,
+    high: u64,
+    value: u64,
+    r: BitReader<'b>,
+}
+
+impl<'b> ArithDecoder<'b> {
+    /// Initialize by pre-loading PRECISION bits (missing bits read as 0,
+    /// matching the encoder's zero padding).
+    pub fn new(mut r: BitReader<'b>) -> Self {
+        let mut value = 0u64;
+        for _ in 0..PRECISION {
+            value = (value << 1) | r.read_bit().unwrap_or(false) as u64;
+        }
+        ArithDecoder {
+            low: 0,
+            high: TOP - 1,
+            value,
+            r,
+        }
+    }
+
+    /// Decode one symbol under a static model.
+    pub fn decode(&mut self, model: &FreqModel) -> Result<u32> {
+        let total = model.total();
+        let range = self.high - self.low + 1;
+        let target = ((self.value - self.low + 1) * total - 1) / range;
+        if target >= total {
+            bail!("arith: corrupt stream (target out of range)");
+        }
+        let sym = model.lookup(target);
+        let (c_lo, c_hi) = model.interval(sym);
+        self.high = self.low + range * c_hi / total - 1;
+        self.low += range * c_lo / total;
+        loop {
+            if self.high < HALF {
+                // nothing
+            } else if self.low >= HALF {
+                self.low -= HALF;
+                self.high -= HALF;
+                self.value -= HALF;
+            } else if self.low >= QUARTER && self.high < THREE_QUARTER {
+                self.low -= QUARTER;
+                self.high -= QUARTER;
+                self.value -= QUARTER;
+            } else {
+                break;
+            }
+            self.low <<= 1;
+            self.high = (self.high << 1) | 1;
+            self.value = (self.value << 1) | self.r.read_bit().unwrap_or(false) as u64;
+        }
+        Ok(sym)
+    }
+}
+
+/// Convenience: encode a whole sequence under one model; returns bits used.
+pub fn encode_sequence(model: &FreqModel, syms: &[u32], out: &mut BitWriter) -> Result<u64> {
+    let start = out.bit_len();
+    let mut enc = ArithEncoder::new(out);
+    for &s in syms {
+        enc.encode(model, s)?;
+    }
+    enc.finish();
+    Ok(out.bit_len() - start)
+}
+
+/// Convenience: decode `n` symbols under one model.
+pub fn decode_sequence(model: &FreqModel, r: &mut BitReader, n: usize) -> Result<Vec<u32>> {
+    let mut dec = ArithDecoder::new(r.clone());
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.decode(model)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn roundtrip(freqs: &[u64], seq: &[u32]) -> u64 {
+        let model = FreqModel::from_freqs(freqs).unwrap();
+        let mut w = BitWriter::new();
+        let bits = encode_sequence(&model, seq, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        let out = decode_sequence(&model, &mut r, seq.len()).unwrap();
+        assert_eq!(out, seq);
+        bits
+    }
+
+    #[test]
+    fn basic_roundtrip() {
+        roundtrip(&[5, 3, 2], &[0, 1, 2, 0, 0, 1, 2, 2, 1, 0, 0]);
+    }
+
+    #[test]
+    fn binary_skewed_beats_one_bit_per_symbol() {
+        // P(0)=0.95: entropy ≈ 0.286 bits; Huffman is stuck at 1 bit.
+        let mut rng = Pcg64::new(42);
+        let n = 4000usize;
+        let seq: Vec<u32> = (0..n).map(|_| rng.gen_bool(0.05) as u32).collect();
+        let ones = seq.iter().filter(|&&s| s == 1).count() as u64;
+        let bits = roundtrip(&[(n as u64 - ones).max(1), ones.max(1)], &seq);
+        let rate = bits as f64 / n as f64;
+        assert!(rate < 0.5, "rate={rate} should be far below 1 bit/sym");
+    }
+
+    #[test]
+    fn rate_close_to_entropy() {
+        let mut rng = Pcg64::new(1);
+        let p = [0.6, 0.2, 0.1, 0.1];
+        let n = 8000usize;
+        let seq: Vec<u32> = (0..n)
+            .map(|_| {
+                let u = rng.gen_f64();
+                let mut acc = 0.0;
+                for (i, &pi) in p.iter().enumerate() {
+                    acc += pi;
+                    if u < acc {
+                        return i as u32;
+                    }
+                }
+                p.len() as u32 - 1
+            })
+            .collect();
+        let mut counts = [0u64; 4];
+        for &s in &seq {
+            counts[s as usize] += 1;
+        }
+        let bits = roundtrip(&counts, &seq);
+        let emp_h: f64 = counts
+            .iter()
+            .map(|&c| {
+                let pi = c as f64 / n as f64;
+                if pi > 0.0 {
+                    -pi * pi.log2()
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        let rate = bits as f64 / n as f64;
+        // §2.2: within 2 bits over the whole sequence + quantization slack
+        assert!(rate <= emp_h + 0.05, "rate={rate} H={emp_h}");
+        assert!(rate >= emp_h - 1e-3, "cannot beat entropy: rate={rate} H={emp_h}");
+    }
+
+    #[test]
+    fn single_symbol_sequences() {
+        roundtrip(&[1], &[0, 0, 0, 0, 0]);
+        roundtrip(&[10, 1], &vec![0u32; 64]);
+    }
+
+    #[test]
+    fn empty_sequence() {
+        roundtrip(&[1, 1], &[]);
+    }
+
+    #[test]
+    fn sparse_alphabet() {
+        roundtrip(&[5, 0, 3, 0, 0, 2], &[0, 2, 5, 5, 2, 0, 0]);
+    }
+
+    #[test]
+    fn model_serialization_roundtrip() {
+        let m = FreqModel::from_freqs(&[100, 0, 0, 7, 1, 0, 42]).unwrap();
+        let mut w = BitWriter::new();
+        m.write(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(FreqModel::read(&mut r).unwrap(), m);
+    }
+
+    #[test]
+    fn from_probs_keeps_all_positive_symbols() {
+        let m = FreqModel::from_probs(&[0.999, 1e-9, 0.0009]).unwrap();
+        assert!(m.freq(0) > 0);
+        assert!(m.freq(1) > 0, "tiny but positive prob must stay encodable");
+        assert!(m.freq(2) > 0);
+    }
+
+    #[test]
+    fn zero_freq_symbol_encode_fails() {
+        let m = FreqModel::from_freqs(&[1, 0]).unwrap();
+        let mut w = BitWriter::new();
+        let mut enc = ArithEncoder::new(&mut w);
+        assert!(enc.encode(&m, 1).is_err());
+    }
+
+    #[test]
+    fn long_random_roundtrip() {
+        let mut rng = Pcg64::new(7);
+        let freqs: Vec<u64> = (0..50).map(|_| rng.gen_range(100) + 1).collect();
+        let model = FreqModel::from_freqs(&freqs).unwrap();
+        let seq: Vec<u32> = (0..20_000).map(|_| rng.gen_index(50) as u32).collect();
+        let mut w = BitWriter::new();
+        encode_sequence(&model, &seq, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let out = decode_sequence(&model, &mut BitReader::new(&bytes), seq.len()).unwrap();
+        assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn mismatched_model_still_lossless() {
+        // encode with a model that is NOT the data's distribution
+        let model = FreqModel::from_freqs(&[1, 1, 1, 13]).unwrap();
+        let seq = vec![0u32, 0, 0, 1, 2, 0, 0, 1];
+        let mut w = BitWriter::new();
+        encode_sequence(&model, &seq, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let out = decode_sequence(&model, &mut BitReader::new(&bytes), seq.len()).unwrap();
+        assert_eq!(out, seq);
+    }
+}

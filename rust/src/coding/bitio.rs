@@ -1,0 +1,329 @@
+//! MSB-first bit-level I/O.
+//!
+//! Everything the codec writes goes through [`BitWriter`]; decoding (including
+//! the *random access* that prediction-from-compressed needs, §5 of the
+//! paper) goes through [`BitReader::seek_bits`].
+
+/// Accumulates bits MSB-first into a byte vector.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits used in the final partial byte (0..=7); 0 means byte-aligned.
+    partial: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 - if self.partial == 0 { 0 } else { (8 - self.partial) as u64 }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        if self.partial == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let last = self.buf.last_mut().unwrap();
+            *last |= 1 << (7 - self.partial);
+        }
+        self.partial = (self.partial + 1) & 7;
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n <= 64`.
+    /// Byte-chunked (§Perf: the per-bit loop dominated encode profiles).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u8) {
+        debug_assert!(n <= 64);
+        let mut remaining = n as u32;
+        while remaining > 0 {
+            if self.partial == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.partial as u32;
+            let take = free.min(remaining);
+            let shift = remaining - take;
+            let chunk = ((value >> shift) as u8) & (((1u16 << take) - 1) as u8);
+            let last = self.buf.last_mut().unwrap();
+            *last |= chunk << (free - take);
+            self.partial = ((self.partial as u32 + take) & 7) as u8;
+            remaining -= take;
+        }
+    }
+
+    /// Write a whole byte (still honoring the current bit offset).
+    pub fn write_byte(&mut self, b: u8) {
+        self.write_bits(b as u64, 8);
+    }
+
+    /// Write a length-prefixed LEB128-style varint (7 bits per byte).
+    pub fn write_varint(&mut self, mut v: u64) {
+        loop {
+            let chunk = (v & 0x7f) as u64;
+            v >>= 7;
+            if v == 0 {
+                self.write_bits(chunk, 8);
+                break;
+            }
+            self.write_bits(chunk | 0x80, 8);
+        }
+    }
+
+    /// Write an Elias-gamma code for `v >= 1` (used for small unbounded
+    /// integers inside bit-packed sections, e.g. LZ match lengths).
+    pub fn write_gamma(&mut self, v: u64) {
+        debug_assert!(v >= 1);
+        let nbits = 64 - v.leading_zeros() as u8; // position of MSB, 1-based
+        for _ in 0..nbits - 1 {
+            self.write_bit(false);
+        }
+        self.write_bits(v, nbits);
+    }
+
+    /// Pad with zero bits to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        while self.partial != 0 {
+            self.write_bit(false);
+        }
+    }
+
+    /// Append the full bit content of another writer (bit-exact, not
+    /// byte-aligned). Used when assembling per-cluster payloads.
+    pub fn append(&mut self, other: &BitWriter) {
+        let bits = other.bit_len();
+        let full_bytes = (bits / 8) as usize;
+        for &b in &other.buf[..full_bytes] {
+            self.write_bits(b as u64, 8);
+        }
+        let tail = (bits % 8) as u8;
+        if tail > 0 {
+            let last = other.buf[full_bytes];
+            self.write_bits((last >> (8 - tail)) as u64, tail);
+        }
+    }
+
+    /// Finish and return the backing bytes (final byte zero-padded).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Borrow the bytes written so far.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Reads bits MSB-first from a byte slice, with absolute seeking.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: u64, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitReader { data, pos: 0 }
+    }
+
+    /// Current absolute bit position.
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Total readable bits.
+    pub fn bit_len(&self) -> u64 {
+        self.data.len() as u64 * 8
+    }
+
+    /// Jump to an absolute bit offset — the random-access primitive behind
+    /// prediction from the compressed format.
+    pub fn seek_bits(&mut self, pos: u64) {
+        self.pos = pos;
+    }
+
+    /// Read one bit; `None` at end of data.
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        let byte = (self.pos / 8) as usize;
+        if byte >= self.data.len() {
+            return None;
+        }
+        let bit = (self.data[byte] >> (7 - (self.pos & 7))) & 1;
+        self.pos += 1;
+        Some(bit == 1)
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a `u64`.
+    /// Byte-chunked (§Perf).
+    #[inline]
+    pub fn read_bits(&mut self, n: u8) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.pos + n as u64 > self.data.len() as u64 * 8 {
+            return None;
+        }
+        let mut v = 0u64;
+        let mut remaining = n as u32;
+        while remaining > 0 {
+            let byte = (self.pos >> 3) as usize;
+            let bit_off = (self.pos & 7) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(remaining);
+            let chunk = (self.data[byte] >> (avail - take)) & (((1u16 << take) - 1) as u8);
+            v = (v << take) | chunk as u64;
+            self.pos += take as u64;
+            remaining -= take;
+        }
+        Some(v)
+    }
+
+    pub fn read_byte(&mut self) -> Option<u8> {
+        self.read_bits(8).map(|v| v as u8)
+    }
+
+    /// Read a varint written by [`BitWriter::write_varint`].
+    pub fn read_varint(&mut self) -> Option<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.read_byte()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Some(v);
+            }
+            shift += 7;
+            if shift >= 64 {
+                return None; // malformed
+            }
+        }
+    }
+
+    /// Read an Elias-gamma code written by [`BitWriter::write_gamma`].
+    pub fn read_gamma(&mut self) -> Option<u64> {
+        let mut zeros = 0u8;
+        loop {
+            if self.read_bit()? {
+                break;
+            }
+            zeros += 1;
+            if zeros >= 64 {
+                return None; // malformed
+            }
+        }
+        let rest = self.read_bits(zeros)?;
+        Some((1u64 << zeros) | rest)
+    }
+
+    /// Skip to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        self.pos = (self.pos + 7) & !7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip_various_widths() {
+        let mut w = BitWriter::new();
+        let cases: &[(u64, u8)] = &[(0, 1), (1, 1), (5, 3), (255, 8), (1023, 10), (u64::MAX, 64), (0xdead_beef, 37)];
+        for &(v, n) in cases {
+            w.write_bits(v, n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in cases {
+            assert_eq!(r.read_bits(n), Some(v & (u64::MAX >> (64 - n.min(64)))), "width {n}");
+        }
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let vals = [0u64, 1, 127, 128, 300, 16_384, u32::MAX as u64, u64::MAX];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.write_varint(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.read_varint(), Some(v));
+        }
+    }
+
+    #[test]
+    fn gamma_roundtrip() {
+        let vals = [1u64, 2, 3, 4, 7, 8, 100, 1_000_000];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.write_gamma(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(r.read_gamma(), Some(v));
+        }
+    }
+
+    #[test]
+    fn seek_gives_random_access() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1010_1010_1100_1100, 16);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        r.seek_bits(8);
+        assert_eq!(r.read_bits(4), Some(0b1100));
+        r.seek_bits(0);
+        assert_eq!(r.read_bits(4), Some(0b1010));
+    }
+
+    #[test]
+    fn append_is_bit_exact() {
+        let mut a = BitWriter::new();
+        a.write_bits(0b101, 3);
+        let mut b = BitWriter::new();
+        b.write_bits(0b0110, 4);
+        a.append(&b);
+        assert_eq!(a.bit_len(), 7);
+        let bytes = a.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(7), Some(0b1010110));
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut r = BitReader::new(&[0xff]);
+        assert_eq!(r.read_bits(8), Some(0xff));
+        assert_eq!(r.read_bit(), None);
+        assert_eq!(r.read_bits(3), None);
+    }
+
+    #[test]
+    fn align_byte_pads_zero() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.align_byte();
+        assert_eq!(w.bit_len(), 8);
+        assert_eq!(w.as_bytes(), &[0b1000_0000]);
+    }
+}

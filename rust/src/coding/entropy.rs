@@ -1,0 +1,190 @@
+//! Information-theoretic utilities: empirical entropy, KL divergence, and
+//! the dictionary-cost constants `α` of the clustering objective (eq. 3–6).
+
+/// Empirical entropy (bits/symbol) of a count vector.
+pub fn entropy_counts(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / t;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Empirical entropy (bits/symbol) of a probability vector.
+pub fn entropy_probs(p: &[f64]) -> f64 {
+    p.iter()
+        .filter(|&&pi| pi > 0.0)
+        .map(|&pi| -pi * pi.log2())
+        .sum()
+}
+
+/// Kullback–Leibler divergence `D_KL(P ‖ Q)` in bits.
+///
+/// Returns `f64::INFINITY` when `P` has mass where `Q` has none — the
+/// clustering code never lets that happen (centroids are mixtures of their
+/// members, so member support ⊆ centroid support), but callers comparing
+/// against arbitrary reference distributions (§2.2) may see it.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let mut d = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            if qi <= 0.0 {
+                return f64::INFINITY;
+            }
+            d += pi * (pi / qi).log2();
+        }
+    }
+    // numerical noise can push an identical pair slightly negative
+    d.max(0.0)
+}
+
+/// Cross entropy `H(P, Q) = −Σ p log q` in bits (∞ on support mismatch).
+pub fn cross_entropy(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let mut h = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            if qi <= 0.0 {
+                return f64::INFINITY;
+            }
+            h -= pi * qi.log2();
+        }
+    }
+    h
+}
+
+/// Normalize counts into a probability vector (empty/zero-total → uniform).
+pub fn normalize(counts: &[u64]) -> Vec<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        let n = counts.len().max(1);
+        return vec![1.0 / n as f64; counts.len()];
+    }
+    counts.iter().map(|&c| c as f64 / total as f64).collect()
+}
+
+/// Dictionary-line costs `α` from §3.2.2 of the paper, in bits.
+///
+/// * variable names over `d` variables: `α = log₂(d) + d`
+/// * categorical split values over `C` values: `α = log₂(C) + C`
+/// * numerical split values (index into `n` observations): `α = log₂(n) + C`
+/// * fits represented with `bits` bits: `α = bits + C` (the symbol costs
+///   `bits` to describe; `C` bounds the worst-case codeword length)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DictCost {
+    /// cost in bits of describing one dictionary line
+    pub alpha: f64,
+}
+
+impl DictCost {
+    /// `α = log₂(d) + d` — variable-name dictionaries.
+    pub fn variable_names(d: usize) -> Self {
+        let d = d.max(1) as f64;
+        DictCost {
+            alpha: d.log2().max(0.0) + d,
+        }
+    }
+
+    /// `α = log₂(C) + C` — categorical split-value dictionaries.
+    pub fn categorical_splits(c: usize) -> Self {
+        let c = c.max(1) as f64;
+        DictCost {
+            alpha: c.log2().max(0.0) + c,
+        }
+    }
+
+    /// `α = log₂(n) + C` — numerical split values stored as observation
+    /// (rank) indices; `n` observations, `C` distinct split values.
+    pub fn numerical_splits(n: usize, c: usize) -> Self {
+        let n = n.max(1) as f64;
+        DictCost {
+            alpha: n.log2().max(0.0) + c.max(1) as f64,
+        }
+    }
+
+    /// Fits represented with `bits` bits per value, `C` distinct values.
+    /// The paper's §6 observation: at 64-bit fit representation the α is
+    /// large ⇒ few clusters; at 32-bit it shrinks ⇒ ≈7 clusters.
+    pub fn fits(bits: u32, c: usize) -> Self {
+        DictCost {
+            alpha: bits as f64 + c.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_is_log() {
+        let h = entropy_counts(&[10, 10, 10, 10]);
+        assert!((h - 2.0).abs() < 1e-12);
+        assert!((entropy_probs(&[0.25; 4]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_zero() {
+        assert_eq!(entropy_counts(&[42, 0, 0]), 0.0);
+        assert_eq!(entropy_counts(&[]), 0.0);
+    }
+
+    #[test]
+    fn kl_self_zero_and_nonnegative() {
+        let p = [0.2, 0.3, 0.5];
+        assert_eq!(kl_divergence(&p, &p), 0.0);
+        let q = [0.4, 0.3, 0.3];
+        assert!(kl_divergence(&p, &q) > 0.0);
+        assert!(kl_divergence(&q, &p) > 0.0);
+    }
+
+    #[test]
+    fn kl_asymmetric() {
+        let p = [0.9, 0.1];
+        let q = [0.5, 0.5];
+        assert!((kl_divergence(&p, &q) - kl_divergence(&q, &p)).abs() > 1e-6);
+    }
+
+    #[test]
+    fn kl_support_mismatch_infinite() {
+        assert_eq!(kl_divergence(&[0.5, 0.5], &[1.0, 0.0]), f64::INFINITY);
+        // other direction is fine: q has extra support
+        assert!(kl_divergence(&[1.0, 0.0], &[0.5, 0.5]).is_finite());
+    }
+
+    #[test]
+    fn cross_entropy_decomposition() {
+        // H(P,Q) = H(P) + D(P||Q)
+        let p = [0.3, 0.7];
+        let q = [0.6, 0.4];
+        let lhs = cross_entropy(&p, &q);
+        let rhs = entropy_probs(&p) + kl_divergence(&p, &q);
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        assert_eq!(normalize(&[0, 0]), vec![0.5, 0.5]);
+        assert_eq!(normalize(&[1, 3]), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn dict_costs_match_paper_formulas() {
+        let d = 32usize;
+        assert!((DictCost::variable_names(d).alpha - (5.0 + 32.0)).abs() < 1e-12);
+        let c = 16usize;
+        assert!((DictCost::categorical_splits(c).alpha - (4.0 + 16.0)).abs() < 1e-12);
+        let n = 1024usize;
+        assert!((DictCost::numerical_splits(n, c).alpha - (10.0 + 16.0)).abs() < 1e-12);
+        assert!((DictCost::fits(64, 8).alpha - 72.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,180 @@
+//! Compact f64 coding: Huffman on the high 12 bits (sign + exponent),
+//! mantissa raw.
+//!
+//! Fitted values and split thresholds from one dataset concentrate in a
+//! narrow dynamic range, so their sign/exponent field takes a handful of
+//! values (≈1–3 bits under Huffman) while the 52 mantissa bits are
+//! incompressible noise. This recovers the same ~15 % the paper's gzip
+//! baseline finds in raw IEEE streams, keeps bit-exactness, and decodes a
+//! value in O(code length) — no byte-level modeling needed.
+
+use super::bitio::{BitReader, BitWriter};
+use super::huffman::{HuffmanCode, HuffmanDecoder};
+use anyhow::{Context, Result};
+
+/// Number of coded high bits (sign + 11 exponent bits).
+const HIGH_BITS: u8 = 12;
+const MANTISSA_BITS: u8 = 64 - HIGH_BITS as u8;
+
+#[inline]
+fn high(v: f64) -> u32 {
+    (v.to_bits() >> MANTISSA_BITS) as u32
+}
+
+/// Codec for a stream of f64s sharing one sign/exponent distribution.
+#[derive(Debug, Clone)]
+pub struct F64Codec {
+    code: HuffmanCode,
+    decoder: HuffmanDecoder,
+}
+
+impl F64Codec {
+    /// Build from sample values (must cover every value later encoded —
+    /// in this codebase the sample *is* the full stream).
+    pub fn from_values<'a>(values: impl Iterator<Item = &'a f64>) -> Result<Self> {
+        let mut counts = vec![0u64; 1 << HIGH_BITS];
+        let mut any = false;
+        for v in values {
+            counts[high(*v) as usize] += 1;
+            any = true;
+        }
+        if !any {
+            counts[0] = 1; // degenerate but valid codec
+        }
+        let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let code = HuffmanCode::from_weights(&weights)?;
+        let decoder = code.decoder();
+        Ok(F64Codec { code, decoder })
+    }
+
+    /// Expected bits per value under the build distribution (for the
+    /// encoder's raw-vs-indexed cost comparison).
+    pub fn expected_bits(&self, values: &[f64]) -> f64 {
+        if values.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = values
+            .iter()
+            .map(|v| self.code.length(high(*v)) as f64 + MANTISSA_BITS as f64)
+            .sum();
+        total / values.len() as f64
+    }
+
+    pub fn encode(&self, v: f64, w: &mut BitWriter) -> Result<()> {
+        self.code.encode(high(v), w)?;
+        w.write_bits(v.to_bits() & ((1u64 << MANTISSA_BITS) - 1), MANTISSA_BITS);
+        Ok(())
+    }
+
+    pub fn decode(&self, r: &mut BitReader) -> Result<f64> {
+        let h = self.decoder.decode(r)? as u64;
+        let m = r.read_bits(MANTISSA_BITS).context("f64 mantissa")?;
+        Ok(f64::from_bits((h << MANTISSA_BITS) | m))
+    }
+
+    /// Serialize the codec (the Huffman length table over the 4096-symbol
+    /// high-bits alphabet; run-length coded, so ~tens of bytes in practice).
+    pub fn write_dict(&self, w: &mut BitWriter) {
+        self.code.write_dict(w);
+    }
+
+    pub fn read_dict(r: &mut BitReader) -> Result<Self> {
+        let code = HuffmanCode::read_dict(r)?;
+        let decoder = code.decoder();
+        Ok(F64Codec { code, decoder })
+    }
+
+    /// Serialized dictionary size in bits.
+    pub fn dict_bits(&self) -> u64 {
+        self.code.dict_bits()
+    }
+}
+
+/// One-shot block: codec dict + count + values (used for the container's
+/// value tables).
+pub fn write_block(values: &[f64], w: &mut BitWriter) -> Result<()> {
+    let codec = F64Codec::from_values(values.iter())?;
+    codec.write_dict(w);
+    w.write_varint(values.len() as u64);
+    for v in values {
+        codec.encode(*v, w)?;
+    }
+    Ok(())
+}
+
+pub fn read_block(r: &mut BitReader) -> Result<Vec<f64>> {
+    let codec = F64Codec::read_dict(r)?;
+    let n = r.read_varint().context("f64 block count")? as usize;
+    if n > 500_000_000 {
+        anyhow::bail!("implausible f64 block size {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(codec.decode(r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let mut rng = Pcg64::new(1);
+        let values: Vec<f64> = (0..2000)
+            .map(|_| (rng.gen_f64() - 0.3) * 120.0)
+            .chain([0.0, -0.0, 1.0, f64::MIN_POSITIVE, 1e300, -1e-300])
+            .collect();
+        let mut w = BitWriter::new();
+        write_block(&values, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let out = read_block(&mut BitReader::new(&bytes)).unwrap();
+        assert_eq!(out.len(), values.len());
+        for (a, b) in values.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn narrow_range_beats_raw64() {
+        // values in [1, 2): a single exponent ⇒ ~53 bits/value
+        let values: Vec<f64> = (0..4096).map(|i| 1.0 + i as f64 / 4096.0).collect();
+        let mut w = BitWriter::new();
+        write_block(&values, &mut w).unwrap();
+        let bits_per = w.bit_len() as f64 / values.len() as f64;
+        assert!(bits_per < 55.0, "bits/value = {bits_per}");
+    }
+
+    #[test]
+    fn expected_bits_matches_actual() {
+        let mut rng = Pcg64::new(2);
+        let values: Vec<f64> = (0..1000).map(|_| rng.gen_normal() * 50.0).collect();
+        let codec = F64Codec::from_values(values.iter()).unwrap();
+        let mut w = BitWriter::new();
+        for v in &values {
+            codec.encode(*v, &mut w).unwrap();
+        }
+        let actual = w.bit_len() as f64 / values.len() as f64;
+        let expected = codec.expected_bits(&values);
+        assert!((actual - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_block() {
+        let mut w = BitWriter::new();
+        write_block(&[], &mut w).unwrap();
+        let bytes = w.into_bytes();
+        assert!(read_block(&mut BitReader::new(&bytes)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncated_block_errors() {
+        let values = vec![1.5; 100];
+        let mut w = BitWriter::new();
+        write_block(&values, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        assert!(read_block(&mut BitReader::new(&bytes[..bytes.len() / 4])).is_err());
+    }
+}

@@ -1,0 +1,497 @@
+//! Canonical Huffman coding with serializable dictionaries.
+//!
+//! These are the per-cluster codebooks of Algorithm 1: a cluster centroid
+//! `Q_k` defines symbol weights, the Huffman code built from them encodes
+//! every sequence assigned to the cluster, and the *dictionary* (the code
+//! length table) is what the `α‖Q‖₀` term of eq. (6) pays for.
+//!
+//! Properties relied on elsewhere:
+//! * prefix-free ⇒ symbols are decodable mid-stream (prediction from the
+//!   compressed format, paper §5);
+//! * lossless for any symbol with a codeword, even when the code was built
+//!   from a *different* distribution than the data's (paper §5, citing
+//!   Cover & Thomas) — this is why cluster-merged codebooks stay lossless;
+//! * canonical form ⇒ the dictionary serializes as code *lengths* only.
+
+use super::bitio::{BitReader, BitWriter};
+use anyhow::{bail, Context, Result};
+
+/// Maximum codeword length we allow. Canonical codes over the alphabets we
+/// meet stay far below this; the cap bounds the decoder table.
+pub const MAX_CODE_LEN: u8 = 58;
+
+/// A canonical Huffman code over symbols `0..n`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HuffmanCode {
+    /// Code length per symbol; 0 = symbol absent from the codebook.
+    lengths: Vec<u8>,
+    /// Canonical codeword per symbol (valid where `lengths > 0`).
+    codes: Vec<u64>,
+}
+
+impl HuffmanCode {
+    /// Build from non-negative weights (counts or probabilities). Symbols
+    /// with zero weight get **no codeword**; encoding them is an error, which
+    /// the pipeline avoids by giving every observed symbol a pseudo-count.
+    ///
+    /// Edge cases: an alphabet with a single weighted symbol gets a 1-bit
+    /// code (Huffman's degenerate case).
+    pub fn from_weights(weights: &[f64]) -> Result<Self> {
+        let n = weights.len();
+        if n == 0 {
+            bail!("empty alphabet");
+        }
+        let active: Vec<usize> = (0..n).filter(|&i| weights[i] > 0.0).collect();
+        if active.is_empty() {
+            bail!("all weights are zero");
+        }
+        let mut lengths = vec![0u8; n];
+        if active.len() == 1 {
+            lengths[active[0]] = 1;
+            return Self::from_lengths(lengths);
+        }
+
+        // Standard two-queue-free heap construction over (weight, node id).
+        #[derive(PartialEq)]
+        struct Item(f64, usize);
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                // reversed: BinaryHeap is a max-heap and we need min
+                o.0.partial_cmp(&self.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(o.1.cmp(&self.1))
+            }
+        }
+
+        let mut heap = std::collections::BinaryHeap::new();
+        // internal tree: parent pointers
+        let mut parent: Vec<usize> = vec![usize::MAX; active.len()];
+        for (node, &sym) in active.iter().enumerate() {
+            heap.push(Item(weights[sym], node));
+        }
+        while heap.len() > 1 {
+            let a = heap.pop().unwrap();
+            let b = heap.pop().unwrap();
+            let id = parent.len();
+            parent.push(usize::MAX);
+            parent[a.1] = id;
+            parent[b.1] = id;
+            heap.push(Item(a.0 + b.0, id));
+        }
+        // Depth of each leaf = code length.
+        for (node, &sym) in active.iter().enumerate() {
+            let mut d = 0u8;
+            let mut cur = node;
+            while parent[cur] != usize::MAX {
+                cur = parent[cur];
+                d += 1;
+            }
+            lengths[sym] = d.max(1); // single-leaf safety (handled above anyway)
+        }
+        if lengths.iter().any(|&l| l > MAX_CODE_LEN) {
+            bail!("codeword length exceeds MAX_CODE_LEN");
+        }
+        Self::from_lengths(lengths)
+    }
+
+    /// Build the canonical code from a length table (the serialized
+    /// dictionary form). Validates the Kraft equality/inequality.
+    pub fn from_lengths(lengths: Vec<u8>) -> Result<Self> {
+        let active = lengths.iter().filter(|&&l| l > 0).count();
+        if active == 0 {
+            bail!("no symbols in dictionary");
+        }
+        // Kraft sum over active symbols must be <= 1 (== 1 for a complete
+        // code; a single-symbol code with length 1 gives 1/2, still valid).
+        let kraft: f64 = lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        if kraft > 1.0 + 1e-9 {
+            bail!("invalid code lengths: Kraft sum {kraft} > 1");
+        }
+        // Canonical assignment: sort by (length, symbol).
+        let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+        order.sort_by_key(|&i| (lengths[i], i));
+        let mut codes = vec![0u64; lengths.len()];
+        let mut code = 0u64;
+        let mut prev_len = 0u8;
+        for &sym in &order {
+            let l = lengths[sym];
+            code <<= l - prev_len;
+            codes[sym] = code;
+            code += 1;
+            prev_len = l;
+        }
+        Ok(HuffmanCode { lengths, codes })
+    }
+
+    /// Alphabet size (including zero-length symbols).
+    pub fn alphabet_size(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// Code length of a symbol (0 if absent).
+    pub fn length(&self, sym: u32) -> u8 {
+        self.lengths[sym as usize]
+    }
+
+    /// The length table — the dictionary content whose cost eq. (6) charges.
+    pub fn lengths(&self) -> &[u8] {
+        &self.lengths
+    }
+
+    /// Encode one symbol.
+    pub fn encode(&self, sym: u32, out: &mut BitWriter) -> Result<()> {
+        let l = *self
+            .lengths
+            .get(sym as usize)
+            .context("symbol out of alphabet")?;
+        if l == 0 {
+            bail!("symbol {sym} has no codeword");
+        }
+        out.write_bits(self.codes[sym as usize], l);
+        Ok(())
+    }
+
+    /// Encode a sequence.
+    pub fn encode_all(&self, syms: &[u32], out: &mut BitWriter) -> Result<()> {
+        for &s in syms {
+            self.encode(s, out)?;
+        }
+        Ok(())
+    }
+
+    /// Expected code length under a distribution `p` (bits/symbol); the
+    /// quantity the clustering objective trades against dictionary cost.
+    pub fn expected_length(&self, p: &[f64]) -> f64 {
+        p.iter()
+            .zip(&self.lengths)
+            .map(|(&pi, &l)| pi * l as f64)
+            .sum()
+    }
+
+    /// Serialize the dictionary (length table) to a bit stream.
+    ///
+    /// Format: varint alphabet size, then run-length coded lengths (6 bits
+    /// each, runs of equal lengths gamma-coded) — zero lengths are common
+    /// (cluster codebooks cover only observed symbols), so this stays small.
+    pub fn write_dict(&self, out: &mut BitWriter) {
+        out.write_varint(self.lengths.len() as u64);
+        let mut i = 0usize;
+        while i < self.lengths.len() {
+            let l = self.lengths[i];
+            let mut run = 1u64;
+            while i + (run as usize) < self.lengths.len() && self.lengths[i + run as usize] == l {
+                run += 1;
+            }
+            out.write_bits(l as u64, 6);
+            out.write_gamma(run);
+            i += run as usize;
+        }
+    }
+
+    /// Deserialize a dictionary written by [`write_dict`].
+    pub fn read_dict(r: &mut BitReader) -> Result<Self> {
+        let n = r.read_varint().context("dict: alphabet size")? as usize;
+        if n == 0 || n > 100_000_000 {
+            bail!("dict: implausible alphabet size {n}");
+        }
+        let mut lengths = Vec::with_capacity(n);
+        while lengths.len() < n {
+            let l = r.read_bits(6).context("dict: length")? as u8;
+            let run = r.read_gamma().context("dict: run")? as usize;
+            if lengths.len() + run > n {
+                bail!("dict: run overflows alphabet");
+            }
+            lengths.extend(std::iter::repeat(l).take(run));
+        }
+        Self::from_lengths(lengths)
+    }
+
+    /// Size in bits of the serialized dictionary.
+    pub fn dict_bits(&self) -> u64 {
+        let mut w = BitWriter::new();
+        self.write_dict(&mut w);
+        w.bit_len()
+    }
+
+    /// Build the matching decoder.
+    pub fn decoder(&self) -> HuffmanDecoder {
+        HuffmanDecoder::new(self)
+    }
+}
+
+/// Table-driven canonical Huffman decoder.
+///
+/// Uses the canonical first-code/first-symbol arrays: decode walks length by
+/// length comparing the accumulated prefix against the canonical interval —
+/// O(code length) per symbol with no per-node allocation. A one-shot
+/// `fast_table` for short codes (≤ [`FAST_BITS`]) accelerates the common
+/// case on the prediction hot path.
+#[derive(Debug, Clone)]
+pub struct HuffmanDecoder {
+    /// first canonical code value at each length (index 1..=MAX)
+    first_code: Vec<u64>,
+    /// number of codewords at each length
+    count: Vec<u64>,
+    /// index into `sorted_syms` of the first symbol at each length
+    first_sym_idx: Vec<u32>,
+    /// symbols sorted by (length, symbol)
+    sorted_syms: Vec<u32>,
+    max_len: u8,
+    /// fast path: prefix of FAST_BITS bits -> (symbol, length) when the code
+    /// fits, else (u32::MAX, 0) sentinel.
+    fast: Vec<(u32, u8)>,
+}
+
+/// Width of the fast decode table (2^FAST_BITS entries).
+pub const FAST_BITS: u8 = 10;
+
+impl HuffmanDecoder {
+    pub fn new(code: &HuffmanCode) -> Self {
+        let max_len = code.lengths.iter().copied().max().unwrap_or(0);
+        let mut order: Vec<u32> = (0..code.lengths.len() as u32)
+            .filter(|&s| code.lengths[s as usize] > 0)
+            .collect();
+        order.sort_by_key(|&s| (code.lengths[s as usize], s));
+
+        let mut first_code = vec![0u64; max_len as usize + 2];
+        let mut first_sym_idx = vec![0u32; max_len as usize + 2];
+        // count of codes per length
+        let mut count = vec![0u64; max_len as usize + 1];
+        for &l in code.lengths.iter().filter(|&&l| l > 0) {
+            count[l as usize] += 1;
+        }
+        let mut c = 0u64;
+        let mut idx = 0u32;
+        for l in 1..=max_len as usize {
+            first_code[l] = c;
+            first_sym_idx[l] = idx;
+            c = (c + count[l]) << 1;
+            idx += count[l] as u32;
+        }
+
+        // fast table
+        let fast_len = 1usize << FAST_BITS;
+        let mut fast = vec![(u32::MAX, 0u8); fast_len];
+        for &sym in &order {
+            let l = code.lengths[sym as usize];
+            if l <= FAST_BITS {
+                let cw = code.codes[sym as usize];
+                let shift = FAST_BITS - l;
+                let base = (cw << shift) as usize;
+                for pad in 0..(1usize << shift) {
+                    fast[base | pad] = (sym, l);
+                }
+            }
+        }
+
+        HuffmanDecoder {
+            first_code,
+            count,
+            first_sym_idx,
+            sorted_syms: order,
+            max_len,
+            fast,
+        }
+    }
+
+    /// Decode one symbol from the reader.
+    pub fn decode(&self, r: &mut BitReader) -> Result<u32> {
+        // Fast path: peek FAST_BITS bits if available.
+        let pos = r.bit_pos();
+        if pos + FAST_BITS as u64 <= r.bit_len() {
+            let peek = r.read_bits(FAST_BITS).unwrap();
+            let (sym, l) = self.fast[peek as usize];
+            if sym != u32::MAX {
+                r.seek_bits(pos + l as u64);
+                return Ok(sym);
+            }
+            r.seek_bits(pos);
+        }
+        // Slow path: extend bit by bit; at length l the valid canonical
+        // codewords are [first_code[l], first_code[l] + count[l]).
+        let mut code = 0u64;
+        for l in 1..=self.max_len {
+            code = (code << 1) | r.read_bit().context("huffman: eof")? as u64;
+            let li = l as usize;
+            if self.count[li] > 0
+                && code >= self.first_code[li]
+                && code < self.first_code[li] + self.count[li]
+            {
+                let offset = code - self.first_code[li];
+                let idx = self.first_sym_idx[li] as u64 + offset;
+                return Ok(self.sorted_syms[idx as usize]);
+            }
+        }
+        bail!("huffman: invalid codeword")
+    }
+
+    /// Decode exactly `n` symbols.
+    pub fn decode_all(&self, r: &mut BitReader, n: usize) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(weights: &[f64], seq: &[u32]) {
+        let code = HuffmanCode::from_weights(weights).unwrap();
+        let mut w = BitWriter::new();
+        code.encode_all(seq, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let dec = code.decoder();
+        let mut r = BitReader::new(&bytes);
+        let out = dec.decode_all(&mut r, seq.len()).unwrap();
+        assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn basic_roundtrip() {
+        roundtrip(&[5.0, 2.0, 1.0, 1.0], &[0, 1, 2, 3, 0, 0, 1, 2, 3, 3, 0]);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        roundtrip(&[3.0], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn two_symbols() {
+        roundtrip(&[0.9, 0.1], &[0, 0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn sparse_alphabet_zero_weights() {
+        // symbols 1 and 3 unused
+        let code = HuffmanCode::from_weights(&[1.0, 0.0, 2.0, 0.0, 3.0]).unwrap();
+        assert_eq!(code.length(1), 0);
+        assert_eq!(code.length(3), 0);
+        let mut w = BitWriter::new();
+        assert!(code.encode(1, &mut w).is_err());
+        roundtrip(&[1.0, 0.0, 2.0, 0.0, 3.0], &[0, 2, 4, 4, 0, 2]);
+    }
+
+    #[test]
+    fn optimality_within_one_bit_of_entropy() {
+        // H(X) <= R < H(X)+1 (paper §2.2)
+        let p = [0.5, 0.25, 0.125, 0.125];
+        let code = HuffmanCode::from_weights(&p).unwrap();
+        let r = code.expected_length(&p);
+        let h: f64 = p.iter().map(|&x| -x * x.log2()).sum();
+        assert!(r >= h - 1e-9, "r={r} h={h}");
+        assert!(r < h + 1.0, "r={r} h={h}");
+        // dyadic ⇒ exactly optimal
+        assert!((r - h).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kraft_equality_for_complete_code() {
+        let code = HuffmanCode::from_weights(&[4.0, 3.0, 2.0, 1.0, 1.0]).unwrap();
+        let kraft: f64 = code
+            .lengths()
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!((kraft - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dict_roundtrip() {
+        let code = HuffmanCode::from_weights(&[10.0, 0.0, 5.0, 1.0, 1.0, 0.0, 0.5]).unwrap();
+        let mut w = BitWriter::new();
+        code.write_dict(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        let restored = HuffmanCode::read_dict(&mut r).unwrap();
+        assert_eq!(code, restored);
+    }
+
+    #[test]
+    fn decode_with_mismatched_distribution_still_lossless() {
+        // Encode data drawn from P with a code built from Q != P: still
+        // decodes exactly (paper §5).
+        let q = [0.7, 0.1, 0.1, 0.1];
+        let code = HuffmanCode::from_weights(&q).unwrap();
+        let seq = [3u32, 3, 3, 2, 2, 1, 0, 3, 2, 1, 3]; // skewed toward 3
+        let mut w = BitWriter::new();
+        code.encode_all(&seq, &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let out = code
+            .decoder()
+            .decode_all(&mut BitReader::new(&bytes), seq.len())
+            .unwrap();
+        assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn large_skewed_alphabet() {
+        let n = 300usize;
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 / (i + 1) as f64).collect();
+        let seq: Vec<u32> = (0..1000u32).map(|i| (i * 7919) % n as u32).collect();
+        roundtrip(&weights, &seq);
+    }
+
+    #[test]
+    fn prefix_decode_mid_stream() {
+        // Decode the k-th symbol after seeking to its known bit offset —
+        // the property prediction-from-compressed relies on.
+        let weights = [3.0, 2.0, 1.0];
+        let code = HuffmanCode::from_weights(&weights).unwrap();
+        let seq = [0u32, 2, 1, 1, 0, 2];
+        let mut w = BitWriter::new();
+        let mut offsets = Vec::new();
+        for &s in &seq {
+            offsets.push(w.bit_len());
+            code.encode(s, &mut w).unwrap();
+        }
+        let bytes = w.into_bytes();
+        let dec = code.decoder();
+        for (i, &s) in seq.iter().enumerate() {
+            let mut r = BitReader::new(&bytes);
+            r.seek_bits(offsets[i]);
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn invalid_kraft_rejected() {
+        assert!(HuffmanCode::from_lengths(vec![1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn empty_and_zero_weight_rejected() {
+        assert!(HuffmanCode::from_weights(&[]).is_err());
+        assert!(HuffmanCode::from_weights(&[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors_cleanly() {
+        let code = HuffmanCode::from_weights(&[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let mut w = BitWriter::new();
+        code.encode_all(&[0, 1, 2, 3], &mut w).unwrap();
+        let bytes = w.into_bytes();
+        // cut off mid-stream: decoding more symbols than encoded must error,
+        // not panic (trailing zero padding may decode as a phantom symbol,
+        // which the container guards against by storing counts).
+        let dec = code.decoder();
+        let mut r = BitReader::new(&bytes[..1]);
+        let res = dec.decode_all(&mut r, 10);
+        assert!(res.is_err());
+    }
+}

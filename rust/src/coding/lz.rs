@@ -1,0 +1,237 @@
+//! LZSS over a bit/byte stream — the paper's structure coder (§3.1).
+//!
+//! The concatenated Zaks sequences of all trees in a forest are highly
+//! repetitive (trees resemble each other near the root), so instead of
+//! treating each whole sequence as one symbol from an enormous alphabet, the
+//! paper — "inspired by [18]" (Chen & Reif) — runs an LZ coder over the
+//! concatenation. We implement LZSS with a hash-chain match finder:
+//!
+//! * literal  : flag 0 + 8-bit byte
+//! * match    : flag 1 + gamma(length-MIN_MATCH+1) + gamma(distance)
+//!
+//! Gamma codes make short distances/lengths cheap, which matches the Zaks
+//! statistics (most matches are recent — trees repeat their neighbours).
+//! The Zaks bitstring is packed 8-bits-per-byte before matching, so matches
+//! work over byte granularity while literals stay cheap.
+
+use super::bitio::{BitReader, BitWriter};
+use anyhow::{bail, Context, Result};
+
+/// Minimum match length (bytes) worth emitting as a reference.
+pub const MIN_MATCH: usize = 4;
+/// Maximum match length.
+pub const MAX_MATCH: usize = 1 << 16;
+/// Search window (bytes).
+pub const WINDOW: usize = 1 << 20;
+/// Hash-chain depth cap: longest chain walked per position.
+const MAX_CHAIN: usize = 64;
+
+const HASH_BITS: u32 = 16;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `data` into the bit stream. Returns compressed bit count.
+pub fn compress(data: &[u8], out: &mut BitWriter) -> u64 {
+    let start = out.bit_len();
+    out.write_varint(data.len() as u64);
+    let n = data.len();
+    let mut head = vec![usize::MAX; HASH_SIZE];
+    let mut prev = vec![usize::MAX; n.max(1)];
+    let mut i = 0usize;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash4(data, i);
+            let mut cand = head[h];
+            let mut chain = 0usize;
+            while cand != usize::MAX && i - cand <= WINDOW && chain < MAX_CHAIN {
+                // extend match
+                let max_l = (n - i).min(MAX_MATCH);
+                let mut l = 0usize;
+                while l < max_l && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - cand;
+                    if l >= max_l {
+                        break;
+                    }
+                }
+                cand = prev[cand];
+                chain += 1;
+            }
+        }
+        if best_len >= MIN_MATCH {
+            out.write_bit(true);
+            out.write_gamma((best_len - MIN_MATCH + 1) as u64);
+            out.write_gamma(best_dist as u64);
+            // insert hash entries for every covered position
+            let end = i + best_len;
+            while i < end {
+                if i + MIN_MATCH <= n {
+                    let h = hash4(data, i);
+                    prev[i] = head[h];
+                    head[h] = i;
+                }
+                i += 1;
+            }
+        } else {
+            out.write_bit(false);
+            out.write_bits(data[i] as u64, 8);
+            if i + MIN_MATCH <= n {
+                let h = hash4(data, i);
+                prev[i] = head[h];
+                head[h] = i;
+            }
+            i += 1;
+        }
+    }
+    out.bit_len() - start
+}
+
+/// Decompress a stream written by [`compress`].
+pub fn decompress(r: &mut BitReader) -> Result<Vec<u8>> {
+    let n = r.read_varint().context("lz: length")? as usize;
+    if n > (1 << 34) {
+        bail!("lz: implausible decompressed length {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let is_match = r.read_bit().context("lz: flag")?;
+        if is_match {
+            let len = r.read_gamma().context("lz: match length")? as usize + MIN_MATCH - 1;
+            let dist = r.read_gamma().context("lz: distance")? as usize;
+            if dist == 0 || dist > out.len() {
+                bail!("lz: invalid distance {dist} at {}", out.len());
+            }
+            if out.len() + len > n {
+                bail!("lz: match overruns output");
+            }
+            let start = out.len() - dist;
+            // overlapping copy must be byte-by-byte
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        } else {
+            let b = r.read_bits(8).context("lz: literal")? as u8;
+            out.push(b);
+        }
+    }
+    Ok(out)
+}
+
+/// One-shot helpers returning owned byte vectors.
+pub fn compress_to_bytes(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    compress(data, &mut w);
+    w.into_bytes()
+}
+
+pub fn decompress_from_bytes(bytes: &[u8]) -> Result<Vec<u8>> {
+    let mut r = BitReader::new(bytes);
+    decompress(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let bytes = compress_to_bytes(data);
+        let out = decompress_from_bytes(&bytes).unwrap();
+        assert_eq!(out, data);
+        bytes.len()
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+    }
+
+    #[test]
+    fn repetitive_compresses_well() {
+        let data: Vec<u8> = b"11110010010010"
+            .iter()
+            .cycle()
+            .take(10_000)
+            .copied()
+            .collect();
+        let c = roundtrip(&data);
+        assert!(c < data.len() / 10, "compressed {c} of {}", data.len());
+    }
+
+    #[test]
+    fn random_data_does_not_explode() {
+        let mut rng = Pcg64::new(3);
+        let data: Vec<u8> = (0..5000).map(|_| rng.next_u64() as u8).collect();
+        let c = roundtrip(&data);
+        // literals cost 9 bits/byte + header; bound the expansion
+        assert!(c < data.len() * 9 / 8 + 16, "compressed {c} of {}", data.len());
+    }
+
+    #[test]
+    fn overlapping_match() {
+        // classic run: "aaaaa..." forces dist=1 overlapping copies
+        let data = vec![b'a'; 1000];
+        let c = roundtrip(&data);
+        assert!(c < 40);
+    }
+
+    #[test]
+    fn zaks_like_bitpacked_input() {
+        // emulate concatenated Zaks sequences from similar trees
+        let mut rng = Pcg64::new(9);
+        let mut bits = Vec::new();
+        let base: Vec<u8> = (0..200).map(|_| (rng.gen_bool(0.5)) as u8).collect();
+        for _ in 0..50 {
+            // each "tree" is the base with a few flips
+            let mut t = base.clone();
+            for _ in 0..5 {
+                let i = rng.gen_index(t.len());
+                t[i] ^= 1;
+            }
+            bits.extend_from_slice(&t);
+        }
+        // pack to bytes
+        let mut w = BitWriter::new();
+        for &b in &bits {
+            w.write_bit(b == 1);
+        }
+        let packed = w.into_bytes();
+        let c = roundtrip(&packed);
+        // bit flips land at arbitrary positions, breaking byte-aligned
+        // matches; still expect a clear win over the raw packing
+        assert!(c < packed.len() * 3 / 5, "compressed {c} of {}", packed.len());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let data = b"hello world hello world hello world";
+        let bytes = compress_to_bytes(data);
+        let res = decompress_from_bytes(&bytes[..bytes.len() / 2]);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn corrupt_distance_rejected() {
+        // craft: length prefix says 10 bytes, then a match with dist > produced
+        let mut w = BitWriter::new();
+        w.write_varint(10);
+        w.write_bit(true); // match
+        w.write_gamma(1); // len = MIN_MATCH
+        w.write_gamma(5); // dist 5 with empty output -> invalid
+        let bytes = w.into_bytes();
+        assert!(decompress_from_bytes(&bytes).is_err());
+    }
+}

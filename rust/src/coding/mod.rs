@@ -1,0 +1,22 @@
+//! Entropy-coding substrate (paper §2.2).
+//!
+//! * [`bitio`]   — MSB-first bit writer/reader with random access
+//! * [`huffman`] — canonical Huffman codes with serializable dictionaries
+//!   (the per-cluster codebooks of Algorithm 1)
+//! * [`arith`]   — arithmetic coding, static and adaptive (used for binary
+//!   fits in two-class problems, §4)
+//! * [`lz`]      — LZSS, applied to the concatenated Zaks sequences (§3.1)
+//! * [`entropy`] — empirical entropy, KL divergence, and the dictionary-cost
+//!   constants `α` of eq. (6)
+//! * [`f64pack`] — bit-exact f64 coding (Huffman'd sign/exponent + raw
+//!   mantissa) for value tables and raw fit streams
+
+pub mod arith;
+pub mod bitio;
+pub mod entropy;
+pub mod f64pack;
+pub mod huffman;
+pub mod lz;
+
+pub use bitio::{BitReader, BitWriter};
+pub use huffman::{HuffmanCode, HuffmanDecoder};

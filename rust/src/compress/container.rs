@@ -1,0 +1,784 @@
+//! The compressed-forest container format (`RFCZ`).
+//!
+//! ```text
+//! ┌──────────┬─────────────────────────────────────────────────────────┐
+//! │ HEADER   │ magic, version, target kind, trees, features, codecs,   │
+//! │          │ conditioning, section byte offsets                      │
+//! │ TABLES   │ per-feature split-value alphabets + regression fit      │
+//! │          │ value alphabet (the 64-bit-exact side tables)           │
+//! │ CLUSMAP  │ context-key → cluster id, per model family              │
+//! │ DICTS    │ per-cluster codebooks: canonical-Huffman length tables, │
+//! │          │ or arithmetic frequency models for two-class fits       │
+//! │ STRUCT   │ LZSS(concatenated Zaks sequences)                       │
+//! │ VARS     │ per-tree byte offsets + Huffman-coded variable names    │
+//! │ SPLITS   │ per-tree byte offsets + Huffman-coded split ranks       │
+//! │ FITS     │ per-tree byte offsets + Huffman/arith-coded fits        │
+//! └──────────┴─────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Every payload section is **per-tree byte aligned** with an explicit
+//! offset table, which is what makes prediction from the compressed format
+//! (paper §5) a seek + prefix-decode instead of a full decompression.
+//! The container is fully self-describing: decompression requires no side
+//! information (in particular, unlike the paper's observation-index coding
+//! of numeric split values, the actual values live in TABLES — a standalone
+//! decoder cannot assume access to the training data).
+
+use crate::coding::arith::FreqModel;
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::f64pack::{self, F64Codec};
+use crate::coding::huffman::HuffmanCode;
+use crate::model::extract::{SplitAlphabet, ValueAlphabets};
+use crate::model::keys::{ContextKey, ModelConditioning, ROOT_FATHER};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+pub const MAGIC: &[u8; 4] = b"RFCZ";
+pub const VERSION: u8 = 1;
+
+/// Codec used for the FITS section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitCodec {
+    /// Canonical Huffman (regression / multiclass).
+    Huffman,
+    /// Arithmetic coding (two-class classification, §4).
+    Arith,
+    /// Raw 64-bit IEEE values inline (regression escape hatch: when fits
+    /// are mostly unique, table + index coding costs *more* than the 64
+    /// bits the paper's "orthodox losslessness" already pays per fit —
+    /// the encoder picks whichever is smaller, cf. the paper's Liberty⁺
+    /// fits barely compressing: 122.1 → 118 MB).
+    Raw64,
+}
+
+/// Per-section byte sizes — the paper's Table 1 breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SectionSizes {
+    pub header: u64,
+    /// TABLES minus the fit value table (split-value alphabets).
+    pub split_value_tables: u64,
+    /// Regression fit value alphabet (64 bits per distinct fit).
+    pub fit_value_table: u64,
+    pub cluster_maps: u64,
+    pub dictionaries: u64,
+    pub structure: u64,
+    pub var_names: u64,
+    pub split_values: u64,
+    pub fits: u64,
+}
+
+impl SectionSizes {
+    pub fn total(&self) -> u64 {
+        self.header
+            + self.split_value_tables
+            + self.fit_value_table
+            + self.cluster_maps
+            + self.dictionaries
+            + self.structure
+            + self.var_names
+            + self.split_values
+            + self.fits
+    }
+
+    /// Paper-style grouping: dict column = dictionaries + cluster maps +
+    /// split-value tables + header (all decode side-information), fits
+    /// column includes the fit value table.
+    pub fn paper_columns(&self) -> PaperColumns {
+        PaperColumns {
+            structure: self.structure,
+            var_names: self.var_names,
+            split_values: self.split_values,
+            fits: self.fits + self.fit_value_table,
+            dict: self.header + self.split_value_tables + self.cluster_maps + self.dictionaries,
+        }
+    }
+}
+
+/// The five columns of the paper's Table 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaperColumns {
+    pub structure: u64,
+    pub var_names: u64,
+    pub split_values: u64,
+    pub fits: u64,
+    pub dict: u64,
+}
+
+impl PaperColumns {
+    pub fn total(&self) -> u64 {
+        self.structure + self.var_names + self.split_values + self.fits + self.dict
+    }
+}
+
+/// Feature metadata kept in the header (kind drives split decoding; names
+/// reproduce the original model exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMeta {
+    pub name: String,
+    /// `None` = numeric; `Some(levels)` = categorical.
+    pub levels: Option<u32>,
+}
+
+/// Parsed header + side tables; payload sections stay as byte ranges into
+/// the container buffer (decoded on demand).
+#[derive(Debug, Clone)]
+pub struct ParsedContainer {
+    pub classification: bool,
+    pub classes: u32,
+    pub n_trees: usize,
+    pub features: Vec<FeatureMeta>,
+    pub fit_codec: FitCodec,
+    pub conditioning: ModelConditioning,
+    pub alphabets: ValueAlphabets,
+    /// Per-feature: `Some(ranks)` when the numeric split alphabet is
+    /// **dataset-indexed** (paper mode §3.2.2: each used threshold is the
+    /// rank of an observation value; the actual f64s are regenerated from
+    /// the training data via [`ParsedContainer::attach_dataset`]), `None`
+    /// when the values are stored in the container.
+    pub indexed_splits: Vec<Option<Vec<u64>>>,
+    /// context-key → cluster, per model family
+    pub vn_map: BTreeMap<ContextKey, u32>,
+    pub split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    pub fit_map: BTreeMap<ContextKey, u32>,
+    /// per-cluster codebooks
+    pub vn_dicts: Vec<HuffmanCode>,
+    pub split_dicts: Vec<Vec<HuffmanCode>>,
+    pub fit_dicts: Vec<HuffmanCode>,
+    pub fit_models: Vec<FreqModel>,
+    /// sign/exponent codec for [`FitCodec::Raw64`] fit streams
+    pub fit_raw_codec: Option<F64Codec>,
+    /// decoded concatenated Zaks bits
+    pub zaks_bits: Vec<bool>,
+    /// per-tree byte ranges (start, end) into each payload section
+    pub vars_ranges: Vec<(usize, usize)>,
+    pub splits_ranges: Vec<(usize, usize)>,
+    pub fits_ranges: Vec<(usize, usize)>,
+    /// the payload bytes of each section
+    pub vars_payload: Vec<u8>,
+    pub splits_payload: Vec<u8>,
+    pub fits_payload: Vec<u8>,
+    pub sizes: SectionSizes,
+}
+
+impl ParsedContainer {
+    /// Whether any split alphabet is dataset-indexed (paper mode) and must
+    /// be regenerated via [`Self::attach_dataset`] before decoding.
+    pub fn needs_dataset(&self) -> bool {
+        self.indexed_splits.iter().any(|x| x.is_some())
+    }
+
+    /// Regenerate dataset-indexed split alphabets from the training data:
+    /// map each stored rank onto the column's sorted unique values.
+    pub fn attach_dataset(&mut self, ds: &crate::data::Dataset) -> Result<()> {
+        if ds.num_features() != self.features.len() {
+            bail!(
+                "dataset has {} features, container expects {}",
+                ds.num_features(),
+                self.features.len()
+            );
+        }
+        for f in 0..self.features.len() {
+            if let Some(ranks) = &self.indexed_splits[f] {
+                let uniq = crate::model::extract::ValueAlphabets::column_unique(ds, f)?;
+                let vals: Result<Vec<f64>> = ranks
+                    .iter()
+                    .map(|&r| {
+                        uniq.get(r as usize).copied().with_context(|| {
+                            format!(
+                                "feature {f}: rank {r} beyond the dataset's {} unique values \
+                                 (wrong dataset attached?)",
+                                uniq.len()
+                            )
+                        })
+                    })
+                    .collect();
+                self.alphabets.splits[f] = SplitAlphabet::Numeric(vals?);
+                self.indexed_splits[f] = None; // resolved
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- encoding
+
+/// Everything the encoder assembled, ready for serialization.
+pub struct ContainerBuilder {
+    pub classification: bool,
+    pub classes: u32,
+    pub n_trees: usize,
+    pub features: Vec<FeatureMeta>,
+    pub fit_codec: FitCodec,
+    pub conditioning: ModelConditioning,
+    pub alphabets: ValueAlphabets,
+    /// `Some(ranks)` per feature ⇒ emit the numeric split alphabet as
+    /// dataset ranks (sorted, delta-gamma coded) instead of f64 values.
+    pub indexed_splits: Vec<Option<Vec<u64>>>,
+    pub vn_map: BTreeMap<ContextKey, u32>,
+    pub split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    pub fit_map: BTreeMap<ContextKey, u32>,
+    pub vn_dicts: Vec<HuffmanCode>,
+    pub split_dicts: Vec<Vec<HuffmanCode>>,
+    pub fit_dicts: Vec<HuffmanCode>,
+    pub fit_models: Vec<FreqModel>,
+    pub fit_raw_codec: Option<F64Codec>,
+    /// LZ-compressed packed Zaks stream (already encoded)
+    pub struct_bytes: Vec<u8>,
+    /// per-tree payloads, each byte-aligned
+    pub vars_trees: Vec<Vec<u8>>,
+    pub splits_trees: Vec<Vec<u8>>,
+    pub fits_trees: Vec<Vec<u8>>,
+}
+
+fn write_conditioning(w: &mut BitWriter, c: ModelConditioning) {
+    let v = match c {
+        ModelConditioning::DepthFather => 0u64,
+        ModelConditioning::DepthOnly => 1,
+        ModelConditioning::None => 2,
+    };
+    w.write_bits(v, 8);
+}
+
+fn read_conditioning(r: &mut BitReader) -> Result<ModelConditioning> {
+    Ok(match r.read_bits(8).context("conditioning")? {
+        0 => ModelConditioning::DepthFather,
+        1 => ModelConditioning::DepthOnly,
+        2 => ModelConditioning::None,
+        v => bail!("unknown conditioning tag {v}"),
+    })
+}
+
+fn write_map(w: &mut BitWriter, map: &BTreeMap<ContextKey, u32>) {
+    w.write_varint(map.len() as u64);
+    for (k, &c) in map {
+        w.write_varint(k.depth as u64);
+        // father: ROOT_FATHER encoded as 0, features as f+1
+        let father = if k.father == ROOT_FATHER { 0 } else { k.father as u64 + 1 };
+        w.write_varint(father);
+        w.write_varint(c as u64);
+    }
+}
+
+fn read_map(r: &mut BitReader) -> Result<BTreeMap<ContextKey, u32>> {
+    let n = r.read_varint().context("map len")? as usize;
+    if n > 50_000_000 {
+        bail!("implausible map size {n}");
+    }
+    let mut map = BTreeMap::new();
+    for _ in 0..n {
+        let depth = r.read_varint().context("map depth")? as u16;
+        let father_raw = r.read_varint().context("map father")?;
+        let father = if father_raw == 0 { ROOT_FATHER } else { (father_raw - 1) as u32 };
+        let cluster = r.read_varint().context("map cluster")? as u32;
+        map.insert(ContextKey { depth, father }, cluster);
+    }
+    Ok(map)
+}
+
+fn write_payload_section(w: &mut BitWriter, trees: &[Vec<u8>]) {
+    w.write_varint(trees.len() as u64);
+    for t in trees {
+        w.write_varint(t.len() as u64);
+    }
+    w.align_byte();
+    for t in trees {
+        for &b in t {
+            w.write_byte(b);
+        }
+    }
+}
+
+fn read_payload_section(r: &mut BitReader) -> Result<(Vec<(usize, usize)>, Vec<u8>)> {
+    let n = r.read_varint().context("payload tree count")? as usize;
+    if n > 50_000_000 {
+        bail!("implausible tree count {n}");
+    }
+    let mut lens = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for _ in 0..n {
+        let l = r.read_varint().context("payload tree len")? as usize;
+        lens.push(l);
+        total = total
+            .checked_add(l)
+            .context("payload length overflow")?;
+    }
+    if total > (1 << 33) {
+        bail!("implausible payload size {total}");
+    }
+    r.align_byte();
+    let mut payload = Vec::with_capacity(total);
+    for _ in 0..total {
+        payload.push(r.read_byte().context("payload bytes")?);
+    }
+    let mut ranges = Vec::with_capacity(n);
+    let mut off = 0usize;
+    for l in lens {
+        ranges.push((off, off + l));
+        off += l;
+    }
+    Ok((ranges, payload))
+}
+
+impl ContainerBuilder {
+    /// Serialize to the final container bytes + the section size breakdown.
+    pub fn serialize(&self) -> (Vec<u8>, SectionSizes) {
+        let mut w = BitWriter::new();
+        let mut sizes = SectionSizes::default();
+
+        // ---- HEADER ----
+        for &b in MAGIC {
+            w.write_byte(b);
+        }
+        w.write_bits(VERSION as u64, 8);
+        w.write_bits(self.classification as u64, 8);
+        w.write_varint(self.classes as u64);
+        w.write_varint(self.n_trees as u64);
+        w.write_varint(self.features.len() as u64);
+        for f in &self.features {
+            match f.levels {
+                None => w.write_bits(0, 8),
+                Some(l) => {
+                    w.write_bits(1, 8);
+                    w.write_varint(l as u64);
+                }
+            }
+            w.write_varint(f.name.len() as u64);
+            for &b in f.name.as_bytes() {
+                w.write_byte(b);
+            }
+        }
+        w.write_bits(
+            match self.fit_codec {
+                FitCodec::Huffman => 0,
+                FitCodec::Arith => 1,
+                FitCodec::Raw64 => 2,
+            },
+            8,
+        );
+        write_conditioning(&mut w, self.conditioning);
+        w.align_byte();
+        sizes.header = w.bit_len() / 8;
+
+        // ---- TABLES ----
+        let mark = w.bit_len();
+        for (f, a) in self.alphabets.splits.iter().enumerate() {
+            match a {
+                SplitAlphabet::Numeric(_)
+                    if self.indexed_splits.get(f).is_some_and(|x| x.is_some()) =>
+                {
+                    // dataset-indexed (paper mode): sorted ranks of the used
+                    // thresholds within the feature column's unique values;
+                    // delta-gamma coding makes this a few bits per entry
+                    let ranks = self.indexed_splits[f].as_ref().unwrap();
+                    w.write_bits(2, 8);
+                    w.write_varint(ranks.len() as u64);
+                    let mut prev = 0u64;
+                    for (i, &rank) in ranks.iter().enumerate() {
+                        if i == 0 {
+                            w.write_gamma(rank + 1);
+                        } else {
+                            debug_assert!(rank > prev, "ranks must be strictly increasing");
+                            w.write_gamma(rank - prev);
+                        }
+                        prev = rank;
+                    }
+                }
+                SplitAlphabet::Numeric(vals) => {
+                    w.write_bits(0, 8);
+                    f64pack::write_block(vals, &mut w).expect("f64 table");
+                }
+                SplitAlphabet::Categorical(masks) => {
+                    w.write_bits(1, 8);
+                    w.write_varint(masks.len() as u64);
+                    for m in masks {
+                        w.write_varint(*m);
+                    }
+                }
+            }
+        }
+        w.align_byte();
+        sizes.split_value_tables = (w.bit_len() - mark) / 8;
+
+        let mark = w.bit_len();
+        f64pack::write_block(&self.alphabets.fits, &mut w).expect("fit table");
+        w.align_byte();
+        sizes.fit_value_table = (w.bit_len() - mark) / 8;
+
+        // ---- CLUSMAP ----
+        let mark = w.bit_len();
+        write_map(&mut w, &self.vn_map);
+        w.write_varint(self.split_maps.len() as u64);
+        for m in &self.split_maps {
+            write_map(&mut w, m);
+        }
+        write_map(&mut w, &self.fit_map);
+        w.align_byte();
+        sizes.cluster_maps = (w.bit_len() - mark) / 8;
+
+        // ---- DICTS ----
+        let mark = w.bit_len();
+        w.write_varint(self.vn_dicts.len() as u64);
+        for d in &self.vn_dicts {
+            d.write_dict(&mut w);
+        }
+        w.write_varint(self.split_dicts.len() as u64);
+        for per_feature in &self.split_dicts {
+            w.write_varint(per_feature.len() as u64);
+            for d in per_feature {
+                d.write_dict(&mut w);
+            }
+        }
+        w.write_varint(self.fit_dicts.len() as u64);
+        for d in &self.fit_dicts {
+            d.write_dict(&mut w);
+        }
+        w.write_varint(self.fit_models.len() as u64);
+        for m in &self.fit_models {
+            m.write(&mut w);
+        }
+        match &self.fit_raw_codec {
+            Some(codec) => {
+                w.write_bit(true);
+                codec.write_dict(&mut w);
+            }
+            None => w.write_bit(false),
+        }
+        w.align_byte();
+        sizes.dictionaries = (w.bit_len() - mark) / 8;
+
+        // ---- STRUCT ----
+        let mark = w.bit_len();
+        w.write_varint(self.struct_bytes.len() as u64);
+        w.align_byte();
+        for &b in &self.struct_bytes {
+            w.write_byte(b);
+        }
+        sizes.structure = (w.bit_len() - mark) / 8;
+
+        // ---- VARS / SPLITS / FITS ----
+        let mark = w.bit_len();
+        write_payload_section(&mut w, &self.vars_trees);
+        sizes.var_names = (w.bit_len() - mark) / 8;
+
+        let mark = w.bit_len();
+        write_payload_section(&mut w, &self.splits_trees);
+        sizes.split_values = (w.bit_len() - mark) / 8;
+
+        let mark = w.bit_len();
+        write_payload_section(&mut w, &self.fits_trees);
+        sizes.fits = (w.bit_len() - mark) / 8;
+
+        (w.into_bytes(), sizes)
+    }
+}
+
+// ---------------------------------------------------------------- parsing
+
+/// Parse a container buffer (full validation; payload kept as owned bytes).
+pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
+    let mut r = BitReader::new(bytes);
+    let mut sizes = SectionSizes::default();
+
+    // ---- HEADER ----
+    let mut magic = [0u8; 4];
+    for m in magic.iter_mut() {
+        *m = r.read_byte().context("magic")?;
+    }
+    if &magic != MAGIC {
+        bail!("not an RFCZ container (bad magic)");
+    }
+    let version = r.read_bits(8).context("version")? as u8;
+    if version != VERSION {
+        bail!("unsupported container version {version}");
+    }
+    let classification = r.read_bits(8).context("kind")? != 0;
+    let classes = r.read_varint().context("classes")? as u32;
+    let n_trees = r.read_varint().context("n_trees")? as usize;
+    if n_trees == 0 || n_trees > 50_000_000 {
+        bail!("implausible tree count {n_trees}");
+    }
+    let d = r.read_varint().context("features")? as usize;
+    if d == 0 || d > 10_000_000 {
+        bail!("implausible feature count {d}");
+    }
+    let mut features = Vec::with_capacity(d);
+    for _ in 0..d {
+        let kind = r.read_bits(8).context("feature kind")?;
+        let levels = match kind {
+            0 => None,
+            1 => Some(r.read_varint().context("levels")? as u32),
+            v => bail!("unknown feature kind {v}"),
+        };
+        let name_len = r.read_varint().context("name len")? as usize;
+        if name_len > 4096 {
+            bail!("implausible feature name length");
+        }
+        let mut name_bytes = Vec::with_capacity(name_len);
+        for _ in 0..name_len {
+            name_bytes.push(r.read_byte().context("name")?);
+        }
+        features.push(FeatureMeta {
+            name: String::from_utf8(name_bytes).context("feature name utf8")?,
+            levels,
+        });
+    }
+    let fit_codec = match r.read_bits(8).context("fit codec")? {
+        0 => FitCodec::Huffman,
+        1 => FitCodec::Arith,
+        2 => FitCodec::Raw64,
+        v => bail!("unknown fit codec {v}"),
+    };
+    let conditioning = read_conditioning(&mut r)?;
+    r.align_byte();
+    sizes.header = r.bit_pos() / 8;
+
+    // ---- TABLES ----
+    let mark = r.bit_pos();
+    let mut splits = Vec::with_capacity(d);
+    let mut indexed_splits = vec![None; d];
+    for f in 0..d {
+        let kind = r.read_bits(8).context("table kind")?;
+        match kind {
+            0 => {
+                if features[f].levels.is_some() {
+                    bail!("numeric table for categorical feature {f}");
+                }
+                let vals =
+                    f64pack::read_block(&mut r).with_context(|| format!("split table {f}"))?;
+                splits.push(SplitAlphabet::Numeric(vals));
+            }
+            2 => {
+                if features[f].levels.is_some() {
+                    bail!("numeric table for categorical feature {f}");
+                }
+                let n = r.read_varint().context("indexed table len")? as usize;
+                if n > 500_000_000 {
+                    bail!("implausible indexed alphabet size");
+                }
+                let mut ranks = Vec::with_capacity(n);
+                let mut prev = 0u64;
+                for i in 0..n {
+                    let g = r.read_gamma().context("indexed rank")?;
+                    let rank = if i == 0 { g - 1 } else { prev + g };
+                    ranks.push(rank);
+                    prev = rank;
+                }
+                indexed_splits[f] = Some(ranks);
+                splits.push(SplitAlphabet::Numeric(Vec::new()));
+            }
+            1 => {
+                if features[f].levels.is_none() {
+                    bail!("categorical table for numeric feature {f}");
+                }
+                let n = r.read_varint().context("table len")? as usize;
+                if n > 500_000_000 {
+                    bail!("implausible alphabet size");
+                }
+                let mut masks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    masks.push(r.read_varint().context("table mask")?);
+                }
+                splits.push(SplitAlphabet::Categorical(masks));
+            }
+            v => bail!("unknown table kind {v}"),
+        }
+    }
+    r.align_byte();
+    sizes.split_value_tables = (r.bit_pos() - mark) / 8;
+
+    let mark = r.bit_pos();
+    let fits = f64pack::read_block(&mut r).context("fit table")?;
+    r.align_byte();
+    sizes.fit_value_table = (r.bit_pos() - mark) / 8;
+    let alphabets = ValueAlphabets { splits, fits };
+
+    // ---- CLUSMAP ----
+    let mark = r.bit_pos();
+    let vn_map = read_map(&mut r)?;
+    let n_split_maps = r.read_varint().context("split maps")? as usize;
+    if n_split_maps != d {
+        bail!("split map count {n_split_maps} != features {d}");
+    }
+    let mut split_maps = Vec::with_capacity(d);
+    for _ in 0..d {
+        split_maps.push(read_map(&mut r)?);
+    }
+    let fit_map = read_map(&mut r)?;
+    r.align_byte();
+    sizes.cluster_maps = (r.bit_pos() - mark) / 8;
+
+    // ---- DICTS ----
+    let mark = r.bit_pos();
+    let n_vn = r.read_varint().context("vn dicts")? as usize;
+    let mut vn_dicts = Vec::with_capacity(n_vn);
+    for _ in 0..n_vn {
+        vn_dicts.push(HuffmanCode::read_dict(&mut r)?);
+    }
+    let n_sd = r.read_varint().context("split dicts")? as usize;
+    if n_sd != d {
+        bail!("split dict group count mismatch");
+    }
+    let mut split_dicts = Vec::with_capacity(d);
+    for _ in 0..d {
+        let k = r.read_varint().context("split dict k")? as usize;
+        let mut per = Vec::with_capacity(k);
+        for _ in 0..k {
+            per.push(HuffmanCode::read_dict(&mut r)?);
+        }
+        split_dicts.push(per);
+    }
+    let n_fd = r.read_varint().context("fit dicts")? as usize;
+    let mut fit_dicts = Vec::with_capacity(n_fd);
+    for _ in 0..n_fd {
+        fit_dicts.push(HuffmanCode::read_dict(&mut r)?);
+    }
+    let n_fm = r.read_varint().context("fit models")? as usize;
+    let mut fit_models = Vec::with_capacity(n_fm);
+    for _ in 0..n_fm {
+        fit_models.push(FreqModel::read(&mut r)?);
+    }
+    let fit_raw_codec = if r.read_bit().context("raw codec flag")? {
+        Some(F64Codec::read_dict(&mut r)?)
+    } else {
+        None
+    };
+    if (fit_codec == FitCodec::Raw64) != fit_raw_codec.is_some() {
+        bail!("raw fit codec presence disagrees with fit codec");
+    }
+    r.align_byte();
+    sizes.dictionaries = (r.bit_pos() - mark) / 8;
+
+    // ---- STRUCT ----
+    let mark = r.bit_pos();
+    let sb_len = r.read_varint().context("struct len")? as usize;
+    if sb_len > (1 << 33) {
+        bail!("implausible struct size");
+    }
+    r.align_byte();
+    let mut struct_bytes = Vec::with_capacity(sb_len);
+    for _ in 0..sb_len {
+        struct_bytes.push(r.read_byte().context("struct bytes")?);
+    }
+    sizes.structure = (r.bit_pos() - mark) / 8;
+
+    // decode structure: 1-byte mode prefix (0 = LZSS, 1 = raw packed)
+    if struct_bytes.is_empty() {
+        bail!("empty structure section");
+    }
+    let packed = match struct_bytes[0] {
+        0 => crate::coding::lz::decompress_from_bytes(&struct_bytes[1..])
+            .context("structure LZ stream")?,
+        1 => struct_bytes[1..].to_vec(),
+        v => bail!("unknown structure mode {v}"),
+    };
+    // the packed stream carries total bit count as a varint prefix
+    let mut zr = BitReader::new(&packed);
+    let total_bits = zr.read_varint().context("zaks bit count")?;
+    let mut zaks_bits = Vec::with_capacity(total_bits as usize);
+    for _ in 0..total_bits {
+        zaks_bits.push(zr.read_bit().context("zaks bits")?);
+    }
+
+    // ---- VARS / SPLITS / FITS ----
+    let mark = r.bit_pos();
+    let (vars_ranges, vars_payload) = read_payload_section(&mut r)?;
+    sizes.var_names = (r.bit_pos() - mark) / 8;
+    let mark = r.bit_pos();
+    let (splits_ranges, splits_payload) = read_payload_section(&mut r)?;
+    sizes.split_values = (r.bit_pos() - mark) / 8;
+    let mark = r.bit_pos();
+    let (fits_ranges, fits_payload) = read_payload_section(&mut r)?;
+    sizes.fits = (r.bit_pos() - mark) / 8;
+
+    if vars_ranges.len() != n_trees
+        || splits_ranges.len() != n_trees
+        || fits_ranges.len() != n_trees
+    {
+        bail!("payload tree counts disagree with header");
+    }
+
+    Ok(ParsedContainer {
+        classification,
+        classes,
+        n_trees,
+        features,
+        fit_codec,
+        conditioning,
+        alphabets,
+        indexed_splits,
+        vn_map,
+        split_maps,
+        fit_map,
+        vn_dicts,
+        split_dicts,
+        fit_dicts,
+        fit_models,
+        fit_raw_codec,
+        zaks_bits,
+        vars_ranges,
+        splits_ranges,
+        fits_ranges,
+        vars_payload,
+        splits_payload,
+        fits_payload,
+        sizes,
+    })
+}
+
+/// Pack a bit vector with a varint bit-count prefix (the STRUCT pre-LZ form).
+pub fn pack_bits(bits: &[bool]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_varint(bits.len() as u64);
+    for &b in bits {
+        w.write_bit(b);
+    }
+    w.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_bits_roundtrip() {
+        let bits = vec![true, false, true, true, false];
+        let packed = pack_bits(&bits);
+        let mut r = BitReader::new(&packed);
+        let n = r.read_varint().unwrap();
+        assert_eq!(n, 5);
+        let out: Vec<bool> = (0..n).map(|_| r.read_bit().unwrap()).collect();
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(parse(b"NOPE....").is_err());
+        assert!(parse(b"").is_err());
+    }
+
+    #[test]
+    fn map_roundtrip_with_root_father() {
+        let mut map = BTreeMap::new();
+        map.insert(ContextKey { depth: 0, father: ROOT_FATHER }, 0u32);
+        map.insert(ContextKey { depth: 3, father: 7 }, 2u32);
+        let mut w = BitWriter::new();
+        write_map(&mut w, &map);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(read_map(&mut r).unwrap(), map);
+    }
+
+    #[test]
+    fn payload_section_roundtrip() {
+        let trees = vec![vec![1u8, 2, 3], vec![], vec![42u8; 10]];
+        let mut w = BitWriter::new();
+        write_payload_section(&mut w, &trees);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        let (ranges, payload) = read_payload_section(&mut r).unwrap();
+        assert_eq!(ranges.len(), 3);
+        assert_eq!(&payload[ranges[0].0..ranges[0].1], &[1, 2, 3]);
+        assert_eq!(ranges[1].0, ranges[1].1);
+        assert_eq!(&payload[ranges[2].0..ranges[2].1], &[42u8; 10][..]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Algorithm 1 — the lossless forest codec.
+//!
+//! * [`container`] — the on-disk format: header, value tables, cluster maps,
+//!   dictionaries, and the four payload sections (structure / variable
+//!   names / split values / fits), each per-tree byte-addressable
+//! * [`pipeline`]  — compress (extract → cluster → encode) and the full
+//!   decompress (bit-exact forest reconstruction)
+//! * [`predict`]   — prediction straight from the compressed bytes (§5):
+//!   walk a tree's Zaks shape, Huffman-decoding only the preorder prefix a
+//!   root-to-leaf path needs, without materializing the forest
+//!
+//! Losslessness contract (asserted by integration tests): for any trained
+//! [`crate::forest::Forest`], `decompress(compress(f)) == f` with bit-exact
+//! split values and fits, and compressed-format predictions equal the
+//! original forest's predictions on every row.
+
+pub mod container;
+pub mod pipeline;
+pub mod predict;
+
+pub use container::{FitCodec, SectionSizes};
+pub use pipeline::{CompressOptions, CompressedForest};
+pub use predict::CompressedPredictor;

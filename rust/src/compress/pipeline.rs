@@ -1,0 +1,883 @@
+//! Algorithm 1 end-to-end: compress (extract → cluster → encode) and the
+//! inverse full decompression.
+//!
+//! Compression stages (paper §4):
+//!
+//! 1. **Structure** — concatenate per-tree Zaks sequences, LZSS-encode
+//!    (lines 1–3).
+//! 2. **Models** — extract the conditional count tables (lines 4–21) via
+//!    [`crate::model::extract`].
+//! 3. **Clustering** — K-sweep of eq. (6) per model family: one sweep for
+//!    variable names, one per feature for split values, one for fits
+//!    (lines 22–30 / 39 / 40), through a pluggable [`LloydEngine`] (native
+//!    or the AOT-compiled XLA artifact).
+//! 4. **Encoding** — per tree, per node in preorder: Huffman-encode the
+//!    variable name and split rank against their context's cluster codebook;
+//!    fits go through Huffman or (two-class) arithmetic coding
+//!    (lines 31–38).
+//!
+//! Decompression runs the stages backwards; it needs nothing but the
+//! container bytes.
+
+use super::container::{self, ContainerBuilder, FeatureMeta, FitCodec, ParsedContainer, SectionSizes};
+use crate::cluster::kmeans::{LloydEngine, NativeEngine};
+use crate::cluster::sweep::{assignment_map, cluster_counts, sweep_k};
+use crate::coding::arith::{ArithDecoder, ArithEncoder, FreqModel};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::entropy::DictCost;
+use crate::coding::f64pack::F64Codec;
+use crate::coding::huffman::{HuffmanCode, HuffmanDecoder};
+use crate::data::{Column, Dataset};
+use crate::forest::{Fit, Forest, Node, Split, Tree};
+use crate::model::extract::{CountTable, ForestModels, SplitAlphabet, ValueAlphabets};
+use crate::model::keys::{ContextKey, ModelConditioning};
+use crate::zaks;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Compression options.
+#[derive(Debug, Clone)]
+pub struct CompressOptions {
+    /// Largest K tried in each clustering sweep.
+    pub k_max: usize,
+    /// Clustering seed (deterministic output for a given forest + options).
+    pub seed: u64,
+    /// Worker threads for extraction/encoding.
+    pub workers: usize,
+    /// Model conditioning (paper default: depth + father's variable name).
+    pub conditioning: ModelConditioning,
+    /// Fit representation bits used in the dictionary-cost α (the paper's
+    /// 64-bit "orthodox losslessness"; 32 reproduces the ~7-cluster
+    /// observation of §6). Does **not** quantize anything — see
+    /// [`crate::lossy`] for actual quantization.
+    pub fit_alpha_bits: u32,
+    /// Paper mode (§3.2.2): store numeric split thresholds as observation
+    /// ranks instead of f64 tables. Decoding then needs the training
+    /// dataset ([`CompressedForest::decompress_with_dataset`]); the
+    /// container shrinks by the whole value-table cost — this is how the
+    /// paper's Table 1/2 account sizes. Default off (self-contained).
+    pub dataset_indexed_splits: bool,
+}
+
+impl Default for CompressOptions {
+    fn default() -> Self {
+        CompressOptions {
+            k_max: 10,
+            seed: 0x5eed,
+            workers: 1,
+            conditioning: ModelConditioning::DepthFather,
+            fit_alpha_bits: 64,
+            dataset_indexed_splits: false,
+        }
+    }
+}
+
+/// A compressed forest: the container bytes plus the size breakdown and the
+/// clustering diagnostics the benches report.
+#[derive(Debug, Clone)]
+pub struct CompressedForest {
+    pub bytes: Vec<u8>,
+    pub sizes: SectionSizes,
+    /// (family label, chosen K) per clustering sweep, for §6-style analysis.
+    pub cluster_ks: Vec<(String, usize)>,
+}
+
+impl CompressedForest {
+    /// Compress with the native clustering engine.
+    pub fn compress(forest: &Forest, ds: &Dataset, opts: &CompressOptions) -> Result<Self> {
+        Self::compress_with_engine(forest, ds, opts, &mut NativeEngine)
+    }
+
+    /// Compress with an explicit [`LloydEngine`] (the XLA runtime engine in
+    /// production, the native one in tests).
+    pub fn compress_with_engine(
+        forest: &Forest,
+        ds: &Dataset,
+        opts: &CompressOptions,
+        engine: &mut dyn LloydEngine,
+    ) -> Result<Self> {
+        if forest.trees.is_empty() {
+            bail!("cannot compress an empty forest");
+        }
+        ds.validate()?;
+        let d = ds.num_features();
+
+        // ---- stage 1: structure ----
+        let (zaks_bits, _lens) = zaks::concat_forest_zaks(&forest.trees);
+        let packed = container::pack_bits(&zaks_bits);
+        // LZ helps when trees resemble each other (shallow forests, small
+        // data); deep unpruned forests have near-i.i.d. structure bits and
+        // LZ's flags only add overhead — keep whichever is smaller (the
+        // container records the choice).
+        let lz = crate::coding::lz::compress_to_bytes(&packed);
+        let struct_bytes = if lz.len() < packed.len() {
+            let mut v = vec![0u8]; // mode 0 = LZSS
+            v.extend(lz);
+            v
+        } else {
+            let mut v = vec![1u8]; // mode 1 = raw packed
+            v.extend(packed);
+            v
+        };
+
+        // ---- stage 2: models ----
+        let alphabets = ValueAlphabets::collect(forest, ds)?;
+        let models = ForestModels::extract(forest, &alphabets, opts.conditioning, opts.workers);
+
+        // ---- stage 3: clustering ----
+        let mut cluster_ks = Vec::new();
+
+        // variable names
+        let (vn_map, vn_counts) = cluster_family(
+            &models.var_names,
+            DictCost::variable_names(d),
+            opts.k_max,
+            opts.seed,
+            engine,
+        )?;
+        cluster_ks.push(("var_names".to_string(), vn_counts.len().max(1)));
+        let vn_dicts: Vec<HuffmanCode> = vn_counts
+            .iter()
+            .map(|c| huffman_from_counts(c))
+            .collect::<Result<_>>()?;
+
+        // split values, per feature
+        let n_obs = ds.num_rows();
+        let mut split_maps = Vec::with_capacity(d);
+        let mut split_dicts = Vec::with_capacity(d);
+        for f in 0..d {
+            let alpha = match &alphabets.splits[f] {
+                SplitAlphabet::Numeric(vals) => DictCost::numerical_splits(n_obs, vals.len()),
+                SplitAlphabet::Categorical(masks) => DictCost::categorical_splits(masks.len()),
+            };
+            let (map, counts) =
+                cluster_family(&models.splits[f], alpha, opts.k_max, opts.seed ^ (f as u64), engine)?;
+            if !counts.is_empty() {
+                cluster_ks.push((format!("splits[{f}]"), counts.len()));
+            }
+            split_maps.push(map);
+            split_dicts.push(
+                counts
+                    .iter()
+                    .map(|c| huffman_from_counts(c))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+
+        // fits
+        let fit_alpha_size = alphabets.fit_alphabet_size(forest);
+        let mut fit_codec = if forest.classification && forest.classes == 2 {
+            FitCodec::Arith
+        } else {
+            FitCodec::Huffman
+        };
+        let (mut fit_map, fit_counts) = cluster_family(
+            &models.fits,
+            DictCost::fits(opts.fit_alpha_bits, fit_alpha_size),
+            opts.k_max,
+            opts.seed ^ 0xf17,
+            engine,
+        )?;
+        let (mut fit_dicts, fit_models_arith): (Vec<HuffmanCode>, Vec<FreqModel>) =
+            match fit_codec {
+                FitCodec::Huffman => (
+                    fit_counts
+                        .iter()
+                        .map(|c| huffman_from_counts(c))
+                        .collect::<Result<_>>()?,
+                    Vec::new(),
+                ),
+                _ => (
+                    Vec::new(),
+                    fit_counts
+                        .iter()
+                        .map(|c| FreqModel::from_probs(&crate::coding::entropy::normalize(c)))
+                        .collect::<Result<_>>()?,
+                ),
+            };
+        // Regression escape hatch: when fits are mostly unique, the value
+        // table + Huffman indices cost more than writing each fit inline
+        // through the sign/exponent codec (~54 bits for typical data; the
+        // paper's fits barely compress either: 122.1 → 118 MB on Liberty⁺).
+        // Compare exactly and pick the cheaper representation. Quantized
+        // forests (lossy §7) have C ≪ N and stay indexed.
+        let mut fit_raw_codec: Option<F64Codec> = None;
+        if !forest.classification {
+            let total_fits: u64 = models.fits.values().flat_map(|v| v.iter()).sum();
+            let indexed_bits: f64 = fit_counts
+                .iter()
+                .zip(&fit_dicts)
+                .map(|(counts, dict)| {
+                    let payload: u64 = counts
+                        .iter()
+                        .enumerate()
+                        .map(|(s, &c)| c * dict.length(s as u32) as u64)
+                        .sum();
+                    (payload + dict.dict_bits()) as f64
+                })
+                .sum::<f64>()
+                // table cost under the f64 block codec (~54 bits/value)
+                + alphabets.fits.len() as f64 * 54.0;
+            let codec = F64Codec::from_values(alphabets.fits.iter())?;
+            // expected raw bits: each node fit once, weighted by counts —
+            // approximate with the table values (every fit is in the table)
+            let raw_bits =
+                codec.expected_bits(&alphabets.fits) * total_fits as f64 + codec.dict_bits() as f64;
+            if raw_bits <= indexed_bits {
+                fit_codec = FitCodec::Raw64;
+                fit_map = BTreeMap::new();
+                fit_dicts = Vec::new();
+                fit_raw_codec = Some(codec);
+            }
+        }
+        cluster_ks.push((
+            "fits".to_string(),
+            if fit_codec == FitCodec::Raw64 { 1 } else { fit_counts.len().max(1) },
+        ));
+
+        // ---- stage 4: per-tree encoding ----
+        let vn_decode_map = &vn_map;
+        let encode_one = |tree: &Tree| -> Result<(Vec<u8>, Vec<u8>, Vec<u8>)> {
+            let mut vars_w = BitWriter::new();
+            let mut splits_w = BitWriter::new();
+            let mut fits_w = BitWriter::new();
+            let mut err: Option<anyhow::Error> = None;
+            match fit_codec {
+                FitCodec::Raw64 => {
+                    let codec = fit_raw_codec.as_ref().expect("raw codec built");
+                    tree.visit_preorder(|_, node, depth, father| {
+                        if err.is_some() {
+                            return;
+                        }
+                        let key = opts.conditioning.project(ContextKey::new(depth, father));
+                        if let Err(e) = encode_node(
+                            node,
+                            key,
+                            &alphabets,
+                            vn_decode_map,
+                            &vn_dicts,
+                            &split_maps,
+                            &split_dicts,
+                            &mut vars_w,
+                            &mut splits_w,
+                        ) {
+                            err = Some(e);
+                            return;
+                        }
+                        match node.fit {
+                            Fit::Regression(v) => {
+                                if let Err(e) = codec.encode(v, &mut fits_w) {
+                                    err = Some(e);
+                                }
+                            }
+                            Fit::Class(_) => {
+                                err = Some(anyhow::anyhow!("class fit in raw regression mode"))
+                            }
+                        }
+                    });
+                }
+                FitCodec::Huffman => {
+                    tree.visit_preorder(|_, node, depth, father| {
+                        if err.is_some() {
+                            return;
+                        }
+                        let key = opts.conditioning.project(ContextKey::new(depth, father));
+                        if let Err(e) = encode_node(
+                            node,
+                            key,
+                            &alphabets,
+                            vn_decode_map,
+                            &vn_dicts,
+                            &split_maps,
+                            &split_dicts,
+                            &mut vars_w,
+                            &mut splits_w,
+                        )
+                        .and_then(|_| {
+                            let sym = alphabets.fit_symbol(&node.fit);
+                            let cl = *fit_map.get(&key).context("fit cluster missing")?;
+                            fit_dicts[cl as usize].encode(sym, &mut fits_w)
+                        }) {
+                            err = Some(e);
+                        }
+                    });
+                }
+                FitCodec::Arith => {
+                    // collect (cluster, symbol) first: the arith encoder
+                    // borrows the writer for the whole tree
+                    let mut fit_syms: Vec<(u32, u32)> = Vec::with_capacity(tree.nodes.len());
+                    tree.visit_preorder(|_, node, depth, father| {
+                        if err.is_some() {
+                            return;
+                        }
+                        let key = opts.conditioning.project(ContextKey::new(depth, father));
+                        if let Err(e) = encode_node(
+                            node,
+                            key,
+                            &alphabets,
+                            vn_decode_map,
+                            &vn_dicts,
+                            &split_maps,
+                            &split_dicts,
+                            &mut vars_w,
+                            &mut splits_w,
+                        ) {
+                            err = Some(e);
+                            return;
+                        }
+                        let sym = alphabets.fit_symbol(&node.fit);
+                        match fit_map.get(&key) {
+                            Some(&cl) => fit_syms.push((cl, sym)),
+                            None => err = Some(anyhow::anyhow!("fit cluster missing")),
+                        }
+                    });
+                    if err.is_none() {
+                        let mut enc = ArithEncoder::new(&mut fits_w);
+                        for (cl, sym) in fit_syms {
+                            enc.encode(&fit_models_arith[cl as usize], sym)?;
+                        }
+                        enc.finish();
+                    }
+                }
+            }
+            if let Some(e) = err {
+                return Err(e);
+            }
+            Ok((vars_w.into_bytes(), splits_w.into_bytes(), fits_w.into_bytes()))
+        };
+
+        let encoded = crate::util::threads::parallel_map(&forest.trees, opts.workers, |_, t| {
+            encode_one(t)
+        });
+        let mut vars_trees = Vec::with_capacity(forest.trees.len());
+        let mut splits_trees = Vec::with_capacity(forest.trees.len());
+        let mut fits_trees = Vec::with_capacity(forest.trees.len());
+        for r in encoded {
+            let (v, s, f) = r?;
+            vars_trees.push(v);
+            splits_trees.push(s);
+            fits_trees.push(f);
+        }
+
+        // ---- assemble ----
+        let mut alphabets = alphabets;
+        if fit_codec == FitCodec::Raw64 {
+            // raw mode stores fits inline; drop the (otherwise dominant)
+            // value table
+            alphabets.fits.clear();
+        }
+        // paper mode: numeric thresholds → observation ranks
+        let indexed_splits: Vec<Option<Vec<u64>>> = if opts.dataset_indexed_splits {
+            alphabets
+                .splits
+                .iter()
+                .enumerate()
+                .map(|(f, a)| match a {
+                    SplitAlphabet::Numeric(vals) if !vals.is_empty() => {
+                        let uniq = crate::model::extract::ValueAlphabets::column_unique(ds, f)
+                            .expect("numeric column");
+                        let ranks = vals
+                            .iter()
+                            .map(|v| {
+                                uniq.binary_search_by(|x| x.partial_cmp(v).unwrap())
+                                    .expect("threshold is an observed value")
+                                    as u64
+                            })
+                            .collect();
+                        Some(ranks)
+                    }
+                    _ => None,
+                })
+                .collect()
+        } else {
+            vec![None; alphabets.splits.len()]
+        };
+        let features = ds
+            .features
+            .iter()
+            .map(|f| FeatureMeta {
+                name: f.name.clone(),
+                levels: match &f.column {
+                    Column::Numeric(_) => None,
+                    Column::Categorical { levels, .. } => Some(*levels),
+                },
+            })
+            .collect();
+        let builder = ContainerBuilder {
+            classification: forest.classification,
+            classes: forest.classes,
+            n_trees: forest.trees.len(),
+            features,
+            fit_codec,
+            conditioning: opts.conditioning,
+            alphabets,
+            indexed_splits,
+            vn_map,
+            split_maps,
+            fit_map,
+            vn_dicts,
+            split_dicts,
+            fit_dicts,
+            fit_models: fit_models_arith,
+            fit_raw_codec,
+            struct_bytes,
+            vars_trees,
+            splits_trees,
+            fits_trees,
+        };
+        let (bytes, sizes) = builder.serialize();
+        Ok(CompressedForest { bytes, sizes, cluster_ks })
+    }
+
+    /// Total compressed size in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    /// Parse the container (validates everything up front).
+    pub fn parse(&self) -> Result<ParsedContainer> {
+        container::parse(&self.bytes)
+    }
+
+    /// Full decompression: rebuild the forest bit-exactly. Errors when the
+    /// container was built in dataset-indexed mode (use
+    /// [`Self::decompress_with_dataset`]).
+    pub fn decompress(&self) -> Result<Forest> {
+        let pc = self.parse()?;
+        if pc.needs_dataset() {
+            bail!(
+                "container uses dataset-indexed split coding (paper mode); \
+                 call decompress_with_dataset(&training_data)"
+            );
+        }
+        decompress_container(&pc)
+    }
+
+    /// Decompress a dataset-indexed container (paper mode): the training
+    /// data regenerates the numeric split-value tables.
+    pub fn decompress_with_dataset(&self, ds: &Dataset) -> Result<Forest> {
+        let mut pc = self.parse()?;
+        pc.attach_dataset(ds)?;
+        decompress_container(&pc)
+    }
+
+    /// Wrap existing container bytes (e.g. read from disk).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        let pc = container::parse(&bytes)?;
+        let sizes = pc.sizes;
+        Ok(CompressedForest { bytes, sizes, cluster_ks: Vec::new() })
+    }
+}
+
+/// Cluster one model family: sweep K, densify cluster ids to the non-empty
+/// ones, return (key → dense cluster id, per-cluster aggregated counts).
+fn cluster_family(
+    table: &CountTable,
+    alpha: DictCost,
+    k_max: usize,
+    seed: u64,
+    engine: &mut dyn LloydEngine,
+) -> Result<(BTreeMap<ContextKey, u32>, Vec<Vec<u64>>)> {
+    let nonempty = table.values().any(|v| v.iter().any(|&c| c > 0));
+    if !nonempty {
+        return Ok((BTreeMap::new(), Vec::new()));
+    }
+    let sw = sweep_k(table, alpha, k_max, seed, engine)?;
+    let counts = cluster_counts(table, &sw.keys, &sw.best.assignments, sw.best.k);
+    // densify: drop empty clusters
+    let mut remap = vec![u32::MAX; sw.best.k];
+    let mut dense_counts = Vec::new();
+    for (k, c) in counts.into_iter().enumerate() {
+        if c.iter().any(|&x| x > 0) {
+            remap[k] = dense_counts.len() as u32;
+            dense_counts.push(c);
+        }
+    }
+    let mut map = assignment_map(&sw.keys, &sw.best.assignments);
+    for v in map.values_mut() {
+        let dense = remap[*v as usize];
+        debug_assert_ne!(dense, u32::MAX, "assigned cluster cannot be empty");
+        *v = dense;
+    }
+    Ok((map, dense_counts))
+}
+
+fn huffman_from_counts(counts: &[u64]) -> Result<HuffmanCode> {
+    let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    HuffmanCode::from_weights(&weights)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_node(
+    node: &Node,
+    key: ContextKey,
+    alphabets: &ValueAlphabets,
+    vn_map: &BTreeMap<ContextKey, u32>,
+    vn_dicts: &[HuffmanCode],
+    split_maps: &[BTreeMap<ContextKey, u32>],
+    split_dicts: &[Vec<HuffmanCode>],
+    vars_w: &mut BitWriter,
+    splits_w: &mut BitWriter,
+) -> Result<()> {
+    if let Some((split, _, _)) = &node.split {
+        let f = split.feature as usize;
+        let vcl = *vn_map.get(&key).context("var-name cluster missing")?;
+        vn_dicts[vcl as usize].encode(split.feature, vars_w)?;
+        let sym = alphabets.splits[f]
+            .symbol_of(&split.value)
+            .context("split value not in alphabet")?;
+        let scl = *split_maps[f].get(&key).context("split cluster missing")?;
+        split_dicts[f][scl as usize].encode(sym, splits_w)?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- decompression
+
+/// Decode every tree of a parsed container.
+pub fn decompress_container(pc: &ParsedContainer) -> Result<Forest> {
+    if pc.needs_dataset() {
+        bail!("dataset-indexed container: attach_dataset() before decoding");
+    }
+    let seqs = zaks::split_concatenated(&pc.zaks_bits, pc.n_trees)?;
+    let vn_decoders: Vec<HuffmanDecoder> = pc.vn_dicts.iter().map(|d| d.decoder()).collect();
+    let split_decoders: Vec<Vec<HuffmanDecoder>> = pc
+        .split_dicts
+        .iter()
+        .map(|per| per.iter().map(|d| d.decoder()).collect())
+        .collect();
+    let fit_decoders: Vec<HuffmanDecoder> = pc.fit_dicts.iter().map(|d| d.decoder()).collect();
+
+    let mut trees = Vec::with_capacity(pc.n_trees);
+    for t in 0..pc.n_trees {
+        let shape = zaks::shape_from_zaks(&seqs[t])
+            .with_context(|| format!("tree {t} structure"))?;
+        let tree = decode_tree(pc, t, &shape, &vn_decoders, &split_decoders, &fit_decoders)
+            .with_context(|| format!("tree {t}"))?;
+        trees.push(tree);
+    }
+    Ok(Forest {
+        trees,
+        classification: pc.classification,
+        classes: pc.classes,
+    })
+}
+
+/// Decode one tree's nodes from its per-tree payload slices.
+pub fn decode_tree(
+    pc: &ParsedContainer,
+    t: usize,
+    shape: &zaks::TreeShape,
+    vn_decoders: &[HuffmanDecoder],
+    split_decoders: &[Vec<HuffmanDecoder>],
+    fit_decoders: &[HuffmanDecoder],
+) -> Result<Tree> {
+    let n = shape.node_count();
+    let depths = shape.depths();
+    let (vs, ve) = pc.vars_ranges[t];
+    let (ss, se) = pc.splits_ranges[t];
+    let (fs, fe) = pc.fits_ranges[t];
+    let mut vars_r = BitReader::new(&pc.vars_payload[vs..ve]);
+    let mut splits_r = BitReader::new(&pc.splits_payload[ss..se]);
+    let mut fits_r = BitReader::new(&pc.fits_payload[fs..fe]);
+    let mut arith = match pc.fit_codec {
+        FitCodec::Arith => Some(ArithDecoder::new(fits_r.clone())),
+        FitCodec::Huffman | FitCodec::Raw64 => None,
+    };
+
+    let mut father_feat: Vec<Option<u32>> = vec![None; n];
+    let mut nodes = Vec::with_capacity(n);
+    for i in 0..n {
+        let key = pc
+            .conditioning
+            .project(ContextKey::new(depths[i], father_feat[i]));
+        // fit first (all nodes carry one; encoder wrote it per node in
+        // preorder — order matches)
+        let fit = match (&mut arith, pc.fit_codec) {
+            (Some(dec), FitCodec::Arith) => {
+                let cl = *pc.fit_map.get(&key).context("fit cluster missing")?;
+                let model = pc
+                    .fit_models
+                    .get(cl as usize)
+                    .context("fit cluster id out of range")?;
+                let sym = dec.decode(model)?;
+                Fit::Class(sym)
+            }
+            (None, FitCodec::Huffman) => {
+                let cl = *pc.fit_map.get(&key).context("fit cluster missing")?;
+                let sym = fit_decoders
+                    .get(cl as usize)
+                    .context("fit cluster id out of range")?
+                    .decode(&mut fits_r)?;
+                if pc.classification {
+                    Fit::Class(sym)
+                } else {
+                    let v = *pc
+                        .alphabets
+                        .fits
+                        .get(sym as usize)
+                        .context("fit symbol out of table")?;
+                    Fit::Regression(v)
+                }
+            }
+            (None, FitCodec::Raw64) => {
+                let codec = pc.fit_raw_codec.as_ref().context("raw codec missing")?;
+                Fit::Regression(codec.decode(&mut fits_r)?)
+            }
+            _ => unreachable!(),
+        };
+        let split = match shape.children[i] {
+            None => None,
+            Some((l, r)) => {
+                let vcl = *pc.vn_map.get(&key).context("vn cluster missing")?;
+                let feature = vn_decoders
+                    .get(vcl as usize)
+                    .context("vn cluster id out of range")?
+                    .decode(&mut vars_r)?;
+                if feature as usize >= pc.features.len() {
+                    bail!("decoded feature {feature} out of range");
+                }
+                let scl = *pc.split_maps[feature as usize]
+                    .get(&key)
+                    .context("split cluster missing")?;
+                let sym = split_decoders[feature as usize]
+                    .get(scl as usize)
+                    .context("split cluster id out of range")?
+                    .decode(&mut splits_r)?;
+                let value = split_value_of(&pc.alphabets.splits[feature as usize], sym)?;
+                father_feat[l as usize] = Some(feature);
+                father_feat[r as usize] = Some(feature);
+                Some((Split { feature, value }, l, r))
+            }
+        };
+        nodes.push(Node { split, fit });
+    }
+    Ok(Tree { nodes })
+}
+
+fn split_value_of(alpha: &SplitAlphabet, sym: u32) -> Result<crate::forest::SplitValue> {
+    if (sym as usize) < alpha.len() {
+        Ok(alpha.value_of(sym))
+    } else {
+        bail!("split symbol {sym} out of alphabet (size {})", alpha.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::ForestParams;
+
+    fn roundtrip(ds: &Dataset, forest: &Forest, opts: &CompressOptions) -> CompressedForest {
+        let cf = CompressedForest::compress(forest, ds, opts).unwrap();
+        let restored = cf.decompress().unwrap();
+        assert!(forest.identical(&restored), "lossless round-trip failed");
+        cf
+    }
+
+    #[test]
+    fn lossless_roundtrip_classification() {
+        let ds = synthetic::iris(1);
+        let f = Forest::train(&ds, &ForestParams::classification(8), 2);
+        let cf = roundtrip(&ds, &f, &CompressOptions::default());
+        assert!(cf.total_bytes() > 0);
+        assert_eq!(cf.sizes.total(), cf.total_bytes());
+    }
+
+    #[test]
+    fn lossless_roundtrip_regression() {
+        let ds = synthetic::airfoil_regression(2);
+        let f = Forest::train(&ds, &ForestParams::regression(4), 3);
+        roundtrip(&ds, &f, &CompressOptions::default());
+    }
+
+    #[test]
+    fn lossless_roundtrip_two_class_uses_arith() {
+        let ds = synthetic::airfoil_classification(3);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 4);
+        let cf = roundtrip(&ds, &f, &CompressOptions::default());
+        let pc = cf.parse().unwrap();
+        assert_eq!(pc.fit_codec, FitCodec::Arith);
+    }
+
+    #[test]
+    fn lossless_roundtrip_multiclass_uses_huffman() {
+        let ds = synthetic::iris(4);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 5);
+        let cf = roundtrip(&ds, &f, &CompressOptions::default());
+        assert_eq!(cf.parse().unwrap().fit_codec, FitCodec::Huffman);
+    }
+
+    #[test]
+    fn lossless_with_categorical_features() {
+        let ds = synthetic::wages(5);
+        let f = Forest::train(&ds, &ForestParams::classification(6), 6);
+        roundtrip(&ds, &f, &CompressOptions::default());
+    }
+
+    #[test]
+    fn lossless_all_conditionings() {
+        let ds = synthetic::iris(6);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 7);
+        for c in [
+            ModelConditioning::DepthFather,
+            ModelConditioning::DepthOnly,
+            ModelConditioning::None,
+        ] {
+            let opts = CompressOptions { conditioning: c, ..Default::default() };
+            roundtrip(&ds, &f, &opts);
+        }
+    }
+
+    #[test]
+    fn compression_beats_naive_size() {
+        let ds = synthetic::shuttle(7);
+        let f = Forest::train(&ds, &ForestParams::classification(10), 8);
+        let cf = roundtrip(&ds, &f, &CompressOptions::default());
+        // naive: ~ (feature u32 + value f64 + fit u32) per node
+        let naive = f.total_nodes() as u64 * 16;
+        assert!(
+            cf.total_bytes() < naive,
+            "compressed {} should beat naive {naive}",
+            cf.total_bytes()
+        );
+    }
+
+    #[test]
+    fn single_tree_forest() {
+        let ds = synthetic::iris(8);
+        let f = Forest::train(&ds, &ForestParams::classification(1), 9);
+        roundtrip(&ds, &f, &CompressOptions::default());
+    }
+
+    #[test]
+    fn tiny_trees_forest() {
+        // depth-1 stumps: exercises root-only + leaf-heavy paths
+        let ds = synthetic::iris(9);
+        let params = ForestParams {
+            tree: crate::forest::TreeParams { mtry: Some(2), min_leaf: 1, max_depth: 1 },
+            ..ForestParams::classification(6)
+        };
+        let f = Forest::train(&ds, &params, 10);
+        roundtrip(&ds, &f, &CompressOptions::default());
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let ds = synthetic::iris(10);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 11);
+        let a = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let b = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn workers_do_not_change_output() {
+        let ds = synthetic::iris(11);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 12);
+        let a = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let opts = CompressOptions { workers: 4, ..Default::default() };
+        let b = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn from_bytes_revalidates() {
+        let ds = synthetic::iris(12);
+        let f = Forest::train(&ds, &ForestParams::classification(3), 13);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let reloaded = CompressedForest::from_bytes(cf.bytes.clone()).unwrap();
+        assert!(reloaded.decompress().unwrap().identical(&f));
+        // corrupted magic must fail
+        let mut bad = cf.bytes.clone();
+        bad[0] = b'X';
+        assert!(CompressedForest::from_bytes(bad).is_err());
+    }
+
+    #[test]
+    fn truncation_errors_cleanly() {
+        let ds = synthetic::iris(13);
+        let f = Forest::train(&ds, &ForestParams::classification(3), 14);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        for cut in [cf.bytes.len() / 4, cf.bytes.len() / 2, cf.bytes.len() - 3] {
+            let res = CompressedForest::from_bytes(cf.bytes[..cut].to_vec())
+                .and_then(|c| c.decompress());
+            assert!(res.is_err(), "truncation at {cut} must error, not panic");
+        }
+    }
+
+    #[test]
+    fn paper_mode_roundtrip_needs_dataset() {
+        let ds = synthetic::wages(16);
+        let f = Forest::train(&ds, &ForestParams::classification(6), 17);
+        let opts = CompressOptions { dataset_indexed_splits: true, ..Default::default() };
+        let cf = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        // plain decompress must refuse
+        assert!(cf.decompress().is_err());
+        // with the training data: bit-exact
+        let restored = cf.decompress_with_dataset(&ds).unwrap();
+        assert!(restored.identical(&f));
+        // wrong dataset: clean error or detectable mismatch, no panic
+        let other = synthetic::iris(16);
+        assert!(cf.decompress_with_dataset(&other).is_err());
+    }
+
+    #[test]
+    fn paper_mode_is_smaller_than_self_contained() {
+        let ds = synthetic::airfoil_classification(18);
+        let f = Forest::train(&ds, &ForestParams::classification(20), 19);
+        let a = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let opts = CompressOptions { dataset_indexed_splits: true, ..Default::default() };
+        let b = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        assert!(
+            b.total_bytes() < a.total_bytes(),
+            "indexed {} must beat self-contained {}",
+            b.total_bytes(),
+            a.total_bytes()
+        );
+        assert!(b.decompress_with_dataset(&ds).unwrap().identical(&f));
+    }
+
+    #[test]
+    fn paper_mode_predictions_from_compressed() {
+        let ds = synthetic::airfoil_classification(20);
+        let f = Forest::train(&ds, &ForestParams::classification(6), 21);
+        let opts = CompressOptions { dataset_indexed_splits: true, ..Default::default() };
+        let cf = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        let mut pc = cf.parse().unwrap();
+        assert!(pc.needs_dataset());
+        pc.attach_dataset(&ds).unwrap();
+        let p = crate::compress::CompressedPredictor::new(pc).unwrap();
+        for row in (0..ds.num_rows()).step_by(131) {
+            let expect = f.predict_class(&ds, row);
+            assert_eq!(
+                p.predict_row(&ds, row).unwrap(),
+                crate::compress::predict::PredictOne::Class(expect)
+            );
+        }
+    }
+
+    #[test]
+    fn sizes_sum_to_total() {
+        let ds = synthetic::wages(14);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 15);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        assert_eq!(cf.sizes.total(), cf.bytes.len() as u64);
+        let pc = cf.parse().unwrap();
+        assert_eq!(pc.sizes, cf.sizes, "parser must recover the same breakdown");
+        let cols = cf.sizes.paper_columns();
+        assert_eq!(cols.total(), cf.total_bytes());
+    }
+
+    #[test]
+    fn predictions_preserved_through_roundtrip() {
+        let ds = synthetic::airfoil_classification(15);
+        let f = Forest::train(&ds, &ForestParams::classification(7), 16);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let g = cf.decompress().unwrap();
+        for row in (0..ds.num_rows()).step_by(97) {
+            assert_eq!(f.predict_class(&ds, row), g.predict_class(&ds, row));
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Prediction straight from the compressed bytes (paper §5).
+//!
+//! The Huffman codes' prefix property means a tree's node symbols can be
+//! decoded one at a time from its (byte-aligned, offset-indexed) stream
+//! without decoding the rest of the container. Because symbols are laid out
+//! in preorder and the Zaks shape gives every node's children, a
+//! root-to-leaf walk decodes exactly the **preorder prefix** up to the
+//! reached leaf: following a left edge costs one more node; following a
+//! right edge decode-skips the left subtree (decoding its symbols to stay
+//! in stream sync, but building nothing).
+//!
+//! RAM per query is `O(tree nodes)` for the shape bits + father-feature
+//! scratch — the paper's "2n+1 bits in RAM" plus bookkeeping; the forest
+//! itself is never materialized.
+//!
+//! Two query modes:
+//! * [`CompressedPredictor::predict_row`] — single observation, prefix
+//!   decode per tree (the subscriber-device path);
+//! * [`CompressedPredictor::predict_all`] — batch: per tree, decode the
+//!   symbol arrays once (transient, `O(one tree)` memory) and route every
+//!   row through them.
+
+use super::container::{FitCodec, ParsedContainer};
+use super::pipeline::decompress_container;
+use crate::coding::arith::ArithDecoder;
+use crate::coding::bitio::BitReader;
+use crate::coding::huffman::HuffmanDecoder;
+use crate::data::{Column, Dataset};
+use crate::forest::forest::Predictions;
+use crate::model::keys::ContextKey;
+use crate::zaks::{self, TreeShape};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// A prediction engine over a parsed container. Owns the container through
+/// an `Arc`, so it can live in long-running services (the model store).
+pub struct CompressedPredictor {
+    pc: Arc<ParsedContainer>,
+    /// per-tree Zaks shapes (split once on construction)
+    shapes: Vec<TreeShape>,
+    vn_decoders: Vec<HuffmanDecoder>,
+    split_decoders: Vec<Vec<HuffmanDecoder>>,
+    fit_decoders: Vec<HuffmanDecoder>,
+}
+
+impl CompressedPredictor {
+    /// Build from a parsed container (cheap relative to decompression: one
+    /// pass over the Zaks bits + decoder table construction).
+    pub fn new(pc: impl Into<Arc<ParsedContainer>>) -> Result<Self> {
+        let pc: Arc<ParsedContainer> = pc.into();
+        if pc.needs_dataset() {
+            bail!(
+                "dataset-indexed container: call ParsedContainer::attach_dataset \
+                 with the training data before building a predictor"
+            );
+        }
+        let seqs = zaks::split_concatenated(&pc.zaks_bits, pc.n_trees)?;
+        let shapes = seqs
+            .iter()
+            .enumerate()
+            .map(|(t, s)| zaks::shape_from_zaks(s).with_context(|| format!("tree {t}")))
+            .collect::<Result<Vec<_>>>()?;
+        let vn_decoders = pc.vn_dicts.iter().map(|d| d.decoder()).collect();
+        let split_decoders = pc
+            .split_dicts
+            .iter()
+            .map(|per| per.iter().map(|d| d.decoder()).collect())
+            .collect();
+        let fit_decoders = pc.fit_dicts.iter().map(|d| d.decoder()).collect();
+        Ok(CompressedPredictor { pc, shapes, vn_decoders, split_decoders, fit_decoders })
+    }
+
+    /// The underlying container.
+    pub fn container(&self) -> &ParsedContainer {
+        &self.pc
+    }
+
+    /// Validate that a dataset's schema matches the container (feature kinds
+    /// and counts; prediction routes on these).
+    pub fn check_schema(&self, ds: &Dataset) -> Result<()> {
+        if ds.num_features() != self.pc.features.len() {
+            bail!(
+                "dataset has {} features, container {}",
+                ds.num_features(),
+                self.pc.features.len()
+            );
+        }
+        for (f, meta) in ds.features.iter().zip(&self.pc.features) {
+            let ok = match (&f.column, meta.levels) {
+                (Column::Numeric(_), None) => true,
+                (Column::Categorical { levels, .. }, Some(l)) => *levels == l,
+                _ => false,
+            };
+            if !ok {
+                bail!("feature kind mismatch on {:?}", meta.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.pc.n_trees
+    }
+
+    /// Predict one row: regression mean / majority vote over all trees,
+    /// each answered by a prefix decode of that tree's streams.
+    pub fn predict_row(&self, ds: &Dataset, row: usize) -> Result<PredictOne> {
+        let mut votes = vec![0u32; self.pc.classes.max(1) as usize];
+        let mut sum = 0.0f64;
+        for t in 0..self.pc.n_trees {
+            match self.predict_tree_row(t, ds, row)? {
+                TreeAnswer::Class(c) => votes[c as usize] += 1,
+                TreeAnswer::Value(v) => sum += v,
+            }
+        }
+        Ok(if self.pc.classification {
+            PredictOne::Class(
+                votes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+                    .map(|(i, _)| i as u32)
+                    .unwrap_or(0),
+            )
+        } else {
+            PredictOne::Value(sum / self.pc.n_trees as f64)
+        })
+    }
+
+    /// Single tree, single row: the §5 path decode.
+    fn predict_tree_row(&self, t: usize, ds: &Dataset, row: usize) -> Result<TreeAnswer> {
+        let shape = &self.shapes[t];
+        let n = shape.node_count();
+        let depths = shape.depths();
+        let pc = &*self.pc;
+        let (vs, ve) = pc.vars_ranges[t];
+        let (ss, se) = pc.splits_ranges[t];
+        let (fs, fe) = pc.fits_ranges[t];
+        let mut vars_r = BitReader::new(&pc.vars_payload[vs..ve]);
+        let mut splits_r = BitReader::new(&pc.splits_payload[ss..se]);
+        let mut fits_r = BitReader::new(&pc.fits_payload[fs..fe]);
+        let mut arith = match pc.fit_codec {
+            FitCodec::Arith => Some(ArithDecoder::new(fits_r.clone())),
+            FitCodec::Huffman | FitCodec::Raw64 => None,
+        };
+
+        let mut father_feat: Vec<Option<u32>> = vec![None; n];
+        // target node we are walking toward; decode sequentially until we
+        // pass through it as a leaf
+        let mut target = 0usize;
+        let mut answer: Option<TreeAnswer> = None;
+        for i in 0..n {
+            let key = pc.conditioning.project(ContextKey::new(depths[i], father_feat[i]));
+            // a fit is present for every node in stream order; decode (or
+            // skip-decode) to stay in sync
+            enum DecodedFit {
+                Sym(u32),
+                Raw(f64),
+            }
+            let fit = match (&mut arith, pc.fit_codec) {
+                (Some(dec), FitCodec::Arith) => {
+                    let cl = *pc.fit_map.get(&key).context("fit cluster")?;
+                    let model = pc
+                        .fit_models
+                        .get(cl as usize)
+                        .context("fit cluster id out of range")?;
+                    DecodedFit::Sym(dec.decode(model)?)
+                }
+                (None, FitCodec::Huffman) => {
+                    let cl = *pc.fit_map.get(&key).context("fit cluster")?;
+                    DecodedFit::Sym(
+                        self.fit_decoders
+                            .get(cl as usize)
+                            .context("fit cluster id out of range")?
+                            .decode(&mut fits_r)?,
+                    )
+                }
+                (None, FitCodec::Raw64) => DecodedFit::Raw(
+                    pc.fit_raw_codec
+                        .as_ref()
+                        .context("raw codec missing")?
+                        .decode(&mut fits_r)?,
+                ),
+                _ => unreachable!(),
+            };
+            match shape.children[i] {
+                Some((l, r)) => {
+                    let vcl = *pc.vn_map.get(&key).context("vn cluster")?;
+                    let feature = self
+                        .vn_decoders
+                        .get(vcl as usize)
+                        .context("vn cluster id out of range")?
+                        .decode(&mut vars_r)?;
+                    if feature as usize >= pc.features.len() {
+                        bail!("decoded feature out of range");
+                    }
+                    let scl = *pc.split_maps[feature as usize]
+                        .get(&key)
+                        .context("split cluster")?;
+                    let sym = self.split_decoders[feature as usize]
+                        .get(scl as usize)
+                        .context("split cluster id out of range")?
+                        .decode(&mut splits_r)?;
+                    father_feat[l as usize] = Some(feature);
+                    father_feat[r as usize] = Some(feature);
+                    if i == target {
+                        // evaluate the split to choose the next target
+                        let alpha = &pc.alphabets.splits[feature as usize];
+                        if sym as usize >= alpha.len() {
+                            bail!("split symbol out of alphabet");
+                        }
+                        let value = alpha.value_of(sym);
+                        let split = crate::forest::Split { feature, value };
+                        target = if crate::forest::tree::go_left(ds, row, &split) {
+                            l as usize
+                        } else {
+                            r as usize
+                        };
+                    }
+                }
+                None => {
+                    if i == target {
+                        answer = Some(match fit {
+                            DecodedFit::Sym(sym) if pc.classification => TreeAnswer::Class(sym),
+                            DecodedFit::Sym(sym) => TreeAnswer::Value(
+                                *pc.alphabets
+                                    .fits
+                                    .get(sym as usize)
+                                    .context("fit symbol out of table")?,
+                            ),
+                            DecodedFit::Raw(v) => TreeAnswer::Value(v),
+                        });
+                        break; // nothing past the target leaf is needed
+                    }
+                }
+            }
+        }
+        answer.context("walk never reached a leaf (corrupt shape)")
+    }
+
+    /// Batch prediction: per tree, decode its symbol arrays once (transient)
+    /// and route every row. Memory stays O(largest tree), never O(forest).
+    pub fn predict_all(&self, ds: &Dataset) -> Result<Predictions> {
+        self.check_schema(ds)?;
+        let n_rows = ds.num_rows();
+        let mut votes = vec![0u32; n_rows * self.pc.classes.max(1) as usize];
+        let mut sums = vec![0.0f64; n_rows];
+        let vn_dec = &self.vn_decoders;
+        let sp_dec = &self.split_decoders;
+        let ft_dec = &self.fit_decoders;
+        for t in 0..self.pc.n_trees {
+            let tree = super::pipeline::decode_tree(
+                &*self.pc,
+                t,
+                &self.shapes[t],
+                vn_dec,
+                sp_dec,
+                ft_dec,
+            )?;
+            for row in 0..n_rows {
+                match tree.predict_row(ds, row) {
+                    crate::forest::Fit::Class(c) => {
+                        votes[row * self.pc.classes as usize + c as usize] += 1
+                    }
+                    crate::forest::Fit::Regression(v) => sums[row] += v,
+                }
+            }
+        }
+        Ok(if self.pc.classification {
+            let k = self.pc.classes as usize;
+            Predictions::Classes(
+                (0..n_rows)
+                    .map(|row| {
+                        votes[row * k..(row + 1) * k]
+                            .iter()
+                            .enumerate()
+                            .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+                            .map(|(i, _)| i as u32)
+                            .unwrap_or(0)
+                    })
+                    .collect(),
+            )
+        } else {
+            Predictions::Values(sums.iter().map(|s| s / self.pc.n_trees as f64).collect())
+        })
+    }
+
+    /// Full forest reconstruction (delegates to the pipeline decoder).
+    pub fn decompress(&self) -> Result<crate::forest::Forest> {
+        decompress_container(&self.pc)
+    }
+}
+
+/// One aggregated prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PredictOne {
+    Value(f64),
+    Class(u32),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum TreeAnswer {
+    Value(f64),
+    Class(u32),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::{CompressOptions, CompressedForest};
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+
+    fn setup(
+        ds: &Dataset,
+        n_trees: usize,
+        classification: bool,
+    ) -> (Forest, CompressedForest) {
+        let params = if classification {
+            ForestParams::classification(n_trees)
+        } else {
+            ForestParams::regression(n_trees)
+        };
+        let f = Forest::train(ds, &params, 31);
+        let cf = CompressedForest::compress(&f, ds, &CompressOptions::default()).unwrap();
+        (f, cf)
+    }
+
+    #[test]
+    fn row_predictions_match_original_classification() {
+        let ds = synthetic::iris(21);
+        let (f, cf) = setup(&ds, 7, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        p.check_schema(&ds).unwrap();
+        for row in (0..ds.num_rows()).step_by(13) {
+            let expect = f.predict_class(&ds, row);
+            assert_eq!(p.predict_row(&ds, row).unwrap(), PredictOne::Class(expect), "row {row}");
+        }
+    }
+
+    #[test]
+    fn row_predictions_match_original_regression() {
+        let ds = synthetic::airfoil_regression(22);
+        let (f, cf) = setup(&ds, 5, false);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        for row in (0..ds.num_rows()).step_by(211) {
+            let expect = f.predict_regression(&ds, row);
+            match p.predict_row(&ds, row).unwrap() {
+                PredictOne::Value(v) => {
+                    assert_eq!(v.to_bits(), expect.to_bits(), "row {row}: bit-exact")
+                }
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn two_class_arith_path_predictions() {
+        let ds = synthetic::airfoil_classification(23);
+        let (f, cf) = setup(&ds, 6, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        for row in (0..ds.num_rows()).step_by(173) {
+            let expect = f.predict_class(&ds, row);
+            assert_eq!(p.predict_row(&ds, row).unwrap(), PredictOne::Class(expect));
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_row_and_original() {
+        let ds = synthetic::wages(24);
+        let (f, cf) = setup(&ds, 8, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        let batch = p.predict_all(&ds).unwrap();
+        let expect = f.predict_all(&ds);
+        assert_eq!(batch, expect);
+        if let Predictions::Classes(cs) = &batch {
+            for row in (0..ds.num_rows()).step_by(61) {
+                assert_eq!(
+                    p.predict_row(&ds, row).unwrap(),
+                    PredictOne::Class(cs[row])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let ds = synthetic::iris(25);
+        let (_, cf) = setup(&ds, 3, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        let other = synthetic::wages(25);
+        assert!(p.check_schema(&other).is_err());
+        assert!(p.predict_all(&other).is_err());
+    }
+
+    #[test]
+    fn decompress_via_predictor() {
+        let ds = synthetic::iris(26);
+        let (f, cf) = setup(&ds, 4, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        assert!(p.decompress().unwrap().identical(&f));
+    }
+}

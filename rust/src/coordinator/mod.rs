@@ -1,0 +1,20 @@
+//! The L3 coordinator — the system layer around the codec.
+//!
+//! * [`pipeline`] — the leader/worker compression orchestration: train or
+//!   ingest a forest, run the two extraction/encoding passes on a worker
+//!   pool, drive the clustering through the XLA runtime, emit the container
+//!   plus a [`pipeline::CompressionReport`] (sizes, ratios, cluster counts,
+//!   timings) that the benches and CLI print
+//! * [`store`]   — the model store: many compressed forests resident in
+//!   memory, answering predictions straight from the compressed bytes (the
+//!   paper's subscriber-device scenario)
+//! * [`server`]  — a TCP front-end over the store with per-model
+//!   micro-batching: a line protocol (`PREDICT`, `LIST`, `STATS`) suitable
+//!   for the end-to-end example and the latency benches
+
+pub mod pipeline;
+pub mod server;
+pub mod store;
+
+pub use pipeline::{CompressionReport, Coordinator};
+pub use store::ModelStore;

@@ -1,0 +1,189 @@
+//! Leader/worker compression orchestration and reporting.
+//!
+//! The coordinator owns: worker count, the clustering engine (XLA artifacts
+//! when present, native otherwise), timing, and the comparison against the
+//! paper's baseline compressors. One `Coordinator` can serve many jobs; the
+//! engine (and its compiled PJRT executables) is reused across them.
+
+use crate::baseline;
+use crate::cluster::kmeans::LloydEngine;
+use crate::compress::{CompressOptions, CompressedForest};
+use crate::data::Dataset;
+use crate::forest::{Forest, ForestParams};
+use crate::runtime::HybridEngine;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Everything a compression job reports — the benches and the CLI print
+/// straight from this.
+#[derive(Debug, Clone)]
+pub struct CompressionReport {
+    pub dataset: String,
+    pub n_trees: usize,
+    pub total_nodes: usize,
+    pub mean_depth: f64,
+    /// paper's comparators (bytes, after gzip)
+    pub standard_bytes: u64,
+    pub light_bytes: u64,
+    /// Algorithm 1 (bytes) + per-section breakdown
+    pub ours_bytes: u64,
+    pub sections: crate::compress::SectionSizes,
+    /// chosen cluster counts per model family
+    pub cluster_ks: Vec<(String, usize)>,
+    /// timings (seconds)
+    pub train_s: f64,
+    pub compress_s: f64,
+    pub baseline_s: f64,
+    /// engine used and how many Lloyd steps ran where
+    pub engine: &'static str,
+    pub xla_steps: u64,
+    pub native_steps: u64,
+}
+
+impl CompressionReport {
+    pub fn standard_ratio(&self) -> f64 {
+        self.standard_bytes as f64 / self.ours_bytes.max(1) as f64
+    }
+
+    pub fn light_ratio(&self) -> f64 {
+        self.light_bytes as f64 / self.ours_bytes.max(1) as f64
+    }
+
+    /// A Table-2-style row.
+    pub fn table_row(&self) -> String {
+        use crate::util::stats::human_bytes;
+        format!(
+            "{:<22} {:>12} {:>12} {:>12}  (1:{:.1} / 1:{:.1})",
+            self.dataset,
+            human_bytes(self.standard_bytes),
+            human_bytes(self.light_bytes),
+            human_bytes(self.ours_bytes),
+            self.standard_ratio(),
+            self.light_ratio(),
+        )
+    }
+}
+
+/// The coordinator: a reusable engine + worker configuration.
+pub struct Coordinator {
+    engine: HybridEngine,
+    pub workers: usize,
+}
+
+impl Coordinator {
+    /// With XLA artifacts when available.
+    pub fn new() -> Self {
+        Coordinator { engine: HybridEngine::new(), workers: crate::util::threads::default_workers() }
+    }
+
+    /// Native-only (tests, ablations).
+    pub fn native_only() -> Self {
+        Coordinator { engine: HybridEngine::native_only(), workers: 1 }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Train a forest on a dataset (bootstrap `treeBagger` defaults).
+    pub fn train(&self, ds: &Dataset, n_trees: usize, seed: u64) -> Forest {
+        let mut params = if ds.target.is_classification() {
+            ForestParams::classification(n_trees)
+        } else {
+            ForestParams::regression(n_trees)
+        };
+        params.workers = self.workers;
+        Forest::train(ds, &params, seed)
+    }
+
+    /// The full job: train (or take) a forest, compress it, run both
+    /// baselines, assemble the report.
+    pub fn run_job(
+        &mut self,
+        ds: &Dataset,
+        forest: &Forest,
+        opts: &CompressOptions,
+        train_s: f64,
+    ) -> Result<(CompressedForest, CompressionReport)> {
+        let mut opts = opts.clone();
+        opts.workers = self.workers;
+
+        let t0 = Instant::now();
+        let cf = CompressedForest::compress_with_engine(forest, ds, &opts, &mut self.engine)?;
+        let compress_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let standard = baseline::gzip::gzip(&baseline::standard_representation(forest, ds));
+        let (light_raw, _) = baseline::light_representation(forest);
+        let light = baseline::gzip::gzip(&light_raw);
+        let baseline_s = t0.elapsed().as_secs_f64();
+
+        let report = CompressionReport {
+            dataset: ds.name.clone(),
+            n_trees: forest.num_trees(),
+            total_nodes: forest.total_nodes(),
+            mean_depth: forest.mean_depth(),
+            standard_bytes: standard.len() as u64,
+            light_bytes: light.len() as u64,
+            ours_bytes: cf.total_bytes(),
+            sections: cf.sizes,
+            cluster_ks: cf.cluster_ks.clone(),
+            train_s,
+            compress_s,
+            baseline_s,
+            engine: self.engine.name(),
+            xla_steps: self.engine.xla_steps,
+            native_steps: self.engine.native_steps,
+        };
+        Ok((cf, report))
+    }
+
+    /// Convenience: train + compress + report in one call.
+    pub fn train_and_compress(
+        &mut self,
+        ds: &Dataset,
+        n_trees: usize,
+        seed: u64,
+        opts: &CompressOptions,
+    ) -> Result<(Forest, CompressedForest, CompressionReport)> {
+        let t0 = Instant::now();
+        let forest = self.train(ds, n_trees, seed);
+        let train_s = t0.elapsed().as_secs_f64();
+        let (cf, report) = self.run_job(ds, &forest, opts, train_s)?;
+        Ok((forest, cf, report))
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn job_produces_consistent_report() {
+        let ds = synthetic::iris(71);
+        let mut c = Coordinator::native_only();
+        let (forest, cf, report) =
+            c.train_and_compress(&ds, 6, 3, &CompressOptions::default()).unwrap();
+        assert_eq!(report.n_trees, 6);
+        assert_eq!(report.ours_bytes, cf.total_bytes());
+        assert!(report.standard_bytes > report.light_bytes);
+        // on a 6-tree iris forest the fixed dictionary overhead is not yet
+        // amortized, so only the standard baseline must be beaten here; the
+        // light-baseline win at realistic tree counts is asserted by the
+        // integration tests and the Table-2 bench
+        assert!(report.ours_bytes < report.standard_bytes, "ours must beat standard");
+        assert!(report.standard_ratio() > report.light_ratio());
+        assert!(!report.cluster_ks.is_empty());
+        // losslessness through the coordinator path too
+        assert!(cf.decompress().unwrap().identical(&forest));
+        // a printable row
+        assert!(report.table_row().contains(&ds.name));
+    }
+}

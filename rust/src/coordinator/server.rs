@@ -1,0 +1,283 @@
+//! TCP front-end over the [`ModelStore`] with per-model micro-batching —
+//! the "subscriber" serving loop of the end-to-end example.
+//!
+//! Line protocol (UTF-8, one request per line):
+//!
+//! ```text
+//! PREDICT <model> <v1>,<v2>,...     → OK <class|value>       (numeric vi;
+//!                                      categorical levels as c<idx>, e.g. c3)
+//! LIST                              → OK <model> <model> ...
+//! STATS                             → OK requests=.. batches=.. mean_us=.. max_us=..
+//! BYTES                             → OK resident=<bytes>
+//! QUIT                              → connection closes
+//! ```
+//!
+//! Batching: every `PREDICT` goes into a per-model queue; a batcher thread
+//! drains whatever accumulated within [`BATCH_WINDOW`] (up to
+//! [`BATCH_MAX`]) and answers the whole batch against the store at once.
+//! With one queued request the store takes the cheap prefix-decode path;
+//! bigger flash crowds amortize a full per-tree decode across the batch.
+
+use super::store::{ModelStore, ObsValue};
+use crate::compress::predict::PredictOne;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Max requests answered in one batch.
+pub const BATCH_MAX: usize = 64;
+/// How long the batcher waits to accumulate a batch.
+pub const BATCH_WINDOW: Duration = Duration::from_millis(2);
+
+struct Job {
+    values: Vec<ObsValue>,
+    reply: Sender<Result<PredictOne, String>>,
+}
+
+/// The running server: listener thread + per-model batcher threads.
+pub struct Server {
+    store: Arc<ModelStore>,
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    queues: Arc<Mutex<HashMap<String, Sender<Job>>>>,
+}
+
+impl Server {
+    /// Bind and start serving on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(store: Arc<ModelStore>, port: u16) -> Result<Server> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let queues: Arc<Mutex<HashMap<String, Sender<Job>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        {
+            let store = store.clone();
+            let shutdown = shutdown.clone();
+            let queues = queues.clone();
+            std::thread::spawn(move || {
+                while !shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let store = store.clone();
+                            let queues = queues.clone();
+                            let shutdown = shutdown.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &store, &queues, &shutdown);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        Ok(Server { store, addr, shutdown, queues })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn store(&self) -> &Arc<ModelStore> {
+        &self.store
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+
+    /// Number of per-model batcher threads spawned so far.
+    pub fn active_batchers(&self) -> usize {
+        self.queues.lock().unwrap().len()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Get (or start) the batcher queue for a model.
+fn batcher_for(
+    model: &str,
+    store: &Arc<ModelStore>,
+    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Sender<Job> {
+    let mut map = queues.lock().unwrap();
+    if let Some(tx) = map.get(model) {
+        return tx.clone();
+    }
+    let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+    let store = store.clone();
+    let shutdown = shutdown.clone();
+    let name = model.to_string();
+    std::thread::spawn(move || {
+        while !shutdown.load(Ordering::Relaxed) {
+            // block for the first job, then drain the window
+            let first = match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(j) => j,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(_) => break,
+            };
+            let mut jobs = vec![first];
+            let deadline = std::time::Instant::now() + BATCH_WINDOW;
+            while jobs.len() < BATCH_MAX {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(_) => break,
+                }
+            }
+            let rows: Vec<Vec<ObsValue>> = jobs.iter().map(|j| j.values.clone()).collect();
+            match store.predict_batch(&name, &rows) {
+                Ok(outs) => {
+                    for (job, out) in jobs.into_iter().zip(outs) {
+                        let _ = job.reply.send(Ok(out));
+                    }
+                }
+                Err(e) => {
+                    // batch-level failure (e.g. one bad row): answer each
+                    // individually so good rows still succeed
+                    for job in jobs {
+                        let out = store
+                            .predict(&name, &job.values)
+                            .map_err(|e| e.to_string());
+                        let _ = job.reply.send(out);
+                    }
+                    let _ = e; // recorded via per-row errors
+                }
+            }
+        }
+    });
+    map.insert(model.to_string(), tx.clone());
+    tx
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    store: &Arc<ModelStore>,
+    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let reply = match handle_line(&line, store, queues, shutdown) {
+            Ok(Some(s)) => s,
+            Ok(None) => break, // QUIT
+            Err(e) => format!("ERR {e}"),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn handle_line(
+    line: &str,
+    store: &Arc<ModelStore>,
+    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<Option<String>> {
+    let mut parts = line.trim().splitn(3, ' ');
+    match parts.next().unwrap_or("") {
+        "PREDICT" => {
+            let model = parts.next().context("PREDICT needs a model name")?;
+            let values = parse_values(parts.next().context("PREDICT needs values")?)?;
+            let (rtx, rrx) = channel();
+            let q = batcher_for(model, store, queues, shutdown);
+            q.send(Job { values, reply: rtx }).ok().context("batcher gone")?;
+            let out = rrx
+                .recv_timeout(Duration::from_secs(30))
+                .context("prediction timed out")?;
+            match out {
+                Ok(PredictOne::Class(c)) => Ok(Some(format!("OK {c}"))),
+                Ok(PredictOne::Value(v)) => Ok(Some(format!("OK {v}"))),
+                Err(e) => Ok(Some(format!("ERR {e}"))),
+            }
+        }
+        "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
+        "STATS" => {
+            let s = store.stats();
+            let mean = if s.batches > 0 { s.total_latency_us / s.batches } else { 0 };
+            Ok(Some(format!(
+                "OK requests={} batches={} mean_us={} max_us={}",
+                s.requests, s.batches, mean, s.max_latency_us
+            )))
+        }
+        "BYTES" => Ok(Some(format!("OK resident={}", store.resident_bytes()))),
+        "QUIT" => Ok(None),
+        other => bail!("unknown verb {other:?}"),
+    }
+}
+
+/// Parse `1.5,c3,0.25` → [Num(1.5), Cat(3), Num(0.25)].
+pub fn parse_values(s: &str) -> Result<Vec<ObsValue>> {
+    s.split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            if let Some(cat) = tok.strip_prefix('c') {
+                Ok(ObsValue::Cat(cat.parse().with_context(|| format!("bad level {tok:?}"))?))
+            } else {
+                Ok(ObsValue::Num(tok.parse().with_context(|| format!("bad number {tok:?}"))?))
+            }
+        })
+        .collect()
+}
+
+/// Blocking client helper (used by tests/examples/benches).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_values_mixed() {
+        let v = parse_values("1.5,c3,0.25,c0").unwrap();
+        assert_eq!(
+            v,
+            vec![ObsValue::Num(1.5), ObsValue::Cat(3), ObsValue::Num(0.25), ObsValue::Cat(0)]
+        );
+        assert!(parse_values("x").is_err());
+        assert!(parse_values("cX").is_err());
+    }
+
+    // live server tests are in rust/tests/coordinator_e2e.rs
+}

@@ -1,0 +1,275 @@
+//! The model store: many compressed forests resident in memory, answering
+//! predictions **from the compressed bytes** — the paper's motivating
+//! deployment ("a user-specific ensemble … stored on a personal device with
+//! strict storage limitations", §1).
+
+use crate::compress::predict::PredictOne;
+use crate::compress::{CompressedForest, CompressedPredictor};
+use crate::data::{Column, Dataset, Feature, Target};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Mutex, RwLock};
+
+/// One observation value, matching the model's feature schema.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObsValue {
+    Num(f64),
+    Cat(u32),
+}
+
+/// Store statistics (served by the `STATS` protocol verb).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_latency_us: u64,
+    pub max_latency_us: u64,
+}
+
+struct StoredModel {
+    predictor: CompressedPredictor,
+    compressed_bytes: u64,
+}
+
+/// A thread-safe registry of compressed models.
+pub struct ModelStore {
+    models: RwLock<BTreeMap<String, StoredModel>>,
+    stats: Mutex<StoreStats>,
+}
+
+impl ModelStore {
+    pub fn new() -> Self {
+        ModelStore { models: RwLock::new(BTreeMap::new()), stats: Mutex::new(StoreStats::default()) }
+    }
+
+    /// Register a compressed forest under a name.
+    pub fn insert(&self, name: &str, cf: &CompressedForest) -> Result<()> {
+        let pc = cf.parse()?;
+        let predictor = CompressedPredictor::new(pc)?;
+        self.models.write().unwrap().insert(
+            name.to_string(),
+            StoredModel { predictor, compressed_bytes: cf.total_bytes() },
+        );
+        Ok(())
+    }
+
+    /// Load a container file from disk.
+    pub fn insert_from_file(&self, name: &str, path: &std::path::Path) -> Result<()> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        let cf = CompressedForest::from_bytes(bytes)?;
+        self.insert(name, &cf)
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total compressed bytes resident (the "storage budget" figure).
+    pub fn resident_bytes(&self) -> u64 {
+        self.models.read().unwrap().values().map(|m| m.compressed_bytes).sum()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Predict a single observation against a named model.
+    pub fn predict(&self, model: &str, values: &[ObsValue]) -> Result<PredictOne> {
+        let start = std::time::Instant::now();
+        let models = self.models.read().unwrap();
+        let stored = models.get(model).with_context(|| format!("unknown model {model:?}"))?;
+        let ds = row_dataset(&stored.predictor, values, 1)?;
+        let out = stored.predictor.predict_row(&ds, 0)?;
+        drop(models);
+        self.record(start.elapsed().as_micros() as u64, 1, 1);
+        Ok(out)
+    }
+
+    /// Predict a batch of observations (the micro-batcher's path: one
+    /// schema check + shared decode state amortized over the batch).
+    pub fn predict_batch(&self, model: &str, rows: &[Vec<ObsValue>]) -> Result<Vec<PredictOne>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let start = std::time::Instant::now();
+        let models = self.models.read().unwrap();
+        let stored = models.get(model).with_context(|| format!("unknown model {model:?}"))?;
+        let flat: Vec<ObsValue> = rows.iter().flatten().copied().collect();
+        let ds = row_dataset(&stored.predictor, &flat, rows.len())?;
+        // batched path decodes each tree once when the batch is large enough
+        // to amortize it; small batches use the per-row prefix decode
+        let out = if rows.len() >= 8 {
+            match stored.predictor.predict_all(&ds)? {
+                crate::forest::forest::Predictions::Classes(cs) => {
+                    cs.into_iter().map(PredictOne::Class).collect()
+                }
+                crate::forest::forest::Predictions::Values(vs) => {
+                    vs.into_iter().map(PredictOne::Value).collect()
+                }
+            }
+        } else {
+            (0..rows.len())
+                .map(|r| stored.predictor.predict_row(&ds, r))
+                .collect::<Result<Vec<_>>>()?
+        };
+        drop(models);
+        self.record(start.elapsed().as_micros() as u64, rows.len() as u64, 1);
+        Ok(out)
+    }
+
+    fn record(&self, us: u64, requests: u64, batches: u64) {
+        let mut s = self.stats.lock().unwrap();
+        s.requests += requests;
+        s.batches += batches;
+        s.total_latency_us += us;
+        s.max_latency_us = s.max_latency_us.max(us);
+    }
+}
+
+impl Default for ModelStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Build an n-row dataset from flat observation values using the model's
+/// stored feature schema (kinds + level counts from the container header).
+fn row_dataset(
+    predictor: &CompressedPredictor,
+    flat: &[ObsValue],
+    n_rows: usize,
+) -> Result<Dataset> {
+    let metas = &predictor.container().features;
+    let d = metas.len();
+    if flat.len() != d * n_rows {
+        bail!("expected {} values ({} rows × {d} features), got {}", d * n_rows, n_rows, flat.len());
+    }
+    let mut features = Vec::with_capacity(d);
+    for (j, meta) in metas.iter().enumerate() {
+        let column = match meta.levels {
+            None => {
+                let mut v = Vec::with_capacity(n_rows);
+                for r in 0..n_rows {
+                    match flat[r * d + j] {
+                        ObsValue::Num(x) => v.push(x),
+                        ObsValue::Cat(_) => {
+                            bail!("feature {:?} expects a numeric value", meta.name)
+                        }
+                    }
+                }
+                Column::Numeric(v)
+            }
+            Some(levels) => {
+                let mut v = Vec::with_capacity(n_rows);
+                for r in 0..n_rows {
+                    match flat[r * d + j] {
+                        ObsValue::Cat(c) if c < levels => v.push(c),
+                        ObsValue::Cat(c) => {
+                            bail!("feature {:?}: level {c} out of range (<{levels})", meta.name)
+                        }
+                        ObsValue::Num(_) => {
+                            bail!("feature {:?} expects a categorical level", meta.name)
+                        }
+                    }
+                }
+                Column::Categorical { values: v, levels }
+            }
+        };
+        features.push(Feature { name: meta.name.clone(), column });
+    }
+    // dummy target (prediction never reads it)
+    let target = if predictor.container().classification {
+        Target::Classification { labels: vec![0; n_rows], classes: predictor.container().classes.max(1) }
+    } else {
+        Target::Regression(vec![0.0; n_rows])
+    };
+    Ok(Dataset { name: "query".into(), features, target })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressOptions;
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+
+    fn store_with_iris() -> (ModelStore, Forest, Dataset) {
+        let ds = synthetic::iris(81);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 3);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let store = ModelStore::new();
+        store.insert("iris", &cf).unwrap();
+        (store, f, ds)
+    }
+
+    fn row_values(ds: &Dataset, row: usize) -> Vec<ObsValue> {
+        ds.features
+            .iter()
+            .map(|f| match &f.column {
+                Column::Numeric(v) => ObsValue::Num(v[row]),
+                Column::Categorical { values, .. } => ObsValue::Cat(values[row]),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn store_predicts_like_original_forest() {
+        let (store, f, ds) = store_with_iris();
+        for row in (0..ds.num_rows()).step_by(17) {
+            let vals = row_values(&ds, row);
+            let got = store.predict("iris", &vals).unwrap();
+            assert_eq!(got, PredictOne::Class(f.predict_class(&ds, row)));
+        }
+        assert!(store.stats().requests > 0);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (store, _, ds) = store_with_iris();
+        let rows: Vec<Vec<ObsValue>> = (0..20).map(|r| row_values(&ds, r * 3)).collect();
+        let batch = store.predict_batch("iris", &rows).unwrap();
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(batch[i], store.predict("iris", r).unwrap());
+        }
+    }
+
+    #[test]
+    fn unknown_model_and_bad_schema_rejected() {
+        let (store, _, ds) = store_with_iris();
+        let vals = row_values(&ds, 0);
+        assert!(store.predict("nope", &vals).is_err());
+        assert!(store.predict("iris", &vals[..2]).is_err());
+        let mut bad = vals.clone();
+        bad[0] = ObsValue::Cat(1);
+        assert!(store.predict("iris", &bad).is_err());
+    }
+
+    #[test]
+    fn multiple_models_and_removal() {
+        let (store, _, ds) = store_with_iris();
+        let ds2 = synthetic::wages(82);
+        let f2 = Forest::train(&ds2, &ForestParams::classification(3), 4);
+        let cf2 =
+            CompressedForest::compress(&f2, &ds2, &CompressOptions::default()).unwrap();
+        store.insert("wages", &cf2).unwrap();
+        assert_eq!(store.names(), vec!["iris".to_string(), "wages".to_string()]);
+        assert!(store.resident_bytes() > 0);
+        let vals = row_values(&ds, 0);
+        store.predict("iris", &vals).unwrap();
+        assert!(store.remove("iris"));
+        assert!(store.predict("iris", &vals).is_err());
+        assert_eq!(store.len(), 1);
+    }
+}

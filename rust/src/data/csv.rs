@@ -1,0 +1,175 @@
+//! Minimal CSV loader for user-supplied real datasets.
+//!
+//! The reproduction runs on synthetic data (no UCI/Kaggle access offline),
+//! but the library is usable on real data: `load_csv` infers column kinds
+//! (numeric vs categorical) and builds a [`Dataset`].
+
+use super::dataset::{Column, Dataset, Feature, Target};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Which column is the target, and how to interpret it.
+#[derive(Debug, Clone, Copy)]
+pub enum TargetSpec {
+    /// Column index, regression.
+    Regression(usize),
+    /// Column index, classification (levels inferred).
+    Classification(usize),
+}
+
+/// Parse a CSV file (first row = header) into a [`Dataset`].
+///
+/// Column kind inference: a column where every non-empty cell parses as f64
+/// is numeric; anything else is categorical with levels assigned in order of
+/// first appearance. No quoting/escaping support — this is a data loader for
+/// benchmark-style files, not a general CSV library.
+pub fn load_csv(path: &Path, spec: TargetSpec) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text, path.file_stem().and_then(|s| s.to_str()).unwrap_or("csv"), spec)
+}
+
+/// Parse CSV text (exposed for tests).
+pub fn parse_csv(text: &str, name: &str, spec: TargetSpec) -> Result<Dataset> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .context("empty csv")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let ncols = header.len();
+    let mut cells: Vec<Vec<String>> = vec![Vec::new(); ncols];
+    for (lineno, line) in lines.enumerate() {
+        let row: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        if row.len() != ncols {
+            bail!("line {}: {} cells, expected {ncols}", lineno + 2, row.len());
+        }
+        for (c, v) in row.iter().enumerate() {
+            cells[c].push(v.to_string());
+        }
+    }
+    let nrows = cells[0].len();
+    if nrows == 0 {
+        bail!("csv has a header but no data rows");
+    }
+
+    let target_col = match spec {
+        TargetSpec::Regression(i) | TargetSpec::Classification(i) => i,
+    };
+    if target_col >= ncols {
+        bail!("target column {target_col} out of range ({ncols} columns)");
+    }
+
+    let mut features = Vec::new();
+    for c in 0..ncols {
+        if c == target_col {
+            continue;
+        }
+        features.push(Feature {
+            name: header[c].clone(),
+            column: infer_column(&cells[c]),
+        });
+    }
+
+    let target = match spec {
+        TargetSpec::Regression(_) => {
+            let y: Result<Vec<f64>> = cells[target_col]
+                .iter()
+                .map(|s| s.parse::<f64>().with_context(|| format!("target value {s:?}")))
+                .collect();
+            Target::Regression(y?)
+        }
+        TargetSpec::Classification(_) => {
+            let mut levels: HashMap<&str, u32> = HashMap::new();
+            let labels: Vec<u32> = cells[target_col]
+                .iter()
+                .map(|s| {
+                    let next = levels.len() as u32;
+                    *levels.entry(s.as_str()).or_insert(next)
+                })
+                .collect();
+            Target::Classification {
+                labels,
+                classes: levels.len() as u32,
+            }
+        }
+    };
+
+    let ds = Dataset {
+        name: name.to_string(),
+        features,
+        target,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+fn infer_column(cells: &[String]) -> Column {
+    let all_numeric = cells.iter().all(|s| s.parse::<f64>().is_ok());
+    if all_numeric {
+        Column::Numeric(cells.iter().map(|s| s.parse().unwrap()).collect())
+    } else {
+        let mut levels: HashMap<&str, u32> = HashMap::new();
+        let values: Vec<u32> = cells
+            .iter()
+            .map(|s| {
+                let next = levels.len() as u32;
+                *levels.entry(s.as_str()).or_insert(next)
+            })
+            .collect();
+        Column::Categorical {
+            values,
+            levels: levels.len() as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "x,color,y\n1.5,red,10\n2.5,blue,20\n3.5,red,30\n";
+
+    #[test]
+    fn parses_mixed_columns_regression() {
+        let ds = parse_csv(CSV, "t", TargetSpec::Regression(2)).unwrap();
+        assert_eq!(ds.num_rows(), 3);
+        assert_eq!(ds.num_features(), 2);
+        assert!(ds.features[0].column.is_numeric());
+        assert!(!ds.features[1].column.is_numeric());
+        match &ds.target {
+            Target::Regression(y) => assert_eq!(y, &vec![10.0, 20.0, 30.0]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_classification_target() {
+        let ds = parse_csv(CSV, "t", TargetSpec::Classification(1)).unwrap();
+        match &ds.target {
+            Target::Classification { labels, classes } => {
+                assert_eq!(*classes, 2);
+                assert_eq!(labels, &vec![0, 1, 0]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("a,b\n1,2\n3\n", "t", TargetSpec::Regression(0)).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("", "t", TargetSpec::Regression(0)).is_err());
+        assert!(parse_csv("a,b\n", "t", TargetSpec::Regression(0)).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_target_index() {
+        assert!(parse_csv(CSV, "t", TargetSpec::Regression(9)).is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Dataset container: a column-oriented table with numerical and categorical
+//! features and a regression or classification target.
+//!
+//! The paper's tree compressor cares about exactly the attributes CART sees:
+//! feature kind (numerical splits carry an *ordered, continuous* value;
+//! categorical splits are a *set partition* of category levels, §3.2.2), so
+//! the container keeps that distinction first-class.
+
+use anyhow::{bail, Result};
+
+/// One feature column.
+#[derive(Debug, Clone)]
+pub enum Column {
+    /// Numerical feature values.
+    Numeric(Vec<f64>),
+    /// Categorical feature: level index per row + number of levels.
+    Categorical { values: Vec<u32>, levels: u32 },
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Numeric(v) => v.len(),
+            Column::Categorical { values, .. } => values.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, Column::Numeric(_))
+    }
+}
+
+/// Feature descriptor (name + column data).
+#[derive(Debug, Clone)]
+pub struct Feature {
+    pub name: String,
+    pub column: Column,
+}
+
+/// Prediction target.
+#[derive(Debug, Clone)]
+pub enum Target {
+    /// Regression: real-valued response.
+    Regression(Vec<f64>),
+    /// Classification: class index per row + number of classes.
+    Classification { labels: Vec<u32>, classes: u32 },
+}
+
+impl Target {
+    pub fn len(&self) -> usize {
+        match self {
+            Target::Regression(v) => v.len(),
+            Target::Classification { labels, .. } => labels.len(),
+        }
+    }
+
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Target::Classification { .. })
+    }
+
+    pub fn num_classes(&self) -> u32 {
+        match self {
+            Target::Regression(_) => 0,
+            Target::Classification { classes, .. } => *classes,
+        }
+    }
+}
+
+/// A dataset: named features + target.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub features: Vec<Feature>,
+    pub target: Target,
+}
+
+impl Dataset {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.target.len();
+        if n == 0 {
+            bail!("dataset {}: empty target", self.name);
+        }
+        for f in &self.features {
+            if f.column.len() != n {
+                bail!(
+                    "dataset {}: feature {} has {} rows, target has {n}",
+                    self.name,
+                    f.name,
+                    f.column.len()
+                );
+            }
+            if let Column::Categorical { values, levels } = &f.column {
+                if values.iter().any(|&v| v >= *levels) {
+                    bail!("dataset {}: feature {} has out-of-range level", self.name, f.name);
+                }
+            }
+        }
+        if let Target::Classification { labels, classes } = &self.target {
+            if labels.iter().any(|&l| l >= *classes) {
+                bail!("dataset {}: out-of-range class label", self.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.target.len()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Numerical value of feature `j` at row `i` (categorical levels are
+    /// exposed as their index; the tree builder branches on column kind).
+    pub fn value(&self, row: usize, feature: usize) -> f64 {
+        match &self.features[feature].column {
+            Column::Numeric(v) => v[row],
+            Column::Categorical { values, .. } => values[row] as f64,
+        }
+    }
+
+    /// Convert a regression dataset to binary classification by thresholding
+    /// the response at its mean — the paper's construction for Liberty*,
+    /// Airfoil*, Naval* ("classify those homes for which the number of
+    /// hazards is greater than the mean", §6).
+    pub fn binarize_by_mean(&self) -> Result<Dataset> {
+        let y = match &self.target {
+            Target::Regression(y) => y,
+            Target::Classification { .. } => bail!("already a classification dataset"),
+        };
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let labels: Vec<u32> = y.iter().map(|&v| (v > mean) as u32).collect();
+        Ok(Dataset {
+            name: format!("{}*", self.name.trim_end_matches('+')),
+            features: self.features.clone(),
+            target: Target::Classification { labels, classes: 2 },
+        })
+    }
+
+    /// Select a subset of rows (used by train/test splitting and bootstrap
+    /// OOB evaluation).
+    pub fn select_rows(&self, rows: &[usize]) -> Dataset {
+        let features = self
+            .features
+            .iter()
+            .map(|f| Feature {
+                name: f.name.clone(),
+                column: match &f.column {
+                    Column::Numeric(v) => Column::Numeric(rows.iter().map(|&r| v[r]).collect()),
+                    Column::Categorical { values, levels } => Column::Categorical {
+                        values: rows.iter().map(|&r| values[r]).collect(),
+                        levels: *levels,
+                    },
+                },
+            })
+            .collect();
+        let target = match &self.target {
+            Target::Regression(y) => Target::Regression(rows.iter().map(|&r| y[r]).collect()),
+            Target::Classification { labels, classes } => Target::Classification {
+                labels: rows.iter().map(|&r| labels[r]).collect(),
+                classes: *classes,
+            },
+        };
+        Dataset {
+            name: self.name.clone(),
+            features,
+            target,
+        }
+    }
+
+    /// Random train/test split (the paper's Figs 2–3 use 80/20).
+    pub fn train_test_split(&self, train_frac: f64, rng: &mut crate::util::Pcg64) -> TrainTest {
+        let n = self.num_rows();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let (train_idx, test_idx) = idx.split_at(n_train.clamp(1, n - 1));
+        TrainTest {
+            train: self.select_rows(train_idx),
+            test: self.select_rows(test_idx),
+        }
+    }
+}
+
+/// An 80/20-style split.
+#[derive(Debug, Clone)]
+pub struct TrainTest {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn toy() -> Dataset {
+        Dataset {
+            name: "toy".into(),
+            features: vec![
+                Feature {
+                    name: "x".into(),
+                    column: Column::Numeric(vec![1.0, 2.0, 3.0, 4.0]),
+                },
+                Feature {
+                    name: "c".into(),
+                    column: Column::Categorical {
+                        values: vec![0, 1, 0, 2],
+                        levels: 3,
+                    },
+                },
+            ],
+            target: Target::Regression(vec![10.0, 20.0, 30.0, 40.0]),
+        }
+    }
+
+    #[test]
+    fn validate_ok_and_accessors() {
+        let d = toy();
+        d.validate().unwrap();
+        assert_eq!(d.num_rows(), 4);
+        assert_eq!(d.num_features(), 2);
+        assert_eq!(d.value(1, 0), 2.0);
+        assert_eq!(d.value(3, 1), 2.0);
+    }
+
+    #[test]
+    fn validate_catches_row_mismatch() {
+        let mut d = toy();
+        d.features[0].column = Column::Numeric(vec![1.0]);
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_level() {
+        let mut d = toy();
+        d.features[1].column = Column::Categorical {
+            values: vec![0, 5, 0, 2],
+            levels: 3,
+        };
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn binarize_by_mean_matches_paper_construction() {
+        let d = toy(); // mean = 25
+        let b = d.binarize_by_mean().unwrap();
+        match &b.target {
+            Target::Classification { labels, classes } => {
+                assert_eq!(*classes, 2);
+                assert_eq!(labels, &vec![0, 0, 1, 1]);
+            }
+            _ => panic!("expected classification"),
+        }
+        assert!(b.binarize_by_mean().is_err());
+    }
+
+    #[test]
+    fn select_rows_subsets() {
+        let d = toy();
+        let s = d.select_rows(&[2, 0]);
+        assert_eq!(s.num_rows(), 2);
+        assert_eq!(s.value(0, 0), 3.0);
+        assert_eq!(s.value(1, 0), 1.0);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let mut rng = Pcg64::new(1);
+        let tt = d.train_test_split(0.75, &mut rng);
+        assert_eq!(tt.train.num_rows() + tt.test.num_rows(), 4);
+        assert!(tt.train.num_rows() >= 1 && tt.test.num_rows() >= 1);
+    }
+}

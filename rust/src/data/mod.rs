@@ -1,0 +1,9 @@
+//! Datasets: container types, CSV loading, and synthetic generators that
+//! stand in for the paper's UCI/Kaggle datasets (offline substitution —
+//! see `DESIGN.md §7`).
+
+pub mod csv;
+pub mod dataset;
+pub mod synthetic;
+
+pub use dataset::{Column, Dataset, Feature, Target, TrainTest};

@@ -1,0 +1,628 @@
+//! CART tree growing (Breiman et al. 1984), as configured by Matlab's
+//! `treeBagger` defaults — the trainer the paper uses (§6).
+//!
+//! * greedy recursive partitioning, no pruning (random-forest style)
+//! * classification: Gini impurity; regression: variance reduction
+//! * numeric splits: `x <= v` where `v` is an **observed value** (the left
+//!   child's maximum) — the paper's index-coding of split values depends on
+//!   split points being data values (§3.2.2)
+//! * categorical splits: binary partition of levels found by the ordered-
+//!   scan trick (exact for two classes / regression, standard heuristic for
+//!   multiclass), stored as a ≤64-bit level mask
+//! * a fit is computed for **every** node, not only leaves
+
+use super::tree::{Fit, Node, Split, SplitValue, Tree};
+use crate::data::{Column, Dataset, Target};
+use crate::util::Pcg64;
+
+/// Growth parameters for a single tree.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    /// Features tried per split; `None` ⇒ Matlab default (√d classification,
+    /// max(1, d/3) regression), resolved at train time.
+    pub mtry: Option<usize>,
+    /// Minimum observations per leaf (`treeBagger` default: 1 classification,
+    /// 5 regression).
+    pub min_leaf: usize,
+    /// Depth cap (u32::MAX = unpruned, the random-forest default).
+    pub max_depth: u32,
+}
+
+impl TreeParams {
+    pub fn default_classification() -> Self {
+        TreeParams { mtry: None, min_leaf: 1, max_depth: u32::MAX }
+    }
+
+    pub fn default_regression() -> Self {
+        TreeParams { mtry: None, min_leaf: 5, max_depth: u32::MAX }
+    }
+
+    /// Resolve `mtry` for a dataset with `d` features.
+    pub fn resolved_mtry(&self, d: usize, classification: bool) -> usize {
+        match self.mtry {
+            Some(m) => m.clamp(1, d),
+            None => {
+                if classification {
+                    ((d as f64).sqrt().ceil() as usize).clamp(1, d)
+                } else {
+                    (d / 3).max(1)
+                }
+            }
+        }
+    }
+}
+
+/// Build one CART tree over the given rows (typically a bootstrap sample).
+pub fn build_tree(ds: &Dataset, rows: &[usize], params: &TreeParams, rng: &mut Pcg64) -> Tree {
+    let classification = ds.target.is_classification();
+    let mtry = params.resolved_mtry(ds.num_features(), classification);
+    let mut ctx = BuildCtx {
+        ds,
+        params,
+        mtry,
+        rng,
+        nodes: Vec::new(),
+        classes: ds.target.num_classes() as usize,
+    };
+    let mut rows = rows.to_vec();
+    ctx.grow(&mut rows, 0);
+    Tree { nodes: ctx.nodes }
+}
+
+struct BuildCtx<'a> {
+    ds: &'a Dataset,
+    params: &'a TreeParams,
+    mtry: usize,
+    rng: &'a mut Pcg64,
+    nodes: Vec<Node>,
+    classes: usize,
+}
+
+impl<'a> BuildCtx<'a> {
+    /// Grow the subtree over `rows`; returns its root's node index.
+    /// Pushes the node *before* recursing ⇒ preorder storage.
+    fn grow(&mut self, rows: &mut [usize], depth: u32) -> u32 {
+        let idx = self.nodes.len() as u32;
+        let fit = self.node_fit(rows);
+        self.nodes.push(Node { split: None, fit });
+
+        if rows.len() < 2 * self.params.min_leaf.max(1)
+            || depth >= self.params.max_depth
+            || self.is_pure(rows)
+        {
+            return idx;
+        }
+        let Some((split, gain)) = self.best_split(rows) else {
+            return idx;
+        };
+        if gain <= 0.0 {
+            return idx;
+        }
+        let mid = partition_rows(self.ds, rows, &split);
+        // A degenerate partition can occur on constant features; guard.
+        if mid == 0 || mid == rows.len() {
+            return idx;
+        }
+        let (left_rows, right_rows) = rows.split_at_mut(mid);
+        let l = self.grow(left_rows, depth + 1);
+        let r = self.grow(right_rows, depth + 1);
+        self.nodes[idx as usize].split = Some((split, l, r));
+        idx
+    }
+
+    fn node_fit(&self, rows: &[usize]) -> Fit {
+        match &self.ds.target {
+            Target::Regression(y) => {
+                let mean = rows.iter().map(|&r| y[r]).sum::<f64>() / rows.len() as f64;
+                Fit::Regression(mean)
+            }
+            Target::Classification { labels, .. } => {
+                let mut counts = vec![0u32; self.classes];
+                for &r in rows {
+                    counts[labels[r] as usize] += 1;
+                }
+                // majority; ties → smallest class index (determinism)
+                let best = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
+                    .map(|(i, _)| i as u32)
+                    .unwrap_or(0);
+                Fit::Class(best)
+            }
+        }
+    }
+
+    fn is_pure(&self, rows: &[usize]) -> bool {
+        match &self.ds.target {
+            Target::Regression(y) => {
+                let first = y[rows[0]];
+                rows.iter().all(|&r| y[r] == first)
+            }
+            Target::Classification { labels, .. } => {
+                let first = labels[rows[0]];
+                rows.iter().all(|&r| labels[r] == first)
+            }
+        }
+    }
+
+    /// Best split over an `mtry`-sized random feature subset.
+    fn best_split(&mut self, rows: &[usize]) -> Option<(Split, f64)> {
+        let d = self.ds.num_features();
+        let tried = self.rng.sample_indices(d, self.mtry.min(d));
+        let mut best: Option<(Split, f64)> = None;
+        for f in tried {
+            let cand = match &self.ds.features[f].column {
+                Column::Numeric(_) => self.best_numeric_split(rows, f),
+                Column::Categorical { .. } => self.best_categorical_split(rows, f),
+            };
+            if let Some((split, gain)) = cand {
+                if best.as_ref().map_or(true, |(_, g)| gain > *g) {
+                    best = Some((split, gain));
+                }
+            }
+        }
+        best
+    }
+
+    fn best_numeric_split(&self, rows: &[usize], f: usize) -> Option<(Split, f64)> {
+        let Column::Numeric(v) = &self.ds.features[f].column else { unreachable!() };
+        let n = rows.len();
+        let min_leaf = self.params.min_leaf.max(1);
+
+        match &self.ds.target {
+            Target::Regression(y) => {
+                // §Perf: sort (value, target) pairs with cached keys — the
+                // indirect sort_by(v[a] cmp v[b]) was the training profile's
+                // top entry (random access per comparison)
+                let mut pairs: Vec<(f64, f64)> =
+                    rows.iter().map(|&r| (v[r], y[r])).collect();
+                pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                let total_sum: f64 = pairs.iter().map(|p| p.1).sum();
+                let mut left_sum = 0.0;
+                let mut best_gain = 0.0;
+                let mut best_value = None;
+                // parent SSE-proxy: we maximize between-group sum of squares
+                let parent = total_sum * total_sum / n as f64;
+                for i in 0..n - 1 {
+                    left_sum += pairs[i].1;
+                    if pairs[i].0 == pairs[i + 1].0 {
+                        continue; // not a valid cut between equal values
+                    }
+                    let nl = i + 1;
+                    let nr = n - nl;
+                    if nl < min_leaf || nr < min_leaf {
+                        continue;
+                    }
+                    let right_sum = total_sum - left_sum;
+                    // gain = reduction in SSE = BGSS (between-groups)
+                    let gain =
+                        left_sum * left_sum / nl as f64 + right_sum * right_sum / nr as f64 - parent;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best_value = Some(pairs[i].0);
+                    }
+                }
+                best_value.map(|t| {
+                    (
+                        Split { feature: f as u32, value: SplitValue::Numeric(t) },
+                        best_gain,
+                    )
+                })
+            }
+            Target::Classification { labels, .. } => {
+                let k = self.classes;
+                let mut pairs: Vec<(f64, u32)> =
+                    rows.iter().map(|&r| (v[r], labels[r])).collect();
+                pairs.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                let mut total = vec![0f64; k];
+                for p in &pairs {
+                    total[p.1 as usize] += 1.0;
+                }
+                let mut left = vec![0f64; k];
+                let sum_sq = |c: &[f64], n: f64| -> f64 {
+                    if n == 0.0 {
+                        0.0
+                    } else {
+                        c.iter().map(|&x| x * x).sum::<f64>() / n
+                    }
+                };
+                let parent_score = sum_sq(&total, n as f64);
+                let mut best_gain = 0.0;
+                let mut best_value = None;
+                for i in 0..n - 1 {
+                    left[pairs[i].1 as usize] += 1.0;
+                    if pairs[i].0 == pairs[i + 1].0 {
+                        continue;
+                    }
+                    let nl = (i + 1) as f64;
+                    let nr = (n - i - 1) as f64;
+                    if (nl as usize) < min_leaf || (nr as usize) < min_leaf {
+                        continue;
+                    }
+                    // Gini gain ∝ Σc²/n (left) + Σc²/n (right) − Σc²/n (parent)
+                    let mut lr = 0.0;
+                    let mut rr = 0.0;
+                    for c in 0..k {
+                        lr += left[c] * left[c];
+                        let r = total[c] - left[c];
+                        rr += r * r;
+                    }
+                    let gain = lr / nl + rr / nr - parent_score;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best_value = Some(pairs[i].0);
+                    }
+                }
+                best_value.map(|t| {
+                    (
+                        Split { feature: f as u32, value: SplitValue::Numeric(t) },
+                        best_gain,
+                    )
+                })
+            }
+        }
+    }
+
+    fn best_categorical_split(&self, rows: &[usize], f: usize) -> Option<(Split, f64)> {
+        let Column::Categorical { values, levels } = &self.ds.features[f].column else {
+            unreachable!()
+        };
+        let levels = *levels as usize;
+        assert!(levels <= 64, "categorical features are limited to 64 levels");
+        let min_leaf = self.params.min_leaf.max(1);
+        let n = rows.len();
+
+        // per-level stats
+        let mut count = vec![0f64; levels];
+        match &self.ds.target {
+            Target::Regression(y) => {
+                let mut sum = vec![0f64; levels];
+                for &r in rows {
+                    let l = values[r] as usize;
+                    count[l] += 1.0;
+                    sum[l] += y[r];
+                }
+                // order levels by mean target (exact scan for regression)
+                let mut order: Vec<usize> = (0..levels).filter(|&l| count[l] > 0.0).collect();
+                if order.len() < 2 {
+                    return None;
+                }
+                order.sort_by(|&a, &b| {
+                    (sum[a] / count[a]).partial_cmp(&(sum[b] / count[b])).unwrap()
+                });
+                let total_sum: f64 = sum.iter().sum();
+                let mut ls = 0.0;
+                let mut ln = 0.0;
+                let mut best_gain = 0.0;
+                let mut best_mask = None;
+                let mut mask = 0u64;
+                for w in 0..order.len() - 1 {
+                    let l = order[w];
+                    ls += sum[l];
+                    ln += count[l];
+                    mask |= 1 << l;
+                    let rn = n as f64 - ln;
+                    if (ln as usize) < min_leaf || (rn as usize) < min_leaf {
+                        continue;
+                    }
+                    let rs = total_sum - ls;
+                    let gain =
+                        ls * ls / ln + rs * rs / rn - total_sum * total_sum / n as f64;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best_mask = Some(mask);
+                    }
+                }
+                best_mask.map(|m| {
+                    (
+                        Split { feature: f as u32, value: SplitValue::Categorical(m) },
+                        best_gain,
+                    )
+                })
+            }
+            Target::Classification { labels, .. } => {
+                let k = self.classes;
+                let mut per_level = vec![vec![0f64; k]; levels];
+                for &r in rows {
+                    let l = values[r] as usize;
+                    count[l] += 1.0;
+                    per_level[l][labels[r] as usize] += 1.0;
+                }
+                let mut order: Vec<usize> = (0..levels).filter(|&l| count[l] > 0.0).collect();
+                if order.len() < 2 {
+                    return None;
+                }
+                // order by P(majority class | level): exact for 2 classes,
+                // standard heuristic beyond
+                let mut total = vec![0f64; k];
+                for &r in rows {
+                    total[labels[r] as usize] += 1.0;
+                }
+                let maj = total
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                order.sort_by(|&a, &b| {
+                    (per_level[a][maj] / count[a])
+                        .partial_cmp(&(per_level[b][maj] / count[b]))
+                        .unwrap()
+                });
+                let sum_sq = |c: &[f64], nn: f64| -> f64 {
+                    if nn == 0.0 {
+                        0.0
+                    } else {
+                        c.iter().map(|&x| x * x).sum::<f64>() / nn
+                    }
+                };
+                let parent_score = sum_sq(&total, n as f64);
+                let mut left = vec![0f64; k];
+                let mut ln = 0.0;
+                let mut best_gain = 0.0;
+                let mut best_mask = None;
+                let mut mask = 0u64;
+                for w in 0..order.len() - 1 {
+                    let l = order[w];
+                    for c in 0..k {
+                        left[c] += per_level[l][c];
+                    }
+                    ln += count[l];
+                    mask |= 1 << l;
+                    let rn = n as f64 - ln;
+                    if (ln as usize) < min_leaf || (rn as usize) < min_leaf {
+                        continue;
+                    }
+                    let right: Vec<f64> = total.iter().zip(&left).map(|(t, l)| t - l).collect();
+                    let gain = sum_sq(&left, ln) + sum_sq(&right, rn) - parent_score;
+                    if gain > best_gain {
+                        best_gain = gain;
+                        best_mask = Some(mask);
+                    }
+                }
+                best_mask.map(|m| {
+                    (
+                        Split { feature: f as u32, value: SplitValue::Categorical(m) },
+                        best_gain,
+                    )
+                })
+            }
+        }
+    }
+}
+
+/// Partition `rows` in place so rows routed left come first; returns the
+/// boundary index.
+fn partition_rows(ds: &Dataset, rows: &mut [usize], split: &Split) -> usize {
+    let mut i = 0usize;
+    let mut j = rows.len();
+    while i < j {
+        if super::tree::go_left(ds, rows[i], split) {
+            i += 1;
+        } else {
+            j -= 1;
+            rows.swap(i, j);
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Column, Feature};
+
+    fn step_ds() -> Dataset {
+        // y = 1 when x > 5, else 0 — a single clean split
+        let x: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        let labels: Vec<u32> = x.iter().map(|&v| (v > 5.0) as u32).collect();
+        Dataset {
+            name: "step".into(),
+            features: vec![Feature { name: "x".into(), column: Column::Numeric(x) }],
+            target: Target::Classification { labels, classes: 2 },
+        }
+    }
+
+    #[test]
+    fn learns_single_clean_split() {
+        let ds = step_ds();
+        let rows: Vec<usize> = (0..ds.num_rows()).collect();
+        let mut rng = Pcg64::new(1);
+        let t = build_tree(&ds, &rows, &TreeParams::default_classification(), &mut rng);
+        // perfect split of a step function: one internal node
+        assert_eq!(t.internal_count(), 1);
+        match &t.nodes[0].split {
+            Some((Split { feature: 0, value: SplitValue::Numeric(v) }, _, _)) => {
+                assert!((*v - 5.0).abs() < 1e-9, "split at observed value 5.0, got {v}");
+            }
+            other => panic!("unexpected split {other:?}"),
+        }
+        for r in 0..ds.num_rows() {
+            let Fit::Class(c) = t.predict_row(&ds, r) else { panic!() };
+            let Target::Classification { labels, .. } = &ds.target else { panic!() };
+            assert_eq!(c, labels[r]);
+        }
+    }
+
+    #[test]
+    fn split_value_is_observed_value() {
+        // paper §3.2.2: numerical split specified by a single observation's value
+        let ds = Dataset {
+            name: "v".into(),
+            features: vec![Feature {
+                name: "x".into(),
+                column: Column::Numeric(vec![1.0, 2.0, 7.0, 9.0]),
+            }],
+            target: Target::Regression(vec![0.0, 0.0, 10.0, 10.0]),
+        };
+        let rows: Vec<usize> = (0..4).collect();
+        let mut rng = Pcg64::new(2);
+        let params = TreeParams { mtry: Some(1), min_leaf: 1, max_depth: 1 };
+        let t = build_tree(&ds, &rows, &params, &mut rng);
+        if let Some((Split { value: SplitValue::Numeric(v), .. }, _, _)) = &t.nodes[0].split {
+            assert!([1.0, 2.0, 7.0].contains(v), "split {v} must be an observed value");
+        } else {
+            panic!("expected a numeric split");
+        }
+    }
+
+    #[test]
+    fn regression_tree_reduces_mse() {
+        let x: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| if v < 100.0 { 1.0 } else { 5.0 }).collect();
+        let ds = Dataset {
+            name: "r".into(),
+            features: vec![Feature { name: "x".into(), column: Column::Numeric(x) }],
+            target: Target::Regression(y.clone()),
+        };
+        let rows: Vec<usize> = (0..200).collect();
+        let mut rng = Pcg64::new(3);
+        let t = build_tree(&ds, &rows, &TreeParams::default_regression(), &mut rng);
+        let preds: Vec<f64> = (0..200)
+            .map(|r| match t.predict_row(&ds, r) {
+                Fit::Regression(p) => p,
+                _ => panic!(),
+            })
+            .collect();
+        let err = crate::util::stats::mse(&preds, &y);
+        assert!(err < 0.01, "mse={err}");
+    }
+
+    #[test]
+    fn categorical_split_partitions_levels() {
+        // level ∈ {0,2} → y=1, else y=0
+        let values: Vec<u32> = (0..120).map(|i| (i % 4) as u32).collect();
+        let labels: Vec<u32> = values.iter().map(|&v| (v == 0 || v == 2) as u32).collect();
+        let ds = Dataset {
+            name: "cat".into(),
+            features: vec![Feature {
+                name: "c".into(),
+                column: Column::Categorical { values, levels: 4 },
+            }],
+            target: Target::Classification { labels: labels.clone(), classes: 2 },
+        };
+        let rows: Vec<usize> = (0..120).collect();
+        let mut rng = Pcg64::new(4);
+        let t = build_tree(&ds, &rows, &TreeParams::default_classification(), &mut rng);
+        for r in 0..120 {
+            let Fit::Class(c) = t.predict_row(&ds, r) else { panic!() };
+            assert_eq!(c, labels[r]);
+        }
+        // the clean concept needs exactly one categorical split
+        assert_eq!(t.internal_count(), 1);
+        match &t.nodes[0].split {
+            Some((Split { value: SplitValue::Categorical(m), .. }, _, _)) => {
+                // mask must separate {0,2} from {1,3}
+                let side0 = (m >> 0 & 1, m >> 2 & 1);
+                let side1 = (m >> 1 & 1, m >> 3 & 1);
+                assert_eq!(side0.0, side0.1);
+                assert_eq!(side1.0, side1.1);
+                assert_ne!(side0.0, side1.0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let ds = step_ds();
+        let rows: Vec<usize> = (0..ds.num_rows()).collect();
+        let mut rng = Pcg64::new(5);
+        let params = TreeParams { mtry: Some(1), min_leaf: 20, max_depth: u32::MAX };
+        let t = build_tree(&ds, &rows, &params, &mut rng);
+        // check every leaf got >= 20 training rows by re-routing the rows
+        let mut leaf_counts = vec![0usize; t.nodes.len()];
+        for r in 0..ds.num_rows() {
+            let mut idx = 0usize;
+            loop {
+                match &t.nodes[idx].split {
+                    None => {
+                        leaf_counts[idx] += 1;
+                        break;
+                    }
+                    Some((s, l, rr)) => {
+                        idx = if super::super::tree::go_left(&ds, r, s) {
+                            *l as usize
+                        } else {
+                            *rr as usize
+                        };
+                    }
+                }
+            }
+        }
+        for (i, n) in t.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                assert!(leaf_counts[i] >= 20, "leaf {i} has {} rows", leaf_counts[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let ds = step_ds();
+        let rows: Vec<usize> = (0..ds.num_rows()).collect();
+        let mut rng = Pcg64::new(6);
+        let params = TreeParams { mtry: Some(1), min_leaf: 1, max_depth: 3 };
+        let t = build_tree(&ds, &rows, &params, &mut rng);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn constant_target_yields_single_leaf() {
+        let ds = Dataset {
+            name: "const".into(),
+            features: vec![Feature {
+                name: "x".into(),
+                column: Column::Numeric(vec![1.0, 2.0, 3.0, 4.0]),
+            }],
+            target: Target::Regression(vec![7.0; 4]),
+        };
+        let rows: Vec<usize> = (0..4).collect();
+        let mut rng = Pcg64::new(7);
+        let t = build_tree(&ds, &rows, &TreeParams::default_regression(), &mut rng);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.nodes[0].fit, Fit::Regression(7.0));
+    }
+
+    #[test]
+    fn constant_features_yield_single_leaf() {
+        let ds = Dataset {
+            name: "cf".into(),
+            features: vec![Feature {
+                name: "x".into(),
+                column: Column::Numeric(vec![5.0; 10]),
+            }],
+            target: Target::Regression((0..10).map(|i| i as f64).collect()),
+        };
+        let rows: Vec<usize> = (0..10).collect();
+        let mut rng = Pcg64::new(8);
+        let t = build_tree(&ds, &rows, &TreeParams::default_regression(), &mut rng);
+        assert_eq!(t.nodes.len(), 1);
+    }
+
+    #[test]
+    fn trees_are_preorder() {
+        let ds = step_ds();
+        let rows: Vec<usize> = (0..ds.num_rows()).collect();
+        let mut rng = Pcg64::new(9);
+        let params = TreeParams { mtry: Some(1), min_leaf: 2, max_depth: u32::MAX };
+        let t = build_tree(&ds, &rows, &params, &mut rng);
+        assert!(t.is_preorder());
+    }
+
+    #[test]
+    fn fits_present_at_internal_nodes() {
+        let ds = step_ds();
+        let rows: Vec<usize> = (0..ds.num_rows()).collect();
+        let mut rng = Pcg64::new(10);
+        let t = build_tree(&ds, &rows, &TreeParams::default_classification(), &mut rng);
+        // every node, leaf or not, carries a usable fit
+        for n in &t.nodes {
+            match n.fit {
+                Fit::Class(c) => assert!(c < 2),
+                _ => panic!("classification tree must hold class fits"),
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Completely-Randomized Trees (CRT / extremely-randomized trees,
+//! Geurts et al. 2006) — the variant the paper's discussion (§8) predicts
+//! should compress *worse*: splits are chosen at random rather than
+//! optimized, so the per-depth split distributions are closer to uniform and
+//! entropy coding gains shrink. The `ablations` bench measures exactly that.
+
+use super::builder::TreeParams;
+use super::forest::{Forest, ForestParams};
+use super::tree::{Fit, Node, Split, SplitValue, Tree};
+use crate::data::{Column, Dataset, Target};
+use crate::util::threads::parallel_map;
+use crate::util::Pcg64;
+
+/// Train a completely-randomized forest: each split picks a random feature
+/// and a random split value (a uniformly drawn observation value for numeric
+/// features, a random level subset for categorical ones).
+pub fn train_crt(ds: &Dataset, params: &ForestParams, seed: u64) -> Forest {
+    assert!(params.n_trees > 0);
+    ds.validate().expect("invalid dataset");
+    let mut root_rng = Pcg64::with_stream(seed, 0xc47);
+    let tree_rngs: Vec<Pcg64> = (0..params.n_trees).map(|t| root_rng.split(t as u64)).collect();
+    let n = ds.num_rows();
+    let trees = parallel_map(&tree_rngs, params.workers, |_, rng| {
+        let mut rng = rng.clone();
+        let rows: Vec<usize> = if params.bootstrap {
+            rng.bootstrap(n)
+        } else {
+            (0..n).collect()
+        };
+        let mut ctx = CrtCtx { ds, params: &params.tree, rng, nodes: Vec::new() };
+        let mut rows = rows;
+        ctx.grow(&mut rows, 0);
+        Tree { nodes: ctx.nodes }
+    });
+    Forest {
+        trees,
+        classification: ds.target.is_classification(),
+        classes: ds.target.num_classes(),
+    }
+}
+
+struct CrtCtx<'a> {
+    ds: &'a Dataset,
+    params: &'a TreeParams,
+    rng: Pcg64,
+    nodes: Vec<Node>,
+}
+
+impl<'a> CrtCtx<'a> {
+    fn grow(&mut self, rows: &mut [usize], depth: u32) -> u32 {
+        let idx = self.nodes.len() as u32;
+        let fit = self.fit(rows);
+        self.nodes.push(Node { split: None, fit });
+        if rows.len() < 2 * self.params.min_leaf.max(1)
+            || depth >= self.params.max_depth
+            || self.pure(rows)
+        {
+            return idx;
+        }
+        // try a handful of random splits until one produces two non-empty sides
+        for _ in 0..8 {
+            let Some(split) = self.random_split(rows) else { continue };
+            let mid = {
+                // partition in place
+                let mut i = 0usize;
+                let mut j = rows.len();
+                while i < j {
+                    if super::tree::go_left(self.ds, rows[i], &split) {
+                        i += 1;
+                    } else {
+                        j -= 1;
+                        rows.swap(i, j);
+                    }
+                }
+                i
+            };
+            let min_leaf = self.params.min_leaf.max(1);
+            if mid < min_leaf || rows.len() - mid < min_leaf {
+                continue;
+            }
+            let (lrows, rrows) = rows.split_at_mut(mid);
+            let l = self.grow(lrows, depth + 1);
+            let r = self.grow(rrows, depth + 1);
+            self.nodes[idx as usize].split = Some((split, l, r));
+            return idx;
+        }
+        idx
+    }
+
+    fn random_split(&mut self, rows: &[usize]) -> Option<Split> {
+        let f = self.rng.gen_index(self.ds.num_features());
+        match &self.ds.features[f].column {
+            Column::Numeric(v) => {
+                let pick = v[rows[self.rng.gen_index(rows.len())]];
+                // ensure both sides can be non-empty
+                if rows.iter().all(|&r| v[r] <= pick) {
+                    return None;
+                }
+                Some(Split { feature: f as u32, value: SplitValue::Numeric(pick) })
+            }
+            Column::Categorical { levels, .. } => {
+                let mut mask = 0u64;
+                for l in 0..*levels {
+                    if self.rng.gen_bool(0.5) {
+                        mask |= 1 << l;
+                    }
+                }
+                if mask == 0 || mask == (1u64 << levels) - 1 {
+                    mask = 1;
+                }
+                Some(Split { feature: f as u32, value: SplitValue::Categorical(mask) })
+            }
+        }
+    }
+
+    fn fit(&self, rows: &[usize]) -> Fit {
+        match &self.ds.target {
+            Target::Regression(y) => {
+                Fit::Regression(rows.iter().map(|&r| y[r]).sum::<f64>() / rows.len() as f64)
+            }
+            Target::Classification { labels, classes } => {
+                let mut counts = vec![0u32; *classes as usize];
+                for &r in rows {
+                    counts[labels[r] as usize] += 1;
+                }
+                Fit::Class(
+                    counts
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|&(i, &c)| (c, std::cmp::Reverse(i)))
+                        .map(|(i, _)| i as u32)
+                        .unwrap_or(0),
+                )
+            }
+        }
+    }
+
+    fn pure(&self, rows: &[usize]) -> bool {
+        match &self.ds.target {
+            Target::Regression(y) => rows.iter().all(|&r| y[r] == y[rows[0]]),
+            Target::Classification { labels, .. } => {
+                rows.iter().all(|&r| labels[r] == labels[rows[0]])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn crt_trains_and_predicts() {
+        let ds = synthetic::iris(11);
+        let f = train_crt(&ds, &ForestParams::classification(10), 3);
+        assert_eq!(f.num_trees(), 10);
+        let err = f.test_error(&ds);
+        assert!(err < 0.5, "CRT should still beat random guessing, err={err}");
+        for t in &f.trees {
+            assert!(t.is_preorder());
+        }
+    }
+
+    #[test]
+    fn crt_split_features_more_uniform_than_cart() {
+        // §8: CRT splits are random ⇒ the root-feature distribution should be
+        // closer to uniform than CART's (which concentrates on informative
+        // features). Compare entropies of root split features.
+        let ds = synthetic::wages(13);
+        let cart = Forest::train(&ds, &ForestParams::classification(30), 5);
+        let crt = train_crt(&ds, &ForestParams::classification(30), 5);
+        let root_feature_entropy = |f: &Forest| {
+            let d = ds.num_features();
+            let mut counts = vec![0u64; d];
+            for t in &f.trees {
+                if let Some((s, _, _)) = &t.nodes[0].split {
+                    counts[s.feature as usize] += 1;
+                }
+            }
+            crate::coding::entropy::entropy_counts(&counts)
+        };
+        let h_cart = root_feature_entropy(&cart);
+        let h_crt = root_feature_entropy(&crt);
+        assert!(
+            h_crt > h_cart,
+            "CRT root features should be higher-entropy (crt={h_crt:.2} cart={h_cart:.2})"
+        );
+    }
+
+    #[test]
+    fn crt_deterministic() {
+        let ds = synthetic::iris(21);
+        let a = train_crt(&ds, &ForestParams::classification(4), 9);
+        let b = train_crt(&ds, &ForestParams::classification(4), 9);
+        assert!(a.identical(&b));
+    }
+}

@@ -1,0 +1,312 @@
+//! The random-forest ensemble: training (bootstrap + random feature
+//! subsets), aggregation (majority vote / averaging), and the statistics the
+//! compressor and benches need.
+
+use super::builder::{build_tree, TreeParams};
+use super::tree::{Fit, Tree};
+use crate::data::{Dataset, Target};
+use crate::util::threads::parallel_map;
+use crate::util::Pcg64;
+
+/// Ensemble training parameters.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    /// Number of trees (the paper uses 1000).
+    pub n_trees: usize,
+    /// Per-tree growth parameters.
+    pub tree: TreeParams,
+    /// Bootstrap-resample observations per tree (random-forest default).
+    pub bootstrap: bool,
+    /// Worker threads for training (1 = sequential).
+    pub workers: usize,
+}
+
+impl ForestParams {
+    /// `treeBagger`-default classification forest.
+    pub fn classification(n_trees: usize) -> Self {
+        ForestParams {
+            n_trees,
+            tree: TreeParams::default_classification(),
+            bootstrap: true,
+            workers: 1,
+        }
+    }
+
+    /// `treeBagger`-default regression forest.
+    pub fn regression(n_trees: usize) -> Self {
+        ForestParams {
+            n_trees,
+            tree: TreeParams::default_regression(),
+            bootstrap: true,
+            workers: 1,
+        }
+    }
+}
+
+/// A trained random forest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    /// True when the target was classification (drives aggregation).
+    pub classification: bool,
+    /// Number of classes (0 for regression).
+    pub classes: u32,
+}
+
+impl Forest {
+    /// Train on a dataset. Each tree gets an independent RNG stream split
+    /// from `seed`, so results are identical regardless of worker count.
+    pub fn train(ds: &Dataset, params: &ForestParams, seed: u64) -> Forest {
+        assert!(params.n_trees > 0, "need at least one tree");
+        ds.validate().expect("invalid dataset");
+        let mut root_rng = Pcg64::new(seed);
+        let tree_rngs: Vec<Pcg64> = (0..params.n_trees)
+            .map(|t| root_rng.split(t as u64))
+            .collect();
+        let n = ds.num_rows();
+        let trees = parallel_map(&tree_rngs, params.workers, |_, rng| {
+            let mut rng = rng.clone();
+            let rows: Vec<usize> = if params.bootstrap {
+                rng.bootstrap(n)
+            } else {
+                (0..n).collect()
+            };
+            build_tree(ds, &rows, &params.tree, &mut rng)
+        });
+        Forest {
+            trees,
+            classification: ds.target.is_classification(),
+            classes: ds.target.num_classes(),
+        }
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Total node count across trees.
+    pub fn total_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).sum()
+    }
+
+    /// Mean tree depth (the paper quotes ~40 levels for Liberty).
+    pub fn mean_depth(&self) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.depth() as f64).sum::<f64>() / self.trees.len() as f64
+    }
+
+    /// Maximal depth over all trees (the `T` of Algorithm 1).
+    pub fn max_depth(&self) -> u32 {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    /// Regression prediction: mean of tree predictions.
+    pub fn predict_regression(&self, ds: &Dataset, row: usize) -> f64 {
+        let mut sum = 0.0;
+        for t in &self.trees {
+            match t.predict_row(ds, row) {
+                Fit::Regression(v) => sum += v,
+                Fit::Class(_) => panic!("classification tree in regression forest"),
+            }
+        }
+        sum / self.trees.len() as f64
+    }
+
+    /// Classification prediction: majority vote (ties → smaller class).
+    pub fn predict_class(&self, ds: &Dataset, row: usize) -> u32 {
+        let mut votes = vec![0u32; self.classes.max(1) as usize];
+        for t in &self.trees {
+            match t.predict_row(ds, row) {
+                Fit::Class(c) => votes[c as usize] += 1,
+                Fit::Regression(_) => panic!("regression tree in classification forest"),
+            }
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0)
+    }
+
+    /// Predict for all rows of a dataset.
+    pub fn predict_all(&self, ds: &Dataset) -> Predictions {
+        if self.classification {
+            Predictions::Classes((0..ds.num_rows()).map(|r| self.predict_class(ds, r)).collect())
+        } else {
+            Predictions::Values(
+                (0..ds.num_rows()).map(|r| self.predict_regression(ds, r)).collect(),
+            )
+        }
+    }
+
+    /// Test-set error: MSE for regression, misclassification rate otherwise.
+    pub fn test_error(&self, ds: &Dataset) -> f64 {
+        match (self.predict_all(ds), &ds.target) {
+            (Predictions::Values(p), Target::Regression(y)) => crate::util::stats::mse(&p, y),
+            (Predictions::Classes(p), Target::Classification { labels, .. }) => {
+                crate::util::stats::misclassification(&p, labels)
+            }
+            _ => panic!("prediction/target kind mismatch"),
+        }
+    }
+
+    /// Structural + fit equality (the losslessness check). `PartialEq` on
+    /// `Forest` already does this; the method exists for call-site clarity.
+    pub fn identical(&self, other: &Forest) -> bool {
+        self == other
+    }
+
+    /// Append another forest's trees (paper §8: because the codec is
+    /// lossless, an ensemble can be decompressed, *extended* with more
+    /// trees, and recompressed — unlike the mimicking/pruning schemes).
+    /// The target kinds must match.
+    pub fn extend(&mut self, more: Forest) {
+        assert_eq!(self.classification, more.classification, "target kind mismatch");
+        assert_eq!(self.classes, more.classes, "class count mismatch");
+        self.trees.extend(more.trees);
+    }
+
+    /// Train `extra` additional trees (with fresh RNG streams disjoint from
+    /// the first `self.trees.len()` ones for the same `seed`) and append.
+    pub fn grow_more(&mut self, ds: &Dataset, extra: usize, params: &ForestParams, seed: u64) {
+        let offset = self.trees.len();
+        let mut root_rng = Pcg64::new(seed);
+        // burn the streams already used
+        for t in 0..offset {
+            let _ = root_rng.split(t as u64);
+        }
+        let tree_rngs: Vec<Pcg64> =
+            (0..extra).map(|t| root_rng.split((offset + t) as u64)).collect();
+        let n = ds.num_rows();
+        let new_trees = parallel_map(&tree_rngs, params.workers, |_, rng| {
+            let mut rng = rng.clone();
+            let rows: Vec<usize> = if params.bootstrap {
+                rng.bootstrap(n)
+            } else {
+                (0..n).collect()
+            };
+            super::builder::build_tree(ds, &rows, &params.tree, &mut rng)
+        });
+        self.trees.extend(new_trees);
+    }
+}
+
+/// Forest predictions for a whole dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Predictions {
+    Values(Vec<f64>),
+    Classes(Vec<u32>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn train_and_predict_classification() {
+        let ds = synthetic::iris(42);
+        let f = Forest::train(&ds, &ForestParams::classification(15), 7);
+        assert_eq!(f.num_trees(), 15);
+        assert!(f.classification);
+        // in-sample error of an unpruned forest should be very low
+        let err = f.test_error(&ds);
+        assert!(err < 0.15, "in-sample error {err}");
+    }
+
+    #[test]
+    fn train_and_predict_regression() {
+        let ds = synthetic::airfoil_regression(42);
+        let f = Forest::train(&ds, &ForestParams::regression(10), 7);
+        assert!(!f.classification);
+        let err = f.test_error(&ds);
+        // compare against predicting the mean (variance of y)
+        let y = match &ds.target {
+            crate::data::Target::Regression(y) => y,
+            _ => unreachable!(),
+        };
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / y.len() as f64;
+        assert!(err < var * 0.5, "err {err} should beat mean-predictor var {var}");
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_worker_count() {
+        let ds = synthetic::iris(1);
+        let mut p = ForestParams::classification(6);
+        let a = Forest::train(&ds, &p, 99);
+        p.workers = 4;
+        let b = Forest::train(&ds, &p, 99);
+        assert!(a.identical(&b), "training must not depend on worker count");
+        let c = Forest::train(&ds, &p, 100);
+        assert!(!a.identical(&c));
+    }
+
+    #[test]
+    fn trees_differ_across_ensemble() {
+        let ds = synthetic::iris(2);
+        let f = Forest::train(&ds, &ForestParams::classification(8), 3);
+        // bootstrap + feature sampling ⇒ trees should not all be equal
+        let all_same = f.trees.windows(2).all(|w| w[0] == w[1]);
+        assert!(!all_same);
+    }
+
+    #[test]
+    fn unpruned_depth_grows_with_data() {
+        let small = synthetic::iris(3);
+        let big = synthetic::airfoil_regression(3);
+        let fs = Forest::train(&small, &ForestParams::classification(3), 1);
+        let fb = Forest::train(&big, &ForestParams::regression(3), 1);
+        assert!(
+            fb.mean_depth() > fs.mean_depth(),
+            "bigger dataset ⇒ deeper unpruned trees ({} vs {})",
+            fb.mean_depth(),
+            fs.mean_depth()
+        );
+    }
+
+    #[test]
+    fn grow_more_matches_larger_forest() {
+        // §8 extension property: train 4 then grow 4 more == train 8 at once
+        let ds = synthetic::iris(6);
+        let params = ForestParams::classification(4);
+        let mut grown = Forest::train(&ds, &params, 77);
+        grown.grow_more(&ds, 4, &params, 77);
+        let full = Forest::train(&ds, &ForestParams::classification(8), 77);
+        assert!(grown.identical(&full), "incremental growth must match one-shot training");
+    }
+
+    #[test]
+    fn extend_and_recompress_roundtrip() {
+        // decompress → extend → recompress stays lossless (the paper's
+        // "future modification" claim, §8)
+        use crate::compress::{CompressOptions, CompressedForest};
+        let ds = synthetic::iris(7);
+        let f1 = Forest::train(&ds, &ForestParams::classification(3), 1);
+        let cf = CompressedForest::compress(&f1, &ds, &CompressOptions::default()).unwrap();
+        let mut restored = cf.decompress().unwrap();
+        let f2 = Forest::train(&ds, &ForestParams::classification(2), 2);
+        restored.extend(f2);
+        assert_eq!(restored.num_trees(), 5);
+        let cf2 = CompressedForest::compress(&restored, &ds, &CompressOptions::default()).unwrap();
+        assert!(cf2.decompress().unwrap().identical(&restored));
+    }
+
+    #[test]
+    fn ensemble_beats_single_tree_out_of_sample() {
+        let ds = synthetic::wages(5);
+        let mut rng = Pcg64::new(8);
+        let tt = ds.train_test_split(0.8, &mut rng);
+        let single = Forest::train(&tt.train, &ForestParams::classification(1), 4);
+        let many = Forest::train(&tt.train, &ForestParams::classification(25), 4);
+        let e1 = single.test_error(&tt.test);
+        let e25 = many.test_error(&tt.test);
+        assert!(
+            e25 <= e1 + 0.02,
+            "forest ({e25}) should not be much worse than single tree ({e1})"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Random-forest substrate: CART trees grown with Matlab `treeBagger`
+//! semantics (the paper's §6 setup) — unpruned, bootstrap-resampled, random
+//! feature subsets per split, and a fit stored at **every** node ("in many
+//! popular decision tree implementations … each node of the tree holds a
+//! fit, in case of missing values during prediction", §3.3).
+//!
+//! * [`tree`]    — node/tree data structures, prediction, traversals
+//! * [`builder`] — the CART growing algorithm (gini / variance reduction)
+//! * [`forest`]  — the ensemble: training, aggregation, equality
+//! * [`crt`]     — Completely-Randomized Trees (paper §8 discussion variant)
+
+pub mod builder;
+pub mod crt;
+pub mod forest;
+pub mod tree;
+
+pub use builder::TreeParams;
+pub use forest::{Forest, ForestParams};
+pub use tree::{Fit, Node, Split, SplitValue, Tree};

@@ -1,0 +1,280 @@
+//! Decision-tree data structures.
+//!
+//! Nodes are stored **in preorder** (root first, then the whole left subtree,
+//! then the right subtree). This is exactly the traversal order of the Zaks
+//! sequence (§3.1), so the `i`-th `1` in a tree's Zaks string corresponds to
+//! `nodes[i']` where `i'` counts internal nodes in storage order, which makes
+//! the compressed representation and the in-memory one line up without any
+//! index translation tables.
+
+use crate::data::{Column, Dataset};
+
+/// A split decision at an internal node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SplitValue {
+    /// Numeric: rows with `x <= v` go left. `v` is always one of the feature's
+    /// observed values (the paper relies on this to index split values by
+    /// observation rank, §3.2.2).
+    Numeric(f64),
+    /// Categorical: rows whose level bit is set go left. Levels are capped at
+    /// 64 (bitmask); the synthetic suite stays far below.
+    Categorical(u64),
+}
+
+/// Feature index + split value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Split {
+    pub feature: u32,
+    pub value: SplitValue,
+}
+
+/// The fitted value stored at a node.
+///
+/// Bit-exact equality of fits is part of the losslessness contract, so
+/// regression fits compare by `to_bits()`.
+#[derive(Debug, Clone, Copy)]
+pub enum Fit {
+    Regression(f64),
+    Class(u32),
+}
+
+impl PartialEq for Fit {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Fit::Regression(a), Fit::Regression(b)) => a.to_bits() == b.to_bits(),
+            (Fit::Class(a), Fit::Class(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+impl Eq for Fit {}
+
+/// A tree node. `children = None` ⇒ leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// Split and (left, right) child indices into `Tree::nodes`; `None` for
+    /// leaves.
+    pub split: Option<(Split, u32, u32)>,
+    /// Fit value (present at every node, internal or leaf).
+    pub fit: Fit,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.split.is_none()
+    }
+}
+
+/// A decision tree with preorder node storage; `nodes[0]` is the root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Number of internal (split) nodes.
+    pub fn internal_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.is_leaf()).count()
+    }
+
+    /// Number of leaves.
+    pub fn leaf_count(&self) -> usize {
+        self.nodes.len() - self.internal_count()
+    }
+
+    /// Maximum depth (root = depth 0); 0 for a single-leaf tree.
+    pub fn depth(&self) -> u32 {
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let mut max = 0;
+        let mut stack = vec![(0u32, 0u32)];
+        while let Some((idx, d)) = stack.pop() {
+            max = max.max(d);
+            if let Some((_, l, r)) = &self.nodes[idx as usize].split {
+                stack.push((*l, d + 1));
+                stack.push((*r, d + 1));
+            }
+        }
+        max
+    }
+
+    /// Predict for row `row` of `ds`; returns the fit at the reached leaf.
+    pub fn predict_row(&self, ds: &Dataset, row: usize) -> Fit {
+        let mut idx = 0usize;
+        loop {
+            let node = &self.nodes[idx];
+            match &node.split {
+                None => return node.fit,
+                Some((split, l, r)) => {
+                    idx = if go_left(ds, row, split) { *l as usize } else { *r as usize };
+                }
+            }
+        }
+    }
+
+    /// Visit nodes in preorder with their depth and father's feature index
+    /// (`None` at the root) — the exact conditioning information the paper's
+    /// probabilistic models use (Algorithm 1 lines 8–12).
+    pub fn visit_preorder<F>(&self, mut f: F)
+    where
+        F: FnMut(usize, &Node, u32, Option<u32>),
+    {
+        if self.nodes.is_empty() {
+            return;
+        }
+        // (node index, depth, father feature)
+        let mut stack = vec![(0u32, 0u32, None::<u32>)];
+        while let Some((idx, depth, father)) = stack.pop() {
+            let node = &self.nodes[idx as usize];
+            f(idx as usize, node, depth, father);
+            if let Some((split, l, r)) = &node.split {
+                // push right first so left is visited first (preorder)
+                stack.push((*r, depth + 1, Some(split.feature)));
+                stack.push((*l, depth + 1, Some(split.feature)));
+            }
+        }
+    }
+
+    /// Check that node storage really is preorder (used by tests and by the
+    /// container decoder, which rebuilds trees in preorder).
+    pub fn is_preorder(&self) -> bool {
+        let mut expected = 0usize;
+        let mut ok = true;
+        self.visit_preorder(|idx, _, _, _| {
+            if idx != expected {
+                ok = false;
+            }
+            expected += 1;
+        });
+        ok && expected == self.nodes.len()
+    }
+}
+
+/// Split routing shared by trees and the compressed-format predictor.
+pub fn go_left(ds: &Dataset, row: usize, split: &Split) -> bool {
+    match (&ds.features[split.feature as usize].column, &split.value) {
+        (Column::Numeric(v), SplitValue::Numeric(t)) => v[row] <= *t,
+        (Column::Categorical { values, .. }, SplitValue::Categorical(mask)) => {
+            mask >> values[row] & 1 == 1
+        }
+        _ => panic!("split kind does not match column kind"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Column, Feature, Target};
+
+    /// Hand-built tree:        (x<=2)
+    ///                        /      \
+    ///                     leaf A   (x<=4)
+    ///                              /    \
+    ///                          leaf B  leaf C
+    fn sample_tree() -> Tree {
+        Tree {
+            nodes: vec![
+                Node {
+                    split: Some((
+                        Split { feature: 0, value: SplitValue::Numeric(2.0) },
+                        1,
+                        2,
+                    )),
+                    fit: Fit::Regression(10.0),
+                },
+                Node { split: None, fit: Fit::Regression(1.0) }, // A
+                Node {
+                    split: Some((
+                        Split { feature: 0, value: SplitValue::Numeric(4.0) },
+                        3,
+                        4,
+                    )),
+                    fit: Fit::Regression(20.0),
+                },
+                Node { split: None, fit: Fit::Regression(2.0) }, // B
+                Node { split: None, fit: Fit::Regression(3.0) }, // C
+            ],
+        }
+    }
+
+    fn sample_ds() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            features: vec![Feature {
+                name: "x".into(),
+                column: Column::Numeric(vec![1.0, 3.0, 5.0]),
+            }],
+            target: Target::Regression(vec![0.0, 0.0, 0.0]),
+        }
+    }
+
+    #[test]
+    fn counts_and_depth() {
+        let t = sample_tree();
+        assert_eq!(t.internal_count(), 2);
+        assert_eq!(t.leaf_count(), 3);
+        assert_eq!(t.depth(), 2);
+    }
+
+    #[test]
+    fn prediction_routes_correctly() {
+        let t = sample_tree();
+        let ds = sample_ds();
+        assert_eq!(t.predict_row(&ds, 0), Fit::Regression(1.0));
+        assert_eq!(t.predict_row(&ds, 1), Fit::Regression(2.0));
+        assert_eq!(t.predict_row(&ds, 2), Fit::Regression(3.0));
+    }
+
+    #[test]
+    fn preorder_traversal_order_and_fathers() {
+        let t = sample_tree();
+        let mut visits = Vec::new();
+        t.visit_preorder(|idx, _, depth, father| visits.push((idx, depth, father)));
+        assert_eq!(
+            visits,
+            vec![
+                (0, 0, None),
+                (1, 1, Some(0)),
+                (2, 1, Some(0)),
+                (3, 2, Some(0)),
+                (4, 2, Some(0)),
+            ]
+        );
+        assert!(t.is_preorder());
+    }
+
+    #[test]
+    fn categorical_routing() {
+        let ds = Dataset {
+            name: "c".into(),
+            features: vec![Feature {
+                name: "c".into(),
+                column: Column::Categorical { values: vec![0, 1, 2], levels: 3 },
+            }],
+            target: Target::Regression(vec![0.0; 3]),
+        };
+        let split = Split { feature: 0, value: SplitValue::Categorical(0b101) };
+        assert!(go_left(&ds, 0, &split)); // level 0 in mask
+        assert!(!go_left(&ds, 1, &split)); // level 1 not
+        assert!(go_left(&ds, 2, &split)); // level 2 in mask
+    }
+
+    #[test]
+    fn fit_equality_is_bit_exact() {
+        assert_eq!(Fit::Regression(0.1 + 0.2), Fit::Regression(0.1 + 0.2));
+        assert_ne!(Fit::Regression(0.3), Fit::Regression(0.1 + 0.2));
+        assert_eq!(Fit::Class(2), Fit::Class(2));
+        assert_ne!(Fit::Class(2), Fit::Regression(2.0));
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let t = Tree {
+            nodes: vec![Node { split: None, fit: Fit::Class(1) }],
+        };
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.leaf_count(), 1);
+        assert!(t.is_preorder());
+    }
+}

@@ -1,0 +1,65 @@
+//! # rf-compress
+//!
+//! Lossless (and lossy) compression of random forests — a reproduction of
+//! Painsky & Rosset (2018), *"Lossless (and Lossy) Compression of Random
+//! Forests"*.
+//!
+//! The library is organized as the paper's pipeline (eq. 1):
+//!
+//! ```text
+//! P(tree) = P(structure) · P(nodes | structure) · P(leaves | nodes, structure)
+//! ```
+//!
+//! * [`zaks`]   — tree-structure coding (Zaks sequences, §3.1)
+//! * [`model`]  — conditional empirical distributions of variable names /
+//!   split values / fits, keyed by `(depth, father)` (§3.2, §3.3)
+//! * [`cluster`] — weighted-KL Bregman k-means over those distributions with
+//!   a dictionary-cost penalty (eq. 6)
+//! * [`compress`] — Algorithm 1: the end-to-end lossless codec, container
+//!   format, and prediction straight from the compressed bytes (§5)
+//! * [`lossy`]  — tree subsampling + fit quantization with the paper's
+//!   rate/distortion guarantees (§7)
+//!
+//! Substrates built in-tree (the environment is offline; see `DESIGN.md`):
+//!
+//! * [`forest`] — CART trees + random-forest training (Matlab `treeBagger`
+//!   semantics: unpruned, per-node fits) and completely-randomized trees
+//! * [`coding`] — bit I/O, canonical Huffman, arithmetic coding, LZSS,
+//!   entropy/KL utilities
+//! * [`data`]   — dataset container, CSV loader, and synthetic generators
+//!   standing in for the paper's UCI/Kaggle datasets
+//! * [`baseline`] — the paper's "standard" and "light" gzip comparators
+//! * [`runtime`] — PJRT client loading AOT-compiled JAX/Pallas artifacts
+//!   (the clustering hot path), with a native fallback
+//! * [`coordinator`] — the L3 system: parallel compression pipeline and a
+//!   model-store prediction server answering from compressed forests
+//! * [`util`]   — RNG, stats, CLI, thread pool
+//! * [`testing`] — in-tree property-testing mini-framework
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rf_compress::data::synthetic;
+//! use rf_compress::forest::{Forest, ForestParams};
+//! use rf_compress::compress::{CompressOptions, CompressedForest};
+//!
+//! let ds = synthetic::airfoil_classification(42);
+//! let forest = Forest::train(&ds, &ForestParams::classification(50), 7);
+//! let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+//! let restored = cf.decompress().unwrap();
+//! assert!(forest.identical(&restored));
+//! ```
+
+pub mod baseline;
+pub mod cluster;
+pub mod coding;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod forest;
+pub mod lossy;
+pub mod model;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+pub mod zaks;

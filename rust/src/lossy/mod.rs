@@ -1,0 +1,20 @@
+//! Lossy compression (paper §7): tree subsampling and fit quantization,
+//! each a *forest transform* followed by the ordinary lossless codec — which
+//! is exactly the paper's construction and what gives it controllable,
+//! theoretically bounded distortion (unlike the pruning/mimicking schemes of
+//! §1.1).
+//!
+//! * [`subsample`] — draw `|A₀|` of the `|A|` trees; accuracy loss is
+//!   bounded by `σ²/|A₀| + σ²/|A|` (eq. 7)
+//! * [`quantize`]  — re-grid the numeric fits to `b` bits (uniform, dithered
+//!   uniform, or Lloyd–Max); distortion `2^{-2(b-r)}/12` per fit under the
+//!   uniform-error model
+//! * [`theory`]    — the closed-form bounds of §7, used by the benches to
+//!   overlay predicted vs measured rate–distortion curves
+
+pub mod quantize;
+pub mod subsample;
+pub mod theory;
+
+pub use quantize::{lloyd_max_quantizer, quantize_fits, QuantizeMethod, Quantizer};
+pub use subsample::subsample_trees;

@@ -1,0 +1,325 @@
+//! Fit quantization (paper §7, second adjustment; §3.3).
+//!
+//! Numeric fits are re-gridded to `2^b` representative values before the
+//! (otherwise unchanged) lossless pipeline runs. Besides the direct 64→b bit
+//! saving per *distinct* fit value in the table, collapsing fits onto a
+//! small grid makes the fit symbol streams low-entropy, which the entropy
+//! coder then exploits — the paper's Figure 2/3 size curves combine both
+//! effects.
+//!
+//! Three methods:
+//! * uniform        — `2^b` points evenly placed over the observed range
+//!   (the paper's "naive b-bit quantization" with its clean distortion
+//!   analysis)
+//! * dithered       — uniform grid, but each value is offset by a shared
+//!   subtractive dither before rounding (Schuchman 1964): the quantization
+//!   error becomes uniform and signal-independent, matching the paper's
+//!   distortion model assumptions exactly
+//! * Lloyd–Max      — distribution-optimal scalar quantizer (Lloyd 1982),
+//!   the paper's suggested "more adequate frequency based" refinement
+
+use crate::forest::{Fit, Forest};
+use crate::util::Pcg64;
+use anyhow::{bail, Result};
+
+/// Quantization method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantizeMethod {
+    Uniform,
+    /// Subtractive dither with the given seed.
+    Dithered { seed: u64 },
+    LloydMax,
+}
+
+/// A fitted scalar quantizer: maps any f64 to the nearest representative.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    /// Sorted representative values (≤ 2^b).
+    pub levels: Vec<f64>,
+    /// Dither offset applied before snapping (0 for undithered).
+    dither: f64,
+}
+
+impl Quantizer {
+    /// Snap a value to its representative.
+    pub fn quantize(&self, x: f64) -> f64 {
+        let x = x + self.dither;
+        let i = match self
+            .levels
+            .binary_search_by(|l| l.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) if i == self.levels.len() => self.levels.len() - 1,
+            Err(i) => {
+                if (x - self.levels[i - 1]).abs() <= (self.levels[i] - x).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        };
+        self.levels[i] - self.dither
+    }
+
+    /// Mean squared quantization error over a sample.
+    pub fn mse(&self, xs: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| {
+                let q = self.quantize(x);
+                (x - q) * (x - q)
+            })
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+}
+
+/// Build a uniform `b`-bit quantizer over `[lo, hi]`.
+pub fn uniform_quantizer(lo: f64, hi: f64, bits: u32) -> Result<Quantizer> {
+    if bits == 0 || bits > 24 {
+        bail!("quantizer bits must be in 1..=24");
+    }
+    if !(lo.is_finite() && hi.is_finite()) || lo > hi {
+        bail!("invalid range [{lo}, {hi}]");
+    }
+    let n = 1usize << bits;
+    let levels = if hi == lo {
+        vec![lo]
+    } else {
+        // midpoints of 2^b equal cells
+        let w = (hi - lo) / n as f64;
+        (0..n).map(|i| lo + w * (i as f64 + 0.5)).collect()
+    };
+    Ok(Quantizer { levels, dither: 0.0 })
+}
+
+/// Build a Lloyd–Max quantizer from data (k-means in 1-D, initialized on
+/// quantiles; converges to the MSE-optimal scalar quantizer for the sample).
+pub fn lloyd_max_quantizer(xs: &[f64], bits: u32) -> Result<Quantizer> {
+    if bits == 0 || bits > 24 {
+        bail!("quantizer bits must be in 1..=24");
+    }
+    if xs.is_empty() {
+        bail!("no data");
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = 1usize << bits;
+    let k = n.min(sorted.len());
+    // quantile init
+    let mut levels: Vec<f64> = (0..k)
+        .map(|i| sorted[(i * sorted.len() + sorted.len() / 2) / k.max(1)])
+        .collect();
+    levels.dedup();
+    for _ in 0..60 {
+        // assignment boundaries are midpoints; centroid update via prefix sums
+        let mut sums = vec![0.0f64; levels.len()];
+        let mut counts = vec![0usize; levels.len()];
+        let mut li = 0usize;
+        for &x in &sorted {
+            while li + 1 < levels.len() && (levels[li] + levels[li + 1]) / 2.0 < x {
+                li += 1;
+            }
+            sums[li] += x;
+            counts[li] += 1;
+        }
+        let mut changed = false;
+        for i in 0..levels.len() {
+            if counts[i] > 0 {
+                let c = sums[i] / counts[i] as f64;
+                if (c - levels[i]).abs() > 1e-12 {
+                    levels[i] = c;
+                    changed = true;
+                }
+            }
+        }
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        if !changed {
+            break;
+        }
+    }
+    Ok(Quantizer { levels, dither: 0.0 })
+}
+
+/// Quantize every numeric fit in a forest; returns the transformed forest
+/// and the quantizer used. Classification forests are returned unchanged
+/// (their fits are already a finite alphabet, §3.3).
+pub fn quantize_fits(
+    forest: &Forest,
+    bits: u32,
+    method: QuantizeMethod,
+) -> Result<(Forest, Option<Quantizer>)> {
+    if forest.classification {
+        return Ok((forest.clone(), None));
+    }
+    // collect fit range / values
+    let mut vals = Vec::new();
+    for t in &forest.trees {
+        for n in &t.nodes {
+            if let Fit::Regression(v) = n.fit {
+                vals.push(v);
+            }
+        }
+    }
+    if vals.is_empty() {
+        bail!("regression forest with no fits");
+    }
+    let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let q = match method {
+        QuantizeMethod::Uniform => uniform_quantizer(lo, hi, bits)?,
+        QuantizeMethod::Dithered { seed } => {
+            let mut rng = Pcg64::with_stream(seed, 0xd17);
+            let cell = if hi > lo { (hi - lo) / (1u64 << bits) as f64 } else { 0.0 };
+            let mut quant = uniform_quantizer(lo, hi, bits)?;
+            // subtractive dither uniform over one cell
+            quant.dither = (rng.gen_f64() - 0.5) * cell;
+            quant
+        }
+        QuantizeMethod::LloydMax => lloyd_max_quantizer(&vals, bits)?,
+    };
+    let mut out = forest.clone();
+    for t in out.trees.iter_mut() {
+        for n in t.nodes.iter_mut() {
+            if let Fit::Regression(v) = n.fit {
+                n.fit = Fit::Regression(q.quantize(v));
+            }
+        }
+    }
+    Ok((out, Some(q)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::ForestParams;
+
+    #[test]
+    fn uniform_error_bounded_by_half_cell() {
+        let q = uniform_quantizer(0.0, 1.0, 4).unwrap();
+        assert_eq!(q.levels.len(), 16);
+        let cell = 1.0 / 16.0;
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            let e = (x - q.quantize(x)).abs();
+            assert!(e <= cell / 2.0 + 1e-12, "x={x} err={e}");
+        }
+    }
+
+    #[test]
+    fn uniform_mse_matches_theory() {
+        // uniform input over the range ⇒ MSE ≈ Δ²/12
+        let q = uniform_quantizer(0.0, 1.0, 6).unwrap();
+        let xs: Vec<f64> = (0..20_000).map(|i| i as f64 / 20_000.0).collect();
+        let mse = q.mse(&xs);
+        let delta = 1.0 / 64.0;
+        let theory = delta * delta / 12.0;
+        assert!((mse / theory - 1.0).abs() < 0.05, "mse={mse} theory={theory}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let xs: Vec<f64> = (0..5000).map(|i| ((i * 37) % 1000) as f64 / 100.0).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 6, 8, 10] {
+            let q = uniform_quantizer(0.0, 10.0, bits).unwrap();
+            let e = q.mse(&xs);
+            assert!(e <= prev + 1e-15, "bits={bits}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn lloyd_max_beats_uniform_on_skewed_data() {
+        // heavily clustered data: Lloyd-Max should allocate levels there
+        let mut xs = vec![0.0; 900];
+        for i in 0..900 {
+            xs[i] = 0.1 + (i % 30) as f64 * 0.0001;
+        }
+        xs.extend((0..100).map(|i| 100.0 + i as f64 * 0.001));
+        let u = uniform_quantizer(0.0, 100.1, 3).unwrap();
+        let lm = lloyd_max_quantizer(&xs, 3).unwrap();
+        assert!(
+            lm.mse(&xs) < u.mse(&xs) * 0.5,
+            "lloyd-max {} should beat uniform {}",
+            lm.mse(&xs),
+            u.mse(&xs)
+        );
+    }
+
+    #[test]
+    fn dithered_error_uniform_and_bounded() {
+        let ds = synthetic::airfoil_regression(41);
+        let f = Forest::train(&ds, &ForestParams::regression(3), 7);
+        let (qf, q) = quantize_fits(&f, 8, QuantizeMethod::Dithered { seed: 3 }).unwrap();
+        let q = q.unwrap();
+        // collect original & quantized fits
+        let mut errs = Vec::new();
+        for (t0, t1) in f.trees.iter().zip(&qf.trees) {
+            for (n0, n1) in t0.nodes.iter().zip(&t1.nodes) {
+                if let (Fit::Regression(a), Fit::Regression(b)) = (n0.fit, n1.fit) {
+                    errs.push(b - a);
+                }
+            }
+        }
+        let cell = (q.levels[1] - q.levels[0]).abs();
+        assert!(errs.iter().all(|e| e.abs() <= cell), "dithered error exceeds one cell");
+    }
+
+    #[test]
+    fn quantize_forest_reduces_distinct_fits() {
+        let ds = synthetic::airfoil_regression(42);
+        let f = Forest::train(&ds, &ForestParams::regression(4), 8);
+        let distinct = |f: &Forest| {
+            let mut set = std::collections::HashSet::new();
+            for t in &f.trees {
+                for n in &t.nodes {
+                    if let Fit::Regression(v) = n.fit {
+                        set.insert(v.to_bits());
+                    }
+                }
+            }
+            set.len()
+        };
+        let before = distinct(&f);
+        let (qf, _) = quantize_fits(&f, 7, QuantizeMethod::Uniform).unwrap();
+        let after = distinct(&qf);
+        assert!(after <= 128, "7-bit grid allows at most 128 distinct values, got {after}");
+        assert!(after < before);
+        // structure untouched
+        for (a, b) in f.trees.iter().zip(&qf.trees) {
+            assert_eq!(a.nodes.len(), b.nodes.len());
+            for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+                assert_eq!(na.split, nb.split);
+            }
+        }
+    }
+
+    #[test]
+    fn classification_forests_pass_through() {
+        let ds = synthetic::iris(43);
+        let f = Forest::train(&ds, &ForestParams::classification(3), 9);
+        let (qf, q) = quantize_fits(&f, 4, QuantizeMethod::Uniform).unwrap();
+        assert!(q.is_none());
+        assert!(qf.identical(&f));
+    }
+
+    #[test]
+    fn degenerate_constant_fits() {
+        let q = uniform_quantizer(5.0, 5.0, 8).unwrap();
+        assert_eq!(q.levels, vec![5.0]);
+        assert_eq!(q.quantize(5.0), 5.0);
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        assert!(uniform_quantizer(0.0, 1.0, 0).is_err());
+        assert!(uniform_quantizer(0.0, 1.0, 60).is_err());
+        assert!(lloyd_max_quantizer(&[1.0], 0).is_err());
+    }
+}

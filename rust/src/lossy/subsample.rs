@@ -1,0 +1,90 @@
+//! Tree subsampling (paper §7, first adjustment).
+//!
+//! Because the forest's trees are i.i.d. given the data, a uniformly random
+//! subset `A₀ ⊂ A` is itself a valid (smaller) random forest whose extra
+//! prediction variance is `σ²/|A₀|` beyond the full ensemble's `σ²/|A|`.
+//! Compression gain is linear in `|A₀|/|A|` (every tree compresses to
+//! roughly the same size).
+
+use crate::forest::Forest;
+use crate::util::Pcg64;
+
+/// Randomly sample `keep` trees (without replacement) into a new forest.
+/// `keep` is clamped to `[1, |A|]`. Deterministic in `seed`.
+pub fn subsample_trees(forest: &Forest, keep: usize, seed: u64) -> Forest {
+    let n = forest.trees.len();
+    let keep = keep.clamp(1, n);
+    let mut rng = Pcg64::with_stream(seed, 0x5b5);
+    let mut idx = rng.sample_indices(n, keep);
+    // keep original order: preserves any tree-order-dependent diagnostics
+    idx.sort();
+    Forest {
+        trees: idx.into_iter().map(|i| forest.trees[i].clone()).collect(),
+        classification: forest.classification,
+        classes: forest.classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::ForestParams;
+
+    #[test]
+    fn subsample_sizes_and_determinism() {
+        let ds = synthetic::iris(31);
+        let f = Forest::train(&ds, &ForestParams::classification(20), 1);
+        let s = subsample_trees(&f, 7, 42);
+        assert_eq!(s.num_trees(), 7);
+        assert_eq!(s.classification, f.classification);
+        let s2 = subsample_trees(&f, 7, 42);
+        assert!(s.identical(&s2));
+        let s3 = subsample_trees(&f, 7, 43);
+        assert!(!s.identical(&s3));
+    }
+
+    #[test]
+    fn subsample_clamps() {
+        let ds = synthetic::iris(32);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 2);
+        assert_eq!(subsample_trees(&f, 0, 1).num_trees(), 1);
+        assert_eq!(subsample_trees(&f, 99, 1).num_trees(), 5);
+    }
+
+    #[test]
+    fn subsampled_trees_come_from_original() {
+        let ds = synthetic::iris(33);
+        let f = Forest::train(&ds, &ForestParams::classification(10), 3);
+        let s = subsample_trees(&f, 4, 7);
+        for t in &s.trees {
+            assert!(f.trees.iter().any(|o| o == t));
+        }
+        // no duplicates (sampling without replacement)
+        for i in 0..s.trees.len() {
+            for j in i + 1..s.trees.len() {
+                assert!(
+                    !(s.trees[i] == s.trees[j])
+                        || f.trees.iter().filter(|o| **o == s.trees[i]).count() > 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_grows_slowly_as_trees_drop() {
+        // eq. (7): MSE increase ≈ σ²/|A₀|; with enough trees the degradation
+        // from 40 → 20 trees should be modest
+        let ds = synthetic::airfoil_regression(34);
+        let mut rng = Pcg64::new(4);
+        let tt = ds.train_test_split(0.8, &mut rng);
+        let f = Forest::train(&tt.train, &ForestParams::regression(40), 5);
+        let full_err = f.test_error(&tt.test);
+        let half = subsample_trees(&f, 20, 6);
+        let half_err = half.test_error(&tt.test);
+        assert!(
+            half_err < full_err * 1.5 + 1e-9,
+            "half forest err {half_err} vs full {full_err}"
+        );
+    }
+}

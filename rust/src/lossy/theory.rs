@@ -1,0 +1,118 @@
+//! The closed-form rate/distortion bounds of §7, used by the Figure-2/3
+//! benches to overlay predicted curves on measured ones.
+
+/// Subsampling distortion (eq. 7, exact form):
+///
+/// ```text
+/// D(A, A₀, σ²) = σ²·|A₀|·(1/|A₀| + 1/|A|)² + σ²·(|A|−|A₀|)/|A|²
+/// ```
+pub fn subsample_distortion_exact(a: usize, a0: usize, sigma2: f64) -> f64 {
+    let a = a as f64;
+    let a0f = a0 as f64;
+    sigma2 * a0f * (1.0 / a0f + 1.0 / a).powi(2) + sigma2 * (a - a0f) / (a * a)
+}
+
+/// Subsampling distortion, the `|A₀| ≪ |A|` approximation:
+/// `σ²/|A₀| + σ²/|A|`.
+pub fn subsample_distortion_approx(a: usize, a0: usize, sigma2: f64) -> f64 {
+    sigma2 / a0 as f64 + sigma2 / a as f64
+}
+
+/// Accuracy-loss *beyond* the full forest: the `σ²/|A₀|` term the paper
+/// identifies as the real cost of sampling (the `σ²/|A|` part is the ground
+/// truth's own variance).
+pub fn subsample_excess_variance(a0: usize, sigma2: f64) -> f64 {
+    sigma2 / a0 as f64
+}
+
+/// Quantization distortion under the uniform-error model: a `b`-bit uniform
+/// quantizer over a range of size `2^r` has cell `2^{r-b}` and per-value MSE
+/// `Δ²/12 = 2^{2(r−b)}/12`.
+pub fn quantization_mse(range: f64, bits: u32) -> f64 {
+    if range <= 0.0 {
+        return 0.0;
+    }
+    let delta = range / (1u64 << bits) as f64;
+    delta * delta / 12.0
+}
+
+/// The paper's combined average accuracy-loss bound after subsampling
+/// `a0 ≪ a` trees and quantizing fits with `b` bits over a `2^r`-sized
+/// range:
+///
+/// ```text
+/// σ²/|A₀| + (2^{−(b−r)})² / (12·|A₀|)
+/// ```
+pub fn combined_loss_bound(a0: usize, sigma2: f64, range: f64, bits: u32) -> f64 {
+    subsample_excess_variance(a0, sigma2) + quantization_mse(range, bits) / a0 as f64
+}
+
+/// Average compression-gain factors (paper §7): fits shrink by `b/64`,
+/// the whole ensemble additionally by `|A₀|/|A|`.
+pub fn compression_gain(a: usize, a0: usize, bits: u32) -> (f64, f64) {
+    (bits as f64 / 64.0, a0 as f64 / a as f64)
+}
+
+/// Estimate the single-tree prediction-error variance σ² from a forest's
+/// per-tree test predictions: the variance across trees of their mean error
+/// against the full-forest prediction (the paper's `e_t` construction).
+pub fn estimate_sigma2(per_tree_means: &[f64]) -> f64 {
+    if per_tree_means.len() < 2 {
+        return 0.0;
+    }
+    let n = per_tree_means.len() as f64;
+    let mean = per_tree_means.iter().sum::<f64>() / n;
+    per_tree_means.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / (n - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_approaches_approx_when_a0_small() {
+        let exact = subsample_distortion_exact(10_000, 10, 2.0);
+        let approx = subsample_distortion_approx(10_000, 10, 2.0);
+        assert!((exact / approx - 1.0).abs() < 0.01, "exact={exact} approx={approx}");
+    }
+
+    #[test]
+    fn distortion_decreases_with_more_trees() {
+        let mut prev = f64::INFINITY;
+        for a0 in [10, 50, 100, 500, 1000] {
+            let d = subsample_distortion_approx(1000, a0, 1.0);
+            assert!(d < prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn quantization_mse_halves_per_bit_squared() {
+        let m8 = quantization_mse(1.0, 8);
+        let m9 = quantization_mse(1.0, 9);
+        assert!((m8 / m9 - 4.0).abs() < 1e-9, "one more bit ⇒ ¼ the MSE");
+    }
+
+    #[test]
+    fn combined_bound_dominated_by_sigma_term_at_high_bits() {
+        let loss = combined_loss_bound(250, 0.5, 10.0, 16);
+        let sigma_term = subsample_excess_variance(250, 0.5);
+        assert!((loss / sigma_term - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gains_match_paper_formulas() {
+        let (fit_gain, ens_gain) = compression_gain(1000, 250, 7);
+        assert!((fit_gain - 7.0 / 64.0).abs() < 1e-12);
+        assert!((ens_gain - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigma2_estimator_matches_sample_variance() {
+        let e = [1.0, 2.0, 3.0, 4.0];
+        let s2 = estimate_sigma2(&e);
+        // sample variance of 1..4 = 5/3
+        assert!((s2 - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(estimate_sigma2(&[1.0]), 0.0);
+    }
+}

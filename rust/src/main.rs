@@ -1,0 +1,341 @@
+//! `repro` — the rf-compress command-line coordinator.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! repro compress   --dataset <key> [--trees N] [--seed S] [--out FILE]
+//!                  [--k-max K] [--fit-alpha-bits 64] [--native]
+//! repro verify     --in FILE --dataset <key> [--trees N] [--seed S]
+//! repro lossy      --dataset <key> [--trees N] [--bits B] [--keep N0]
+//! repro serve      --port P --dataset <key>[,<key>...] [--trees N]
+//! repro suite      [--trees N] [--paper-scale]      # Table-2 style report
+//! repro datasets                                    # list dataset keys
+//! ```
+//!
+//! Dataset keys are the Table-2 rows (`iris`, `wages`, `airfoil+`,
+//! `airfoil*`, `bike+`, `naval+`, `naval*`, `shuttle`, `forests`, `adults`,
+//! `liberty+`, `liberty*`, `otto`) or a CSV path via `--csv FILE
+//! --target-col I [--target-kind reg|cls]`.
+
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::coordinator::server::Server;
+use rf_compress::coordinator::store::ModelStore;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic::table2_suite;
+use rf_compress::data::Dataset;
+use rf_compress::lossy;
+use rf_compress::util::cli::Args;
+use rf_compress::util::stats::human_bytes;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    let code = match cmd.as_str() {
+        "compress" => cmd_compress(&args),
+        "verify" => cmd_verify(&args),
+        "lossy" => cmd_lossy(&args),
+        "serve" => cmd_serve(&args),
+        "suite" => cmd_suite(&args),
+        "datasets" => {
+            for e in table2_suite() {
+                println!("{}", e.key);
+            }
+            0
+        }
+        _ => {
+            eprintln!("{}", HELP);
+            if cmd == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "repro — lossless (and lossy) random-forest compression
+  compress --dataset KEY [--trees N] [--seed S] [--out FILE] [--native]
+  verify   --in FILE --dataset KEY [--trees N] [--seed S]
+  lossy    --dataset KEY [--trees N] [--bits B] [--keep N0]
+  serve    --port P --dataset KEY[,KEY...] [--trees N]
+  suite    [--trees N] [--paper-scale]
+  datasets";
+
+fn load_dataset(args: &Args) -> Option<Dataset> {
+    if let Some(csv) = args.get("csv") {
+        let col: usize = args.get_or("target-col", 0);
+        let kind = args.get("target-kind").unwrap_or("reg");
+        let spec = if kind == "cls" {
+            rf_compress::data::csv::TargetSpec::Classification(col)
+        } else {
+            rf_compress::data::csv::TargetSpec::Regression(col)
+        };
+        return match rf_compress::data::csv::load_csv(std::path::Path::new(csv), spec) {
+            Ok(ds) => Some(ds),
+            Err(e) => {
+                eprintln!("error loading {csv}: {e:#}");
+                None
+            }
+        };
+    }
+    let key = args.get("dataset")?;
+    dataset_by_key(key, args.get_or("data-seed", 1234u64))
+}
+
+fn dataset_by_key(key: &str, seed: u64) -> Option<Dataset> {
+    table2_suite()
+        .into_iter()
+        .find(|e| e.key == key)
+        .map(|e| (e.make)(seed))
+        .or_else(|| {
+            eprintln!("unknown dataset {key:?}; see `repro datasets`");
+            None
+        })
+}
+
+fn opts_from(args: &Args) -> CompressOptions {
+    CompressOptions {
+        k_max: args.get_or("k-max", 10usize),
+        seed: args.get_or("seed", 0x5eedu64),
+        workers: args.get_or("workers", rf_compress::util::threads::default_workers()),
+        conditioning: rf_compress::model::ModelConditioning::DepthFather,
+        fit_alpha_bits: args.get_or("fit-alpha-bits", 64u32),
+        dataset_indexed_splits: args.flag("paper-accounting"),
+    }
+}
+
+fn coordinator(args: &Args) -> Coordinator {
+    if args.flag("native") {
+        Coordinator::native_only()
+    } else {
+        Coordinator::new()
+    }
+}
+
+fn cmd_compress(args: &Args) -> i32 {
+    let Some(ds) = load_dataset(args) else { return 2 };
+    let trees = args.get_or("trees", 100usize);
+    let seed = args.get_or("seed", 7u64);
+    let mut coord = coordinator(args);
+    println!("engine: {}", coord.engine_name());
+    let (forest, cf, report) = match coord.train_and_compress(&ds, trees, seed, &opts_from(args)) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("compression failed: {e:#}");
+            return 1;
+        }
+    };
+    print_report(&report);
+    // verify losslessness before declaring success
+    let restored = if opts_from(args).dataset_indexed_splits {
+        cf.decompress_with_dataset(&ds)
+    } else {
+        cf.decompress()
+    };
+    match restored {
+        Ok(restored) if restored.identical(&forest) => println!("lossless: VERIFIED"),
+        Ok(_) => {
+            eprintln!("lossless check FAILED: decompressed forest differs");
+            return 1;
+        }
+        Err(e) => {
+            eprintln!("decompression failed: {e:#}");
+            return 1;
+        }
+    }
+    if let Some(out) = args.get("out") {
+        if let Err(e) = std::fs::write(out, &cf.bytes) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out} ({})", human_bytes(cf.total_bytes()));
+    }
+    0
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let Some(path) = args.get("in") else {
+        eprintln!("verify needs --in FILE");
+        return 2;
+    };
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let cf = match CompressedForest::from_bytes(bytes) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("parse: {e:#}");
+            return 1;
+        }
+    };
+    let forest = match cf.decompress() {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("decompress: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "container OK: {} trees, {} nodes, mean depth {:.1}, {}",
+        forest.num_trees(),
+        forest.total_nodes(),
+        forest.mean_depth(),
+        human_bytes(cf.total_bytes())
+    );
+    // optional: retrain and compare
+    if args.get("dataset").is_some() {
+        let Some(ds) = load_dataset(args) else { return 2 };
+        let trees = args.get_or("trees", 100usize);
+        let seed = args.get_or("seed", 7u64);
+        let coord = coordinator(args);
+        let retrained = coord.train(&ds, trees, seed);
+        if retrained.identical(&forest) {
+            println!("matches retrained forest: LOSSLESS");
+        } else {
+            eprintln!("retrained forest differs (wrong --trees/--seed/--dataset?)");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_lossy(args: &Args) -> i32 {
+    let Some(ds) = load_dataset(args) else { return 2 };
+    if ds.target.is_classification() {
+        eprintln!("lossy quantization targets regression datasets (use a `+` key)");
+        return 2;
+    }
+    let trees = args.get_or("trees", 100usize);
+    let bits = args.get_or("bits", 7u32);
+    let keep = args.get_or("keep", trees / 4);
+    let mut rng = rf_compress::util::Pcg64::new(args.get_or("seed", 7u64));
+    let tt = ds.train_test_split(0.8, &mut rng);
+    let mut coord = coordinator(args);
+    let forest = coord.train(&tt.train, trees, args.get_or("seed", 7u64));
+    let full_mse = forest.test_error(&tt.test);
+    let opts = opts_from(args);
+
+    let (cf_full, _) = coord.run_job(&tt.train, &forest, &opts, 0.0).map_or_else(
+        |e| {
+            eprintln!("{e:#}");
+            std::process::exit(1)
+        },
+        |x| x,
+    );
+    println!(
+        "lossless: {} trees, test MSE {full_mse:.4}, size {}",
+        forest.num_trees(),
+        human_bytes(cf_full.total_bytes())
+    );
+
+    let (qforest, _) =
+        lossy::quantize_fits(&forest, bits, lossy::QuantizeMethod::Uniform).unwrap();
+    let sub = lossy::subsample_trees(&qforest, keep, 99);
+    let (cf_lossy, _) = coord.run_job(&tt.train, &sub, &opts, 0.0).unwrap();
+    let lossy_mse = sub.test_error(&tt.test);
+    println!(
+        "lossy ({bits}-bit fits, {keep} trees): test MSE {lossy_mse:.4}, size {}",
+        human_bytes(cf_lossy.total_bytes())
+    );
+    println!(
+        "gain {:.1}x, MSE ratio {:.3}",
+        cf_full.total_bytes() as f64 / cf_lossy.total_bytes().max(1) as f64,
+        lossy_mse / full_mse.max(1e-12)
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(keys) = args.get_list::<String>("dataset") else {
+        eprintln!("serve needs --dataset KEY[,KEY...]");
+        return 2;
+    };
+    let trees = args.get_or("trees", 50usize);
+    let port: u16 = args.get_or("port", 7878u16);
+    let store = Arc::new(ModelStore::new());
+    let mut coord = coordinator(args);
+    for key in &keys {
+        let Some(ds) = dataset_by_key(key, args.get_or("data-seed", 1234u64)) else {
+            return 2;
+        };
+        let (_, cf, report) = coord
+            .train_and_compress(&ds, trees, args.get_or("seed", 7u64), &opts_from(args))
+            .unwrap();
+        store.insert(key, &cf).unwrap();
+        println!("loaded {key}: {}", human_bytes(report.ours_bytes));
+    }
+    let server = match Server::start(store.clone(), port) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "serving {} models ({} resident) on {}",
+        store.len(),
+        human_bytes(store.resident_bytes()),
+        server.addr()
+    );
+    println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_suite(args: &Args) -> i32 {
+    let paper_scale = args.flag("paper-scale");
+    let trees = args.get_or("trees", if paper_scale { 1000 } else { 25 });
+    let mut coord = coordinator(args);
+    println!("engine: {}; {} trees per forest", coord.engine_name(), trees);
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}   ratios",
+        "dataset", "standard", "light", "ours"
+    );
+    for entry in table2_suite() {
+        let ds = (entry.make)(1234);
+        match coord.train_and_compress(&ds, trees, 7, &opts_from(args)) {
+            Ok((_, _, report)) => println!("{}", report.table_row()),
+            Err(e) => eprintln!("{}: {e:#}", entry.key),
+        }
+    }
+    0
+}
+
+fn print_report(r: &rf_compress::coordinator::CompressionReport) {
+    println!(
+        "{}: {} trees, {} nodes, mean depth {:.1}",
+        r.dataset, r.n_trees, r.total_nodes, r.mean_depth
+    );
+    println!(
+        "  standard {:>12}   light {:>12}   ours {:>12}",
+        human_bytes(r.standard_bytes),
+        human_bytes(r.light_bytes),
+        human_bytes(r.ours_bytes)
+    );
+    let c = r.sections.paper_columns();
+    println!(
+        "  breakdown: struct {} | vars {} | splits {} | fits {} | dict {}",
+        human_bytes(c.structure),
+        human_bytes(c.var_names),
+        human_bytes(c.split_values),
+        human_bytes(c.fits),
+        human_bytes(c.dict)
+    );
+    println!(
+        "  ratios: 1:{:.1} vs standard, 1:{:.1} vs light; clusters: {:?}",
+        r.standard_ratio(),
+        r.light_ratio(),
+        r.cluster_ks.iter().map(|(_, k)| *k).collect::<Vec<_>>()
+    );
+    println!(
+        "  times: train {:.2}s, compress {:.2}s (engine {}, {} xla / {} native steps)",
+        r.train_s, r.compress_s, r.engine, r.xla_steps, r.native_steps
+    );
+}

@@ -1,0 +1,426 @@
+//! Extraction of the empirical conditional distributions (Algorithm 1,
+//! lines 4–21) and of the value alphabets shared by encoder and decoder.
+//!
+//! Two passes over the forest:
+//!
+//! 1. **Alphabet pass** — collect, per feature, the distinct split values
+//!    used anywhere in the forest (sorted, so a numeric split value is coded
+//!    as its *rank*; the paper codes it as an observation index, which is the
+//!    same idea with the dataset as the implicit table — a standalone
+//!    decompressor needs the table itself, which the container stores), and
+//!    the distinct regression fit values (bit-exact f64s).
+//! 2. **Count pass** — accumulate the conditional count tables keyed by
+//!    [`ContextKey`]; parallelized as a map-reduce over trees.
+
+use super::keys::{ContextKey, ModelConditioning};
+use crate::data::{Column, Dataset};
+use crate::forest::{Fit, Forest, SplitValue};
+use crate::util::threads::parallel_fold;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap};
+
+/// Split-value alphabet of one feature: the distinct values observed across
+/// the whole forest, in sorted order (rank = symbol).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SplitAlphabet {
+    /// Sorted distinct numeric thresholds.
+    Numeric(Vec<f64>),
+    /// Sorted distinct category masks.
+    Categorical(Vec<u64>),
+}
+
+impl SplitAlphabet {
+    pub fn len(&self) -> usize {
+        match self {
+            SplitAlphabet::Numeric(v) => v.len(),
+            SplitAlphabet::Categorical(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Symbol (rank) of a split value; the value must be present.
+    pub fn symbol_of(&self, value: &SplitValue) -> Option<u32> {
+        match (self, value) {
+            (SplitAlphabet::Numeric(tbl), SplitValue::Numeric(v)) => tbl
+                .binary_search_by(|x| x.partial_cmp(v).unwrap())
+                .ok()
+                .map(|i| i as u32),
+            (SplitAlphabet::Categorical(tbl), SplitValue::Categorical(m)) => {
+                tbl.binary_search(m).ok().map(|i| i as u32)
+            }
+            _ => None,
+        }
+    }
+
+    /// Split value of a symbol.
+    pub fn value_of(&self, sym: u32) -> SplitValue {
+        match self {
+            SplitAlphabet::Numeric(tbl) => SplitValue::Numeric(tbl[sym as usize]),
+            SplitAlphabet::Categorical(tbl) => SplitValue::Categorical(tbl[sym as usize]),
+        }
+    }
+}
+
+/// All value alphabets of a forest: per-feature split alphabets plus the fit
+/// alphabet (distinct f64 bit patterns for regression; classes are their own
+/// alphabet for classification).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValueAlphabets {
+    pub splits: Vec<SplitAlphabet>,
+    /// Sorted distinct regression fit values (by bit pattern order of the
+    /// underlying f64s sorted numerically); empty for classification.
+    pub fits: Vec<f64>,
+}
+
+impl ValueAlphabets {
+    /// Sorted unique values of a numeric column. In the paper's
+    /// dataset-indexed mode (§3.2.2) a numeric split value is stored as its
+    /// rank within this list, which encoder and decoder regenerate
+    /// identically from the training data instead of shipping f64 tables
+    /// (the paper's `α = log₂(n) + C` accounting).
+    pub fn column_unique(ds: &Dataset, feature: usize) -> Result<Vec<f64>> {
+        match &ds.features[feature].column {
+            Column::Numeric(v) => {
+                let mut vals = v.clone();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                vals.dedup_by(|a, b| a.to_bits() == b.to_bits());
+                Ok(vals)
+            }
+            Column::Categorical { .. } => bail!("feature {feature} is categorical"),
+        }
+    }
+
+    /// Alphabet pass over the forest (self-contained mode: numeric
+    /// alphabets are the thresholds actually used, stored in the container).
+    pub fn collect(forest: &Forest, ds: &Dataset) -> Result<Self> {
+        let d = ds.num_features();
+        // distinct split values per feature
+        let mut num_vals: Vec<Vec<u64>> = vec![Vec::new(); d]; // f64 bits, dedup later
+        let mut cat_vals: Vec<Vec<u64>> = vec![Vec::new(); d];
+        let mut fit_bits: Vec<u64> = Vec::new();
+        for tree in &forest.trees {
+            for node in &tree.nodes {
+                if let Some((split, _, _)) = &node.split {
+                    let f = split.feature as usize;
+                    if f >= d {
+                        bail!("split feature {f} out of range");
+                    }
+                    match &split.value {
+                        SplitValue::Numeric(v) => num_vals[f].push(v.to_bits()),
+                        SplitValue::Categorical(m) => cat_vals[f].push(*m),
+                    }
+                }
+                if let Fit::Regression(v) = node.fit {
+                    fit_bits.push(v.to_bits());
+                }
+            }
+        }
+        let mut splits = Vec::with_capacity(d);
+        for f in 0..d {
+            match &ds.features[f].column {
+                Column::Numeric(_) => {
+                    if !cat_vals[f].is_empty() {
+                        bail!("categorical split on numeric feature {f}");
+                    }
+                    let mut vals: Vec<f64> =
+                        num_vals[f].iter().map(|&b| f64::from_bits(b)).collect();
+                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    vals.dedup_by(|a, b| a.to_bits() == b.to_bits());
+                    splits.push(SplitAlphabet::Numeric(vals));
+                }
+                Column::Categorical { .. } => {
+                    if !num_vals[f].is_empty() {
+                        bail!("numeric split on categorical feature {f}");
+                    }
+                    let mut vals = cat_vals[f].clone();
+                    vals.sort();
+                    vals.dedup();
+                    splits.push(SplitAlphabet::Categorical(vals));
+                }
+            }
+        }
+        let fits = {
+            let mut vals: Vec<f64> = fit_bits.iter().map(|&b| f64::from_bits(b)).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup_by(|a, b| a.to_bits() == b.to_bits());
+            vals
+        };
+        Ok(ValueAlphabets { splits, fits })
+    }
+
+    /// Fit symbol of a node fit.
+    pub fn fit_symbol(&self, fit: &Fit) -> u32 {
+        match fit {
+            Fit::Class(c) => *c,
+            Fit::Regression(v) => self
+                .fits
+                .binary_search_by(|x| x.partial_cmp(v).unwrap())
+                .expect("fit value must be in the alphabet") as u32,
+        }
+    }
+
+    /// Fit alphabet size for a forest.
+    pub fn fit_alphabet_size(&self, forest: &Forest) -> usize {
+        if forest.classification {
+            forest.classes as usize
+        } else {
+            self.fits.len()
+        }
+    }
+}
+
+/// A set of conditional count tables keyed by [`ContextKey`]. `BTreeMap`
+/// keeps key iteration deterministic (clustering and container layout depend
+/// on the order).
+pub type CountTable = BTreeMap<ContextKey, Vec<u64>>;
+
+/// The extracted models of a forest.
+#[derive(Debug, Clone)]
+pub struct ForestModels {
+    /// `P(variable name | key)` — alphabet = number of features.
+    pub var_names: CountTable,
+    /// Per-feature `P(split rank | key)` — alphabet = that feature's
+    /// [`SplitAlphabet`] size.
+    pub splits: Vec<CountTable>,
+    /// `P(fit symbol | key)` — alphabet = classes or distinct fit values.
+    pub fits: CountTable,
+    /// The conditioning level the keys were projected with.
+    pub conditioning: ModelConditioning,
+}
+
+impl ForestModels {
+    /// Count pass (Algorithm 1 lines 7–21), parallelized over trees.
+    pub fn extract(
+        forest: &Forest,
+        alphabets: &ValueAlphabets,
+        conditioning: ModelConditioning,
+        workers: usize,
+    ) -> ForestModels {
+        let d = alphabets.splits.len();
+        let fit_alpha = alphabets.fit_alphabet_size(forest);
+
+        #[derive(Clone)]
+        struct Partial {
+            var_names: HashMap<ContextKey, Vec<u64>>,
+            splits: Vec<HashMap<ContextKey, Vec<u64>>>,
+            fits: HashMap<ContextKey, Vec<u64>>,
+        }
+
+        let fold = |trees: &[crate::forest::Tree]| -> Partial {
+            let mut p = Partial {
+                var_names: HashMap::new(),
+                splits: vec![HashMap::new(); d],
+                fits: HashMap::new(),
+            };
+            for tree in trees {
+                tree.visit_preorder(|_, node, depth, father| {
+                    let key = conditioning.project(ContextKey::new(depth, father));
+                    if let Some((split, _, _)) = &node.split {
+                        let f = split.feature as usize;
+                        p.var_names
+                            .entry(key)
+                            .or_insert_with(|| vec![0; d])[f] += 1;
+                        let sym = alphabets.splits[f]
+                            .symbol_of(&split.value)
+                            .expect("split value in alphabet");
+                        let tbl = p.splits[f]
+                            .entry(key)
+                            .or_insert_with(|| vec![0; alphabets.splits[f].len()]);
+                        tbl[sym as usize] += 1;
+                    }
+                    let fsym = alphabets.fit_symbol(&node.fit) as usize;
+                    p.fits.entry(key).or_insert_with(|| vec![0; fit_alpha])[fsym] += 1;
+                });
+            }
+            p
+        };
+
+        let merge_into = |dst: &mut HashMap<ContextKey, Vec<u64>>,
+                          src: HashMap<ContextKey, Vec<u64>>| {
+            for (k, v) in src {
+                match dst.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut e) => {
+                        for (a, b) in e.get_mut().iter_mut().zip(&v) {
+                            *a += b;
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(v);
+                    }
+                }
+            }
+        };
+
+        let merged = parallel_fold(&forest.trees, workers, fold, |mut a, b| {
+            merge_into(&mut a.var_names, b.var_names);
+            for (da, sb) in a.splits.iter_mut().zip(b.splits) {
+                merge_into(da, sb);
+            }
+            merge_into(&mut a.fits, b.fits);
+            a
+        })
+        .unwrap_or(Partial {
+            var_names: HashMap::new(),
+            splits: vec![HashMap::new(); d],
+            fits: HashMap::new(),
+        });
+
+        ForestModels {
+            var_names: merged.var_names.into_iter().collect(),
+            splits: merged.splits.into_iter().map(|m| m.into_iter().collect()).collect(),
+            fits: merged.fits.into_iter().collect(),
+            conditioning,
+        }
+    }
+
+    /// Total node count represented in the var-name table (= internal nodes).
+    pub fn total_internal(&self) -> u64 {
+        self.var_names.values().flat_map(|v| v.iter()).sum()
+    }
+
+    /// Total fit symbols (= all nodes).
+    pub fn total_fits(&self) -> u64 {
+        self.fits.values().flat_map(|v| v.iter()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+    use crate::model::keys::ROOT_FATHER;
+
+    fn small_forest() -> (crate::data::Dataset, Forest) {
+        let ds = synthetic::wages(3);
+        let f = Forest::train(&ds, &ForestParams::classification(6), 11);
+        (ds, f)
+    }
+
+    #[test]
+    fn alphabets_cover_every_split() {
+        let (ds, f) = small_forest();
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        assert_eq!(al.splits.len(), ds.num_features());
+        for t in &f.trees {
+            for n in &t.nodes {
+                if let Some((s, _, _)) = &n.split {
+                    assert!(
+                        al.splits[s.feature as usize].symbol_of(&s.value).is_some(),
+                        "every used split value must be in the alphabet"
+                    );
+                }
+            }
+        }
+        // classification ⇒ no fit table
+        assert!(al.fits.is_empty());
+    }
+
+    #[test]
+    fn alphabet_symbols_roundtrip() {
+        let (ds, f) = small_forest();
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        for t in &f.trees {
+            for n in &t.nodes {
+                if let Some((s, _, _)) = &n.split {
+                    let a = &al.splits[s.feature as usize];
+                    let sym = a.symbol_of(&s.value).unwrap();
+                    assert_eq!(a.value_of(sym), s.value);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn regression_fit_alphabet() {
+        let ds = synthetic::airfoil_regression(4);
+        let f = Forest::train(&ds, &ForestParams::regression(3), 5);
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        assert!(!al.fits.is_empty());
+        // every node fit must be representable and bit-exact
+        for t in &f.trees {
+            for n in &t.nodes {
+                let sym = al.fit_symbol(&n.fit);
+                let back = al.fits[sym as usize];
+                match n.fit {
+                    Fit::Regression(v) => assert_eq!(v.to_bits(), back.to_bits()),
+                    _ => panic!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn count_tables_are_consistent() {
+        let (ds, f) = small_forest();
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        let m = ForestModels::extract(&f, &al, ModelConditioning::DepthFather, 1);
+        // total internal nodes across tables equals forest internal nodes
+        let internal: usize = f.trees.iter().map(|t| t.internal_count()).sum();
+        assert_eq!(m.total_internal(), internal as u64);
+        // total fits = total nodes (fits at every node)
+        assert_eq!(m.total_fits(), f.total_nodes() as u64);
+        // split tables per feature sum to var-name counts of that feature
+        for (fidx, tbl) in m.splits.iter().enumerate() {
+            let from_splits: u64 = tbl.values().flat_map(|v| v.iter()).sum();
+            let from_vars: u64 = m.var_names.values().map(|v| v[fidx]).sum();
+            assert_eq!(from_splits, from_vars, "feature {fidx}");
+        }
+        // root context exists with depth 0 / ROOT_FATHER
+        assert!(m
+            .var_names
+            .keys()
+            .any(|k| k.depth == 0 && k.father == ROOT_FATHER));
+    }
+
+    #[test]
+    fn extraction_parallel_equals_sequential() {
+        let (ds, f) = small_forest();
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        let a = ForestModels::extract(&f, &al, ModelConditioning::DepthFather, 1);
+        let b = ForestModels::extract(&f, &al, ModelConditioning::DepthFather, 4);
+        assert_eq!(a.var_names, b.var_names);
+        assert_eq!(a.splits, b.splits);
+        assert_eq!(a.fits, b.fits);
+    }
+
+    #[test]
+    fn conditioning_projection_reduces_keys() {
+        let (ds, f) = small_forest();
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        let full = ForestModels::extract(&f, &al, ModelConditioning::DepthFather, 1);
+        let depth = ForestModels::extract(&f, &al, ModelConditioning::DepthOnly, 1);
+        let none = ForestModels::extract(&f, &al, ModelConditioning::None, 1);
+        assert!(depth.var_names.len() <= full.var_names.len());
+        assert_eq!(none.var_names.len(), 1);
+        // totals invariant under conditioning
+        assert_eq!(full.total_internal(), depth.total_internal());
+        assert_eq!(full.total_internal(), none.total_internal());
+    }
+
+    #[test]
+    fn root_splits_concentrate_vs_deep_splits() {
+        // the paper's §6 observation: low-depth models are sparse/low-entropy,
+        // deep models approach uniform. Verify entropy grows with depth.
+        let ds = synthetic::airfoil_classification(8);
+        let f = Forest::train(&ds, &ForestParams::classification(30), 17);
+        let al = ValueAlphabets::collect(&f, &ds).unwrap();
+        let m = ForestModels::extract(&f, &al, ModelConditioning::DepthOnly, 1);
+        let entropy_at = |depth: u16| -> Option<f64> {
+            m.var_names
+                .get(&ContextKey { depth, father: 0 })
+                .map(|c| crate::coding::entropy::entropy_counts(c))
+        };
+        let h0 = entropy_at(0).expect("root model");
+        let mid = (f.max_depth() / 2) as u16;
+        if let Some(hm) = entropy_at(mid) {
+            assert!(
+                hm >= h0 * 0.8,
+                "deep split-name entropy ({hm:.3}) should not be far below root ({h0:.3})"
+            );
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Conditioning keys for the node/fit models.
+//!
+//! The paper's relaxation conditions each node on `(depth, father's variable
+//! name)`. The `ablations` bench also measures cheaper conditionings
+//! (depth-only, unconditional) to quantify what the relaxation buys, so the
+//! key computation is parameterized by [`ModelConditioning`].
+
+/// Father value used at the root (no father). Chosen as `u32::MAX` so it can
+/// never collide with a feature index.
+pub const ROOT_FATHER: u32 = u32::MAX;
+
+/// A model-conditioning context: which empirical distribution a node's
+/// symbol is drawn from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContextKey {
+    /// Node depth (root = 0), saturating at `u16::MAX`.
+    pub depth: u16,
+    /// Father's feature index, or [`ROOT_FATHER`].
+    pub father: u32,
+}
+
+impl ContextKey {
+    pub fn new(depth: u32, father: Option<u32>) -> Self {
+        ContextKey {
+            depth: depth.min(u16::MAX as u32) as u16,
+            father: father.unwrap_or(ROOT_FATHER),
+        }
+    }
+}
+
+/// How much context the models condition on (paper default:
+/// [`ModelConditioning::DepthFather`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelConditioning {
+    /// `(depth, father)` — the paper's relaxation (§3.2.2).
+    DepthFather,
+    /// depth only — what §6 reports the clustering usually collapses to.
+    DepthOnly,
+    /// a single unconditional model (ablation baseline).
+    None,
+}
+
+impl ModelConditioning {
+    /// Project a raw context onto this conditioning level. Projected keys
+    /// still use the `ContextKey` type; unused components are zeroed.
+    pub fn project(&self, key: ContextKey) -> ContextKey {
+        match self {
+            ModelConditioning::DepthFather => key,
+            ModelConditioning::DepthOnly => ContextKey { depth: key.depth, father: 0 },
+            ModelConditioning::None => ContextKey { depth: 0, father: 0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_key() {
+        let k = ContextKey::new(0, None);
+        assert_eq!(k.depth, 0);
+        assert_eq!(k.father, ROOT_FATHER);
+    }
+
+    #[test]
+    fn depth_saturates() {
+        let k = ContextKey::new(1 << 20, Some(3));
+        assert_eq!(k.depth, u16::MAX);
+        assert_eq!(k.father, 3);
+    }
+
+    #[test]
+    fn projections() {
+        let k = ContextKey::new(7, Some(2));
+        assert_eq!(ModelConditioning::DepthFather.project(k), k);
+        assert_eq!(
+            ModelConditioning::DepthOnly.project(k),
+            ContextKey { depth: 7, father: 0 }
+        );
+        assert_eq!(
+            ModelConditioning::None.project(k),
+            ContextKey { depth: 0, father: 0 }
+        );
+    }
+}

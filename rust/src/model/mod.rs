@@ -1,0 +1,22 @@
+//! Probabilistic models of forest nodes (paper §3.2–3.3, Algorithm 1 lines
+//! 4–21).
+//!
+//! The full conditional structure of eq. (2) is exponential in depth, so the
+//! paper relaxes it: a node's models are conditioned on **(its depth, its
+//! father's variable name)** only. This module extracts the corresponding
+//! empirical conditional distributions from a trained forest:
+//!
+//! * `P_vn(variable name | depth, father)` — one table, alphabet = features
+//! * `P_sv(split value  | variable, depth, father)` — one table per feature,
+//!   alphabet = the feature's observed split values (rank-coded)
+//! * `P_fit(fit | depth, father)` — one table, alphabet = classes or the
+//!   observed distinct regression fit values
+//!
+//! [`keys`] defines the conditioning key, [`extract`] the tables and the
+//! per-feature/fit value alphabets shared by encoder and decoder.
+
+pub mod extract;
+pub mod keys;
+
+pub use extract::{ForestModels, SplitAlphabet, ValueAlphabets};
+pub use keys::{ContextKey, ModelConditioning, ROOT_FATHER};

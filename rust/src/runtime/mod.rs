@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO **text**,
+//! see `DESIGN.md §8`) and expose them to the coordinator.
+//!
+//! Python never runs at request time: `make artifacts` lowered the L2 Lloyd
+//! step once per shape bucket; this module compiles those artifacts on the
+//! `xla` crate's PJRT CPU client and implements the clustering
+//! [`LloydEngine`] on top ([`xla_engine`]), padding real problems into the
+//! smallest bucket that fits and falling back to the native engine when
+//! none does (huge fit alphabets) or when no artifacts are present.
+
+pub mod xla_engine;
+
+pub use xla_engine::{HybridEngine, XlaRuntime};
+
+/// Default artifact directory, overridable with `RF_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("RF_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

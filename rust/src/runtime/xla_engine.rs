@@ -1,0 +1,249 @@
+//! The XLA-backed [`LloydEngine`]: executes the AOT-compiled
+//! `lloyd_step_{M}x{B}x{K}` artifacts on the PJRT CPU client.
+//!
+//! Padding contract (mirrors `python/compile/model.py`):
+//! * rows beyond the real M: `p = 0, w = 0` — contribute nothing;
+//! * columns beyond the real B: zero in both `p` and `q`;
+//! * clusters beyond the real K: all-zero `q` rows, which the kernel's
+//!   log-clamp turns maximally unattractive, so real rows never pick them.
+//!
+//! The engine computes in f32 (the MXU-native width). Clustering decisions
+//! at f32 precision can differ from the f64 native engine on near-ties —
+//! harmless for correctness (any clustering is lossless; only the rate
+//! moves marginally) and bounded by the integration tests.
+
+use crate::cluster::kmeans::{LloydEngine, LloydStep, NativeEngine};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One compiled shape bucket.
+struct Bucket {
+    m: usize,
+    b: usize,
+    k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// All compiled artifacts + the PJRT client that owns them.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    buckets: Vec<Bucket>,
+}
+
+impl XlaRuntime {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut buckets = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("bad manifest line {line:?}");
+            }
+            let (m, b, k) = (
+                parts[0].parse::<usize>().context("manifest M")?,
+                parts[1].parse::<usize>().context("manifest B")?,
+                parts[2].parse::<usize>().context("manifest K")?,
+            );
+            let path = dir.join(parts[3]);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            buckets.push(Bucket { m, b, k, exe });
+        }
+        if buckets.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        // smallest-capacity-first so bucket search picks the cheapest fit
+        buckets.sort_by_key(|b| b.m * b.b * b.k);
+        Ok(XlaRuntime { client, buckets })
+    }
+
+    /// Load from the default directory ([`super::artifacts_dir`]).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::artifacts_dir())
+    }
+
+    /// Number of compiled buckets.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Whether some bucket can hold an (m, b, k) problem *efficiently*.
+    ///
+    /// Efficiency gate: padding a tiny problem into a huge bucket makes the
+    /// artifact arithmetic-bound on zeros (e.g. B=55 padded to 2048 wastes
+    /// 37× the FLOPs); such problems run faster on the native engine. A
+    /// bucket is eligible when its padded element count is within
+    /// [`PAD_WASTE_LIMIT`]× of the real problem's.
+    pub fn fits(&self, m: usize, b: usize, k: usize) -> bool {
+        self.find_bucket(m, b, k).is_some()
+    }
+
+    fn find_bucket(&self, m: usize, b: usize, k: usize) -> Option<&Bucket> {
+        // Buckets up to this size are cheap in absolute terms (≈10 ms on
+        // this CPU) and may be used regardless of padding waste; bigger
+        // buckets (interpret-mode Pallas loops get expensive) require the
+        // real problem to fill a reasonable fraction of them.
+        const CHEAP_ELEMS: usize = 512 * 1024;
+        const PAD_WASTE_LIMIT: usize = 6;
+        let real = (m * b).max(1);
+        self.buckets.iter().find(|bu| {
+            bu.m >= m
+                && bu.b >= b
+                && bu.k >= k
+                && (bu.m * bu.b <= CHEAP_ELEMS || bu.m * bu.b <= real * PAD_WASTE_LIMIT)
+        })
+    }
+
+    /// One Lloyd step on the artifact. Inputs are f64 row-major as in
+    /// [`LloydEngine::step`]; returns `None` when no bucket fits.
+    pub fn try_step(
+        &self,
+        p: &[f64],
+        w: &[f64],
+        q: &[f64],
+        m: usize,
+        b: usize,
+        k: usize,
+    ) -> Result<Option<LloydStep>> {
+        let Some(bucket) = self.find_bucket(m, b, k) else {
+            return Ok(None);
+        };
+        let (bm, bb, bk) = (bucket.m, bucket.b, bucket.k);
+        // pad into f32 bucket buffers
+        let mut pf = vec![0f32; bm * bb];
+        for i in 0..m {
+            for j in 0..b {
+                pf[i * bb + j] = p[i * b + j] as f32;
+            }
+        }
+        let mut wf = vec![0f32; bm];
+        for i in 0..m {
+            wf[i] = w[i] as f32;
+        }
+        let mut qf = vec![0f32; bk * bb];
+        for i in 0..k {
+            for j in 0..b {
+                qf[i * bb + j] = q[i * b + j] as f32;
+            }
+        }
+        let p_lit = xla::Literal::vec1(&pf).reshape(&[bm as i64, bb as i64])?;
+        let w_lit = xla::Literal::vec1(&wf);
+        let q_lit = xla::Literal::vec1(&qf).reshape(&[bk as i64, bb as i64])?;
+        let result = bucket.exe.execute::<xla::Literal>(&[p_lit, w_lit, q_lit])?[0][0]
+            .to_literal_sync()?;
+        let (assign_l, new_q_l, obj_l) = result.to_tuple3()?;
+        let assign_full = assign_l.to_vec::<i32>()?;
+        let new_q_full = new_q_l.to_vec::<f32>()?;
+        let obj = obj_l.to_vec::<f32>()?;
+        // unpad
+        let assign: Vec<u32> = assign_full[..m]
+            .iter()
+            .map(|&a| (a as u32).min(k as u32 - 1))
+            .collect();
+        let mut new_q = vec![0f64; k * b];
+        for i in 0..k {
+            for j in 0..b {
+                new_q[i * b + j] = new_q_full[i * bb + j] as f64;
+            }
+        }
+        Ok(Some(LloydStep {
+            assign,
+            new_q,
+            objective: obj.first().copied().unwrap_or(0.0) as f64,
+        }))
+    }
+}
+
+/// [`LloydEngine`] that prefers the XLA artifacts and falls back to the
+/// native implementation when no bucket fits (or no runtime was loaded).
+pub struct HybridEngine {
+    runtime: Option<XlaRuntime>,
+    native: NativeEngine,
+    /// counters for the benches: (xla steps, native steps)
+    pub xla_steps: u64,
+    pub native_steps: u64,
+}
+
+impl HybridEngine {
+    /// Try to load artifacts; degrade silently to native-only.
+    pub fn new() -> Self {
+        let runtime = XlaRuntime::load_default().ok();
+        HybridEngine { runtime, native: NativeEngine, xla_steps: 0, native_steps: 0 }
+    }
+
+    pub fn with_runtime(runtime: XlaRuntime) -> Self {
+        HybridEngine { runtime: Some(runtime), native: NativeEngine, xla_steps: 0, native_steps: 0 }
+    }
+
+    pub fn native_only() -> Self {
+        HybridEngine { runtime: None, native: NativeEngine, xla_steps: 0, native_steps: 0 }
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+}
+
+impl Default for HybridEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LloydEngine for HybridEngine {
+    fn step(
+        &mut self,
+        p: &[f64],
+        w: &[f64],
+        q: &[f64],
+        m: usize,
+        b: usize,
+        k: usize,
+    ) -> Result<LloydStep> {
+        if let Some(rt) = &self.runtime {
+            if let Some(step) = rt.try_step(p, w, q, m, b, k)? {
+                self.xla_steps += 1;
+                return Ok(step);
+            }
+        }
+        self.native_steps += 1;
+        self.native.step(p, w, q, m, b, k)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.runtime.is_some() {
+            "hybrid(xla+native)"
+        } else {
+            "native"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_without_artifacts_is_native() {
+        let mut eng = HybridEngine::native_only();
+        assert!(!eng.has_runtime());
+        let p = vec![0.9, 0.1, 0.1, 0.9];
+        let w = vec![5.0, 5.0];
+        let q = vec![0.5, 0.5];
+        let s = eng.step(&p, &w, &q, 2, 2, 1).unwrap();
+        assert_eq!(s.assign, vec![0, 0]);
+        assert_eq!(eng.native_steps, 1);
+    }
+
+    // XLA-backed tests live in rust/tests/xla_runtime.rs (they need the
+    // artifacts built by `make artifacts`).
+}

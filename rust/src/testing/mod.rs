@@ -1,0 +1,5 @@
+//! In-tree property-testing mini-framework (no `proptest` offline).
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,177 @@
+//! A small property-testing framework: seeded generators + `forall` runner
+//! with iteration-count control and failure reporting (seed + case index, so
+//! any failure replays deterministically).
+//!
+//! Shrinking is deliberately omitted — failures print the generator seed and
+//! case index, which reproduces the exact input.
+
+use crate::util::Pcg64;
+
+/// A generator context handed to property closures.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Pcg64::with_stream(seed, 0x6e6),
+        }
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.rng.gen_range(hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Byte vector with length in `[0, max_len]`.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.rng.next_u64() as u8).collect()
+    }
+
+    /// Vector of u32 symbols over alphabet `[0, alphabet)`.
+    pub fn symbols(&mut self, max_len: usize, alphabet: u32) -> Vec<u32> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.rng.gen_range(alphabet as u64) as u32).collect()
+    }
+
+    /// Probability vector of the given length (Dirichlet-ish via normalized
+    /// exponentials; may contain zeros with probability `sparsity`).
+    pub fn probs(&mut self, len: usize, sparsity: f64) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..len)
+            .map(|_| {
+                if self.rng.gen_bool(sparsity) {
+                    0.0
+                } else {
+                    -self.rng.gen_f64().max(1e-12).ln()
+                }
+            })
+            .collect();
+        let total: f64 = v.iter().sum();
+        if total <= 0.0 {
+            v[0] = 1.0;
+            return v;
+        }
+        for x in v.iter_mut() {
+            *x /= total;
+        }
+        v
+    }
+
+    /// Count vector (empirical histogram) over `len` symbols.
+    pub fn counts(&mut self, len: usize, max_count: u64, sparsity: f64) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..len)
+            .map(|_| {
+                if self.rng.gen_bool(sparsity) {
+                    0
+                } else {
+                    1 + self.rng.gen_range(max_count)
+                }
+            })
+            .collect();
+        if v.iter().all(|&c| c == 0) {
+            v[0] = 1;
+        }
+        v
+    }
+}
+
+/// Number of cases per property; override with `RF_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("RF_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `default_cases()` seeded cases; panics with the failing
+/// seed/case on error. The closure returns `Result<(), String>` so
+/// properties can explain *what* failed.
+pub fn forall<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    forall_cases(name, default_cases(), &mut prop)
+}
+
+/// As [`forall`] with an explicit case count.
+pub fn forall_cases<F>(name: &str, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0xABCD_1234u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64_in bounds", |g| {
+            let v = g.u64_in(3, 9);
+            if (3..=9).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {v}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn probs_normalized() {
+        forall("probs sum to 1", |g| {
+            let len = g.usize_in(1, 50);
+            let p = g.probs(len, 0.3);
+            let s: f64 = p.iter().sum();
+            if (s - 1.0).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("sum={s}"))
+            }
+        });
+    }
+
+    #[test]
+    fn counts_never_all_zero() {
+        forall("counts nonzero", |g| {
+            let c = g.counts(10, 100, 0.95);
+            if c.iter().any(|&x| x > 0) {
+                Ok(())
+            } else {
+                Err("all zero".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmark harness shared by the `cargo bench` targets (criterion is
+//! not available offline; this provides warmup + repeated timing with
+//! median/p10/p90, and aligned table printing).
+
+use std::time::Instant;
+
+/// Timing summary in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.median.max(1e-12)
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let scale = |s: f64| {
+            if s >= 1.0 {
+                format!("{s:.3} s")
+            } else if s >= 1e-3 {
+                format!("{:.3} ms", s * 1e3)
+            } else {
+                format!("{:.1} µs", s * 1e6)
+            }
+        };
+        write!(
+            f,
+            "{} (p10 {}, p90 {}, n={})",
+            scale(self.median),
+            scale(self.p10),
+            scale(self.p90),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: 1 warmup + enough iterations to fill ~`budget_s`
+/// seconds (at least `min_iters`). Returns the timing summary.
+pub fn time_it<F: FnMut()>(budget_s: f64, min_iters: usize, mut f: F) -> Timing {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().as_secs_f64();
+    let iters = ((budget_s / first.max(1e-9)) as usize).clamp(min_iters, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Timing { median: q(0.5), p10: q(0.1), p90: q(0.9), iters }
+}
+
+/// Aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Common bench flags: `--trees`, `--seed`, `--paper-scale`; `default_trees`
+/// is used when neither `--trees` nor `--paper-scale` is given.
+pub struct BenchConfig {
+    pub trees: usize,
+    pub seed: u64,
+    pub paper_scale: bool,
+    pub args: super::cli::Args,
+}
+
+pub fn bench_config(default_trees: usize) -> BenchConfig {
+    let args = super::cli::Args::from_env();
+    let paper_scale = args.flag("paper-scale");
+    let trees = args.get_or("trees", if paper_scale { 1000 } else { default_trees });
+    BenchConfig { trees, seed: args.get_or("seed", 7), paper_scale, args }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_sane_numbers() {
+        let t = time_it(0.01, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.median >= 0.0);
+        assert!(t.p10 <= t.p90 + 1e-12);
+        assert!(t.iters >= 3);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "22".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal command-line argument parsing (no `clap` available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string. Used by the
+//! `repro` binary, the examples, and every bench target (benches share the
+//! same flags: `--trees`, `--seed`, `--paper-scale`, ...).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    program: String,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env() -> Self {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse_iter(program, it)
+    }
+
+    /// Parse from an explicit list (used in tests).
+    pub fn parse(program: &str, args: &[&str]) -> Self {
+        Self::parse_iter(program.to_string(), args.iter().map(|s| s.to_string()))
+    }
+
+    fn parse_iter(program: String, it: impl Iterator<Item = String>) -> Self {
+        let mut out = Args {
+            program,
+            ..Default::default()
+        };
+        let mut pending: Option<String> = None;
+        for arg in it {
+            if let Some(key) = pending.take() {
+                if arg.starts_with("--") {
+                    // previous was a bare flag
+                    out.flags.insert(key, "true".into());
+                    pending = Some(arg.trim_start_matches("--").to_string());
+                } else {
+                    out.flags.insert(key, arg);
+                }
+                continue;
+            }
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        if let Some(key) = pending {
+            out.flags.insert(key, "true".into());
+        }
+        out
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw string value of `--key`.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present (as bare `--key` or `--key true/1/yes`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Typed value with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{key} {s:?}; using default");
+                default
+            }),
+            None => default,
+        }
+    }
+
+    /// Required typed value; exits with a message when missing/invalid.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> T {
+        match self.get(key) {
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: could not parse --{key} {s:?}");
+                std::process::exit(2);
+            }),
+            None => {
+                eprintln!("error: missing required flag --{key}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Comma-separated list of typed values.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Option<Vec<T>> {
+        self.get(key).map(|s| {
+            s.split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| p.trim().parse().ok())
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_key_value_and_equals() {
+        let a = Args::parse("p", &["--trees", "100", "--seed=7", "pos1"]);
+        assert_eq!(a.get_or("trees", 0u32), 100);
+        assert_eq!(a.get_or("seed", 0u64), 7);
+        assert_eq!(a.positional(0), Some("pos1"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = Args::parse("p", &["--verbose", "--paper-scale", "--k", "3"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("paper-scale"));
+        assert_eq!(a.get_or("k", 0u32), 3);
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = Args::parse("p", &["--x", "1", "--debug"]);
+        assert!(a.flag("debug"));
+        assert_eq!(a.get_or("x", 0u32), 1);
+    }
+
+    #[test]
+    fn list_values() {
+        let a = Args::parse("p", &["--bits", "4,8,12"]);
+        assert_eq!(a.get_list::<u32>("bits"), Some(vec![4, 8, 12]));
+    }
+
+    #[test]
+    fn default_on_missing() {
+        let a = Args::parse("p", &[]);
+        assert_eq!(a.get_or("trees", 25u32), 25);
+    }
+}

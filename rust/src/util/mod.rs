@@ -1,0 +1,14 @@
+//! Shared infrastructure: RNG, statistics, CLI parsing, and a scoped thread
+//! pool.
+//!
+//! The build environment is offline with no `rand`/`clap`/`tokio` crates, so
+//! these substrates are implemented in-tree (see `DESIGN.md §3`).
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+
+pub use rng::Pcg64;
+pub use stats::OnlineStats;

@@ -1,0 +1,124 @@
+//! A small scoped thread pool (no `tokio` offline).
+//!
+//! The coordinator's map-reduce passes (DESIGN.md §6) need "run these N
+//! closures on W workers and collect results in order". `parallel_map` does
+//! exactly that on `std::thread::scope`, so borrowed data needs no `Arc`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use: the `RF_THREADS` env var when set, otherwise
+/// available parallelism (1 on this testbed).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("RF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item of `items` on up to `workers` threads; results are
+/// returned in input order. Falls back to a plain sequential map when
+/// `workers <= 1` or the input is tiny (avoids thread-spawn overhead on the
+/// 1-vCPU benchmark box).
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = workers.min(n);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Chunked parallel fold: split `items` into `workers` contiguous chunks, run
+/// `fold` per chunk, then `reduce` pairwise. Used for count-table extraction
+/// where merging per-worker tables once is far cheaper than locking a shared
+/// table per item.
+pub fn parallel_fold<T, A, FF, RF>(items: &[T], workers: usize, fold: FF, reduce: RF) -> Option<A>
+where
+    T: Sync,
+    A: Send,
+    FF: Fn(&[T]) -> A + Sync,
+    RF: Fn(A, A) -> A,
+{
+    if items.is_empty() {
+        return None;
+    }
+    if workers <= 1 || items.len() == 1 {
+        return Some(fold(items));
+    }
+    let workers = workers.min(items.len());
+    let chunk = items.len().div_ceil(workers);
+    let chunks: Vec<&[T]> = items.chunks(chunk).collect();
+    let parts = parallel_map(&chunks, workers, |_, c| fold(c));
+    parts.into_iter().reduce(reduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 4, |_, &x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_sequential_fallback() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |i, &x| x + i), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn fold_matches_sequential() {
+        let items: Vec<u64> = (1..=1000).collect();
+        let total = parallel_fold(
+            &items,
+            8,
+            |c| c.iter().sum::<u64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(total, 500_500);
+    }
+
+    #[test]
+    fn fold_empty_is_none() {
+        let items: Vec<u64> = vec![];
+        assert!(parallel_fold(&items, 4, |c| c.len(), |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn borrows_without_arc() {
+        let data = vec![String::from("a"), String::from("bb")];
+        let lens = parallel_map(&data, 2, |_, s| s.len());
+        assert_eq!(lens, vec![1, 2]);
+    }
+}

@@ -1,0 +1,320 @@
+//! Zaks sequences — the paper's tree-structure code (§3.1, after Zaks 1980).
+//!
+//! Label internal nodes `1` and leaves `0`, then read labels in preorder.
+//! For a (full binary) tree with `n` internal nodes the sequence has length
+//! `2n + 1` and is uniquely decodable. Feasibility (paper §3.1):
+//!
+//! 1. the string begins with `1` (degenerate case: a single-leaf tree is the
+//!    string `0` — the paper's trees always split at least once, ours may
+//!    not, so we admit it),
+//! 2. #zeros = #ones + 1,
+//! 3. no proper prefix satisfies (2).
+//!
+//! Because [`crate::forest::Tree`] stores nodes in preorder, the `i`-th bit
+//! of the Zaks sequence corresponds to `tree.nodes[i]` directly.
+
+use crate::forest::{Node, Tree};
+use anyhow::{bail, Result};
+
+/// Extract the Zaks sequence of a tree (one bit per stored node, `true` =
+/// internal). Relies on preorder node storage.
+pub fn zaks_of_tree(tree: &Tree) -> Vec<bool> {
+    debug_assert!(tree.is_preorder());
+    tree.nodes.iter().map(|n| !n.is_leaf()).collect()
+}
+
+/// Validate the three feasibility conditions.
+pub fn is_valid_zaks(bits: &[bool]) -> bool {
+    if bits.is_empty() {
+        return false;
+    }
+    if bits.len() == 1 {
+        return !bits[0]; // single leaf: "0"
+    }
+    if !bits[0] {
+        return false; // condition (i)
+    }
+    // conditions (ii) + (iii) via a running balance:
+    // balance = #zeros - #ones must first hit +1 exactly at the end
+    let mut balance: i64 = 0;
+    for (i, &b) in bits.iter().enumerate() {
+        balance += if b { -1 } else { 1 };
+        if balance == 1 && i + 1 != bits.len() {
+            return false; // proper prefix satisfies (ii)
+        }
+    }
+    balance == 1
+}
+
+/// The decoded structure of one tree: preorder child links.
+/// `children[i] = Some((left, right))` for internal nodes, `None` for leaves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeShape {
+    pub children: Vec<Option<(u32, u32)>>,
+}
+
+impl TreeShape {
+    pub fn node_count(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn internal_count(&self) -> usize {
+        self.children.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Depth of every node, in preorder — the conditioning variable of the
+    /// paper's node models.
+    pub fn depths(&self) -> Vec<u32> {
+        let mut depths = vec![0u32; self.children.len()];
+        for (i, c) in self.children.iter().enumerate() {
+            if let Some((l, r)) = c {
+                depths[*l as usize] = depths[i] + 1;
+                depths[*r as usize] = depths[i] + 1;
+            }
+        }
+        depths
+    }
+}
+
+/// Decode a Zaks sequence into a [`TreeShape`]. Errors on infeasible input.
+pub fn shape_from_zaks(bits: &[bool]) -> Result<TreeShape> {
+    if !is_valid_zaks(bits) {
+        bail!("infeasible Zaks sequence of length {}", bits.len());
+    }
+    let mut children: Vec<Option<(u32, u32)>> = vec![None; bits.len()];
+    let mut pos = 0usize;
+    build(bits, &mut pos, &mut children)?;
+    if pos != bits.len() {
+        bail!("Zaks sequence has trailing symbols");
+    }
+    Ok(TreeShape { children })
+}
+
+fn build(bits: &[bool], pos: &mut usize, children: &mut [Option<(u32, u32)>]) -> Result<u32> {
+    let idx = *pos;
+    if idx >= bits.len() {
+        bail!("Zaks sequence truncated");
+    }
+    *pos += 1;
+    if bits[idx] {
+        let l = build(bits, pos, children)?;
+        let r = build(bits, pos, children)?;
+        children[idx] = Some((l, r));
+    }
+    Ok(idx as u32)
+}
+
+/// Verify a shape matches a tree's structure node-for-node.
+pub fn shape_matches_tree(shape: &TreeShape, tree: &Tree) -> bool {
+    if shape.node_count() != tree.nodes.len() {
+        return false;
+    }
+    tree.nodes.iter().zip(&shape.children).all(|(n, c)| match (&n.split, c) {
+        (Some((_, l1, r1)), Some((l2, r2))) => l1 == l2 && r1 == r2,
+        (None, None) => true,
+        _ => false,
+    })
+}
+
+/// Concatenate the Zaks sequences of many trees into one bitstring, with the
+/// per-tree bit lengths (decoding needs the boundaries only if random access
+/// is wanted; sequential decode self-delimits via condition (iii)).
+pub fn concat_forest_zaks(trees: &[Tree]) -> (Vec<bool>, Vec<u32>) {
+    let mut bits = Vec::new();
+    let mut lens = Vec::with_capacity(trees.len());
+    for t in trees {
+        let z = zaks_of_tree(t);
+        lens.push(z.len() as u32);
+        bits.extend_from_slice(&z);
+    }
+    (bits, lens)
+}
+
+/// Split a concatenated Zaks bitstring back into per-tree sequences using
+/// the self-delimiting property (each sequence ends exactly when
+/// #zeros = #ones + 1).
+pub fn split_concatenated(bits: &[bool], n_trees: usize) -> Result<Vec<Vec<bool>>> {
+    let mut out = Vec::with_capacity(n_trees);
+    let mut start = 0usize;
+    for t in 0..n_trees {
+        let mut balance: i64 = 0;
+        let mut end = None;
+        for (i, &b) in bits[start..].iter().enumerate() {
+            balance += if b { -1 } else { 1 };
+            if balance == 1 {
+                end = Some(start + i + 1);
+                break;
+            }
+        }
+        let Some(end) = end else {
+            bail!("concatenated Zaks stream ends mid-tree (tree {t})");
+        };
+        out.push(bits[start..end].to_vec());
+        start = end;
+    }
+    if start != bits.len() {
+        bail!("trailing bits after {n_trees} trees");
+    }
+    Ok(out)
+}
+
+/// A dummy placeholder node used when materializing shapes (fits/splits are
+/// filled by the container decoder).
+pub fn shape_to_skeleton(shape: &TreeShape) -> Tree {
+    use crate::forest::{Fit, Split, SplitValue};
+    let nodes = shape
+        .children
+        .iter()
+        .map(|c| Node {
+            split: c.map(|(l, r)| {
+                (Split { feature: 0, value: SplitValue::Numeric(0.0) }, l, r)
+            }),
+            fit: Fit::Regression(0.0),
+        })
+        .collect();
+    Tree { nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+    use crate::testing::prop::forall;
+
+    /// The paper's Figure-1 example sequence. As printed it has 11 ones and
+    /// 11 zeros — one trailing `0` short of feasibility (2n+1 = 23), an
+    /// apparent typo; with the final `0` restored it decodes.
+    #[test]
+    fn paper_figure1_sequence_is_valid_with_trailing_zero() {
+        let printed = "1111001001001111001000";
+        let bits: Vec<bool> = printed.chars().map(|c| c == '1').collect();
+        assert!(!is_valid_zaks(&bits), "paper's printed string is one 0 short");
+        let mut fixed = bits.clone();
+        fixed.push(false);
+        assert!(is_valid_zaks(&fixed));
+        let shape = shape_from_zaks(&fixed).unwrap();
+        let ones = fixed.iter().filter(|&&b| b).count();
+        assert_eq!(fixed.len(), 2 * ones + 1);
+        assert_eq!(shape.internal_count(), ones);
+    }
+
+    #[test]
+    fn simple_sequences() {
+        // single leaf
+        assert!(is_valid_zaks(&[false]));
+        // root with two leaves: 100
+        assert!(is_valid_zaks(&[true, false, false]));
+        // invalid: starts with 0 but longer than 1
+        assert!(!is_valid_zaks(&[false, true, false]));
+        // invalid: prefix property broken (balance hits +1 early)
+        assert!(!is_valid_zaks(&[true, false, false, false]));
+        // invalid: never closes
+        assert!(!is_valid_zaks(&[true, true, false, false]));
+        assert!(!is_valid_zaks(&[]));
+    }
+
+    #[test]
+    fn tree_roundtrip() {
+        let ds = synthetic::iris(5);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 2);
+        for t in &f.trees {
+            let z = zaks_of_tree(t);
+            assert!(is_valid_zaks(&z), "trained tree must give feasible Zaks");
+            assert_eq!(z.len(), t.nodes.len());
+            assert_eq!(z.len(), 2 * t.internal_count() + 1);
+            let shape = shape_from_zaks(&z).unwrap();
+            assert!(shape_matches_tree(&shape, t));
+        }
+    }
+
+    #[test]
+    fn depths_match_tree() {
+        let ds = synthetic::iris(6);
+        let f = Forest::train(&ds, &ForestParams::classification(2), 3);
+        for t in &f.trees {
+            let shape = shape_from_zaks(&zaks_of_tree(t)).unwrap();
+            let depths = shape.depths();
+            let mut expected = vec![0u32; t.nodes.len()];
+            t.visit_preorder(|i, _, d, _| expected[i] = d);
+            assert_eq!(depths, expected);
+        }
+    }
+
+    #[test]
+    fn concatenation_roundtrip() {
+        let ds = synthetic::wages(7);
+        let f = Forest::train(&ds, &ForestParams::classification(8), 4);
+        let (bits, lens) = concat_forest_zaks(&f.trees);
+        assert_eq!(lens.len(), 8);
+        assert_eq!(bits.len() as u64, lens.iter().map(|&l| l as u64).sum());
+        let seqs = split_concatenated(&bits, 8).unwrap();
+        for (seq, tree) in seqs.iter().zip(&f.trees) {
+            assert_eq!(seq, &zaks_of_tree(tree));
+        }
+    }
+
+    #[test]
+    fn split_concatenated_rejects_garbage() {
+        assert!(split_concatenated(&[true, true, false], 1).is_err());
+        assert!(split_concatenated(&[false, false], 1).is_err()); // trailing
+    }
+
+    #[test]
+    fn prop_random_shapes_roundtrip() {
+        // generate random full binary trees by random valid Zaks strings:
+        // do a random walk that never closes early
+        forall("zaks roundtrip", |g| {
+            let internal = g.usize_in(0, 64);
+            let mut bits = Vec::new();
+            let mut open = 1i64; // pending subtrees
+            let mut remaining = internal as i64;
+            while open > 0 {
+                let take_internal = remaining > 0 && g.bool(0.5);
+                if take_internal {
+                    bits.push(true);
+                    remaining -= 1;
+                    open += 1;
+                } else {
+                    bits.push(false);
+                    open -= 1;
+                }
+            }
+            if !is_valid_zaks(&bits) {
+                return Err(format!("constructed invalid sequence len {}", bits.len()));
+            }
+            let shape = shape_from_zaks(&bits).map_err(|e| e.to_string())?;
+            // re-extract from the skeleton and compare
+            let skel = shape_to_skeleton(&shape);
+            let z2 = zaks_of_tree(&skel);
+            if z2 != bits {
+                return Err("re-extracted Zaks differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_corrupt_sequences_rejected_or_valid() {
+        forall("zaks corruption", |g| {
+            // start from a valid sequence and flip one bit
+            let mut bits = vec![true, false, false];
+            for _ in 0..g.usize_in(0, 5) {
+                // grow: replace a random leaf(0) with 100
+                let leaf_positions: Vec<usize> =
+                    (0..bits.len()).filter(|&i| !bits[i]).collect();
+                let pos = leaf_positions[g.usize_in(0, leaf_positions.len() - 1)];
+                bits.splice(pos..=pos, [true, false, false]);
+            }
+            let flip = g.usize_in(0, bits.len() - 1);
+            bits[flip] = !bits[flip];
+            // flipping a bit changes the 0/1 balance ⇒ never valid
+            if is_valid_zaks(&bits) {
+                return Err("single bit flip kept sequence valid".into());
+            }
+            // and decoding must not panic
+            let _ = shape_from_zaks(&bits);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! End-to-end coordinator tests: train → compress → store → serve over TCP
+//! → predictions from compressed bytes match the original forest.
+
+use rf_compress::compress::predict::PredictOne;
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::server::{Client, Server};
+use rf_compress::coordinator::store::{ModelStore, ObsValue};
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::{synthetic, Column, Dataset};
+use std::sync::Arc;
+
+fn row_values(ds: &Dataset, row: usize) -> Vec<ObsValue> {
+    ds.features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => ObsValue::Num(v[row]),
+            Column::Categorical { values, .. } => ObsValue::Cat(values[row]),
+        })
+        .collect()
+}
+
+fn values_to_wire(values: &[ObsValue]) -> String {
+    values
+        .iter()
+        .map(|v| match v {
+            ObsValue::Num(x) => format!("{x}"),
+            ObsValue::Cat(c) => format!("c{c}"),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[test]
+fn coordinator_to_server_round_trip() {
+    // 1. coordinator trains + compresses two models
+    let iris = synthetic::iris(91);
+    let wages = synthetic::wages(91);
+    let mut coord = Coordinator::native_only();
+    let opts = CompressOptions::default();
+    let (iris_forest, iris_cf, iris_report) =
+        coord.train_and_compress(&iris, 30, 5, &opts).unwrap();
+    let (wages_forest, wages_cf, _) = coord.train_and_compress(&wages, 4, 6, &opts).unwrap();
+    assert!(
+        iris_report.ours_bytes < iris_report.light_bytes,
+        "at 30 trees the dictionaries amortize: ours {} vs light {}",
+        iris_report.ours_bytes,
+        iris_report.light_bytes
+    );
+
+    // 2. store them
+    let store = Arc::new(ModelStore::new());
+    store.insert("iris", &iris_cf).unwrap();
+    store.insert("wages", &wages_cf).unwrap();
+    assert_eq!(store.len(), 2);
+
+    // 3. serve and query over TCP
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let list = client.request("LIST").unwrap();
+    assert!(list.starts_with("OK"));
+    assert!(list.contains("iris") && list.contains("wages"));
+
+    for row in (0..iris.num_rows()).step_by(29) {
+        let wire = values_to_wire(&row_values(&iris, row));
+        let reply = client.request(&format!("PREDICT iris {wire}")).unwrap();
+        let expect = iris_forest.predict_class(&iris, row);
+        assert_eq!(reply, format!("OK {expect}"), "row {row}");
+    }
+    for row in (0..wages.num_rows()).step_by(101) {
+        let wire = values_to_wire(&row_values(&wages, row));
+        let reply = client.request(&format!("PREDICT wages {wire}")).unwrap();
+        let expect = wages_forest.predict_class(&wages, row);
+        assert_eq!(reply, format!("OK {expect}"));
+    }
+
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.starts_with("OK requests="), "{stats}");
+    let bytes = client.request("BYTES").unwrap();
+    assert!(bytes.starts_with("OK resident="), "{bytes}");
+
+    // 4. error paths stay connected
+    let err = client.request("PREDICT nope 1,2,3,4").unwrap();
+    assert!(err.starts_with("ERR"), "{err}");
+    let err = client.request("GARBAGE").unwrap();
+    assert!(err.starts_with("ERR"), "{err}");
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_batch_correctly() {
+    let ds = synthetic::airfoil_classification(92);
+    let mut coord = Coordinator::native_only();
+    let (forest, cf, _) =
+        coord.train_and_compress(&ds, 5, 7, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let addr = server.addr();
+
+    let rows: Vec<usize> = (0..ds.num_rows()).step_by(97).collect();
+    let expected: Vec<u32> = rows.iter().map(|&r| forest.predict_class(&ds, r)).collect();
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let ds = &ds;
+                let rows = &rows;
+                let expected = &expected;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    for (i, &row) in rows.iter().enumerate() {
+                        if i % 4 != c {
+                            continue;
+                        }
+                        let wire = values_to_wire(&row_values(ds, row));
+                        let reply = client.request(&format!("PREDICT m {wire}")).unwrap();
+                        assert_eq!(reply, format!("OK {}", expected[i]));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let stats = store.stats();
+    assert!(stats.requests >= rows.len() as u64);
+    server.stop();
+}
+
+#[test]
+fn store_direct_api_matches_forest() {
+    let ds = synthetic::naval_classification(93);
+    let mut coord = Coordinator::native_only();
+    let (forest, cf, report) =
+        coord.train_and_compress(&ds, 4, 8, &CompressOptions::default()).unwrap();
+    // 4 trees cannot amortize dictionaries; the standard baseline must
+    // still lose (light-baseline wins are covered by the Table-2 bench)
+    assert!(report.standard_ratio() > 1.0);
+    let store = ModelStore::new();
+    store.insert("naval", &cf).unwrap();
+    for row in (0..ds.num_rows()).step_by(397) {
+        let got = store.predict("naval", &row_values(&ds, row)).unwrap();
+        assert_eq!(got, PredictOne::Class(forest.predict_class(&ds, row)));
+    }
+}

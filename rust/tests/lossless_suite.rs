@@ -1,0 +1,68 @@
+//! The losslessness contract across the whole synthetic suite, plus
+//! lossy-path integration: every Table-2 dataset round-trips bit-exactly,
+//! and quantized/subsampled forests still round-trip losslessly *after*
+//! their transform.
+
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::data::synthetic::table2_suite;
+use rf_compress::forest::{Forest, ForestParams};
+use rf_compress::lossy;
+
+/// Small tree counts keep this under a minute while covering every dataset
+/// shape (numeric/categorical mixes, 2–9 classes, regression).
+#[test]
+fn every_suite_dataset_roundtrips_losslessly() {
+    for entry in table2_suite() {
+        // cap the biggest datasets for test-time sanity
+        let ds = (entry.make)(7);
+        let n_trees = if ds.num_rows() > 20_000 { 2 } else { 3 };
+        let params = if ds.target.is_classification() {
+            ForestParams::classification(n_trees)
+        } else {
+            ForestParams::regression(n_trees)
+        };
+        let forest = Forest::train(&ds, &params, 11);
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .unwrap_or_else(|e| panic!("{}: compress failed: {e:#}", entry.key));
+        let restored = cf
+            .decompress()
+            .unwrap_or_else(|e| panic!("{}: decompress failed: {e:#}", entry.key));
+        assert!(restored.identical(&forest), "{}: round-trip differs", entry.key);
+    }
+}
+
+#[test]
+fn lossy_transforms_remain_losslessly_codable() {
+    let ds = rf_compress::data::synthetic::airfoil_regression(17);
+    let forest = Forest::train(&ds, &ForestParams::regression(10), 3);
+    for bits in [4u32, 8, 12] {
+        let (qf, _) = lossy::quantize_fits(&forest, bits, lossy::QuantizeMethod::Uniform).unwrap();
+        let sub = lossy::subsample_trees(&qf, 5, 9);
+        let cf = CompressedForest::compress(&sub, &ds, &CompressOptions::default()).unwrap();
+        let restored = cf.decompress().unwrap();
+        assert!(restored.identical(&sub), "{bits}-bit lossy forest must round-trip");
+    }
+}
+
+#[test]
+fn quantization_shrinks_compressed_regression_size() {
+    let ds = rf_compress::data::synthetic::airfoil_regression(18);
+    let forest = Forest::train(&ds, &ForestParams::regression(8), 4);
+    let full = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let (q7, _) = lossy::quantize_fits(&forest, 7, lossy::QuantizeMethod::Uniform).unwrap();
+    let c7 = CompressedForest::compress(&q7, &ds, &CompressOptions::default()).unwrap();
+    assert!(
+        c7.total_bytes() < full.total_bytes(),
+        "7-bit fits {} must beat 64-bit {}",
+        c7.total_bytes(),
+        full.total_bytes()
+    );
+    // the paper's linear-in-|A0| size trend
+    let half = lossy::subsample_trees(&q7, 4, 5);
+    let ch = CompressedForest::compress(&half, &ds, &CompressOptions::default()).unwrap();
+    let ratio = ch.total_bytes() as f64 / c7.total_bytes() as f64;
+    assert!(
+        (0.3..0.8).contains(&ratio),
+        "half the trees should land near half the size (ratio {ratio:.2})"
+    );
+}

@@ -1,0 +1,247 @@
+//! Property-based tests over the codec substrates and the compression
+//! invariants (in-tree `testing::prop` framework; set `RF_PROP_CASES` to
+//! raise the case count).
+
+use rf_compress::coding::arith::{self, FreqModel};
+use rf_compress::coding::bitio::{BitReader, BitWriter};
+use rf_compress::coding::entropy;
+use rf_compress::coding::f64pack;
+use rf_compress::coding::huffman::HuffmanCode;
+use rf_compress::coding::lz;
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::data::{Column, Dataset, Feature, Target};
+use rf_compress::forest::{Forest, ForestParams, TreeParams};
+use rf_compress::testing::prop::{forall, Gen};
+
+#[test]
+fn prop_huffman_roundtrip_any_distribution() {
+    forall("huffman roundtrip", |g: &mut Gen| {
+        let alpha = g.usize_in(1, 200);
+        let counts = g.counts(alpha, 1000, 0.4);
+        let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let code = HuffmanCode::from_weights(&weights).map_err(|e| e.to_string())?;
+        // sequence drawn only from symbols with weight > 0
+        let active: Vec<u32> = (0..alpha as u32).filter(|&s| counts[s as usize] > 0).collect();
+        let n = g.usize_in(0, 500);
+        let seq: Vec<u32> = (0..n).map(|_| active[g.usize_in(0, active.len() - 1)]).collect();
+        let mut w = BitWriter::new();
+        code.encode_all(&seq, &mut w).map_err(|e| e.to_string())?;
+        let bytes = w.into_bytes();
+        let out = code
+            .decoder()
+            .decode_all(&mut BitReader::new(&bytes), seq.len())
+            .map_err(|e| e.to_string())?;
+        if out != seq {
+            return Err("decode mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_huffman_kraft_and_optimality() {
+    forall("huffman kraft + H+1 bound", |g: &mut Gen| {
+        let alpha = g.usize_in(2, 100);
+        let counts = g.counts(alpha, 10_000, 0.3);
+        let weights: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        let code = HuffmanCode::from_weights(&weights).map_err(|e| e.to_string())?;
+        let kraft: f64 = code
+            .lengths()
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        if kraft > 1.0 + 1e-9 {
+            return Err(format!("kraft {kraft} > 1"));
+        }
+        let p = entropy::normalize(&counts);
+        let h = entropy::entropy_probs(&p);
+        let r = code.expected_length(&p);
+        if !(r >= h - 1e-9 && r < h + 1.0) {
+            return Err(format!("R={r} outside [H, H+1) for H={h}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arith_roundtrip_and_rate() {
+    forall("arith roundtrip", |g: &mut Gen| {
+        let alpha = g.usize_in(1, 64);
+        let counts = g.counts(alpha, 500, 0.5);
+        let model = FreqModel::from_freqs(&counts).map_err(|e| e.to_string())?;
+        let active: Vec<u32> = (0..alpha as u32).filter(|&s| counts[s as usize] > 0).collect();
+        let n = g.usize_in(0, 400);
+        let seq: Vec<u32> = (0..n).map(|_| active[g.usize_in(0, active.len() - 1)]).collect();
+        let mut w = BitWriter::new();
+        arith::encode_sequence(&model, &seq, &mut w).map_err(|e| e.to_string())?;
+        let bytes = w.into_bytes();
+        let out = arith::decode_sequence(&model, &mut BitReader::new(&bytes), seq.len())
+            .map_err(|e| e.to_string())?;
+        if out != seq {
+            return Err("decode mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lz_roundtrip_any_bytes() {
+    forall("lz roundtrip", |g: &mut Gen| {
+        // mix random and repetitive segments
+        let mut data = g.bytes(2000);
+        let rep = g.bytes(16);
+        for _ in 0..g.usize_in(0, 20) {
+            data.extend_from_slice(&rep);
+        }
+        let c = lz::compress_to_bytes(&data);
+        let out = lz::decompress_from_bytes(&c).map_err(|e| e.to_string())?;
+        if out != data {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f64pack_bit_exact() {
+    forall("f64pack", |g: &mut Gen| {
+        let n = g.usize_in(0, 300);
+        let values: Vec<f64> = (0..n)
+            .map(|_| {
+                let scale = 10f64.powi(g.usize_in(0, 12) as i32 - 6);
+                (g.f64_in(-1.0, 1.0)) * scale
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        f64pack::write_block(&values, &mut w).map_err(|e| e.to_string())?;
+        let bytes = w.into_bytes();
+        let out = f64pack::read_block(&mut BitReader::new(&bytes)).map_err(|e| e.to_string())?;
+        if out.len() != values.len()
+            || out.iter().zip(&values).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err("bit-exactness violated".into());
+        }
+        Ok(())
+    });
+}
+
+/// Random dataset generator for the whole-pipeline property.
+fn random_dataset(g: &mut Gen) -> Dataset {
+    let n = g.usize_in(30, 200);
+    let d = g.usize_in(1, 6);
+    let mut features = Vec::new();
+    for j in 0..d {
+        if g.bool(0.6) {
+            features.push(Feature {
+                name: format!("n{j}"),
+                column: Column::Numeric((0..n).map(|_| g.f64_in(-5.0, 5.0)).collect()),
+            });
+        } else {
+            let levels = g.usize_in(2, 8) as u32;
+            features.push(Feature {
+                name: format!("c{j}"),
+                column: Column::Categorical {
+                    values: (0..n).map(|_| g.usize_in(0, levels as usize - 1) as u32).collect(),
+                    levels,
+                },
+            });
+        }
+    }
+    let target = if g.bool(0.5) {
+        let classes = g.usize_in(2, 4) as u32;
+        Target::Classification {
+            labels: (0..n).map(|_| g.usize_in(0, classes as usize - 1) as u32).collect(),
+            classes,
+        }
+    } else {
+        Target::Regression((0..n).map(|_| g.f64_in(-10.0, 10.0)).collect())
+    };
+    Dataset { name: "prop".into(), features, target }
+}
+
+#[test]
+fn prop_pipeline_lossless_on_random_datasets() {
+    // the central invariant: ANY forest on ANY (valid) dataset round-trips
+    forall("pipeline lossless", |g: &mut Gen| {
+        let ds = random_dataset(g);
+        ds.validate().map_err(|e| e.to_string())?;
+        let n_trees = g.usize_in(1, 5);
+        let params = ForestParams {
+            n_trees,
+            tree: TreeParams {
+                mtry: Some(g.usize_in(1, ds.num_features())),
+                min_leaf: g.usize_in(1, 5),
+                max_depth: if g.bool(0.3) { g.usize_in(1, 6) as u32 } else { u32::MAX },
+            },
+            bootstrap: g.bool(0.8),
+            workers: 1,
+        };
+        let forest = Forest::train(&ds, &params, g.rng().next_u64());
+        let opts = CompressOptions {
+            k_max: g.usize_in(1, 6),
+            seed: g.rng().next_u64(),
+            ..Default::default()
+        };
+        let cf = CompressedForest::compress(&forest, &ds, &opts).map_err(|e| e.to_string())?;
+        let restored = cf.decompress().map_err(|e| e.to_string())?;
+        if !restored.identical(&forest) {
+            return Err("round-trip differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_container_bitflip_never_panics() {
+    // corruption robustness: a flipped bit or truncation must produce a
+    // clean Err (or, rarely, a *valid* different forest) — never a panic
+    forall("container corruption", |g: &mut Gen| {
+        let ds = random_dataset(g);
+        let params = if ds.target.is_classification() {
+            ForestParams::classification(2)
+        } else {
+            ForestParams::regression(2)
+        };
+        let forest = Forest::train(&ds, &params, 3);
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| e.to_string())?;
+        let mut bytes = cf.bytes.clone();
+        if g.bool(0.5) && !bytes.is_empty() {
+            let i = g.usize_in(0, bytes.len() - 1);
+            let bit = g.usize_in(0, 7);
+            bytes[i] ^= 1 << bit;
+        } else {
+            let keep = g.usize_in(0, bytes.len());
+            bytes.truncate(keep);
+        }
+        // must not panic; Err is expected, Ok(valid forest) is acceptable
+        let _ = CompressedForest::from_bytes(bytes).and_then(|c| c.decompress());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kl_clustering_objective_nonincreasing_in_k() {
+    use rf_compress::cluster::kmeans::{cluster_k, NativeEngine};
+    forall("kmeans objective monotone", |g: &mut Gen| {
+        let m = g.usize_in(2, 20);
+        let b = g.usize_in(2, 12);
+        let mut p = Vec::with_capacity(m * b);
+        for _ in 0..m {
+            let row = g.probs(b, 0.3);
+            p.extend(row);
+        }
+        let w: Vec<f64> = (0..m).map(|_| g.f64_in(1.0, 100.0)).collect();
+        let mut eng = NativeEngine;
+        let mut prev = f64::INFINITY;
+        for k in 1..=m.min(5) {
+            let c = cluster_k(&p, &w, m, b, k, 42, &mut eng).map_err(|e| e.to_string())?;
+            if c.data_bits > prev + 1e-6 {
+                return Err(format!("k={k}: {} > {prev}", c.data_bits));
+            }
+            prev = c.data_bits;
+        }
+        Ok(())
+    });
+}
