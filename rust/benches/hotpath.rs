@@ -3,9 +3,13 @@
 //! * cluster-step: native vs XLA engine at each artifact bucket size
 //! * compression throughput (trees/s) end to end
 //! * prediction latency: compressed prefix-decode vs decompressed forest
+//! * serving hot path: single-row latency + batch `predict_all` throughput
+//!   scaling with worker threads on a ≥100-tree forest (zero-copy parse,
+//!   tree-parallel batches)
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
 //!
-//! Run: `cargo bench --bench hotpath` (add `-- cluster|compress|predict|codec`)
+//! Run: `cargo bench --bench hotpath`
+//! (add `-- cluster|compress|predict|serve|codec`)
 
 use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
 use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor};
@@ -27,6 +31,9 @@ fn main() {
     }
     if run("predict") {
         bench_predict(&cfg);
+    }
+    if run("serve") {
+        bench_serve(&cfg);
     }
     if run("codec") {
         bench_codec();
@@ -165,6 +172,56 @@ fn bench_predict(cfg: &rf_compress::util::bench::BenchConfig) {
         rf_compress::util::stats::human_bytes(cf.total_bytes()),
         decompressed.total_nodes()
     );
+}
+
+fn bench_serve(cfg: &rf_compress::util::bench::BenchConfig) {
+    println!("== serving hot path: zero-copy parse + tree-parallel batches ==");
+    let ds = synthetic::airfoil_classification(1234);
+    // the serving acceptance measurement wants a realistic ensemble
+    let n_trees = cfg.trees.max(100);
+    let forest = Forest::train(&ds, &ForestParams::classification(n_trees), cfg.seed);
+    let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+
+    // parse cost (zero-copy: spans into the shared Arc buffer, no section
+    // allocation) — this is the per-insert cost of the model store
+    let t_parse = time_it(0.5, 3, || {
+        cf.parse().unwrap();
+    });
+    println!(
+        "container parse ({}): {t_parse}",
+        rf_compress::util::stats::human_bytes(cf.total_bytes())
+    );
+
+    let predictor = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+
+    // single-row latency (the subscriber-device path)
+    let rows: Vec<usize> = (0..ds.num_rows()).step_by(37).collect();
+    let mut i = 0usize;
+    let t_row = time_it(1.0, 5, || {
+        let row = rows[i % rows.len()];
+        i += 1;
+        predictor.predict_row(&ds, row).unwrap();
+    });
+    println!("single-row latency ({n_trees} trees): {t_row}");
+
+    // batch throughput scaling with worker threads
+    let n_rows = ds.num_rows();
+    let mut t = Table::new(&["workers", "batch predict_all", "rows/s", "speedup"]);
+    let mut base = None::<f64>;
+    for &w in &[1usize, 2, 4, 8] {
+        let tb = time_it(1.0, 3, || {
+            predictor.predict_all_workers(&ds, w).unwrap();
+        });
+        let b = *base.get_or_insert(tb.median);
+        t.row(&[
+            w.to_string(),
+            format!("{tb}"),
+            format!("{:.0}", tb.per_sec(n_rows as f64)),
+            format!("{:.2}x", b / tb.median),
+        ]);
+    }
+    t.print();
+    println!();
 }
 
 fn bench_codec() {

@@ -33,12 +33,25 @@ impl FreqModel {
     /// Quantize a probability vector to integer frequencies summing to at
     /// most [`MAX_TOTAL`], giving every *positive*-probability symbol a
     /// nonzero frequency (losslessness guard).
+    ///
+    /// Typed-error contract: empty, oversized (≥ [`MAX_TOTAL`] symbols),
+    /// negative, non-finite, or all-zero inputs return `Err` — never panic
+    /// (an oversized alphabet used to underflow the budget subtraction).
     pub fn from_probs(p: &[f64]) -> Result<Self> {
         if p.is_empty() {
             bail!("empty alphabet");
         }
+        if p.len() as u64 >= MAX_TOTAL {
+            bail!(
+                "alphabet of {} symbols exceeds the coder's frequency budget ({MAX_TOTAL})",
+                p.len()
+            );
+        }
+        if p.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+            bail!("probabilities must be finite and non-negative");
+        }
         let total_p: f64 = p.iter().sum();
-        if total_p <= 0.0 {
+        if !total_p.is_finite() || total_p <= 0.0 {
             bail!("all probabilities zero");
         }
         let budget = MAX_TOTAL - p.len() as u64; // reserve 1 per symbol
@@ -64,7 +77,10 @@ impl FreqModel {
         if freqs.is_empty() {
             bail!("empty alphabet");
         }
-        let total: u64 = freqs.iter().sum();
+        let total: u64 = freqs
+            .iter()
+            .try_fold(0u64, |acc, &f| acc.checked_add(f))
+            .context("total frequency overflows u64")?;
         if total == 0 {
             bail!("zero total frequency");
         }
@@ -412,6 +428,45 @@ mod tests {
         assert!(m.freq(0) > 0);
         assert!(m.freq(1) > 0, "tiny but positive prob must stay encodable");
         assert!(m.freq(2) > 0);
+    }
+
+    #[test]
+    fn from_probs_oversized_alphabet_is_typed_error() {
+        // regression: this used to underflow `MAX_TOTAL - len` and panic
+        let p = vec![1.0; MAX_TOTAL as usize + 10];
+        assert!(FreqModel::from_probs(&p).is_err());
+        let p = vec![1.0; MAX_TOTAL as usize];
+        assert!(FreqModel::from_probs(&p).is_err());
+    }
+
+    #[test]
+    fn from_probs_rejects_degenerate_inputs() {
+        assert!(FreqModel::from_probs(&[]).is_err());
+        assert!(FreqModel::from_probs(&[0.0, 0.0]).is_err());
+        assert!(FreqModel::from_probs(&[f64::NAN, 1.0]).is_err());
+        assert!(FreqModel::from_probs(&[f64::INFINITY]).is_err());
+        assert!(FreqModel::from_probs(&[-1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn from_freqs_overflow_is_typed_error() {
+        assert!(FreqModel::from_freqs(&[u64::MAX, u64::MAX]).is_err());
+        assert!(FreqModel::from_freqs(&[MAX_TOTAL + 1]).is_err());
+        assert!(FreqModel::from_freqs(&[]).is_err());
+        assert!(FreqModel::from_freqs(&[0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn empty_input_stream_roundtrips_without_bytes() {
+        let model = FreqModel::from_freqs(&[3, 1]).unwrap();
+        let mut w = BitWriter::new();
+        encode_sequence(&model, &[], &mut w).unwrap();
+        let bytes = w.into_bytes();
+        let out = decode_sequence(&model, &mut BitReader::new(&bytes), 0).unwrap();
+        assert!(out.is_empty());
+        // decoding zero symbols from a completely empty buffer is also fine
+        let out = decode_sequence(&model, &mut BitReader::new(&[]), 0).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::model::extract::{SplitAlphabet, ValueAlphabets};
 use crate::model::keys::{ContextKey, ModelConditioning, ROOT_FATHER};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"RFCZ";
 pub const VERSION: u8 = 1;
@@ -119,8 +120,14 @@ pub struct FeatureMeta {
     pub levels: Option<u32>,
 }
 
-/// Parsed header + side tables; payload sections stay as byte ranges into
-/// the container buffer (decoded on demand).
+/// Parsed header + side tables; payload sections stay as **zero-copy
+/// views** into the shared container buffer (decoded on demand).
+///
+/// The whole container lives in one `Arc<[u8]>`; parsing records only
+/// `(offset, length)` spans for the payload sections, so building a
+/// [`crate::compress::CompressedPredictor`] allocates nothing per section
+/// and any number of parsed containers/predictors can share one buffer
+/// (the model store's resident-bytes accounting counts the buffer once).
 #[derive(Debug, Clone)]
 pub struct ParsedContainer {
     pub classification: bool,
@@ -153,14 +160,55 @@ pub struct ParsedContainer {
     pub vars_ranges: Vec<(usize, usize)>,
     pub splits_ranges: Vec<(usize, usize)>,
     pub fits_ranges: Vec<(usize, usize)>,
-    /// the payload bytes of each section
-    pub vars_payload: Vec<u8>,
-    pub splits_payload: Vec<u8>,
-    pub fits_payload: Vec<u8>,
+    /// the shared container buffer; payload sections are views into it
+    buf: Arc<[u8]>,
+    /// absolute byte spans of the payload sections within `buf`
+    vars_span: (usize, usize),
+    splits_span: (usize, usize),
+    fits_span: (usize, usize),
     pub sizes: SectionSizes,
 }
 
 impl ParsedContainer {
+    /// The shared container buffer this parse aliases (no copies were made
+    /// of the payload sections; everything below points into this).
+    pub fn buffer(&self) -> &Arc<[u8]> {
+        &self.buf
+    }
+
+    /// The VARS payload section — a view into the shared buffer.
+    pub fn vars_bytes(&self) -> &[u8] {
+        &self.buf[self.vars_span.0..self.vars_span.1]
+    }
+
+    /// The SPLITS payload section — a view into the shared buffer.
+    pub fn splits_bytes(&self) -> &[u8] {
+        &self.buf[self.splits_span.0..self.splits_span.1]
+    }
+
+    /// The FITS payload section — a view into the shared buffer.
+    pub fn fits_bytes(&self) -> &[u8] {
+        &self.buf[self.fits_span.0..self.fits_span.1]
+    }
+
+    /// Tree `t`'s variable-name stream (zero-copy slice).
+    pub fn tree_vars(&self, t: usize) -> &[u8] {
+        let (s, e) = self.vars_ranges[t];
+        &self.vars_bytes()[s..e]
+    }
+
+    /// Tree `t`'s split-rank stream (zero-copy slice).
+    pub fn tree_splits(&self, t: usize) -> &[u8] {
+        let (s, e) = self.splits_ranges[t];
+        &self.splits_bytes()[s..e]
+    }
+
+    /// Tree `t`'s fit stream (zero-copy slice).
+    pub fn tree_fits(&self, t: usize) -> &[u8] {
+        let (s, e) = self.fits_ranges[t];
+        &self.fits_bytes()[s..e]
+    }
+
     /// Whether any split alphabet is dataset-indexed (paper mode) and must
     /// be regenerated via [`Self::attach_dataset`] before decoding.
     pub fn needs_dataset(&self) -> bool {
@@ -288,7 +336,13 @@ fn write_payload_section(w: &mut BitWriter, trees: &[Vec<u8>]) {
     }
 }
 
-fn read_payload_section(r: &mut BitReader) -> Result<(Vec<(usize, usize)>, Vec<u8>)> {
+/// Read a payload section's offset table, then *seek past* the payload body
+/// instead of copying it: the returned span indexes the source buffer
+/// directly (the zero-copy contract of [`ParsedContainer`]).
+fn read_payload_spans(
+    r: &mut BitReader,
+    buf_len: usize,
+) -> Result<(Vec<(usize, usize)>, (usize, usize))> {
     let n = r.read_varint().context("payload tree count")? as usize;
     if n > 50_000_000 {
         bail!("implausible tree count {n}");
@@ -306,17 +360,19 @@ fn read_payload_section(r: &mut BitReader) -> Result<(Vec<(usize, usize)>, Vec<u
         bail!("implausible payload size {total}");
     }
     r.align_byte();
-    let mut payload = Vec::with_capacity(total);
-    for _ in 0..total {
-        payload.push(r.read_byte().context("payload bytes")?);
+    let start = (r.bit_pos() / 8) as usize;
+    let end = start.checked_add(total).context("payload span overflow")?;
+    if end > buf_len {
+        bail!("payload section truncated ({total} bytes at {start}, buffer holds {buf_len})");
     }
+    r.seek_bits(end as u64 * 8);
     let mut ranges = Vec::with_capacity(n);
     let mut off = 0usize;
     for l in lens {
         ranges.push((off, off + l));
         off += l;
     }
-    Ok((ranges, payload))
+    Ok((ranges, (start, end)))
 }
 
 impl ContainerBuilder {
@@ -474,8 +530,18 @@ impl ContainerBuilder {
 
 // ---------------------------------------------------------------- parsing
 
-/// Parse a container buffer (full validation; payload kept as owned bytes).
+/// Parse a container from a borrowed buffer. Copies the bytes **once** into
+/// a shared `Arc<[u8]>` and delegates to [`parse_arc`]; callers that already
+/// hold an `Arc` (the model store, [`crate::compress::CompressedForest`])
+/// should call [`parse_arc`] directly for a fully zero-copy parse.
 pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
+    parse_arc(Arc::from(bytes))
+}
+
+/// Parse a shared container buffer (full validation; payload sections are
+/// recorded as spans into `buf`, never copied).
+pub fn parse_arc(buf: Arc<[u8]>) -> Result<ParsedContainer> {
+    let bytes: &[u8] = &buf;
     let mut r = BitReader::new(bytes);
     let mut sizes = SectionSizes::default();
 
@@ -655,25 +721,35 @@ pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
         bail!("implausible struct size");
     }
     r.align_byte();
-    let mut struct_bytes = Vec::with_capacity(sb_len);
-    for _ in 0..sb_len {
-        struct_bytes.push(r.read_byte().context("struct bytes")?);
+    let sb_start = (r.bit_pos() / 8) as usize;
+    let sb_end = sb_start.checked_add(sb_len).context("struct span overflow")?;
+    if sb_end > bytes.len() {
+        bail!("structure section truncated");
     }
+    let struct_bytes = &bytes[sb_start..sb_end];
+    r.seek_bits(sb_end as u64 * 8);
     sizes.structure = (r.bit_pos() - mark) / 8;
 
     // decode structure: 1-byte mode prefix (0 = LZSS, 1 = raw packed)
     if struct_bytes.is_empty() {
         bail!("empty structure section");
     }
-    let packed = match struct_bytes[0] {
-        0 => crate::coding::lz::decompress_from_bytes(&struct_bytes[1..])
-            .context("structure LZ stream")?,
-        1 => struct_bytes[1..].to_vec(),
+    let lz_owned;
+    let packed: &[u8] = match struct_bytes[0] {
+        0 => {
+            lz_owned = crate::coding::lz::decompress_from_bytes(&struct_bytes[1..])
+                .context("structure LZ stream")?;
+            &lz_owned
+        }
+        1 => &struct_bytes[1..],
         v => bail!("unknown structure mode {v}"),
     };
     // the packed stream carries total bit count as a varint prefix
-    let mut zr = BitReader::new(&packed);
+    let mut zr = BitReader::new(packed);
     let total_bits = zr.read_varint().context("zaks bit count")?;
+    if total_bits > packed.len() as u64 * 8 {
+        bail!("zaks bit count {total_bits} exceeds the packed stream");
+    }
     let mut zaks_bits = Vec::with_capacity(total_bits as usize);
     for _ in 0..total_bits {
         zaks_bits.push(zr.read_bit().context("zaks bits")?);
@@ -681,13 +757,13 @@ pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
 
     // ---- VARS / SPLITS / FITS ----
     let mark = r.bit_pos();
-    let (vars_ranges, vars_payload) = read_payload_section(&mut r)?;
+    let (vars_ranges, vars_span) = read_payload_spans(&mut r, bytes.len())?;
     sizes.var_names = (r.bit_pos() - mark) / 8;
     let mark = r.bit_pos();
-    let (splits_ranges, splits_payload) = read_payload_section(&mut r)?;
+    let (splits_ranges, splits_span) = read_payload_spans(&mut r, bytes.len())?;
     sizes.split_values = (r.bit_pos() - mark) / 8;
     let mark = r.bit_pos();
-    let (fits_ranges, fits_payload) = read_payload_section(&mut r)?;
+    let (fits_ranges, fits_span) = read_payload_spans(&mut r, bytes.len())?;
     sizes.fits = (r.bit_pos() - mark) / 8;
 
     if vars_ranges.len() != n_trees
@@ -718,9 +794,10 @@ pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
         vars_ranges,
         splits_ranges,
         fits_ranges,
-        vars_payload,
-        splits_payload,
-        fits_payload,
+        buf,
+        vars_span,
+        splits_span,
+        fits_span,
         sizes,
     })
 }
@@ -775,10 +852,62 @@ mod tests {
         write_payload_section(&mut w, &trees);
         let bytes = w.into_bytes();
         let mut r = BitReader::new(&bytes);
-        let (ranges, payload) = read_payload_section(&mut r).unwrap();
+        let (ranges, span) = read_payload_spans(&mut r, bytes.len()).unwrap();
+        let payload = &bytes[span.0..span.1];
         assert_eq!(ranges.len(), 3);
         assert_eq!(&payload[ranges[0].0..ranges[0].1], &[1, 2, 3]);
         assert_eq!(ranges[1].0, ranges[1].1);
         assert_eq!(&payload[ranges[2].0..ranges[2].1], &[42u8; 10][..]);
+        // the span must cover exactly the payload tail of the section
+        assert_eq!(span.1 - span.0, 13);
+        assert_eq!(span.1, bytes.len());
+    }
+
+    #[test]
+    fn truncated_payload_section_errors() {
+        let trees = vec![vec![7u8; 64]];
+        let mut w = BitWriter::new();
+        write_payload_section(&mut w, &trees);
+        let bytes = w.into_bytes();
+        let cut = &bytes[..bytes.len() - 8];
+        let mut r = BitReader::new(cut);
+        assert!(read_payload_spans(&mut r, cut.len()).is_err());
+    }
+
+    #[test]
+    fn zero_copy_sections_share_the_buffer() {
+        use crate::compress::pipeline::{CompressOptions, CompressedForest};
+        use crate::data::synthetic;
+        use crate::forest::{Forest, ForestParams};
+        let ds = synthetic::iris(99);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 9);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let buf: Arc<[u8]> = cf.bytes.clone();
+        let pc = parse_arc(buf.clone()).unwrap();
+        // the parse holds the very same allocation...
+        assert!(Arc::ptr_eq(pc.buffer(), &buf), "parse must not copy the buffer");
+        // ...and every payload section is a pointer into it (no per-section
+        // copies) — the zero-copy acceptance check
+        let base = buf.as_ptr() as usize;
+        for (name, sect) in [
+            ("vars", pc.vars_bytes()),
+            ("splits", pc.splits_bytes()),
+            ("fits", pc.fits_bytes()),
+        ] {
+            let p = sect.as_ptr() as usize;
+            assert!(
+                p >= base && p + sect.len() <= base + buf.len(),
+                "{name} section must alias the shared buffer"
+            );
+        }
+        // per-tree slices alias the same allocation too
+        for t in 0..pc.n_trees {
+            let p = pc.tree_fits(t).as_ptr() as usize;
+            assert!(p >= base && p + pc.tree_fits(t).len() <= base + buf.len());
+        }
+        // and a second parse of the same Arc shares it as well (two
+        // predictors, one resident buffer)
+        let pc2 = parse_arc(buf.clone()).unwrap();
+        assert!(Arc::ptr_eq(pc2.buffer(), pc.buffer()));
     }
 }

@@ -74,9 +74,14 @@ impl Default for CompressOptions {
 
 /// A compressed forest: the container bytes plus the size breakdown and the
 /// clustering diagnostics the benches report.
+///
+/// The bytes live in an `Arc<[u8]>` so that parsing ([`Self::parse`]) and
+/// every predictor built on top share the single buffer — cloning a
+/// `CompressedForest` or spinning up N predictors never duplicates the
+/// container.
 #[derive(Debug, Clone)]
 pub struct CompressedForest {
-    pub bytes: Vec<u8>,
+    pub bytes: std::sync::Arc<[u8]>,
     pub sizes: SectionSizes,
     /// (family label, chosen K) per clustering sweep, for §6-style analysis.
     pub cluster_ks: Vec<(String, usize)>,
@@ -426,7 +431,7 @@ impl CompressedForest {
             fits_trees,
         };
         let (bytes, sizes) = builder.serialize();
-        Ok(CompressedForest { bytes, sizes, cluster_ks })
+        Ok(CompressedForest { bytes: bytes.into(), sizes, cluster_ks })
     }
 
     /// Total compressed size in bytes.
@@ -434,9 +439,10 @@ impl CompressedForest {
         self.bytes.len() as u64
     }
 
-    /// Parse the container (validates everything up front).
+    /// Parse the container (validates everything up front). Zero-copy: the
+    /// parse shares this forest's `Arc<[u8]>` buffer.
     pub fn parse(&self) -> Result<ParsedContainer> {
-        container::parse(&self.bytes)
+        container::parse_arc(self.bytes.clone())
     }
 
     /// Full decompression: rebuild the forest bit-exactly. Errors when the
@@ -462,8 +468,9 @@ impl CompressedForest {
     }
 
     /// Wrap existing container bytes (e.g. read from disk).
-    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
-        let pc = container::parse(&bytes)?;
+    pub fn from_bytes(bytes: impl Into<std::sync::Arc<[u8]>>) -> Result<Self> {
+        let bytes: std::sync::Arc<[u8]> = bytes.into();
+        let pc = container::parse_arc(bytes.clone())?;
         let sizes = pc.sizes;
         Ok(CompressedForest { bytes, sizes, cluster_ks: Vec::new() })
     }
@@ -574,12 +581,9 @@ pub fn decode_tree(
 ) -> Result<Tree> {
     let n = shape.node_count();
     let depths = shape.depths();
-    let (vs, ve) = pc.vars_ranges[t];
-    let (ss, se) = pc.splits_ranges[t];
-    let (fs, fe) = pc.fits_ranges[t];
-    let mut vars_r = BitReader::new(&pc.vars_payload[vs..ve]);
-    let mut splits_r = BitReader::new(&pc.splits_payload[ss..se]);
-    let mut fits_r = BitReader::new(&pc.fits_payload[fs..fe]);
+    let mut vars_r = BitReader::new(pc.tree_vars(t));
+    let mut splits_r = BitReader::new(pc.tree_splits(t));
+    let mut fits_r = BitReader::new(pc.tree_fits(t));
     let mut arith = match pc.fit_codec {
         FitCodec::Arith => Some(ArithDecoder::new(fits_r.clone())),
         FitCodec::Huffman | FitCodec::Raw64 => None,
@@ -790,7 +794,7 @@ mod tests {
         let reloaded = CompressedForest::from_bytes(cf.bytes.clone()).unwrap();
         assert!(reloaded.decompress().unwrap().identical(&f));
         // corrupted magic must fail
-        let mut bad = cf.bytes.clone();
+        let mut bad = cf.bytes.to_vec();
         bad[0] = b'X';
         assert!(CompressedForest::from_bytes(bad).is_err());
     }

@@ -33,7 +33,9 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 /// A prediction engine over a parsed container. Owns the container through
-/// an `Arc`, so it can live in long-running services (the model store).
+/// an `Arc`, so it can live in long-running services (the model store); the
+/// container itself only *views* the shared byte buffer, so any number of
+/// predictors over one model cost a single resident copy.
 pub struct CompressedPredictor {
     pc: Arc<ParsedContainer>,
     /// per-tree Zaks shapes (split once on construction)
@@ -41,6 +43,8 @@ pub struct CompressedPredictor {
     vn_decoders: Vec<HuffmanDecoder>,
     split_decoders: Vec<Vec<HuffmanDecoder>>,
     fit_decoders: Vec<HuffmanDecoder>,
+    /// worker threads for the batch path (1 = sequential).
+    workers: usize,
 }
 
 impl CompressedPredictor {
@@ -67,7 +71,27 @@ impl CompressedPredictor {
             .map(|per| per.iter().map(|d| d.decoder()).collect())
             .collect();
         let fit_decoders = pc.fit_dicts.iter().map(|d| d.decoder()).collect();
-        Ok(CompressedPredictor { pc, shapes, vn_decoders, split_decoders, fit_decoders })
+        Ok(CompressedPredictor {
+            pc,
+            shapes,
+            vn_decoders,
+            split_decoders,
+            fit_decoders,
+            workers: 1,
+        })
+    }
+
+    /// Set the worker-thread count used by [`Self::predict_all`] (builder
+    /// style). Trees are independent, so the batch path shards them across
+    /// workers; 1 keeps the sequential path.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// The configured batch worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// The underlying container.
@@ -133,12 +157,9 @@ impl CompressedPredictor {
         let n = shape.node_count();
         let depths = shape.depths();
         let pc = &*self.pc;
-        let (vs, ve) = pc.vars_ranges[t];
-        let (ss, se) = pc.splits_ranges[t];
-        let (fs, fe) = pc.fits_ranges[t];
-        let mut vars_r = BitReader::new(&pc.vars_payload[vs..ve]);
-        let mut splits_r = BitReader::new(&pc.splits_payload[ss..se]);
-        let mut fits_r = BitReader::new(&pc.fits_payload[fs..fe]);
+        let mut vars_r = BitReader::new(pc.tree_vars(t));
+        let mut splits_r = BitReader::new(pc.tree_splits(t));
+        let mut fits_r = BitReader::new(pc.tree_fits(t));
         let mut arith = match pc.fit_codec {
             FitCodec::Arith => Some(ArithDecoder::new(fits_r.clone())),
             FitCodec::Huffman | FitCodec::Raw64 => None,
@@ -239,33 +260,43 @@ impl CompressedPredictor {
     }
 
     /// Batch prediction: per tree, decode its symbol arrays once (transient)
-    /// and route every row. Memory stays O(largest tree), never O(forest).
+    /// and route every row through them — memory stays O(largest tree) per
+    /// worker, never O(forest). Trees are independent units of work, so the
+    /// batch shards them across the configured worker threads
+    /// ([`Self::with_workers`]); each worker reuses its per-tree transient
+    /// decode scratch across every row of the batch.
     pub fn predict_all(&self, ds: &Dataset) -> Result<Predictions> {
+        self.predict_all_workers(ds, self.workers)
+    }
+
+    /// As [`Self::predict_all`] with an explicit worker count (the bench
+    /// knob). Classification aggregation is exact under any sharding (vote
+    /// counts commute); regression sums accumulate per shard and are added
+    /// in shard order, which can differ from the sequential sum only by
+    /// float rounding in the last ulp (1 worker = the exact sequential sum).
+    pub fn predict_all_workers(&self, ds: &Dataset, workers: usize) -> Result<Predictions> {
         self.check_schema(ds)?;
         let n_rows = ds.num_rows();
-        let mut votes = vec![0u32; n_rows * self.pc.classes.max(1) as usize];
-        let mut sums = vec![0.0f64; n_rows];
-        let vn_dec = &self.vn_decoders;
-        let sp_dec = &self.split_decoders;
-        let ft_dec = &self.fit_decoders;
-        for t in 0..self.pc.n_trees {
-            let tree = super::pipeline::decode_tree(
-                &*self.pc,
-                t,
-                &self.shapes[t],
-                vn_dec,
-                sp_dec,
-                ft_dec,
-            )?;
-            for row in 0..n_rows {
-                match tree.predict_row(ds, row) {
-                    crate::forest::Fit::Class(c) => {
-                        votes[row * self.pc.classes as usize + c as usize] += 1
+        let k = self.pc.classes.max(1) as usize;
+        let tree_idx: Vec<usize> = (0..self.pc.n_trees).collect();
+        let (votes, sums) = crate::util::threads::parallel_fold(
+            &tree_idx,
+            workers.max(1),
+            |chunk| self.fold_trees(ds, chunk, n_rows, k),
+            |a, b| match (a, b) {
+                (Ok((mut va, mut sa)), Ok((vb, sb))) => {
+                    for (x, y) in va.iter_mut().zip(&vb) {
+                        *x += *y;
                     }
-                    crate::forest::Fit::Regression(v) => sums[row] += v,
+                    for (x, y) in sa.iter_mut().zip(&sb) {
+                        *x += *y;
+                    }
+                    Ok((va, sa))
                 }
-            }
-        }
+                (Err(e), _) | (_, Err(e)) => Err(e),
+            },
+        )
+        .context("empty forest")??;
         Ok(if self.pc.classification {
             let k = self.pc.classes as usize;
             Predictions::Classes(
@@ -283,6 +314,44 @@ impl CompressedPredictor {
         } else {
             Predictions::Values(sums.iter().map(|s| s / self.pc.n_trees as f64).collect())
         })
+    }
+
+    /// One worker's share of the batch: decode each assigned tree once into
+    /// a transient in-memory tree (the per-tree scratch), route every row
+    /// through it, and accumulate votes/sums locally — no shared state, no
+    /// locks; the caller reduces the per-worker accumulators in shard order.
+    fn fold_trees(
+        &self,
+        ds: &Dataset,
+        trees: &[usize],
+        n_rows: usize,
+        k: usize,
+    ) -> Result<(Vec<u32>, Vec<f64>)> {
+        let classification = self.pc.classification;
+        let mut votes = vec![0u32; if classification { n_rows * k } else { 0 }];
+        let mut sums = vec![0.0f64; if classification { 0 } else { n_rows }];
+        for &t in trees {
+            let tree = super::pipeline::decode_tree(
+                &self.pc,
+                t,
+                &self.shapes[t],
+                &self.vn_decoders,
+                &self.split_decoders,
+                &self.fit_decoders,
+            )?;
+            for row in 0..n_rows {
+                match tree.predict_row(ds, row) {
+                    crate::forest::Fit::Class(c) => {
+                        if c as usize >= k {
+                            bail!("decoded class {c} out of range (tree {t})");
+                        }
+                        votes[row * k + c as usize] += 1;
+                    }
+                    crate::forest::Fit::Regression(v) => sums[row] += v,
+                }
+            }
+        }
+        Ok((votes, sums))
     }
 
     /// Full forest reconstruction (delegates to the pipeline decoder).
@@ -385,6 +454,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        let ds = synthetic::wages(27);
+        let (f, cf) = setup(&ds, 12, true);
+        let pc = cf.parse().unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        let seq = p.predict_all_workers(&ds, 1).unwrap();
+        for w in [2, 3, 8] {
+            assert_eq!(p.predict_all_workers(&ds, w).unwrap(), seq, "{w} workers");
+        }
+        assert_eq!(seq, f.predict_all(&ds));
+        // builder-style configuration drives the default path
+        let p = p.with_workers(4);
+        assert_eq!(p.workers(), 4);
+        assert_eq!(p.predict_all(&ds).unwrap(), seq);
     }
 
     #[test]

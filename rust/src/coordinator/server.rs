@@ -7,7 +7,8 @@
 //! PREDICT <model> <v1>,<v2>,...     → OK <class|value>       (numeric vi;
 //!                                      categorical levels as c<idx>, e.g. c3)
 //! LIST                              → OK <model> <model> ...
-//! STATS                             → OK requests=.. batches=.. mean_us=.. max_us=..
+//! STATS                             → OK requests=.. batches=.. mean_us=..
+//!                                         max_us=.. evictions=..
 //! BYTES                             → OK resident=<bytes>
 //! QUIT                              → connection closes
 //! ```
@@ -17,6 +18,13 @@
 //! [`BATCH_MAX`]) and answers the whole batch against the store at once.
 //! With one queued request the store takes the cheap prefix-decode path;
 //! bigger flash crowds amortize a full per-tree decode across the batch.
+//!
+//! Lifecycle: the accept loop **blocks** on the listener (no nonblocking
+//! busy-spin); [`Server::stop`] wakes it with a loopback connection.
+//! Batcher threads retire themselves — deregistering their queue — when the
+//! server shuts down, when their channel is dropped, or when their model
+//! leaves the store (removal or LRU eviction), so dead per-model queues are
+//! reaped instead of accumulating.
 
 use super::store::{ModelStore, ObsValue};
 use crate::compress::predict::PredictOne;
@@ -24,8 +32,8 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -33,18 +41,34 @@ use std::time::Duration;
 pub const BATCH_MAX: usize = 64;
 /// How long the batcher waits to accumulate a batch.
 pub const BATCH_WINDOW: Duration = Duration::from_millis(2);
+/// Idle tick on which a batcher re-checks shutdown and model residency.
+const IDLE_TICK: Duration = Duration::from_millis(100);
 
 struct Job {
     values: Vec<ObsValue>,
     reply: Sender<Result<PredictOne, String>>,
 }
 
-/// The running server: listener thread + per-model batcher threads.
+/// Per-model batcher registry. Each entry carries a generation stamp so a
+/// retiring batcher only deregisters *itself*, never a successor that took
+/// the name over after a model was re-inserted.
+struct Batchers {
+    map: Mutex<HashMap<String, (u64, Sender<Job>)>>,
+    next_gen: AtomicU64,
+}
+
+impl Batchers {
+    fn new() -> Self {
+        Batchers { map: Mutex::new(HashMap::new()), next_gen: AtomicU64::new(0) }
+    }
+}
+
+/// The running server: blocking listener thread + per-model batcher threads.
 pub struct Server {
     store: Arc<ModelStore>,
     addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
-    queues: Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    batchers: Arc<Batchers>,
 }
 
 impl Server {
@@ -53,35 +77,42 @@ impl Server {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let queues: Arc<Mutex<HashMap<String, Sender<Job>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let batchers = Arc::new(Batchers::new());
 
         {
             let store = store.clone();
             let shutdown = shutdown.clone();
-            let queues = queues.clone();
+            let batchers = batchers.clone();
             std::thread::spawn(move || {
-                while !shutdown.load(Ordering::Relaxed) {
+                // blocking accept: zero CPU while idle; stop() wakes us with
+                // a loopback connection
+                loop {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            if shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
                             let store = store.clone();
-                            let queues = queues.clone();
+                            let batchers = batchers.clone();
                             let shutdown = shutdown.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, &store, &queues, &shutdown);
+                                let _ = handle_conn(stream, &store, &batchers, &shutdown);
                             });
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                        Err(_) => {
+                            if shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // transient accept error (e.g. EMFILE): back off
+                            // briefly instead of spinning on the error
+                            std::thread::sleep(Duration::from_millis(10));
                         }
-                        Err(_) => break,
                     }
                 }
             });
         }
-        Ok(Server { store, addr, shutdown, queues })
+        Ok(Server { store, addr, shutdown, batchers })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -92,13 +123,21 @@ impl Server {
         &self.store
     }
 
+    /// Signal shutdown, wake the blocked accept loop, and drop every
+    /// batcher queue (their threads drain and retire).
     pub fn stop(&self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        if self.shutdown.swap(true, Ordering::Relaxed) {
+            return; // already stopped
+        }
+        // dropping the senders makes each batcher's recv disconnect promptly
+        self.batchers.map.lock().unwrap().clear();
+        // unblock accept()
+        let _ = TcpStream::connect(self.addr);
     }
 
-    /// Number of per-model batcher threads spawned so far.
+    /// Number of live per-model batcher queues.
     pub fn active_batchers(&self) -> usize {
-        self.queues.lock().unwrap().len()
+        self.batchers.map.lock().unwrap().len()
     }
 }
 
@@ -112,66 +151,101 @@ impl Drop for Server {
 fn batcher_for(
     model: &str,
     store: &Arc<ModelStore>,
-    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
 ) -> Sender<Job> {
-    let mut map = queues.lock().unwrap();
-    if let Some(tx) = map.get(model) {
+    let mut map = batchers.map.lock().unwrap();
+    if let Some((_, tx)) = map.get(model) {
         return tx.clone();
     }
+    let generation = batchers.next_gen.fetch_add(1, Ordering::Relaxed);
     let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
-    let store = store.clone();
-    let shutdown = shutdown.clone();
-    let name = model.to_string();
-    std::thread::spawn(move || {
-        while !shutdown.load(Ordering::Relaxed) {
-            // block for the first job, then drain the window
-            let first = match rx.recv_timeout(Duration::from_millis(100)) {
-                Ok(j) => j,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(_) => break,
-            };
-            let mut jobs = vec![first];
-            let deadline = std::time::Instant::now() + BATCH_WINDOW;
-            while jobs.len() < BATCH_MAX {
-                let now = std::time::Instant::now();
-                if now >= deadline {
-                    break;
+    {
+        let store = store.clone();
+        let batchers = batchers.clone();
+        let shutdown = shutdown.clone();
+        let name = model.to_string();
+        std::thread::spawn(move || {
+            run_batcher(&name, generation, rx, &store, &batchers, &shutdown);
+        });
+    }
+    map.insert(model.to_string(), (generation, tx.clone()));
+    tx
+}
+
+fn run_batcher(
+    name: &str,
+    generation: u64,
+    rx: Receiver<Job>,
+    store: &Arc<ModelStore>,
+    batchers: &Arc<Batchers>,
+    shutdown: &Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        // block for the first job, then drain the window
+        let first = match rx.recv_timeout(IDLE_TICK) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => {
+                if !store.contains(name) {
+                    break; // model removed or evicted: retire this queue
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(j) => jobs.push(j),
-                    Err(_) => break,
-                }
+                continue;
             }
-            let rows: Vec<Vec<ObsValue>> = jobs.iter().map(|j| j.values.clone()).collect();
-            match store.predict_batch(&name, &rows) {
-                Ok(outs) => {
-                    for (job, out) in jobs.into_iter().zip(outs) {
-                        let _ = job.reply.send(Ok(out));
-                    }
-                }
-                Err(e) => {
-                    // batch-level failure (e.g. one bad row): answer each
-                    // individually so good rows still succeed
-                    for job in jobs {
-                        let out = store
-                            .predict(&name, &job.values)
-                            .map_err(|e| e.to_string());
-                        let _ = job.reply.send(out);
-                    }
-                    let _ = e; // recorded via per-row errors
-                }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let mut jobs = vec![first];
+        let deadline = std::time::Instant::now() + BATCH_WINDOW;
+        while jobs.len() < BATCH_MAX {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
             }
         }
-    });
-    map.insert(model.to_string(), tx.clone());
-    tx
+        let rows: Vec<Vec<ObsValue>> = jobs.iter().map(|j| j.values.clone()).collect();
+        match store.predict_batch(name, &rows) {
+            Ok(outs) => {
+                for (job, out) in jobs.into_iter().zip(outs) {
+                    let _ = job.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                // batch-level failure (e.g. one bad row): answer each
+                // individually so good rows still succeed
+                for job in jobs {
+                    let out = store
+                        .predict(name, &job.values)
+                        .map_err(|e| e.to_string());
+                    let _ = job.reply.send(out);
+                }
+                let _ = e; // recorded via per-row errors
+            }
+        }
+    }
+    // retire: deregister our own generation (a re-inserted model may have
+    // spawned a successor under the same name — leave that one alone)...
+    {
+        let mut map = batchers.map.lock().unwrap();
+        if map.get(name).is_some_and(|(g, _)| *g == generation) {
+            map.remove(name);
+        }
+    }
+    // ...and fail any stragglers that raced into the queue while retiring,
+    // instead of leaving them to time out against a dead queue
+    while let Ok(job) = rx.try_recv() {
+        let _ = job
+            .reply
+            .send(Err(format!("model {name:?} is no longer resident")));
+    }
 }
 
 fn handle_conn(
     stream: TcpStream,
     store: &Arc<ModelStore>,
-    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
@@ -179,7 +253,10 @@ fn handle_conn(
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = line?;
-        let reply = match handle_line(&line, store, queues, shutdown) {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let reply = match handle_line(&line, store, batchers, shutdown) {
             Ok(Some(s)) => s,
             Ok(None) => break, // QUIT
             Err(e) => format!("ERR {e}"),
@@ -193,7 +270,7 @@ fn handle_conn(
 fn handle_line(
     line: &str,
     store: &Arc<ModelStore>,
-    queues: &Arc<Mutex<HashMap<String, Sender<Job>>>>,
+    batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
 ) -> Result<Option<String>> {
     let mut parts = line.trim().splitn(3, ' ');
@@ -201,12 +278,29 @@ fn handle_line(
         "PREDICT" => {
             let model = parts.next().context("PREDICT needs a model name")?;
             let values = parse_values(parts.next().context("PREDICT needs values")?)?;
+            // answer unknown models inline: no batcher is spawned for a
+            // name that is not resident (bad requests must not grow the
+            // queue registry)
+            if !store.contains(model) {
+                bail!("unknown model {model:?}");
+            }
             let (rtx, rrx) = channel();
-            let q = batcher_for(model, store, queues, shutdown);
-            q.send(Job { values, reply: rtx }).ok().context("batcher gone")?;
-            let out = rrx
-                .recv_timeout(Duration::from_secs(30))
-                .context("prediction timed out")?;
+            let q = batcher_for(model, store, batchers, shutdown);
+            let out = match q.send(Job { values: values.clone(), reply: rtx }) {
+                // batcher already retired (model evicted or re-inserted in
+                // the same instant): answer directly from the store
+                Err(_) => store.predict(model, &values).map_err(|e| e.to_string()),
+                Ok(()) => match rrx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(out) => out,
+                    // the batcher retired with our job still queued; its
+                    // queue (and our reply sender) died with it — answer
+                    // directly instead of surfacing a channel error
+                    Err(RecvTimeoutError::Disconnected) => {
+                        store.predict(model, &values).map_err(|e| e.to_string())
+                    }
+                    Err(RecvTimeoutError::Timeout) => bail!("prediction timed out"),
+                },
+            };
             match out {
                 Ok(PredictOne::Class(c)) => Ok(Some(format!("OK {c}"))),
                 Ok(PredictOne::Value(v)) => Ok(Some(format!("OK {v}"))),
@@ -216,10 +310,13 @@ fn handle_line(
         "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
         "STATS" => {
             let s = store.stats();
-            let mean = if s.batches > 0 { s.total_latency_us / s.batches } else { 0 };
             Ok(Some(format!(
-                "OK requests={} batches={} mean_us={} max_us={}",
-                s.requests, s.batches, mean, s.max_latency_us
+                "OK requests={} batches={} mean_us={} max_us={} evictions={}",
+                s.requests,
+                s.batches,
+                s.mean_latency_us(),
+                s.max_latency_us,
+                s.evictions
             )))
         }
         "BYTES" => Ok(Some(format!("OK resident={}", store.resident_bytes()))),

@@ -2,13 +2,32 @@
 //! predictions **from the compressed bytes** — the paper's motivating
 //! deployment ("a user-specific ensemble … stored on a personal device with
 //! strict storage limitations", §1).
+//!
+//! Scale shape:
+//!
+//! * **Sharded registry** — model names hash onto [`DEFAULT_SHARDS`] lock
+//!   shards, so concurrent requests for different models never contend on
+//!   one store-wide lock; a request clones the model's `Arc` out of its
+//!   shard and predicts entirely outside any lock.
+//! * **Storage budget** — [`ModelStore::with_budget`] caps resident
+//!   compressed bytes (the paper's strict-storage device simulator). When
+//!   an insert pushes past the budget, least-recently-used models are
+//!   evicted until the store fits again; every prediction touches an atomic
+//!   LRU clock, no lock required.
+//! * **Zero-copy residency** — a stored model holds one `Arc<[u8]>`
+//!   container buffer; its predictor's sections are views into it, so
+//!   `resident_bytes` is an honest measure of what the model costs.
 
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Default number of lock shards (power of two; names spread via FNV-1a).
+pub const DEFAULT_SHARDS: usize = 16;
 
 /// One observation value, matching the model's feature schema.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,38 +37,149 @@ pub enum ObsValue {
 }
 
 /// Store statistics (served by the `STATS` protocol verb).
+///
+/// Latency accounting is **per request**: a batch of `n` answered in `t` µs
+/// adds `n·t` to `total_latency_us` (each of those requests waited `t`), so
+/// `total_latency_us / requests` is a true mean request latency and batches
+/// no longer skew it.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StoreStats {
     pub requests: u64,
     pub batches: u64,
     pub total_latency_us: u64,
     pub max_latency_us: u64,
+    pub evictions: u64,
+}
+
+impl StoreStats {
+    /// Mean per-request latency in µs.
+    pub fn mean_latency_us(&self) -> u64 {
+        if self.requests > 0 {
+            self.total_latency_us / self.requests
+        } else {
+            0
+        }
+    }
 }
 
 struct StoredModel {
     predictor: CompressedPredictor,
     compressed_bytes: u64,
+    /// LRU stamp: the store clock value of the last touch.
+    last_used: AtomicU64,
 }
 
-/// A thread-safe registry of compressed models.
+struct Shard {
+    models: RwLock<BTreeMap<String, Arc<StoredModel>>>,
+}
+
+/// A thread-safe, sharded registry of compressed models with an optional
+/// resident-bytes budget.
 pub struct ModelStore {
-    models: RwLock<BTreeMap<String, StoredModel>>,
+    shards: Vec<Shard>,
     stats: Mutex<StoreStats>,
+    /// Monotone access clock driving LRU eviction.
+    clock: AtomicU64,
+    /// Sum of `compressed_bytes` over resident models.
+    resident: AtomicU64,
+    max_resident_bytes: Option<u64>,
+    predict_workers: usize,
+}
+
+fn shard_index(name: &str, n: usize) -> usize {
+    // FNV-1a over the model name; any stable spreading hash works
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n as u64) as usize
 }
 
 impl ModelStore {
+    /// Unbounded store with the default shard count.
     pub fn new() -> Self {
-        ModelStore { models: RwLock::new(BTreeMap::new()), stats: Mutex::new(StoreStats::default()) }
+        Self::with_config(DEFAULT_SHARDS, None)
     }
 
-    /// Register a compressed forest under a name.
+    /// Store with a resident-bytes budget: inserting past it evicts
+    /// least-recently-used models until the store fits again.
+    pub fn with_budget(max_resident_bytes: u64) -> Self {
+        Self::with_config(DEFAULT_SHARDS, Some(max_resident_bytes))
+    }
+
+    /// Fully explicit construction (shard count + optional budget).
+    pub fn with_config(shards: usize, max_resident_bytes: Option<u64>) -> Self {
+        ModelStore {
+            shards: (0..shards.max(1))
+                .map(|_| Shard { models: RwLock::new(BTreeMap::new()) })
+                .collect(),
+            stats: Mutex::new(StoreStats::default()),
+            clock: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+            max_resident_bytes,
+            predict_workers: 1,
+        }
+    }
+
+    /// Builder: worker threads handed to each model's batch predictor.
+    pub fn predict_workers(mut self, workers: usize) -> Self {
+        self.predict_workers = workers.max(1);
+        self
+    }
+
+    pub fn max_resident_bytes(&self) -> Option<u64> {
+        self.max_resident_bytes
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, name: &str) -> &Shard {
+        &self.shards[shard_index(name, self.shards.len())]
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Register a compressed forest under a name (replacing any previous
+    /// model of that name), then enforce the storage budget. The new model
+    /// itself is never the eviction victim of its own insert.
     pub fn insert(&self, name: &str, cf: &CompressedForest) -> Result<()> {
-        let pc = cf.parse()?;
-        let predictor = CompressedPredictor::new(pc)?;
-        self.models.write().unwrap().insert(
-            name.to_string(),
-            StoredModel { predictor, compressed_bytes: cf.total_bytes() },
-        );
+        let bytes = cf.total_bytes();
+        if let Some(budget) = self.max_resident_bytes {
+            if bytes > budget {
+                bail!(
+                    "model {name:?} ({bytes} compressed bytes) exceeds the store \
+                     budget ({budget} bytes) on its own"
+                );
+            }
+        }
+        let pc = cf.parse()?; // zero-copy: shares cf's Arc<[u8]>
+        let predictor = CompressedPredictor::new(pc)?.with_workers(self.predict_workers);
+        let model = Arc::new(StoredModel {
+            predictor,
+            compressed_bytes: bytes,
+            last_used: AtomicU64::new(self.tick()),
+        });
+        // account the bytes BEFORE the model becomes visible in its shard:
+        // a concurrent enforce_budget may evict it the moment it appears,
+        // and its fetch_sub must never run ahead of our fetch_add (a u64
+        // underflow here would read as an enormous resident total and
+        // mass-evict the store)
+        self.resident.fetch_add(bytes, Ordering::Relaxed);
+        let old = self
+            .shard(name)
+            .models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), model);
+        if let Some(old) = old {
+            self.resident.fetch_sub(old.compressed_bytes, Ordering::Relaxed);
+        }
+        self.enforce_budget(name);
         Ok(())
     }
 
@@ -60,16 +190,59 @@ impl ModelStore {
         self.insert(name, &cf)
     }
 
-    pub fn remove(&self, name: &str) -> bool {
-        self.models.write().unwrap().remove(name).is_some()
+    /// Evict least-recently-used models (never `keep`) until the resident
+    /// total fits the budget again.
+    fn enforce_budget(&self, keep: &str) {
+        let Some(budget) = self.max_resident_bytes else { return };
+        while self.resident.load(Ordering::Relaxed) > budget {
+            let mut victim: Option<(String, u64)> = None;
+            for shard in &self.shards {
+                let models = shard.models.read().unwrap();
+                for (name, model) in models.iter() {
+                    if name == keep {
+                        continue;
+                    }
+                    let used = model.last_used.load(Ordering::Relaxed);
+                    if victim.as_ref().map_or(true, |(_, best)| used < *best) {
+                        victim = Some((name.clone(), used));
+                    }
+                }
+            }
+            let Some((name, _)) = victim else { break };
+            if self.remove(&name) {
+                self.stats.lock().unwrap().evictions += 1;
+            }
+        }
     }
 
+    pub fn remove(&self, name: &str) -> bool {
+        let removed = self.shard(name).models.write().unwrap().remove(name);
+        match removed {
+            Some(m) => {
+                self.resident.fetch_sub(m.compressed_bytes, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.shard(name).models.read().unwrap().contains_key(name)
+    }
+
+    /// Resident model names, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
+        let mut out: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.models.read().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect();
+        out.sort();
+        out
     }
 
     pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
+        self.shards.iter().map(|s| s.models.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -78,34 +251,49 @@ impl ModelStore {
 
     /// Total compressed bytes resident (the "storage budget" figure).
     pub fn resident_bytes(&self) -> u64 {
-        self.models.read().unwrap().values().map(|m| m.compressed_bytes).sum()
+        self.resident.load(Ordering::Relaxed)
     }
 
     pub fn stats(&self) -> StoreStats {
         *self.stats.lock().unwrap()
     }
 
-    /// Predict a single observation against a named model.
+    /// Look a model up (read lock held only for the map probe) and stamp
+    /// its LRU clock.
+    fn get(&self, name: &str) -> Result<Arc<StoredModel>> {
+        let model = self
+            .shard(name)
+            .models
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("unknown model {name:?}"))?;
+        model.last_used.store(self.tick(), Ordering::Relaxed);
+        Ok(model)
+    }
+
+    /// Predict a single observation against a named model. The shard lock
+    /// covers only the name lookup; decoding runs lock-free on the shared
+    /// buffer.
     pub fn predict(&self, model: &str, values: &[ObsValue]) -> Result<PredictOne> {
         let start = std::time::Instant::now();
-        let models = self.models.read().unwrap();
-        let stored = models.get(model).with_context(|| format!("unknown model {model:?}"))?;
+        let stored = self.get(model)?;
         let ds = row_dataset(&stored.predictor, values, 1)?;
         let out = stored.predictor.predict_row(&ds, 0)?;
-        drop(models);
         self.record(start.elapsed().as_micros() as u64, 1, 1);
         Ok(out)
     }
 
     /// Predict a batch of observations (the micro-batcher's path: one
-    /// schema check + shared decode state amortized over the batch).
+    /// schema check + per-tree decode amortized over the batch, sharded
+    /// across the predictor's worker threads).
     pub fn predict_batch(&self, model: &str, rows: &[Vec<ObsValue>]) -> Result<Vec<PredictOne>> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
         let start = std::time::Instant::now();
-        let models = self.models.read().unwrap();
-        let stored = models.get(model).with_context(|| format!("unknown model {model:?}"))?;
+        let stored = self.get(model)?;
         let flat: Vec<ObsValue> = rows.iter().flatten().copied().collect();
         let ds = row_dataset(&stored.predictor, &flat, rows.len())?;
         // batched path decodes each tree once when the batch is large enough
@@ -124,16 +312,18 @@ impl ModelStore {
                 .map(|r| stored.predictor.predict_row(&ds, r))
                 .collect::<Result<Vec<_>>>()?
         };
-        drop(models);
         self.record(start.elapsed().as_micros() as u64, rows.len() as u64, 1);
         Ok(out)
     }
 
+    /// Per-request latency accounting: `us` is the wall time every one of
+    /// the `requests` in this batch waited, so it is charged once per
+    /// request (see [`StoreStats`]).
     fn record(&self, us: u64, requests: u64, batches: u64) {
         let mut s = self.stats.lock().unwrap();
         s.requests += requests;
         s.batches += batches;
-        s.total_latency_us += us;
+        s.total_latency_us += us * requests;
         s.max_latency_us = s.max_latency_us.max(us);
     }
 }
@@ -205,10 +395,15 @@ mod tests {
     use crate::data::synthetic;
     use crate::forest::{Forest, ForestParams};
 
-    fn store_with_iris() -> (ModelStore, Forest, Dataset) {
+    fn iris_model(seed: u64) -> (CompressedForest, Forest, Dataset) {
         let ds = synthetic::iris(81);
-        let f = Forest::train(&ds, &ForestParams::classification(5), 3);
+        let f = Forest::train(&ds, &ForestParams::classification(5), seed);
         let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        (cf, f, ds)
+    }
+
+    fn store_with_iris() -> (ModelStore, Forest, Dataset) {
+        let (cf, f, ds) = iris_model(3);
         let store = ModelStore::new();
         store.insert("iris", &cf).unwrap();
         (store, f, ds)
@@ -243,6 +438,11 @@ mod tests {
         for (i, r) in rows.iter().enumerate() {
             assert_eq!(batch[i], store.predict("iris", r).unwrap());
         }
+        // per-request accounting: a 20-row batch counts 20 requests and the
+        // mean stays a per-request figure
+        let s = store.stats();
+        assert!(s.requests >= 20 + rows.len() as u64);
+        assert!(s.mean_latency_us() <= s.max_latency_us);
     }
 
     #[test]
@@ -271,5 +471,53 @@ mod tests {
         assert!(store.remove("iris"));
         assert!(store.predict("iris", &vals).is_err());
         assert_eq!(store.len(), 1);
+        assert!(store.contains("wages") && !store.contains("iris"));
+    }
+
+    #[test]
+    fn shards_spread_names_and_agree_with_flat_view() {
+        let (cf, _, _) = iris_model(5);
+        let store = ModelStore::with_config(4, None);
+        assert_eq!(store.num_shards(), 4);
+        for i in 0..12 {
+            store.insert(&format!("model-{i}"), &cf).unwrap();
+        }
+        assert_eq!(store.len(), 12);
+        let names = store.names();
+        assert_eq!(names.len(), 12);
+        assert!(names.windows(2).all(|w| w[0] < w[1]), "names sorted");
+        assert_eq!(store.resident_bytes(), 12 * cf.total_bytes());
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let (cf, _, ds) = iris_model(6);
+        let one = cf.total_bytes();
+        // room for exactly three models
+        let store = ModelStore::with_budget(3 * one + one / 2);
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        store.insert("c", &cf).unwrap();
+        assert_eq!(store.len(), 3);
+        // touch "a" so "b" is now the LRU
+        store.predict("a", &row_values(&ds, 0)).unwrap();
+        store.insert("d", &cf).unwrap();
+        assert_eq!(store.len(), 3, "budget holds three models");
+        assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+        assert_eq!(store.names(), vec!["a".to_string(), "c".to_string(), "d".to_string()]);
+        assert_eq!(store.stats().evictions, 1);
+        // an over-budget single model is refused outright
+        let tiny = ModelStore::with_budget(one / 2);
+        assert!(tiny.insert("too-big", &cf).is_err());
+    }
+
+    #[test]
+    fn reinsert_same_name_replaces_without_double_counting() {
+        let (cf, _, _) = iris_model(7);
+        let store = ModelStore::new();
+        store.insert("m", &cf).unwrap();
+        store.insert("m", &cf).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.resident_bytes(), cf.total_bytes());
     }
 }

@@ -60,6 +60,7 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   verify   --in FILE --dataset KEY [--trees N] [--seed S]
   lossy    --dataset KEY [--trees N] [--bits B] [--keep N0]
   serve    --port P --dataset KEY[,KEY...] [--trees N]
+           [--max-resident-bytes B] [--predict-workers W]
   suite    [--trees N] [--paper-scale]
   datasets";
 
@@ -258,7 +259,26 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let trees = args.get_or("trees", 50usize);
     let port: u16 = args.get_or("port", 7878u16);
-    let store = Arc::new(ModelStore::new());
+    // storage-budget simulator (paper §1): optional resident-bytes cap with
+    // LRU eviction, plus tree-parallel batch prediction
+    let budget = match args.get("max-resident-bytes") {
+        None => None,
+        Some(s) => match s.parse::<u64>() {
+            Ok(b) => Some(b),
+            Err(_) => {
+                eprintln!("serve: --max-resident-bytes expects a byte count, got {s:?}");
+                return 2;
+            }
+        },
+    };
+    let workers = args.get_or(
+        "predict-workers",
+        rf_compress::util::threads::default_workers(),
+    );
+    let store = Arc::new(
+        ModelStore::with_config(rf_compress::coordinator::store::DEFAULT_SHARDS, budget)
+            .predict_workers(workers),
+    );
     let mut coord = coordinator(args);
     for key in &keys {
         let Some(ds) = dataset_by_key(key, args.get_or("data-seed", 1234u64)) else {
@@ -278,9 +298,13 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "serving {} models ({} resident) on {}",
+        "serving {} models ({} resident{}) on {}",
         store.len(),
         human_bytes(store.resident_bytes()),
+        match store.max_resident_bytes() {
+            Some(b) => format!(", budget {}", human_bytes(b)),
+            None => String::new(),
+        },
         server.addr()
     );
     println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");

@@ -92,6 +92,66 @@ impl Gen {
         }
         v
     }
+
+    /// A random dataset with `numeric` numeric and `categorical` categorical
+    /// features (2–8 levels each) over `n_rows` rows. `numeric = 0` yields
+    /// the all-categorical schemas the degenerate-forest properties need.
+    pub fn dataset(
+        &mut self,
+        n_rows: usize,
+        numeric: usize,
+        categorical: usize,
+        classification: bool,
+    ) -> crate::data::Dataset {
+        use crate::data::{Column, Dataset, Feature, Target};
+        let mut features = Vec::with_capacity(numeric + categorical);
+        for j in 0..numeric {
+            let vals: Vec<f64> = (0..n_rows).map(|_| self.f64_in(-10.0, 10.0)).collect();
+            features.push(Feature { name: format!("num{j}"), column: Column::Numeric(vals) });
+        }
+        for j in 0..categorical {
+            let levels = self.usize_in(2, 8) as u32;
+            let vals: Vec<u32> =
+                (0..n_rows).map(|_| self.usize_in(0, levels as usize - 1) as u32).collect();
+            features.push(Feature {
+                name: format!("cat{j}"),
+                column: Column::Categorical { values: vals, levels },
+            });
+        }
+        let target = if classification {
+            let classes = self.usize_in(2, 5) as u32;
+            let labels: Vec<u32> =
+                (0..n_rows).map(|_| self.usize_in(0, classes as usize - 1) as u32).collect();
+            Target::Classification { labels, classes }
+        } else {
+            Target::Regression((0..n_rows).map(|_| self.f64_in(-100.0, 100.0)).collect())
+        };
+        Dataset { name: "prop".into(), features, target }
+    }
+
+    /// A leaf-only forest over `ds`'s schema: every tree is a single root
+    /// leaf (the degenerate shape a `max_depth = 0` / pure-node training run
+    /// produces), with fits drawn to match the target kind.
+    pub fn leaf_only_forest(
+        &mut self,
+        ds: &crate::data::Dataset,
+        n_trees: usize,
+    ) -> crate::forest::Forest {
+        use crate::forest::{Fit, Forest, Node, Tree};
+        let classification = ds.target.is_classification();
+        let classes = ds.target.num_classes();
+        let trees = (0..n_trees)
+            .map(|_| {
+                let fit = if classification {
+                    Fit::Class(self.usize_in(0, classes.max(1) as usize - 1) as u32)
+                } else {
+                    Fit::Regression(self.f64_in(-5.0, 5.0))
+                };
+                Tree { nodes: vec![Node { split: None, fit }] }
+            })
+            .collect();
+        Forest { trees, classification, classes }
+    }
 }
 
 /// Number of cases per property; override with `RF_PROP_CASES`.

@@ -131,6 +131,74 @@ fn concurrent_clients_batch_correctly() {
 }
 
 #[test]
+fn eviction_under_budget_over_tcp() {
+    // budget for ~2.5 models: the third insert must evict the LRU one, and
+    // LIST/BYTES over the wire must reflect the post-eviction store
+    let ds = synthetic::iris(94);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 5, 9, &CompressOptions::default()).unwrap();
+    let one = cf.total_bytes();
+    let store = Arc::new(ModelStore::with_budget(2 * one + one / 2));
+    store.insert("m0", &cf).unwrap();
+    store.insert("m1", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // touch m0 over the wire so m1 becomes the LRU victim
+    let wire = values_to_wire(&row_values(&ds, 0));
+    let reply = client.request(&format!("PREDICT m0 {wire}")).unwrap();
+    assert!(reply.starts_with("OK"), "{reply}");
+
+    // insert-past-budget → evicts m1 (never the fresh m2)
+    store.insert("m2", &cf).unwrap();
+    let list = client.request("LIST").unwrap();
+    assert!(list.contains("m0") && list.contains("m2"), "{list}");
+    assert!(!list.contains("m1"), "LRU model must be gone: {list}");
+    let bytes = client.request("BYTES").unwrap();
+    let resident: u64 = bytes.trim_start_matches("OK resident=").parse().unwrap();
+    assert_eq!(resident, 2 * one, "two models resident after eviction");
+    assert!(resident <= store.max_resident_bytes().unwrap());
+
+    // the evicted model now errors over the wire; the connection survives
+    let reply = client.request(&format!("PREDICT m1 {wire}")).unwrap();
+    assert!(reply.starts_with("ERR"), "{reply}");
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.contains("evictions=1"), "{stats}");
+    server.stop();
+}
+
+#[test]
+fn batcher_queues_reaped_after_model_removal() {
+    let ds = synthetic::iris(95);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 4, 10, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let wire = values_to_wire(&row_values(&ds, 0));
+    assert!(client.request(&format!("PREDICT m {wire}")).unwrap().starts_with("OK"));
+    assert_eq!(server.active_batchers(), 1);
+
+    // a bad model name must not spawn a queue
+    assert!(client.request("PREDICT ghost 1,2,3,4").unwrap().starts_with("ERR"));
+    assert_eq!(server.active_batchers(), 1, "unknown models spawn no batcher");
+
+    // removing the model retires its batcher on the next idle tick
+    assert!(store.remove("m"));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while server.active_batchers() > 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert_eq!(server.active_batchers(), 0, "dead per-model queue must be reaped");
+
+    // QUIT closes the connection cleanly (empty read on our side)
+    assert_eq!(client.request("QUIT").unwrap(), "");
+    server.stop();
+}
+
+#[test]
 fn store_direct_api_matches_forest() {
     let ds = synthetic::naval_classification(93);
     let mut coord = Coordinator::native_only();

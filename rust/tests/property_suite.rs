@@ -206,7 +206,7 @@ fn prop_container_bitflip_never_panics() {
         let forest = Forest::train(&ds, &params, 3);
         let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
             .map_err(|e| e.to_string())?;
-        let mut bytes = cf.bytes.clone();
+        let mut bytes = cf.bytes.to_vec();
         if g.bool(0.5) && !bytes.is_empty() {
             let i = g.usize_in(0, bytes.len() - 1);
             let bit = g.usize_in(0, 7);
@@ -217,6 +217,75 @@ fn prop_container_bitflip_never_panics() {
         }
         // must not panic; Err is expected, Ok(valid forest) is acceptable
         let _ = CompressedForest::from_bytes(bytes).and_then(|c| c.decompress());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_leaf_only_forests_compress_predict_decompress() {
+    use rf_compress::compress::predict::PredictOne;
+    use rf_compress::compress::CompressedPredictor;
+    // degenerate shape: every tree is a single root leaf (Zaks string "0");
+    // the full compress → predict-from-bytes → decompress loop must hold
+    forall("leaf-only forests", |g: &mut Gen| {
+        let n_rows = g.usize_in(5, 40);
+        let numeric = g.usize_in(0, 3);
+        let categorical = g.usize_in(usize::from(numeric == 0), 3);
+        let classification = g.bool(0.5);
+        let ds = g.dataset(n_rows, numeric, categorical, classification);
+        ds.validate().map_err(|e| e.to_string())?;
+        let forest = g.leaf_only_forest(&ds, g.usize_in(1, 6));
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| format!("compress: {e:#}"))?;
+        let restored = cf.decompress().map_err(|e| format!("decompress: {e:#}"))?;
+        if !restored.identical(&forest) {
+            return Err("leaf-only round-trip differs".into());
+        }
+        let p = CompressedPredictor::new(cf.parse().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("predictor: {e:#}"))?;
+        for row in 0..n_rows.min(5) {
+            let got = p.predict_row(&ds, row).map_err(|e| format!("predict: {e:#}"))?;
+            let want = if forest.classification {
+                PredictOne::Class(forest.predict_class(&ds, row))
+            } else {
+                PredictOne::Value(forest.predict_regression(&ds, row))
+            };
+            if got != want {
+                return Err(format!("row {row}: {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_tree_all_categorical_pipeline() {
+    use rf_compress::compress::CompressedPredictor;
+    // single-tree forests over all-categorical schemas: trained (not
+    // synthetic) trees, batch prediction from the compressed bytes must
+    // match the original forest exactly
+    forall("single-tree all-categorical", |g: &mut Gen| {
+        let classification = g.bool(0.5);
+        let ds = g.dataset(g.usize_in(20, 80), 0, g.usize_in(1, 4), classification);
+        ds.validate().map_err(|e| e.to_string())?;
+        let params = if classification {
+            ForestParams::classification(1)
+        } else {
+            ForestParams::regression(1)
+        };
+        let forest = Forest::train(&ds, &params, g.rng().next_u64());
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| format!("compress: {e:#}"))?;
+        let restored = cf.decompress().map_err(|e| format!("decompress: {e:#}"))?;
+        if !restored.identical(&forest) {
+            return Err("single-tree round-trip differs".into());
+        }
+        let p = CompressedPredictor::new(cf.parse().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("predictor: {e:#}"))?;
+        let batch = p.predict_all(&ds).map_err(|e| format!("batch: {e:#}"))?;
+        if batch != forest.predict_all(&ds) {
+            return Err("batch predictions differ from the original forest".into());
+        }
         Ok(())
     });
 }
