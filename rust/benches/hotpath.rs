@@ -3,21 +3,24 @@
 //! * cluster-step: native vs XLA engine at each artifact bucket size
 //! * compression throughput (trees/s) end to end
 //! * prediction latency: compressed prefix-decode vs decompressed forest
-//! * serving hot path: single-row latency + batch `predict_all` throughput
-//!   scaling with worker threads on a ≥100-tree forest (zero-copy parse,
-//!   tree-parallel batches)
+//! * serving hot path: single-row latency (p50/p99), batch throughput of
+//!   the PR-1 re-decode baseline vs the flat-tree engine (cold and with a
+//!   warm plan cache), worker scaling on both parallelism axes; emits the
+//!   machine-readable `BENCH_serve.json` tracked across PRs
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
 //!
 //! Run: `cargo bench --bench hotpath`
-//! (add `-- cluster|compress|predict|serve|codec`)
+//! (add `-- cluster|compress|predict|serve|codec`; `-- serve --quick` is
+//! the CI smoke configuration: tiny forest, short timing budgets)
 
 use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
-use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor};
+use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor, PlanCache};
 use rf_compress::data::synthetic;
 use rf_compress::forest::{Forest, ForestParams};
 use rf_compress::runtime::XlaRuntime;
-use rf_compress::util::bench::{bench_config, time_it, Table};
+use rf_compress::util::bench::{bench_config, time_it, Table, Timing};
 use rf_compress::util::Pcg64;
+use std::sync::Arc;
 
 fn main() {
     let cfg = bench_config(40);
@@ -175,16 +178,19 @@ fn bench_predict(cfg: &rf_compress::util::bench::BenchConfig) {
 }
 
 fn bench_serve(cfg: &rf_compress::util::bench::BenchConfig) {
-    println!("== serving hot path: zero-copy parse + tree-parallel batches ==");
+    println!("== serving hot path: flat-tree batch engine vs prefix decode ==");
+    // --quick shrinks the forest and timing budgets for the CI smoke stage
+    let quick = cfg.args.flag("quick");
+    let budget = if quick { 0.05 } else { 1.0 };
     let ds = synthetic::airfoil_classification(1234);
-    // the serving acceptance measurement wants a realistic ensemble
-    let n_trees = cfg.trees.max(100);
+    let n_trees = if quick { cfg.trees.min(24).max(4) } else { cfg.trees.max(100) };
     let forest = Forest::train(&ds, &ForestParams::classification(n_trees), cfg.seed);
     let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let n_rows = ds.num_rows();
 
     // parse cost (zero-copy: spans into the shared Arc buffer, no section
     // allocation) — this is the per-insert cost of the model store
-    let t_parse = time_it(0.5, 3, || {
+    let t_parse = time_it(budget.min(0.5), 3, || {
         cf.parse().unwrap();
     });
     println!(
@@ -194,34 +200,181 @@ fn bench_serve(cfg: &rf_compress::util::bench::BenchConfig) {
 
     let predictor = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
 
+    // correctness gate (the CI smoke stage trips on any divergence): the
+    // flat engine must agree with the re-decode baseline, the original
+    // forest, and itself across worker counts
+    let flat_out = predictor.predict_all(&ds).unwrap();
+    assert_eq!(
+        flat_out,
+        predictor.predict_all_baseline(&ds).unwrap(),
+        "flat engine diverges from the re-decode baseline"
+    );
+    assert_eq!(flat_out, forest.predict_all(&ds), "flat engine diverges from the forest");
+    for w in [2usize, 8] {
+        assert_eq!(
+            predictor.predict_all_workers(&ds, w).unwrap(),
+            flat_out,
+            "flat engine diverges at {w} workers"
+        );
+    }
+
     // single-row latency (the subscriber-device path)
-    let rows: Vec<usize> = (0..ds.num_rows()).step_by(37).collect();
+    let rows: Vec<usize> = (0..n_rows).step_by(37).collect();
     let mut i = 0usize;
-    let t_row = time_it(1.0, 5, || {
+    let t_row = time_it(budget, 5, || {
         let row = rows[i % rows.len()];
         i += 1;
         predictor.predict_row(&ds, row).unwrap();
     });
     println!("single-row latency ({n_trees} trees): {t_row}");
 
-    // batch throughput scaling with worker threads
-    let n_rows = ds.num_rows();
+    // batch throughput: PR-1 per-batch re-decode baseline vs the flat
+    // engine cold (decode per batch) vs warm (plan cache primed)
+    let t_base = time_it(budget, 3, || {
+        predictor.predict_all_baseline(&ds).unwrap();
+    });
+    let t_cold = time_it(budget, 3, || {
+        predictor.predict_all(&ds).unwrap();
+    });
+    let cache = Arc::new(PlanCache::new(256 << 20));
+    let warm_predictor = CompressedPredictor::new(cf.parse().unwrap())
+        .unwrap()
+        .with_plan_cache(cache.clone());
+    warm_predictor.predict_all(&ds).unwrap(); // prime the cache
+    let t_warm = time_it(budget, 3, || {
+        warm_predictor.predict_all(&ds).unwrap();
+    });
+    let rps = |t: &Timing| t.per_sec(n_rows as f64);
+    let mut t = Table::new(&["batch path", "time", "rows/s", "vs baseline"]);
+    t.row(&[
+        "re-decode baseline (PR 1)".into(),
+        format!("{t_base}"),
+        format!("{:.0}", rps(&t_base)),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "flat engine, cold".into(),
+        format!("{t_cold}"),
+        format!("{:.0}", rps(&t_cold)),
+        format!("{:.2}x", t_base.median / t_cold.median),
+    ]);
+    t.row(&[
+        "flat engine, warm plans".into(),
+        format!("{t_warm}"),
+        format!("{:.0}", rps(&t_warm)),
+        format!("{:.2}x", t_base.median / t_warm.median),
+    ]);
+    t.print();
+
+    // worker scaling on the warm engine (tree axis: n_trees >= 2*workers)
+    let mut scaling = Vec::new();
     let mut t = Table::new(&["workers", "batch predict_all", "rows/s", "speedup"]);
     let mut base = None::<f64>;
     for &w in &[1usize, 2, 4, 8] {
-        let tb = time_it(1.0, 3, || {
-            predictor.predict_all_workers(&ds, w).unwrap();
+        let tb = time_it(budget, 3, || {
+            warm_predictor.predict_all_workers(&ds, w).unwrap();
         });
         let b = *base.get_or_insert(tb.median);
+        scaling.push((w, rps(&tb)));
         t.row(&[
             w.to_string(),
             format!("{tb}"),
-            format!("{:.0}", tb.per_sec(n_rows as f64)),
+            format!("{:.0}", rps(&tb)),
             format!("{:.2}x", b / tb.median),
         ]);
     }
     t.print();
+
+    // row-axis scaling: a few-tree forest on the same wide batch (trees
+    // alone cannot keep the workers busy; rows must)
+    let small_forest = Forest::train(&ds, &ForestParams::classification(4), cfg.seed ^ 1);
+    let small_cf =
+        CompressedForest::compress(&small_forest, &ds, &CompressOptions::default()).unwrap();
+    let small = CompressedPredictor::new(small_cf.parse().unwrap())
+        .unwrap()
+        .with_plan_cache(cache.clone());
+    small.predict_all(&ds).unwrap(); // prime
+    let t_small_1 = time_it(budget, 3, || {
+        small.predict_all_workers(&ds, 1).unwrap();
+    });
+    let t_small_8 = time_it(budget, 3, || {
+        small.predict_all_workers(&ds, 8).unwrap();
+    });
+    println!(
+        "row-axis (4-tree forest, {n_rows} rows): 1 worker {:.0} rows/s, \
+         8 workers {:.0} rows/s",
+        rps(&t_small_1),
+        rps(&t_small_8)
+    );
+
+    let ps = cache.stats();
+    write_serve_json(
+        n_trees,
+        n_rows,
+        &t_row,
+        rps(&t_base),
+        rps(&t_cold),
+        rps(&t_warm),
+        &scaling,
+        (rps(&t_small_1), rps(&t_small_8)),
+        (ps.hits, ps.misses, ps.resident_bytes),
+    );
     println!();
+}
+
+/// Machine-readable serve-bench results, tracked across PRs
+/// (`BENCH_serve.json` in the working directory).
+#[allow(clippy::too_many_arguments)]
+fn write_serve_json(
+    n_trees: usize,
+    n_rows: usize,
+    t_row: &Timing,
+    base_rps: f64,
+    cold_rps: f64,
+    warm_rps: f64,
+    scaling: &[(usize, f64)],
+    row_axis: (f64, f64),
+    plans: (u64, u64, u64),
+) {
+    let scaling_json: Vec<String> = scaling
+        .iter()
+        .map(|(w, r)| format!("{{\"workers\": {w}, \"rows_per_sec\": {r:.1}}}"))
+        .collect();
+    let lines = [
+        "{".to_string(),
+        "  \"bench\": \"hotpath serve\",".to_string(),
+        format!("  \"trees\": {n_trees},"),
+        format!("  \"rows\": {n_rows},"),
+        format!(
+            "  \"single_row_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}},",
+            t_row.median * 1e6,
+            t_row.p99 * 1e6
+        ),
+        format!(
+            "  \"rows_per_sec\": {{\"baseline_redecode\": {base_rps:.1}, \
+             \"flat_cold\": {cold_rps:.1}, \"flat_warm\": {warm_rps:.1}}},"
+        ),
+        format!(
+            "  \"speedup_vs_baseline\": {{\"flat_cold\": {:.3}, \"flat_warm\": {:.3}}},",
+            cold_rps / base_rps.max(1e-9),
+            warm_rps / base_rps.max(1e-9)
+        ),
+        format!("  \"worker_scaling\": [{}],", scaling_json.join(", ")),
+        format!(
+            "  \"row_axis_rows_per_sec\": {{\"workers_1\": {:.1}, \"workers_8\": {:.1}}},",
+            row_axis.0, row_axis.1
+        ),
+        format!(
+            "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"resident_bytes\": {}}}",
+            plans.0, plans.1, plans.2
+        ),
+        "}".to_string(),
+    ];
+    let json = lines.join("\n") + "\n";
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
 }
 
 fn bench_codec() {

@@ -162,6 +162,10 @@ pub struct ParsedContainer {
     pub fits_ranges: Vec<(usize, usize)>,
     /// the shared container buffer; payload sections are views into it
     buf: Arc<[u8]>,
+    /// process-unique id of this parse, never reused — the plan cache's
+    /// model key (see [`crate::compress::flat::PlanCache`]). Clones share
+    /// the id: they alias the same streams, so their plans are identical.
+    plan_id: u64,
     /// absolute byte spans of the payload sections within `buf`
     vars_span: (usize, usize),
     splits_span: (usize, usize),
@@ -169,11 +173,22 @@ pub struct ParsedContainer {
     pub sizes: SectionSizes,
 }
 
+/// Monotone source of [`ParsedContainer::plan_id`] values (0 is never
+/// issued, so it can serve as a sentinel).
+static NEXT_PLAN_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
 impl ParsedContainer {
     /// The shared container buffer this parse aliases (no copies were made
     /// of the payload sections; everything below points into this).
     pub fn buffer(&self) -> &Arc<[u8]> {
         &self.buf
+    }
+
+    /// Process-unique identity of this parse, used to key decoded flat-tree
+    /// plans. Unlike a buffer address it is never reused, so a cached plan
+    /// can never alias a different (later) model.
+    pub fn plan_id(&self) -> u64 {
+        self.plan_id
     }
 
     /// The VARS payload section — a view into the shared buffer.
@@ -795,6 +810,7 @@ pub fn parse_arc(buf: Arc<[u8]>) -> Result<ParsedContainer> {
         splits_ranges,
         fits_ranges,
         buf,
+        plan_id: NEXT_PLAN_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         vars_span,
         splits_span,
         fits_span,

@@ -1,0 +1,711 @@
+//! The flat-tree batch execution engine.
+//!
+//! [`super::predict::CompressedPredictor::predict_row`] answers a single
+//! observation with a prefix decode — optimal when the query is one row.
+//! Batches are a different regime: the PR-1 batch path re-decoded every
+//! tree's Huffman streams *per batch* into pointer-linked
+//! [`crate::forest::Tree`] nodes and routed rows one at a time through
+//! heap-chasing walks.
+//! This module replaces that with:
+//!
+//! * [`FlatTree`] — a tree decoded **once** into struct-of-arrays form:
+//!   parallel arrays of feature index, numeric threshold, categorical mask,
+//!   left/right child offsets, and per-node fits. Children always sit at
+//!   higher indices than their parent (preorder), so routing is a monotone
+//!   walk over dense arrays instead of a pointer chase, and the working set
+//!   for one step is a handful of cache lines.
+//! * **Blocked row routing** — [`FlatTree::accumulate`] advances rows in
+//!   blocks of [`BLOCK`] through the arrays, so the 8 lanes' loads overlap
+//!   and the inner loop is simple enough for the optimizer to keep in
+//!   registers (and vectorize the numeric-compare case).
+//! * [`PlanCache`] — a bounded, byte-accounted LRU memoizing `FlatTree`s
+//!   per `(model, tree)`, so repeated batches against a resident model skip
+//!   the Huffman decode entirely. Hit/miss/eviction counters feed the
+//!   server's `STATS` verb; the model store charges plan bytes against its
+//!   `max_resident_bytes` budget and drops plans before it evicts models.
+//!
+//! Correctness contract: routing a row through a `FlatTree` reaches exactly
+//! the leaf the prefix decode reaches, and batch aggregation folds fits in
+//! tree order per row, so `predict_all` output is bit-identical to the
+//! per-row path (asserted by the property suite at worker counts 1/2/8).
+
+use super::container::{FitCodec, ParsedContainer};
+use crate::coding::arith::ArithDecoder;
+use crate::coding::bitio::BitReader;
+use crate::coding::huffman::HuffmanDecoder;
+use crate::data::{Column, Dataset};
+use crate::model::keys::ContextKey;
+use crate::zaks::TreeShape;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Rows routed together through one tree; the struct-of-arrays layout keeps
+/// all per-lane state in registers at this width.
+pub const BLOCK: usize = 8;
+
+/// Default byte budget of a standalone [`PlanCache`] (stores with a
+/// `max_resident_bytes` budget manage the cap themselves).
+pub const DEFAULT_PLAN_CACHE_BYTES: u64 = 64 << 20;
+
+/// Per-node fit payloads of a flat tree (one entry per node; only the leaf
+/// entries are ever read, but internal fits arrive for free from the
+/// skip-decode that keeps the streams in sync).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlatFits {
+    Classes(Vec<u32>),
+    Values(Vec<f64>),
+}
+
+/// One tree decoded into branchless-routable parallel arrays.
+///
+/// Layout invariants:
+/// * arrays all have `node_count()` entries, indexed in preorder;
+/// * a leaf is its own left/right child (`left[i] == i`), so "is leaf" is a
+///   single load and a stalled lane in a row block is a no-op step;
+/// * children of an internal node are strictly greater than the node
+///   (preorder), so every walk terminates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatTree {
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    mask: Vec<u64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    fits: FlatFits,
+}
+
+/// A borrowed column view for routing: the dataset's enum is matched once
+/// per feature, not once per node visit.
+#[derive(Clone, Copy)]
+pub enum ColRef<'a> {
+    Num(&'a [f64]),
+    Cat(&'a [u32]),
+}
+
+/// Extract routing views for every feature column of a dataset.
+pub fn col_refs(ds: &Dataset) -> Vec<ColRef<'_>> {
+    ds.features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => ColRef::Num(v),
+            Column::Categorical { values, .. } => ColRef::Cat(values),
+        })
+        .collect()
+}
+
+impl FlatTree {
+    /// Decode tree `t` of a parsed container into flat form — the same
+    /// stream walk as the pipeline decoder, but writing struct-of-arrays
+    /// instead of pointer-linked nodes.
+    pub fn decode(
+        pc: &ParsedContainer,
+        t: usize,
+        shape: &TreeShape,
+        vn_decoders: &[HuffmanDecoder],
+        split_decoders: &[Vec<HuffmanDecoder>],
+        fit_decoders: &[HuffmanDecoder],
+    ) -> Result<FlatTree> {
+        let n = shape.node_count();
+        let depths = shape.depths();
+        let mut vars_r = BitReader::new(pc.tree_vars(t));
+        let mut splits_r = BitReader::new(pc.tree_splits(t));
+        let mut fits_r = BitReader::new(pc.tree_fits(t));
+        let mut arith = match pc.fit_codec {
+            FitCodec::Arith => Some(ArithDecoder::new(fits_r.clone())),
+            FitCodec::Huffman | FitCodec::Raw64 => None,
+        };
+
+        let mut feature = vec![0u32; n];
+        let mut threshold = vec![0.0f64; n];
+        let mut mask = vec![0u64; n];
+        let mut left = Vec::with_capacity(n);
+        let mut right = Vec::with_capacity(n);
+        let mut fits = if pc.classification {
+            FlatFits::Classes(Vec::with_capacity(n))
+        } else {
+            FlatFits::Values(Vec::with_capacity(n))
+        };
+        let mut father_feat: Vec<Option<u32>> = vec![None; n];
+
+        for i in 0..n {
+            let key = pc
+                .conditioning
+                .project(ContextKey::new(depths[i], father_feat[i]));
+            // fit first — the encoder wrote one per node in preorder
+            match (&mut arith, pc.fit_codec) {
+                (Some(dec), FitCodec::Arith) => {
+                    let cl = *pc.fit_map.get(&key).context("fit cluster missing")?;
+                    let model = pc
+                        .fit_models
+                        .get(cl as usize)
+                        .context("fit cluster id out of range")?;
+                    let sym = dec.decode(model)?;
+                    match &mut fits {
+                        FlatFits::Classes(cs) => cs.push(sym),
+                        FlatFits::Values(_) => bail!("arith fits in a regression container"),
+                    }
+                }
+                (None, FitCodec::Huffman) => {
+                    let cl = *pc.fit_map.get(&key).context("fit cluster missing")?;
+                    let sym = fit_decoders
+                        .get(cl as usize)
+                        .context("fit cluster id out of range")?
+                        .decode(&mut fits_r)?;
+                    match &mut fits {
+                        FlatFits::Classes(cs) => cs.push(sym),
+                        FlatFits::Values(vs) => vs.push(
+                            *pc.alphabets
+                                .fits
+                                .get(sym as usize)
+                                .context("fit symbol out of table")?,
+                        ),
+                    }
+                }
+                (None, FitCodec::Raw64) => {
+                    let v = pc
+                        .fit_raw_codec
+                        .as_ref()
+                        .context("raw codec missing")?
+                        .decode(&mut fits_r)?;
+                    match &mut fits {
+                        FlatFits::Values(vs) => vs.push(v),
+                        FlatFits::Classes(_) => bail!("raw fits in a classification container"),
+                    }
+                }
+                _ => unreachable!(),
+            }
+            match shape.children[i] {
+                Some((l, r)) => {
+                    let vcl = *pc.vn_map.get(&key).context("vn cluster missing")?;
+                    let f = vn_decoders
+                        .get(vcl as usize)
+                        .context("vn cluster id out of range")?
+                        .decode(&mut vars_r)?;
+                    if f as usize >= pc.features.len() {
+                        bail!("decoded feature {f} out of range");
+                    }
+                    let scl = *pc.split_maps[f as usize]
+                        .get(&key)
+                        .context("split cluster missing")?;
+                    let sym = split_decoders[f as usize]
+                        .get(scl as usize)
+                        .context("split cluster id out of range")?
+                        .decode(&mut splits_r)?;
+                    let alpha = &pc.alphabets.splits[f as usize];
+                    if sym as usize >= alpha.len() {
+                        bail!("split symbol {sym} out of alphabet");
+                    }
+                    feature[i] = f;
+                    match alpha.value_of(sym) {
+                        crate::forest::SplitValue::Numeric(v) => threshold[i] = v,
+                        crate::forest::SplitValue::Categorical(m) => mask[i] = m,
+                    }
+                    left.push(l);
+                    right.push(r);
+                    father_feat[l as usize] = Some(f);
+                    father_feat[r as usize] = Some(f);
+                }
+                None => {
+                    // leaf: self-loop makes routing idempotent
+                    left.push(i as u32);
+                    right.push(i as u32);
+                }
+            }
+        }
+        Ok(FlatTree { feature, threshold, mask, left, right, fits })
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.left.len()
+    }
+
+    /// Heap bytes this plan keeps resident (the plan cache's accounting
+    /// unit; `size_of::<FlatTree>` itself rides inside the cache entry).
+    pub fn heap_bytes(&self) -> u64 {
+        let n = self.node_count() as u64;
+        let fit_bytes = match &self.fits {
+            FlatFits::Classes(cs) => cs.len() as u64 * 4,
+            FlatFits::Values(vs) => vs.len() as u64 * 8,
+        };
+        n * (4 + 8 + 8 + 4 + 4) + fit_bytes
+    }
+
+    pub fn fits(&self) -> &FlatFits {
+        &self.fits
+    }
+
+    #[inline(always)]
+    fn go_left(&self, cols: &[ColRef], n: usize, row: usize) -> bool {
+        match cols[self.feature[n] as usize] {
+            ColRef::Num(v) => v[row] <= self.threshold[n],
+            ColRef::Cat(v) => self.mask[n] >> v[row] & 1 == 1,
+        }
+    }
+
+    /// Route one row to its leaf index.
+    pub fn route_row(&self, cols: &[ColRef], row: usize) -> usize {
+        let mut n = 0usize;
+        loop {
+            let l = self.left[n] as usize;
+            if l == n {
+                return n;
+            }
+            n = if self.go_left(cols, n, row) { l } else { self.right[n] as usize };
+        }
+    }
+
+    /// Route rows `rows` in blocks of [`BLOCK`] and fold each reached leaf's
+    /// fit into the accumulators: classification increments
+    /// `votes[(row - rows.start) * k + class]`, regression adds onto
+    /// `sums[row - rows.start]`. Accumulator slices are relative to
+    /// `rows.start` so row-parallel workers own disjoint dense slices.
+    pub fn accumulate(
+        &self,
+        cols: &[ColRef],
+        rows: Range<usize>,
+        k: usize,
+        votes: &mut [u32],
+        sums: &mut [f64],
+    ) -> Result<()> {
+        let base = rows.start;
+        let mut cur = [0u32; BLOCK];
+        let mut start = rows.start;
+        while start < rows.end {
+            let len = BLOCK.min(rows.end - start);
+            cur[..len].fill(0);
+            // advance all lanes until every one sits on a self-looped leaf;
+            // the walk is monotone (children > parent), so this terminates
+            loop {
+                let mut moved = false;
+                for (lane, c) in cur[..len].iter_mut().enumerate() {
+                    let n = *c as usize;
+                    let l = self.left[n];
+                    if l as usize == n {
+                        continue;
+                    }
+                    moved = true;
+                    *c = if self.go_left(cols, n, start + lane) { l } else { self.right[n] };
+                }
+                if !moved {
+                    break;
+                }
+            }
+            match &self.fits {
+                FlatFits::Classes(cs) => {
+                    for (lane, c) in cur[..len].iter().enumerate() {
+                        let class = cs[*c as usize] as usize;
+                        if class >= k {
+                            bail!("decoded class {class} out of range (< {k})");
+                        }
+                        votes[(start + lane - base) * k + class] += 1;
+                    }
+                }
+                FlatFits::Values(vs) => {
+                    for (lane, c) in cur[..len].iter().enumerate() {
+                        sums[start + lane - base] += vs[*c as usize];
+                    }
+                }
+            }
+            start += len;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- plan cache
+
+/// Counters and residency of a [`PlanCache`] (surfaced through the store's
+/// `STATS` verb as `plan_hits`/`plan_misses`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub plans: u64,
+}
+
+struct PlanEntry {
+    plan: Arc<FlatTree>,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct PlanCacheInner {
+    plans: HashMap<(u64, u32), PlanEntry>,
+    bytes: u64,
+    clock: u64,
+    /// Model ids whose plans were purged ([`PlanCache::purge_model`]). An
+    /// in-flight batch may still hold the retired model's predictor and
+    /// miss-build its plans; admission rejects those so a dead model can
+    /// never repopulate the cache (8 bytes per retired id, negligible).
+    retired: std::collections::HashSet<u64>,
+}
+
+/// A bounded, byte-accounted LRU of decoded [`FlatTree`]s keyed by
+/// `(model, tree)`.
+///
+/// The model key is [`ParsedContainer::plan_id`] — unique per parse and
+/// never reused, so a stale entry can never alias a different model.
+/// Lookups take one short mutex hold; decoding on a miss runs *outside*
+/// the lock (two racing builders keep the first inserted plan). A plan
+/// larger than the whole budget is returned uncached.
+pub struct PlanCache {
+    max_bytes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inner: Mutex<PlanCacheInner>,
+}
+
+impl PlanCache {
+    pub fn new(max_bytes: u64) -> Self {
+        PlanCache {
+            max_bytes: AtomicU64::new(max_bytes),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inner: Mutex::new(PlanCacheInner {
+                plans: HashMap::new(),
+                bytes: 0,
+                clock: 0,
+                retired: std::collections::HashSet::new(),
+            }),
+        }
+    }
+
+    /// Fetch the plan for `(model, tree)`, building (and caching, budget
+    /// permitting) on a miss.
+    pub fn get_or_build(
+        &self,
+        model: u64,
+        tree: u32,
+        build: impl FnOnce() -> Result<FlatTree>,
+    ) -> Result<Arc<FlatTree>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let now = g.clock;
+            if let Some(e) = g.plans.get_mut(&(model, tree)) {
+                e.last_used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(e.plan.clone());
+            }
+        }
+        // decode outside the lock: a slow miss must not serialize every
+        // other model's lookups behind it
+        let plan = Arc::new(build()?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let bytes = plan.heap_bytes() + std::mem::size_of::<FlatTree>() as u64;
+        if bytes > self.max_bytes.load(Ordering::Relaxed) {
+            return Ok(plan); // bigger than the whole budget: serve uncached
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.retired.contains(&model) {
+            // the model was purged while we were decoding (replaced or
+            // evicted); serve the plan but never cache under a dead id
+            return Ok(plan);
+        }
+        g.clock += 1;
+        let now = g.clock;
+        match g.plans.entry((model, tree)) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                // raced with another builder for the same plan; keep theirs
+                o.get_mut().last_used = now;
+                return Ok(o.get().plan.clone());
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(PlanEntry { plan: plan.clone(), bytes, last_used: now });
+                g.bytes += bytes;
+            }
+        }
+        let max = self.max_bytes.load(Ordering::Relaxed);
+        self.evict_locked(&mut g, max);
+        Ok(plan)
+    }
+
+    /// Evict least-recently-used plans until residency fits `target`.
+    /// One pass + sort instead of a min-scan per victim: bulk shrinks (the
+    /// store rebalancing its budget on every insert) stay O(n log n) under
+    /// the lock rather than O(n) per evicted plan.
+    fn evict_locked(&self, g: &mut PlanCacheInner, target: u64) {
+        if g.bytes <= target {
+            return;
+        }
+        let mut order: Vec<((u64, u32), u64, u64)> = g
+            .plans
+            .iter()
+            .map(|(&key, e)| (key, e.last_used, e.bytes))
+            .collect();
+        order.sort_unstable_by_key(|&(_, used, _)| used);
+        for (key, _, bytes) in order {
+            if g.bytes <= target {
+                break;
+            }
+            g.plans.remove(&key);
+            g.bytes -= bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Shrink residency to at most `target` bytes (LRU-first). The store's
+    /// budget enforcement drops plans this way before evicting any model.
+    pub fn shrink_to(&self, target: u64) {
+        let mut g = self.inner.lock().unwrap();
+        self.evict_locked(&mut g, target);
+    }
+
+    /// Reset the byte budget (and shrink if already past it).
+    pub fn set_max_bytes(&self, max_bytes: u64) {
+        self.max_bytes.store(max_bytes, Ordering::Relaxed);
+        self.shrink_to(max_bytes);
+    }
+
+    pub fn max_bytes(&self) -> u64 {
+        self.max_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Drop every plan belonging to `model` (the store calls this when a
+    /// model is removed, evicted, or replaced) and retire the id, so an
+    /// in-flight batch still holding the dead model's predictor cannot
+    /// repopulate the cache with unservable plans. Returns the bytes freed.
+    pub fn purge_model(&self, model: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.retired.insert(model);
+        let victims: Vec<(u64, u32)> =
+            g.plans.keys().filter(|(m, _)| *m == model).copied().collect();
+        let mut freed = 0;
+        for key in victims {
+            if let Some(e) = g.plans.remove(&key) {
+                g.bytes -= e.bytes;
+                freed += e.bytes;
+            }
+        }
+        freed
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        let g = self.inner.lock().unwrap();
+        PlanStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: g.bytes,
+            plans: g.plans.len() as u64,
+        }
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_PLAN_CACHE_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::{CompressOptions, CompressedForest};
+    use crate::data::synthetic;
+    use crate::forest::{Fit, Forest, ForestParams};
+
+    fn flat_trees_of(cf: &CompressedForest) -> (ParsedContainer, Vec<FlatTree>) {
+        let pc = cf.parse().unwrap();
+        let seqs = crate::zaks::split_concatenated(&pc.zaks_bits, pc.n_trees).unwrap();
+        let vn: Vec<_> = pc.vn_dicts.iter().map(|d| d.decoder()).collect();
+        let sd: Vec<Vec<_>> = pc
+            .split_dicts
+            .iter()
+            .map(|per| per.iter().map(|d| d.decoder()).collect())
+            .collect();
+        let fd: Vec<_> = pc.fit_dicts.iter().map(|d| d.decoder()).collect();
+        let flats = (0..pc.n_trees)
+            .map(|t| {
+                let shape = crate::zaks::shape_from_zaks(&seqs[t]).unwrap();
+                FlatTree::decode(&pc, t, &shape, &vn, &sd, &fd).unwrap()
+            })
+            .collect();
+        (pc, flats)
+    }
+
+    #[test]
+    fn flat_routing_matches_tree_walk() {
+        for (ds, classification) in [
+            (synthetic::iris(41), true),
+            (synthetic::wages(42), true),
+            (synthetic::airfoil_regression(43), false),
+        ] {
+            let params = if classification {
+                ForestParams::classification(5)
+            } else {
+                ForestParams::regression(5)
+            };
+            let forest = Forest::train(&ds, &params, 11);
+            let cf =
+                CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+            let (_, flats) = flat_trees_of(&cf);
+            let cols = col_refs(&ds);
+            for (t, flat) in flats.iter().enumerate() {
+                assert!(flat.node_count() > 0);
+                assert!(flat.heap_bytes() > 0);
+                for row in (0..ds.num_rows()).step_by(17) {
+                    let leaf = flat.route_row(&cols, row);
+                    let expect = forest.trees[t].predict_row(&ds, row);
+                    match (flat.fits(), expect) {
+                        (FlatFits::Classes(cs), Fit::Class(c)) => {
+                            assert_eq!(cs[leaf], c, "tree {t} row {row}")
+                        }
+                        (FlatFits::Values(vs), Fit::Regression(v)) => {
+                            assert_eq!(vs[leaf].to_bits(), v.to_bits(), "tree {t} row {row}")
+                        }
+                        _ => panic!("fit kind mismatch"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_accumulate_matches_per_row_routing() {
+        let ds = synthetic::wages(44);
+        let forest = Forest::train(&ds, &ForestParams::classification(4), 12);
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+        let (pc, flats) = flat_trees_of(&cf);
+        let cols = col_refs(&ds);
+        let k = pc.classes as usize;
+        // ragged range (not a BLOCK multiple, nonzero start) through every tree
+        let rows = 3..ds.num_rows().min(3 + 2 * BLOCK + 5);
+        let mut votes = vec![0u32; rows.len() * k];
+        let mut sums = Vec::new();
+        for flat in &flats {
+            flat.accumulate(&cols, rows.clone(), k, &mut votes, &mut sums).unwrap();
+        }
+        for (i, row) in rows.clone().enumerate() {
+            for (c, &v) in votes[i * k..(i + 1) * k].iter().enumerate() {
+                let expect = flats
+                    .iter()
+                    .filter(|f| match f.fits() {
+                        FlatFits::Classes(cs) => cs[f.route_row(&cols, row)] == c as u32,
+                        _ => false,
+                    })
+                    .count() as u32;
+                assert_eq!(v, expect, "row {row} class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_only_trees_are_self_loops() {
+        let mut g = crate::testing::prop::Gen::new(7);
+        let ds = g.dataset(10, 1, 1, true);
+        let forest = g.leaf_only_forest(&ds, 3);
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+        let (_, flats) = flat_trees_of(&cf);
+        let cols = col_refs(&ds);
+        for flat in &flats {
+            assert_eq!(flat.node_count(), 1);
+            assert_eq!(flat.route_row(&cols, 0), 0);
+        }
+    }
+
+    fn tiny_plan(nodes: usize) -> FlatTree {
+        FlatTree {
+            feature: vec![0; nodes],
+            threshold: vec![0.0; nodes],
+            mask: vec![0; nodes],
+            left: (0..nodes as u32).collect(),
+            right: (0..nodes as u32).collect(),
+            fits: FlatFits::Classes(vec![0; nodes]),
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_misses_and_lru_eviction() {
+        let one = tiny_plan(4).heap_bytes() + std::mem::size_of::<FlatTree>() as u64;
+        let cache = PlanCache::new(2 * one); // room for exactly two plans
+        for t in 0..2u32 {
+            cache.get_or_build(1, t, || Ok(tiny_plan(4))).unwrap();
+        }
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.len(), 2);
+        // touch plan 0 so plan 1 is LRU, then insert a third
+        cache.get_or_build(1, 0, || panic!("must hit")).unwrap();
+        assert_eq!(cache.stats().hits, 1);
+        cache.get_or_build(1, 2, || Ok(tiny_plan(4))).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        cache.get_or_build(1, 0, || panic!("plan 0 must survive")).unwrap();
+        // plan 1 was evicted: rebuilding it counts a miss
+        cache.get_or_build(1, 1, || Ok(tiny_plan(4))).unwrap();
+        assert_eq!(cache.stats().misses, 4);
+        assert!(cache.resident_bytes() <= cache.max_bytes());
+    }
+
+    #[test]
+    fn plan_cache_oversized_plan_served_uncached() {
+        let cache = PlanCache::new(8); // smaller than any real plan
+        let plan = cache.get_or_build(1, 0, || Ok(tiny_plan(64))).unwrap();
+        assert_eq!(plan.node_count(), 64);
+        assert_eq!(cache.len(), 0, "oversized plans must not enter the cache");
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn purged_model_id_cannot_repopulate_the_cache() {
+        let cache = PlanCache::new(u64::MAX);
+        cache.get_or_build(5, 0, || Ok(tiny_plan(4))).unwrap();
+        assert_eq!(cache.len(), 1);
+        cache.purge_model(5);
+        assert_eq!(cache.len(), 0);
+        // an in-flight batch still holding the dead model's predictor
+        // miss-builds the plan; it must be served but never cached
+        let plan = cache.get_or_build(5, 0, || Ok(tiny_plan(4))).unwrap();
+        assert_eq!(plan.node_count(), 4);
+        assert_eq!(cache.len(), 0, "retired ids never re-enter the cache");
+        assert_eq!(cache.resident_bytes(), 0);
+        // other models are unaffected
+        cache.get_or_build(6, 0, || Ok(tiny_plan(4))).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn plan_cache_purge_and_shrink() {
+        let cache = PlanCache::new(u64::MAX);
+        for t in 0..3u32 {
+            cache.get_or_build(7, t, || Ok(tiny_plan(4))).unwrap();
+            cache.get_or_build(8, t, || Ok(tiny_plan(4))).unwrap();
+        }
+        assert_eq!(cache.len(), 6);
+        let freed = cache.purge_model(7);
+        assert!(freed > 0);
+        assert_eq!(cache.len(), 3);
+        // model 8 untouched
+        cache.get_or_build(8, 0, || panic!("must hit")).unwrap();
+        cache.shrink_to(0);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+        // set_max_bytes enforces immediately
+        for t in 0..3u32 {
+            cache.get_or_build(9, t, || Ok(tiny_plan(4))).unwrap();
+        }
+        let one = tiny_plan(4).heap_bytes() + std::mem::size_of::<FlatTree>() as u64;
+        cache.set_max_bytes(one);
+        assert!(cache.resident_bytes() <= one);
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -8,6 +8,9 @@
 //! * [`predict`]   — prediction straight from the compressed bytes (§5):
 //!   walk a tree's Zaks shape, Huffman-decoding only the preorder prefix a
 //!   root-to-leaf path needs, without materializing the forest
+//! * [`flat`]      — the batch execution engine: trees decoded once into
+//!   struct-of-arrays [`flat::FlatTree`] plans, blocked row routing, and a
+//!   bounded [`flat::PlanCache`] so repeated batches skip the decode
 //!
 //! Losslessness contract (asserted by integration tests): for any trained
 //! [`crate::forest::Forest`], `decompress(compress(f)) == f` with bit-exact
@@ -15,9 +18,11 @@
 //! original forest's predictions on every row.
 
 pub mod container;
+pub mod flat;
 pub mod pipeline;
 pub mod predict;
 
 pub use container::{FitCodec, SectionSizes};
+pub use flat::{FlatTree, PlanCache};
 pub use pipeline::{CompressOptions, CompressedForest};
 pub use predict::CompressedPredictor;

@@ -16,11 +16,15 @@
 //! Two query modes:
 //! * [`CompressedPredictor::predict_row`] — single observation, prefix
 //!   decode per tree (the subscriber-device path);
-//! * [`CompressedPredictor::predict_all`] — batch: per tree, decode the
-//!   symbol arrays once (transient, `O(one tree)` memory) and route every
-//!   row through them.
+//! * [`CompressedPredictor::predict_all`] — batch: trees are decoded into
+//!   struct-of-arrays [`FlatTree`] plans (memoized across batches by an
+//!   optional [`PlanCache`]) and rows are routed through them in blocks of
+//!   [`super::flat::BLOCK`]; wide batches on few-tree forests parallelize
+//!   across row ranges, tree-rich forests across trees (see
+//!   [`CompressedPredictor::predict_all_workers`] for the axis rule).
 
 use super::container::{FitCodec, ParsedContainer};
+use super::flat::{self, ColRef, FlatTree, PlanCache};
 use super::pipeline::decompress_container;
 use crate::coding::arith::ArithDecoder;
 use crate::coding::bitio::BitReader;
@@ -45,6 +49,8 @@ pub struct CompressedPredictor {
     fit_decoders: Vec<HuffmanDecoder>,
     /// worker threads for the batch path (1 = sequential).
     workers: usize,
+    /// shared flat-plan cache; `None` decodes plans per batch.
+    plan_cache: Option<Arc<PlanCache>>,
 }
 
 impl CompressedPredictor {
@@ -78,15 +84,29 @@ impl CompressedPredictor {
             split_decoders,
             fit_decoders,
             workers: 1,
+            plan_cache: None,
         })
     }
 
     /// Set the worker-thread count used by [`Self::predict_all`] (builder
-    /// style). Trees are independent, so the batch path shards them across
-    /// workers; 1 keeps the sequential path.
+    /// style); 1 keeps the sequential path.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
         self
+    }
+
+    /// Share a [`PlanCache`] (builder style): decoded [`FlatTree`] plans are
+    /// memoized per `(model, tree)` across batches, so a warm model skips
+    /// the Huffman decode entirely. Without a cache every batch decodes its
+    /// trees transiently (memory `O(decoded trees in flight)`).
+    pub fn with_plan_cache(mut self, cache: Arc<PlanCache>) -> Self {
+        self.plan_cache = Some(cache);
+        self
+    }
+
+    /// The plan-cache model key of this predictor (the parse's unique id).
+    pub fn model_id(&self) -> u64 {
+        self.pc.plan_id()
     }
 
     /// The configured batch worker count.
@@ -259,46 +279,76 @@ impl CompressedPredictor {
         answer.context("walk never reached a leaf (corrupt shape)")
     }
 
-    /// Batch prediction: per tree, decode its symbol arrays once (transient)
-    /// and route every row through them — memory stays O(largest tree) per
-    /// worker, never O(forest). Trees are independent units of work, so the
-    /// batch shards them across the configured worker threads
-    /// ([`Self::with_workers`]); each worker reuses its per-tree transient
-    /// decode scratch across every row of the batch.
+    /// Batch prediction through the flat-tree execution engine: each tree is
+    /// decoded once into a struct-of-arrays [`FlatTree`] (fetched from the
+    /// shared [`PlanCache`] when one is configured — a warm model skips the
+    /// Huffman decode entirely) and rows are routed through it in blocks of
+    /// [`flat::BLOCK`]. Uses the configured worker count
+    /// ([`Self::with_workers`]).
     pub fn predict_all(&self, ds: &Dataset) -> Result<Predictions> {
         self.predict_all_workers(ds, self.workers)
     }
 
     /// As [`Self::predict_all`] with an explicit worker count (the bench
-    /// knob). Classification aggregation is exact under any sharding (vote
-    /// counts commute); regression sums accumulate per shard and are added
-    /// in shard order, which can differ from the sequential sum only by
-    /// float rounding in the last ulp (1 worker = the exact sequential sum).
+    /// knob). A work-size heuristic picks the parallelism axis:
+    ///
+    /// * **trees** when the forest has enough of them to keep every worker
+    ///   busy (classification only — vote counts commute exactly under any
+    ///   sharding);
+    /// * **rows** for wide batches on few-tree forests, and always for
+    ///   regression: each worker owns a contiguous row range and folds fits
+    ///   in tree order per row, so the result is **bit-identical** to the
+    ///   sequential and per-row prefix-decode paths at any worker count
+    ///   (tree sharding would reassociate the f64 sums).
     pub fn predict_all_workers(&self, ds: &Dataset, workers: usize) -> Result<Predictions> {
         self.check_schema(ds)?;
         let n_rows = ds.num_rows();
+        let n_trees = self.pc.n_trees;
+        if n_trees == 0 {
+            bail!("empty forest");
+        }
         let k = self.pc.classes.max(1) as usize;
-        let tree_idx: Vec<usize> = (0..self.pc.n_trees).collect();
-        let (votes, sums) = crate::util::threads::parallel_fold(
-            &tree_idx,
-            workers.max(1),
-            |chunk| self.fold_trees(ds, chunk, n_rows, k),
-            |a, b| match (a, b) {
-                (Ok((mut va, mut sa)), Ok((vb, sb))) => {
-                    for (x, y) in va.iter_mut().zip(&vb) {
-                        *x += *y;
+        let workers = workers.max(1);
+        let cols = flat::col_refs(ds);
+
+        let (votes, sums) = if n_rows == 0 {
+            (Vec::new(), Vec::new())
+        } else if workers == 1 {
+            // sequential: stream one plan at a time over all rows
+            self.fold_trees(&cols, &(0..n_trees).collect::<Vec<_>>(), n_rows, k)?
+        } else if self.row_axis(n_rows, n_trees, workers) {
+            self.predict_row_parallel(&cols, n_rows, k, workers)?
+        } else {
+            // tree axis: shard trees across workers, reduce accumulators
+            let tree_idx: Vec<usize> = (0..n_trees).collect();
+            crate::util::threads::parallel_fold(
+                &tree_idx,
+                workers,
+                |chunk| self.fold_trees(&cols, chunk, n_rows, k),
+                |a, b| match (a, b) {
+                    (Ok((mut va, mut sa)), Ok((vb, sb))) => {
+                        for (x, y) in va.iter_mut().zip(&vb) {
+                            *x += *y;
+                        }
+                        for (x, y) in sa.iter_mut().zip(&sb) {
+                            *x += *y;
+                        }
+                        Ok((va, sa))
                     }
-                    for (x, y) in sa.iter_mut().zip(&sb) {
-                        *x += *y;
-                    }
-                    Ok((va, sa))
-                }
-                (Err(e), _) | (_, Err(e)) => Err(e),
-            },
-        )
-        .context("empty forest")??;
-        Ok(if self.pc.classification {
-            let k = self.pc.classes as usize;
+                    (Err(e), _) | (_, Err(e)) => Err(e),
+                },
+            )
+            .context("empty forest")??
+        };
+        Ok(self.assemble(&votes, &sums, n_rows, k))
+    }
+
+    /// Fold per-row accumulators into [`Predictions`]: majority vote with
+    /// ties to the smaller class, or the regression mean over trees. Shared
+    /// by the flat engine and the re-decode baseline so the differential
+    /// oracle can never diverge on aggregation alone.
+    fn assemble(&self, votes: &[u32], sums: &[f64], n_rows: usize, k: usize) -> Predictions {
+        if self.pc.classification {
             Predictions::Classes(
                 (0..n_rows)
                     .map(|row| {
@@ -313,16 +363,90 @@ impl CompressedPredictor {
             )
         } else {
             Predictions::Values(sums.iter().map(|s| s / self.pc.n_trees as f64).collect())
-        })
+        }
     }
 
-    /// One worker's share of the batch: decode each assigned tree once into
-    /// a transient in-memory tree (the per-tree scratch), route every row
-    /// through it, and accumulate votes/sums locally — no shared state, no
+    /// Work-size heuristic for the batch parallelism axis. Regression always
+    /// takes the row axis (bit-identical aggregation, see
+    /// [`Self::predict_all_workers`]); classification takes it only when the
+    /// forest is too small to keep every worker busy on trees AND the batch
+    /// is wide enough to give each worker full routing blocks.
+    fn row_axis(&self, n_rows: usize, n_trees: usize, workers: usize) -> bool {
+        if !self.pc.classification {
+            return true;
+        }
+        n_trees < workers * 2 && n_rows >= workers * flat::BLOCK
+    }
+
+    /// Row-range parallelism: each worker owns a contiguous row range and
+    /// mutates its disjoint slice of the shared accumulators, folding fits
+    /// in tree order per row — bit-identical to the sequential path. Trees
+    /// are decoded in bounded groups, so peak memory stays O(group of
+    /// trees) rather than O(decoded forest) even with no plan cache (the
+    /// PR-1 bound, kept).
+    fn predict_row_parallel(
+        &self,
+        cols: &[ColRef],
+        n_rows: usize,
+        k: usize,
+        workers: usize,
+    ) -> Result<(Vec<u32>, Vec<f64>)> {
+        let classification = self.pc.classification;
+        let n_trees = self.pc.n_trees;
+        let mut votes = vec![0u32; if classification { n_rows * k } else { 0 }];
+        let mut sums = vec![0.0f64; if classification { 0 } else { n_rows }];
+        let chunk = n_rows.div_ceil(workers).max(1);
+        let ranges: Vec<std::ops::Range<usize>> = (0..n_rows)
+            .step_by(chunk)
+            .map(|s| s..(s + chunk).min(n_rows))
+            .collect();
+        // decoded-plans-in-flight bound; one group covers the common
+        // row-axis case (few-tree forests) so the loop adds no overhead
+        let group = (workers * 8).max(16);
+        let mut start_tree = 0usize;
+        while start_tree < n_trees {
+            let end_tree = (start_tree + group).min(n_trees);
+            let plans = self.flat_trees_range(start_tree..end_tree, workers)?;
+            let plans = &plans;
+            let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                if classification {
+                    for (r, v) in ranges.iter().zip(votes.chunks_mut(chunk * k)) {
+                        let range = r.clone();
+                        handles.push(scope.spawn(move || -> Result<()> {
+                            for plan in plans {
+                                plan.accumulate(cols, range.clone(), k, v, &mut [])?;
+                            }
+                            Ok(())
+                        }));
+                    }
+                } else {
+                    for (r, s) in ranges.iter().zip(sums.chunks_mut(chunk)) {
+                        let range = r.clone();
+                        handles.push(scope.spawn(move || -> Result<()> {
+                            for plan in plans {
+                                plan.accumulate(cols, range.clone(), k, &mut [], s)?;
+                            }
+                            Ok(())
+                        }));
+                    }
+                }
+                handles.into_iter().map(|h| h.join().expect("row worker panicked")).collect()
+            });
+            for r in results {
+                r?;
+            }
+            start_tree = end_tree;
+        }
+        Ok((votes, sums))
+    }
+
+    /// One worker's share of the tree axis: fetch (or decode) each assigned
+    /// tree's plan and fold every row through it — no shared state, no
     /// locks; the caller reduces the per-worker accumulators in shard order.
     fn fold_trees(
         &self,
-        ds: &Dataset,
+        cols: &[ColRef],
         trees: &[usize],
         n_rows: usize,
         k: usize,
@@ -331,6 +455,56 @@ impl CompressedPredictor {
         let mut votes = vec![0u32; if classification { n_rows * k } else { 0 }];
         let mut sums = vec![0.0f64; if classification { 0 } else { n_rows }];
         for &t in trees {
+            self.flat_tree(t)?
+                .accumulate(cols, 0..n_rows, k, &mut votes, &mut sums)
+                .with_context(|| format!("tree {t}"))?;
+        }
+        Ok((votes, sums))
+    }
+
+    /// Fetch tree `t`'s flat plan: from the shared cache when configured
+    /// (decode-once-per-model), otherwise decoded transiently.
+    fn flat_tree(&self, t: usize) -> Result<Arc<FlatTree>> {
+        let build = || {
+            FlatTree::decode(
+                &self.pc,
+                t,
+                &self.shapes[t],
+                &self.vn_decoders,
+                &self.split_decoders,
+                &self.fit_decoders,
+            )
+        };
+        match &self.plan_cache {
+            Some(cache) => cache.get_or_build(self.pc.plan_id(), t as u32, build),
+            None => Ok(Arc::new(build()?)),
+        }
+    }
+
+    /// Materialize one group of tree plans (parallel decode on a cold cache).
+    fn flat_trees_range(
+        &self,
+        trees: std::ops::Range<usize>,
+        workers: usize,
+    ) -> Result<Vec<Arc<FlatTree>>> {
+        let idx: Vec<usize> = trees.collect();
+        crate::util::threads::parallel_map(&idx, workers, |_, &t| self.flat_tree(t))
+            .into_iter()
+            .collect()
+    }
+
+    /// The PR-1 batch path, kept as the measured baseline and differential
+    /// oracle: re-decode every tree into pointer-linked
+    /// [`crate::forest::Tree`] nodes per batch and route rows one at a
+    /// time. Sequential.
+    pub fn predict_all_baseline(&self, ds: &Dataset) -> Result<Predictions> {
+        self.check_schema(ds)?;
+        let n_rows = ds.num_rows();
+        let k = self.pc.classes.max(1) as usize;
+        let classification = self.pc.classification;
+        let mut votes = vec![0u32; if classification { n_rows * k } else { 0 }];
+        let mut sums = vec![0.0f64; if classification { 0 } else { n_rows }];
+        for t in 0..self.pc.n_trees {
             let tree = super::pipeline::decode_tree(
                 &self.pc,
                 t,
@@ -351,7 +525,7 @@ impl CompressedPredictor {
                 }
             }
         }
-        Ok((votes, sums))
+        Ok(self.assemble(&votes, &sums, n_rows, k))
     }
 
     /// Full forest reconstruction (delegates to the pipeline decoder).
@@ -471,6 +645,84 @@ mod tests {
         let p = p.with_workers(4);
         assert_eq!(p.workers(), 4);
         assert_eq!(p.predict_all(&ds).unwrap(), seq);
+    }
+
+    #[test]
+    fn flat_engine_matches_baseline_redecode() {
+        let ds = synthetic::wages(28);
+        let (f, cf) = setup(&ds, 6, true);
+        let p = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+        let flat = p.predict_all(&ds).unwrap();
+        assert_eq!(flat, p.predict_all_baseline(&ds).unwrap());
+        assert_eq!(flat, f.predict_all(&ds));
+    }
+
+    #[test]
+    fn plan_cache_hits_and_stays_correct() {
+        let ds = synthetic::iris(29);
+        let (_, cf) = setup(&ds, 5, true);
+        let cache = Arc::new(super::super::flat::PlanCache::default());
+        let p = CompressedPredictor::new(cf.parse().unwrap())
+            .unwrap()
+            .with_plan_cache(cache.clone());
+        let cold = p.predict_all(&ds).unwrap();
+        assert_eq!(cache.stats().misses, 5, "one decode per tree");
+        assert_eq!(cache.stats().hits, 0);
+        let warm = p.predict_all(&ds).unwrap();
+        assert_eq!(warm, cold, "cached plans must not change predictions");
+        assert_eq!(cache.stats().hits, 5, "warm batch hits every plan");
+        assert_eq!(cache.stats().misses, 5);
+
+        // a budget too small to cache anything must stay transparent
+        let ds2 = synthetic::airfoil_regression(30);
+        let (f2, cf2) = setup(&ds2, 4, false);
+        let tiny = Arc::new(super::super::flat::PlanCache::new(1));
+        let p2 = CompressedPredictor::new(cf2.parse().unwrap())
+            .unwrap()
+            .with_plan_cache(tiny.clone());
+        assert_eq!(p2.predict_all(&ds2).unwrap(), f2.predict_all(&ds2));
+        assert_eq!(tiny.len(), 0, "nothing fits a 1-byte budget");
+    }
+
+    #[test]
+    fn row_axis_matches_tree_axis_and_original() {
+        // few trees + wide batch → the heuristic takes the row axis at high
+        // worker counts; results must match the 1-worker (tree-order) run
+        let ds = synthetic::airfoil_classification(31);
+        let (f, cf) = setup(&ds, 3, true);
+        let p = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+        let seq = p.predict_all_workers(&ds, 1).unwrap();
+        for w in [2, 8] {
+            assert_eq!(p.predict_all_workers(&ds, w).unwrap(), seq, "{w} workers");
+        }
+        assert_eq!(seq, f.predict_all(&ds));
+    }
+
+    #[test]
+    fn regression_batch_bit_identical_across_workers() {
+        let ds = synthetic::airfoil_regression(32);
+        let (_, cf) = setup(&ds, 5, false);
+        let p = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+        let seq = p.predict_all_workers(&ds, 1).unwrap();
+        for w in [2, 3, 8] {
+            match (&seq, &p.predict_all_workers(&ds, w).unwrap()) {
+                (Predictions::Values(a), Predictions::Values(b)) => {
+                    for (row, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(), "row {row}, {w} workers");
+                    }
+                }
+                _ => panic!("regression forest must yield values"),
+            }
+        }
+        // and the per-row prefix decode agrees bit-exactly too
+        if let Predictions::Values(vs) = &seq {
+            for row in (0..ds.num_rows()).step_by(211) {
+                match p.predict_row(&ds, row).unwrap() {
+                    PredictOne::Value(v) => assert_eq!(v.to_bits(), vs[row].to_bits()),
+                    _ => panic!(),
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! LIST                              → OK <model> <model> ...
 //! STATS                             → OK requests=.. batches=.. mean_us=..
 //!                                         max_us=.. evictions=..
-//! BYTES                             → OK resident=<bytes>
+//!                                         plan_hits=.. plan_misses=..
+//! BYTES                             → OK resident=<bytes> plans=<bytes>
 //! QUIT                              → connection closes
 //! ```
 //!
@@ -26,7 +27,7 @@
 //! leaves the store (removal or LRU eviction), so dead per-model queues are
 //! reaped instead of accumulating.
 
-use super::store::{ModelStore, ObsValue};
+use super::store::{ModelStore, ObsValue, StoreStats};
 use crate::compress::predict::PredictOne;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -308,21 +309,31 @@ fn handle_line(
             }
         }
         "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
-        "STATS" => {
-            let s = store.stats();
-            Ok(Some(format!(
-                "OK requests={} batches={} mean_us={} max_us={} evictions={}",
-                s.requests,
-                s.batches,
-                s.mean_latency_us(),
-                s.max_latency_us,
-                s.evictions
-            )))
-        }
-        "BYTES" => Ok(Some(format!("OK resident={}", store.resident_bytes()))),
+        "STATS" => Ok(Some(stats_line(&store.stats()))),
+        "BYTES" => Ok(Some(format!(
+            "OK resident={} plans={}",
+            store.resident_bytes(),
+            store.plan_bytes()
+        ))),
         "QUIT" => Ok(None),
         other => bail!("unknown verb {other:?}"),
     }
+}
+
+/// Render the `STATS` reply. `StoreStats::mean_latency_us` guards the
+/// empty window (zero recorded requests reports `mean_us=0`, no division).
+fn stats_line(s: &StoreStats) -> String {
+    format!(
+        "OK requests={} batches={} mean_us={} max_us={} evictions={} \
+         plan_hits={} plan_misses={}",
+        s.requests,
+        s.batches,
+        s.mean_latency_us(),
+        s.max_latency_us,
+        s.evictions,
+        s.plan_hits,
+        s.plan_misses
+    )
 }
 
 /// Parse `1.5,c3,0.25` → [Num(1.5), Cat(3), Num(0.25)].
@@ -364,6 +375,22 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stats_line_empty_window_reports_zero_mean() {
+        // no requests yet: the mean must be 0, not a division by zero
+        let line = stats_line(&StoreStats::default());
+        assert!(line.starts_with("OK requests=0"), "{line}");
+        assert!(line.contains("mean_us=0"), "{line}");
+        assert!(line.contains("plan_hits=0") && line.contains("plan_misses=0"), "{line}");
+        // and a populated window reports the true per-request mean
+        let s = StoreStats {
+            requests: 4,
+            total_latency_us: 10,
+            ..Default::default()
+        };
+        assert!(stats_line(&s).contains("mean_us=2"), "{}", stats_line(&s));
+    }
 
     #[test]
     fn parse_values_mixed() {

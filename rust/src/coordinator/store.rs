@@ -18,6 +18,7 @@
 //!   container buffer; its predictor's sections are views into it, so
 //!   `resident_bytes` is an honest measure of what the model costs.
 
+use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
@@ -49,6 +50,13 @@ pub struct StoreStats {
     pub total_latency_us: u64,
     pub max_latency_us: u64,
     pub evictions: u64,
+    /// Flat-plan cache hits/misses across every resident model (a hit means
+    /// a batch routed rows without touching the Huffman streams).
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    /// Decoded plan bytes currently resident (charged against the store's
+    /// `max_resident_bytes` budget).
+    pub plan_bytes: u64,
 }
 
 impl StoreStats {
@@ -84,6 +92,11 @@ pub struct ModelStore {
     resident: AtomicU64,
     max_resident_bytes: Option<u64>,
     predict_workers: usize,
+    /// Decoded flat-tree plans, shared by every resident model's predictor.
+    /// Plan bytes count against `max_resident_bytes`: budget enforcement
+    /// shrinks this cache *before* evicting any model (a dropped plan
+    /// rebuilds on the next batch; a dropped model needs a re-insert).
+    plans: Arc<PlanCache>,
 }
 
 fn shard_index(name: &str, n: usize) -> usize {
@@ -110,6 +123,9 @@ impl ModelStore {
 
     /// Fully explicit construction (shard count + optional budget).
     pub fn with_config(shards: usize, max_resident_bytes: Option<u64>) -> Self {
+        // budgeted stores start the plan cap at the whole budget (it shrinks
+        // as compressed bytes move in); unbounded stores get a fixed default
+        let plan_cap = max_resident_bytes.unwrap_or(DEFAULT_PLAN_CACHE_BYTES);
         ModelStore {
             shards: (0..shards.max(1))
                 .map(|_| Shard { models: RwLock::new(BTreeMap::new()) })
@@ -119,12 +135,23 @@ impl ModelStore {
             resident: AtomicU64::new(0),
             max_resident_bytes,
             predict_workers: 1,
+            plans: Arc::new(PlanCache::new(plan_cap)),
         }
     }
 
     /// Builder: worker threads handed to each model's batch predictor.
     pub fn predict_workers(mut self, workers: usize) -> Self {
         self.predict_workers = workers.max(1);
+        self
+    }
+
+    /// Builder: byte cap of the flat-plan cache. Only meaningful for stores
+    /// **without** a `max_resident_bytes` budget — budgeted stores size the
+    /// cache to whatever the budget leaves after compressed bytes.
+    pub fn plan_cache_bytes(self, bytes: u64) -> Self {
+        if self.max_resident_bytes.is_none() {
+            self.plans.set_max_bytes(bytes);
+        }
         self
     }
 
@@ -158,7 +185,9 @@ impl ModelStore {
             }
         }
         let pc = cf.parse()?; // zero-copy: shares cf's Arc<[u8]>
-        let predictor = CompressedPredictor::new(pc)?.with_workers(self.predict_workers);
+        let predictor = CompressedPredictor::new(pc)?
+            .with_workers(self.predict_workers)
+            .with_plan_cache(self.plans.clone());
         let model = Arc::new(StoredModel {
             predictor,
             compressed_bytes: bytes,
@@ -178,6 +207,8 @@ impl ModelStore {
             .insert(name.to_string(), model);
         if let Some(old) = old {
             self.resident.fetch_sub(old.compressed_bytes, Ordering::Relaxed);
+            // the replaced parse's plans can never be served again
+            self.plans.purge_model(old.predictor.model_id());
         }
         self.enforce_budget(name);
         Ok(())
@@ -190,10 +221,16 @@ impl ModelStore {
         self.insert(name, &cf)
     }
 
-    /// Evict least-recently-used models (never `keep`) until the resident
-    /// total fits the budget again.
+    /// Enforce `max_resident_bytes` over compressed bytes **plus** decoded
+    /// plan bytes. Plans are dropped first (they rebuild on demand); only
+    /// when the compressed bytes alone still exceed the budget are
+    /// least-recently-used models (never `keep`) evicted.
     fn enforce_budget(&self, keep: &str) {
         let Some(budget) = self.max_resident_bytes else { return };
+        // cap the plan cache to whatever the budget leaves after the
+        // compressed residents; this also evicts plans already past the cap
+        self.plans
+            .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
         while self.resident.load(Ordering::Relaxed) > budget {
             let mut victim: Option<(String, u64)> = None;
             for shard in &self.shards {
@@ -213,6 +250,10 @@ impl ModelStore {
                 self.stats.lock().unwrap().evictions += 1;
             }
         }
+        // model evictions freed compressed bytes: let plans grow back into
+        // the slack
+        self.plans
+            .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
     }
 
     pub fn remove(&self, name: &str) -> bool {
@@ -220,6 +261,7 @@ impl ModelStore {
         match removed {
             Some(m) => {
                 self.resident.fetch_sub(m.compressed_bytes, Ordering::Relaxed);
+                self.plans.purge_model(m.predictor.model_id());
                 true
             }
             None => false,
@@ -249,13 +291,29 @@ impl ModelStore {
         self.len() == 0
     }
 
-    /// Total compressed bytes resident (the "storage budget" figure).
+    /// Total compressed bytes resident (the "storage budget" figure;
+    /// decoded plan bytes are reported separately by [`Self::plan_bytes`]).
     pub fn resident_bytes(&self) -> u64 {
         self.resident.load(Ordering::Relaxed)
     }
 
+    /// Decoded flat-plan bytes currently resident.
+    pub fn plan_bytes(&self) -> u64 {
+        self.plans.resident_bytes()
+    }
+
+    /// The shared flat-plan cache (counters, budget introspection).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
     pub fn stats(&self) -> StoreStats {
-        *self.stats.lock().unwrap()
+        let mut s = *self.stats.lock().unwrap();
+        let p = self.plans.stats();
+        s.plan_hits = p.hits;
+        s.plan_misses = p.misses;
+        s.plan_bytes = p.resident_bytes;
+        s
     }
 
     /// Look a model up (read lock held only for the map probe) and stamp
@@ -519,5 +577,64 @@ mod tests {
         store.insert("m", &cf).unwrap();
         assert_eq!(store.len(), 1);
         assert_eq!(store.resident_bytes(), cf.total_bytes());
+    }
+
+    #[test]
+    fn warm_batches_hit_the_plan_cache() {
+        let (store, f, ds) = store_with_iris();
+        let rows: Vec<Vec<ObsValue>> = (0..20).map(|r| row_values(&ds, r * 3)).collect();
+        let cold = store.predict_batch("iris", &rows).unwrap();
+        let s = store.stats();
+        assert_eq!(s.plan_misses, 5, "first batch decodes each of the 5 trees once");
+        assert_eq!(s.plan_hits, 0);
+        assert!(s.plan_bytes > 0, "plans stay resident for the next batch");
+        let warm = store.predict_batch("iris", &rows).unwrap();
+        assert_eq!(warm, cold);
+        let s = store.stats();
+        assert_eq!(s.plan_misses, 5, "warm batch decodes nothing");
+        assert_eq!(s.plan_hits, 5);
+        for (i, out) in cold.iter().enumerate() {
+            assert_eq!(*out, PredictOne::Class(f.predict_class(&ds, i * 3)));
+        }
+    }
+
+    #[test]
+    fn removal_and_replacement_purge_plans() {
+        let (store, _, ds) = store_with_iris();
+        let rows: Vec<Vec<ObsValue>> = (0..16).map(|r| row_values(&ds, r)).collect();
+        store.predict_batch("iris", &rows).unwrap();
+        assert!(store.plan_bytes() > 0);
+        // replacing the model orphans the old parse's plans: they are purged
+        let (cf, _, _) = iris_model(12);
+        store.insert("iris", &cf).unwrap();
+        assert_eq!(store.plan_bytes(), 0, "replaced model's plans purged");
+        store.predict_batch("iris", &rows).unwrap();
+        assert!(store.plan_bytes() > 0);
+        assert!(store.remove("iris"));
+        assert_eq!(store.plan_bytes(), 0, "removed model's plans purged");
+    }
+
+    #[test]
+    fn budget_drops_plans_before_models() {
+        let (cf, f, ds) = iris_model(6);
+        let one = cf.total_bytes();
+        let store = ModelStore::with_budget(2 * one + one / 2);
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        // plans may only use the budget slack left by the compressed bytes
+        assert_eq!(store.plan_cache().max_bytes(), one / 2);
+        let rows: Vec<Vec<ObsValue>> = (0..16).map(|r| row_values(&ds, r)).collect();
+        store.predict_batch("a", &rows).unwrap();
+        assert!(store.plan_bytes() <= one / 2);
+        // a third insert exceeds the budget: every plan goes first, then
+        // exactly one model
+        store.insert("c", &cf).unwrap();
+        assert_eq!(store.plan_bytes(), 0, "plans are the first eviction victims");
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.stats().evictions, 1);
+        assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+        // serving still works (plans rebuild on demand)
+        let out = store.predict_batch("c", &rows).unwrap();
+        assert_eq!(out[0], PredictOne::Class(f.predict_class(&ds, 0)));
     }
 }

@@ -61,6 +61,7 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   lossy    --dataset KEY [--trees N] [--bits B] [--keep N0]
   serve    --port P --dataset KEY[,KEY...] [--trees N]
            [--max-resident-bytes B] [--predict-workers W]
+           [--plan-cache-bytes B]
   suite    [--trees N] [--paper-scale]
   datasets";
 
@@ -275,10 +276,27 @@ fn cmd_serve(args: &Args) -> i32 {
         "predict-workers",
         rf_compress::util::threads::default_workers(),
     );
-    let store = Arc::new(
+    let mut store =
         ModelStore::with_config(rf_compress::coordinator::store::DEFAULT_SHARDS, budget)
-            .predict_workers(workers),
-    );
+            .predict_workers(workers);
+    // flat-plan cache cap for unbounded stores (budgeted stores size the
+    // cache from whatever max-resident-bytes leaves after compressed bytes)
+    if let Some(s) = args.get("plan-cache-bytes") {
+        match s.parse::<u64>() {
+            Ok(_) if budget.is_some() => {
+                eprintln!(
+                    "serve: --plan-cache-bytes is ignored when --max-resident-bytes is \
+                     set (plans share the budget's slack); drop one of the two"
+                );
+            }
+            Ok(b) => store = store.plan_cache_bytes(b),
+            Err(_) => {
+                eprintln!("serve: --plan-cache-bytes expects a byte count, got {s:?}");
+                return 2;
+            }
+        }
+    }
+    let store = Arc::new(store);
     let mut coord = coordinator(args);
     for key in &keys {
         let Some(ds) = dataset_by_key(key, args.get_or("data-seed", 1234u64)) else {
@@ -306,6 +324,10 @@ fn cmd_serve(args: &Args) -> i32 {
             None => String::new(),
         },
         server.addr()
+    );
+    println!(
+        "plan cache: up to {} of decoded flat trees",
+        human_bytes(store.plan_cache().max_bytes())
     );
     println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");
     loop {

@@ -10,6 +10,9 @@ pub struct Timing {
     pub median: f64,
     pub p10: f64,
     pub p90: f64,
+    /// Tail latency (used by the machine-readable bench reports); with few
+    /// iterations this degrades toward the max sample.
+    pub p99: f64,
     pub iters: usize,
 }
 
@@ -57,7 +60,7 @@ pub fn time_it<F: FnMut()>(budget_s: f64, min_iters: usize, mut f: F) -> Timing 
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-    Timing { median: q(0.5), p10: q(0.1), p90: q(0.9), iters }
+    Timing { median: q(0.5), p10: q(0.1), p90: q(0.9), p99: q(0.99), iters }
 }
 
 /// Aligned table printer.
@@ -125,6 +128,7 @@ mod tests {
         });
         assert!(t.median >= 0.0);
         assert!(t.p10 <= t.p90 + 1e-12);
+        assert!(t.p90 <= t.p99 + 1e-12);
         assert!(t.iters >= 3);
     }
 

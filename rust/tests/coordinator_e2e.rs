@@ -155,9 +155,15 @@ fn eviction_under_budget_over_tcp() {
     assert!(list.contains("m0") && list.contains("m2"), "{list}");
     assert!(!list.contains("m1"), "LRU model must be gone: {list}");
     let bytes = client.request("BYTES").unwrap();
-    let resident: u64 = bytes.trim_start_matches("OK resident=").parse().unwrap();
+    let resident: u64 = bytes
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("resident="))
+        .expect("BYTES reply carries resident=")
+        .parse()
+        .unwrap();
     assert_eq!(resident, 2 * one, "two models resident after eviction");
     assert!(resident <= store.max_resident_bytes().unwrap());
+    assert!(bytes.contains("plans="), "BYTES reports plan residency: {bytes}");
 
     // the evicted model now errors over the wire; the connection survives
     let reply = client.request(&format!("PREDICT m1 {wire}")).unwrap();

@@ -290,6 +290,155 @@ fn prop_single_tree_all_categorical_pipeline() {
     });
 }
 
+/// Compare a batch prediction against the per-row prefix decode, demanding
+/// bit-identity (classes equal; regression values equal by bit pattern).
+fn batch_matches_prefix_decode(
+    p: &rf_compress::compress::CompressedPredictor,
+    ds: &Dataset,
+    batch: &rf_compress::forest::forest::Predictions,
+    label: &str,
+) -> Result<(), String> {
+    use rf_compress::compress::predict::PredictOne;
+    use rf_compress::forest::forest::Predictions;
+    for row in 0..ds.num_rows() {
+        let one = p.predict_row(ds, row).map_err(|e| format!("{label} row {row}: {e:#}"))?;
+        match (batch, one) {
+            (Predictions::Classes(cs), PredictOne::Class(c)) => {
+                if cs[row] != c {
+                    return Err(format!("{label} row {row}: batch {} != prefix {c}", cs[row]));
+                }
+            }
+            (Predictions::Values(vs), PredictOne::Value(v)) => {
+                if vs[row].to_bits() != v.to_bits() {
+                    return Err(format!(
+                        "{label} row {row}: batch {} not bit-identical to prefix {v}",
+                        vs[row]
+                    ));
+                }
+            }
+            _ => return Err(format!("{label} row {row}: prediction kind mismatch")),
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_flat_engine_bit_identical_to_prefix_decode() {
+    use rf_compress::compress::CompressedPredictor;
+    // the flat-tree batch engine must agree with the per-row prefix decode
+    // bit-for-bit on every degenerate shape, at every worker count (both
+    // parallelism axes get exercised: 8 workers over ≤6 trees forces the
+    // row axis; 1–2 workers over several trees takes the tree axis)
+    forall("flat engine == prefix decode", |g: &mut Gen| {
+        let mode = g.usize_in(0, 3);
+        let classification = g.bool(0.5);
+        let (ds, forest, label) = match mode {
+            0 => {
+                // leaf-only forest (every tree a single root leaf)
+                let numeric = g.usize_in(0, 2);
+                let categorical = g.usize_in(usize::from(numeric == 0), 2);
+                let ds = g.dataset(g.usize_in(5, 40), numeric, categorical, classification);
+                let f = g.leaf_only_forest(&ds, g.usize_in(1, 6));
+                (ds, f, "leaf-only")
+            }
+            1 => {
+                // single-tree forest
+                let numeric = g.usize_in(0, 2);
+                let categorical = g.usize_in(usize::from(numeric == 0), 3);
+                let ds = g.dataset(g.usize_in(20, 60), numeric, categorical, classification);
+                let params = if classification {
+                    ForestParams::classification(1)
+                } else {
+                    ForestParams::regression(1)
+                };
+                let f = Forest::train(&ds, &params, g.rng().next_u64());
+                (ds, f, "single-tree")
+            }
+            2 => {
+                // all-categorical schema
+                let ds = g.dataset(g.usize_in(20, 60), 0, g.usize_in(1, 4), classification);
+                let params = if classification {
+                    ForestParams::classification(g.usize_in(2, 5))
+                } else {
+                    ForestParams::regression(g.usize_in(2, 5))
+                };
+                let f = Forest::train(&ds, &params, g.rng().next_u64());
+                (ds, f, "all-categorical")
+            }
+            _ => {
+                // general mixed-schema forest
+                let ds = random_dataset(g);
+                let params = if ds.target.is_classification() {
+                    ForestParams::classification(g.usize_in(1, 6))
+                } else {
+                    ForestParams::regression(g.usize_in(1, 6))
+                };
+                let f = Forest::train(&ds, &params, g.rng().next_u64());
+                (ds, f, "mixed")
+            }
+        };
+        ds.validate().map_err(|e| e.to_string())?;
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| format!("{label} compress: {e:#}"))?;
+        let p = CompressedPredictor::new(cf.parse().map_err(|e| e.to_string())?)
+            .map_err(|e| format!("{label} predictor: {e:#}"))?;
+        let baseline = p
+            .predict_all_baseline(&ds)
+            .map_err(|e| format!("{label} baseline: {e:#}"))?;
+        for workers in [1usize, 2, 8] {
+            let batch = p
+                .predict_all_workers(&ds, workers)
+                .map_err(|e| format!("{label} {workers}w: {e:#}"))?;
+            if batch != baseline {
+                return Err(format!("{label} {workers}w: flat engine != re-decode baseline"));
+            }
+            batch_matches_prefix_decode(&p, &ds, &batch, &format!("{label} {workers}w"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_cache_transparent_under_any_budget() {
+    use rf_compress::compress::{CompressedPredictor, PlanCache};
+    use std::sync::Arc;
+    // a plan cache of ANY byte budget (including one that fits nothing, or
+    // evicts mid-sequence) must never change predictions
+    forall("plan cache transparent", |g: &mut Gen| {
+        let ds = random_dataset(g);
+        let params = if ds.target.is_classification() {
+            ForestParams::classification(g.usize_in(1, 5))
+        } else {
+            ForestParams::regression(g.usize_in(1, 5))
+        };
+        let forest = Forest::train(&ds, &params, g.rng().next_u64());
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| e.to_string())?;
+        let plain = CompressedPredictor::new(cf.parse().map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        let expect = plain.predict_all(&ds).map_err(|e| e.to_string())?;
+        let budget = match g.usize_in(0, 2) {
+            0 => 1,                   // caches nothing
+            1 => g.u64_in(64, 4096),  // evicts under churn
+            _ => u64::MAX,            // caches everything
+        };
+        let cache = Arc::new(PlanCache::new(budget));
+        let cached = CompressedPredictor::new(cf.parse().map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?
+            .with_plan_cache(cache.clone());
+        for round in 0..3 {
+            let got = cached.predict_all(&ds).map_err(|e| e.to_string())?;
+            if got != expect {
+                return Err(format!("round {round} diverged under budget {budget}"));
+            }
+        }
+        if cache.resident_bytes() > budget {
+            return Err("cache exceeded its byte budget".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_kl_clustering_objective_nonincreasing_in_k() {
     use rf_compress::cluster::kmeans::{cluster_k, NativeEngine};
