@@ -6,12 +6,17 @@
 //! * serving hot path: single-row latency (p50/p99), batch throughput of
 //!   the PR-1 re-decode baseline vs the flat-tree engine (cold and with a
 //!   warm plan cache), worker scaling on both parallelism axes; emits the
-//!   machine-readable `BENCH_serve.json` tracked across PRs
+//!   machine-readable `BENCH_serve.json` tracked across PRs (and gated by
+//!   `repro bench-gate` in CI)
+//! * tiered-store spill path: mmap-backed reload (map + header parse) vs a
+//!   cold full-read parse, p50/p99, plus the end-to-end spill→reload round
+//!   trip through the store; emits `BENCH_spill.json`
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
 //!
 //! Run: `cargo bench --bench hotpath`
-//! (add `-- cluster|compress|predict|serve|codec`; `-- serve --quick` is
-//! the CI smoke configuration: tiny forest, short timing budgets)
+//! (add `-- cluster|compress|predict|serve|spill|codec`; `-- serve --quick`
+//! and `-- spill --quick` are the CI smoke configurations: tiny forest,
+//! short timing budgets; `-- spill --spill-bytes B` caps the disk tier)
 
 use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
 use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor, PlanCache};
@@ -37,6 +42,9 @@ fn main() {
     }
     if run("serve") {
         bench_serve(&cfg);
+    }
+    if run("spill") {
+        bench_spill(&cfg);
     }
     if run("codec") {
         bench_codec();
@@ -375,6 +383,160 @@ fn write_serve_json(
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }
+}
+
+fn bench_spill(cfg: &rf_compress::util::bench::BenchConfig) {
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::util::mmap::Mmap;
+
+    println!("== tiered store: mmap reload vs cold parse ==");
+    let quick = cfg.args.flag("quick");
+    let budget = if quick { 0.05 } else { 0.5 };
+    let spill_cap: u64 = cfg.args.get_or("spill-bytes", 64u64 << 20);
+    let dir = std::env::temp_dir().join(format!("rfc-spill-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let ds = synthetic::airfoil_classification(1234);
+    let n_trees = if quick { cfg.trees.min(16).max(4) } else { cfg.trees.max(50) };
+    let forest = Forest::train(&ds, &ForestParams::classification(n_trees), cfg.seed);
+    let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let one = cf.total_bytes();
+    println!(
+        "container: {} trees, {} (spill-tier cap {})",
+        n_trees,
+        rf_compress::util::stats::human_bytes(one),
+        rf_compress::util::stats::human_bytes(spill_cap)
+    );
+    if one > spill_cap {
+        println!("container exceeds --spill-bytes; skipping the spill stage");
+        let _ = std::fs::remove_dir_all(&dir);
+        return;
+    }
+
+    // correctness gate (the CI spill-smoke stage trips on any divergence):
+    // predictions from a Resident, a Spilled-then-reloaded, and a
+    // freshly-parsed model must be identical
+    let store = ModelStore::with_budget(2 * one).spill_dir(&dir).spill_bytes(spill_cap);
+    store.insert("m", &cf).unwrap();
+    let rows: Vec<Vec<ObsValue>> = (0..ds.num_rows().min(64))
+        .map(|r| {
+            ds.features
+                .iter()
+                .map(|f| match &f.column {
+                    rf_compress::data::Column::Numeric(v) => ObsValue::Num(v[r]),
+                    rf_compress::data::Column::Categorical { values, .. } => {
+                        ObsValue::Cat(values[r])
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let resident_out = store.predict_batch("m", &rows).unwrap();
+    assert!(store.spill("m").unwrap(), "spill must succeed under the cap");
+    assert!(store.is_spilled("m"));
+    let reloaded_out = store.predict_batch("m", &rows).unwrap();
+    assert_eq!(reloaded_out, resident_out, "reload diverges from the resident model");
+    let fresh = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+    match fresh.predict_all(&ds).unwrap() {
+        rf_compress::forest::forest::Predictions::Classes(cs) => {
+            for (i, out) in resident_out.iter().enumerate() {
+                assert_eq!(
+                    *out,
+                    rf_compress::compress::predict::PredictOne::Class(cs[i]),
+                    "row {i}: fresh parse diverges"
+                );
+            }
+        }
+        _ => unreachable!("classification forest"),
+    }
+
+    // a container file both timing paths read back
+    let file = dir.join("bench-model.rfcz");
+    std::fs::write(&file, &cf.bytes).unwrap();
+
+    // cold parse: read the whole file into a heap buffer, then parse —
+    // what a reload would cost without the mmap seam
+    let t_cold = time_it(budget, 5, || {
+        let bytes = std::fs::read(&file).unwrap();
+        let cf = CompressedForest::from_bytes(bytes).unwrap();
+        let p = CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+        assert_eq!(p.num_trees(), n_trees);
+    });
+    // mmap reload: map + parse; payload bytes are never copied, the kernel
+    // pages them in on first decode
+    let t_mmap = time_it(budget, 5, || {
+        let map = Mmap::map_path(&file).unwrap();
+        let pc = rf_compress::compress::container::parse_arc(map).unwrap();
+        let p = CompressedPredictor::new(pc).unwrap();
+        assert_eq!(p.num_trees(), n_trees);
+    });
+    // end-to-end round trip through the store: force a spill (disk write),
+    // then a single-row predict that triggers the mmap reload
+    let vals = rows[0].clone();
+    let t_round = time_it(budget, 5, || {
+        store.spill("m").unwrap();
+        store.predict("m", &vals).unwrap();
+    });
+
+    let us = |s: f64| s * 1e6;
+    let mut t = Table::new(&["path", "p50", "p99", "vs cold"]);
+    t.row(&[
+        "cold parse (read + parse)".into(),
+        format!("{:.1} µs", us(t_cold.median)),
+        format!("{:.1} µs", us(t_cold.p99)),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "mmap reload (map + parse)".into(),
+        format!("{:.1} µs", us(t_mmap.median)),
+        format!("{:.1} µs", us(t_mmap.p99)),
+        format!("{:.2}x", t_cold.median / t_mmap.median),
+    ]);
+    t.row(&[
+        "store spill+reload round trip".into(),
+        format!("{:.1} µs", us(t_round.median)),
+        format!("{:.1} µs", us(t_round.p99)),
+        "-".into(),
+    ]);
+    t.print();
+    let s = store.stats();
+    println!("store: spills={} reloads={} evictions={}", s.spills, s.reloads, s.evictions);
+    assert!(s.spills > 0 && s.reloads > 0, "the round trip must exercise both transitions");
+
+    let json = [
+        "{".to_string(),
+        "  \"bench\": \"hotpath spill\",".to_string(),
+        format!("  \"trees\": {n_trees},"),
+        format!("  \"container_bytes\": {one},"),
+        format!(
+            "  \"cold_parse_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}},",
+            us(t_cold.median),
+            us(t_cold.p99)
+        ),
+        format!(
+            "  \"mmap_reload_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}},",
+            us(t_mmap.median),
+            us(t_mmap.p99)
+        ),
+        format!(
+            "  \"spill_roundtrip_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}},",
+            us(t_round.median),
+            us(t_round.p99)
+        ),
+        format!("  \"reload_speedup_vs_cold\": {:.3},", t_cold.median / t_mmap.median.max(1e-9)),
+        format!("  \"spills\": {}, \"reloads\": {}", s.spills, s.reloads),
+        "}".to_string(),
+    ]
+    .join("\n")
+        + "\n";
+    match std::fs::write("BENCH_spill.json", &json) {
+        Ok(()) => println!("wrote BENCH_spill.json"),
+        Err(e) => eprintln!("could not write BENCH_spill.json: {e}"),
+    }
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
 }
 
 fn bench_codec() {

@@ -30,12 +30,103 @@ use crate::coding::f64pack::{self, F64Codec};
 use crate::coding::huffman::HuffmanCode;
 use crate::model::extract::{SplitAlphabet, ValueAlphabets};
 use crate::model::keys::{ContextKey, ModelConditioning, ROOT_FATHER};
+use crate::util::mmap::Mmap;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"RFCZ";
 pub const VERSION: u8 = 1;
+
+/// A parsed container's byte source. Payload sections alias this buffer
+/// wherever it lives:
+///
+/// * [`SharedBytes::Heap`] — an `Arc<[u8]>`, the freshly-compressed /
+///   network-received case (the model store's RAM tier);
+/// * [`SharedBytes::Mapped`] — a memory-mapped spill file
+///   ([`crate::util::mmap::Mmap`]): reloading an evicted model is an `mmap`
+///   plus a header parse — no `read`, no payload memcpy, the kernel pages
+///   bytes in on first decode.
+///
+/// Cloning is a refcount bump in either case, so any number of parses and
+/// predictors keep sharing one resident copy (the zero-copy contract of
+/// [`ParsedContainer`]).
+#[derive(Clone)]
+pub enum SharedBytes {
+    Heap(Arc<[u8]>),
+    Mapped(Arc<Mmap>),
+}
+
+impl SharedBytes {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            SharedBytes::Heap(b) => b,
+            SharedBytes::Mapped(m) => m,
+        }
+    }
+
+    pub fn as_ptr(&self) -> *const u8 {
+        self.as_slice().as_ptr()
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Whether this buffer is a live file mapping (the tiered store's
+    /// reload path; heap buffers and the non-unix read fallback are not).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            SharedBytes::Heap(_) => false,
+            SharedBytes::Mapped(m) => m.is_mapped(),
+        }
+    }
+}
+
+impl std::ops::Deref for SharedBytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedBytes")
+            .field("len", &self.len())
+            .field("mapped", &matches!(self, SharedBytes::Mapped(_)))
+            .finish()
+    }
+}
+
+impl From<Arc<[u8]>> for SharedBytes {
+    fn from(b: Arc<[u8]>) -> Self {
+        SharedBytes::Heap(b)
+    }
+}
+
+impl From<Vec<u8>> for SharedBytes {
+    fn from(b: Vec<u8>) -> Self {
+        SharedBytes::Heap(Arc::from(b))
+    }
+}
+
+impl From<Arc<Mmap>> for SharedBytes {
+    fn from(m: Arc<Mmap>) -> Self {
+        SharedBytes::Mapped(m)
+    }
+}
+
+impl From<Mmap> for SharedBytes {
+    fn from(m: Mmap) -> Self {
+        SharedBytes::Mapped(Arc::new(m))
+    }
+}
 
 /// Codec used for the FITS section.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,8 +251,9 @@ pub struct ParsedContainer {
     pub vars_ranges: Vec<(usize, usize)>,
     pub splits_ranges: Vec<(usize, usize)>,
     pub fits_ranges: Vec<(usize, usize)>,
-    /// the shared container buffer; payload sections are views into it
-    buf: Arc<[u8]>,
+    /// the shared container buffer (heap or mmap); payload sections are
+    /// views into it
+    buf: SharedBytes,
     /// process-unique id of this parse, never reused — the plan cache's
     /// model key (see [`crate::compress::flat::PlanCache`]). Clones share
     /// the id: they alias the same streams, so their plans are identical.
@@ -179,8 +271,9 @@ static NEXT_PLAN_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64
 
 impl ParsedContainer {
     /// The shared container buffer this parse aliases (no copies were made
-    /// of the payload sections; everything below points into this).
-    pub fn buffer(&self) -> &Arc<[u8]> {
+    /// of the payload sections; everything below points into this). Heap or
+    /// mmap — see [`SharedBytes`].
+    pub fn buffer(&self) -> &SharedBytes {
         &self.buf
     }
 
@@ -547,15 +640,18 @@ impl ContainerBuilder {
 
 /// Parse a container from a borrowed buffer. Copies the bytes **once** into
 /// a shared `Arc<[u8]>` and delegates to [`parse_arc`]; callers that already
-/// hold an `Arc` (the model store, [`crate::compress::CompressedForest`])
-/// should call [`parse_arc`] directly for a fully zero-copy parse.
+/// hold an `Arc` (the model store, [`crate::compress::CompressedForest`]) or
+/// an [`crate::util::mmap::Mmap`] should call [`parse_arc`] directly for a
+/// fully zero-copy parse.
 pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
-    parse_arc(Arc::from(bytes))
+    parse_arc(Arc::<[u8]>::from(bytes))
 }
 
-/// Parse a shared container buffer (full validation; payload sections are
-/// recorded as spans into `buf`, never copied).
-pub fn parse_arc(buf: Arc<[u8]>) -> Result<ParsedContainer> {
+/// Parse a shared container buffer — an `Arc<[u8]>` or a memory map, via
+/// [`SharedBytes`] — with full validation; payload sections are recorded as
+/// spans into `buf`, never copied.
+pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
+    let buf: SharedBytes = buf.into();
     let bytes: &[u8] = &buf;
     let mut r = BitReader::new(bytes);
     let mut sizes = SectionSizes::default();
@@ -901,7 +997,8 @@ mod tests {
         let buf: Arc<[u8]> = cf.bytes.clone();
         let pc = parse_arc(buf.clone()).unwrap();
         // the parse holds the very same allocation...
-        assert!(Arc::ptr_eq(pc.buffer(), &buf), "parse must not copy the buffer");
+        assert_eq!(pc.buffer().as_ptr(), buf.as_ptr(), "parse must not copy the buffer");
+        assert!(!pc.buffer().is_mapped(), "a heap Arc parses as the Heap variant");
         // ...and every payload section is a pointer into it (no per-section
         // copies) — the zero-copy acceptance check
         let base = buf.as_ptr() as usize;
@@ -924,6 +1021,54 @@ mod tests {
         // and a second parse of the same Arc shares it as well (two
         // predictors, one resident buffer)
         let pc2 = parse_arc(buf.clone()).unwrap();
-        assert!(Arc::ptr_eq(pc2.buffer(), pc.buffer()));
+        assert_eq!(pc2.buffer().as_ptr(), pc.buffer().as_ptr());
+    }
+
+    #[test]
+    fn mapped_parse_is_zero_copy_into_the_mapping() {
+        // the tiered store's reload path: container bytes on disk, parsed
+        // through an mmap-backed SharedBytes — every payload section must
+        // alias the mapped region (no decode, no payload memcpy)
+        use crate::compress::pipeline::{CompressOptions, CompressedForest};
+        use crate::data::synthetic;
+        use crate::forest::{Forest, ForestParams};
+        let ds = synthetic::iris(98);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 10);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("rfc-container-mmap-test-{}.rfcz", std::process::id()));
+        std::fs::write(&path, &cf.bytes).unwrap();
+
+        let map = crate::util::mmap::Mmap::map_path(&path).unwrap();
+        let base = map.as_slice().as_ptr() as usize;
+        let len = map.len();
+        assert_eq!(len as u64, cf.total_bytes());
+        let pc = parse_arc(map).unwrap();
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(pc.buffer().is_mapped(), "reload parses must ride the mapping");
+        assert_eq!(pc.buffer().as_ptr() as usize, base);
+        for (name, sect) in [
+            ("vars", pc.vars_bytes()),
+            ("splits", pc.splits_bytes()),
+            ("fits", pc.fits_bytes()),
+        ] {
+            let p = sect.as_ptr() as usize;
+            assert!(
+                p >= base && p + sect.len() <= base + len,
+                "{name} section must alias the mapped file"
+            );
+        }
+        // the mapped parse decodes identically to the heap parse
+        let heap = parse_arc(cf.bytes.clone()).unwrap();
+        assert_eq!(pc.n_trees, heap.n_trees);
+        assert_eq!(pc.zaks_bits, heap.zaks_bits);
+        for t in 0..pc.n_trees {
+            assert_eq!(pc.tree_vars(t), heap.tree_vars(t), "tree {t} vars");
+            assert_eq!(pc.tree_splits(t), heap.tree_splits(t), "tree {t} splits");
+            assert_eq!(pc.tree_fits(t), heap.tree_fits(t), "tree {t} fits");
+        }
+        // fresh plan ids per parse: mapped and heap parses never share plans
+        assert_ne!(pc.plan_id(), heap.plan_id());
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -22,7 +22,7 @@ pub mod flat;
 pub mod pipeline;
 pub mod predict;
 
-pub use container::{FitCodec, SectionSizes};
+pub use container::{FitCodec, SectionSizes, SharedBytes};
 pub use flat::{FlatTree, PlanCache};
 pub use pipeline::{CompressOptions, CompressedForest};
 pub use predict::CompressedPredictor;

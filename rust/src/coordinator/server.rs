@@ -9,8 +9,11 @@
 //! LIST                              → OK <model> <model> ...
 //! STATS                             → OK requests=.. batches=.. mean_us=..
 //!                                         max_us=.. evictions=..
+//!                                         spills=.. reloads=..
+//!                                         spill_bytes=..
 //!                                         plan_hits=.. plan_misses=..
 //! BYTES                             → OK resident=<bytes> plans=<bytes>
+//!                                         spilled=<bytes>
 //! QUIT                              → connection closes
 //! ```
 //!
@@ -311,9 +314,10 @@ fn handle_line(
         "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
         "STATS" => Ok(Some(stats_line(&store.stats()))),
         "BYTES" => Ok(Some(format!(
-            "OK resident={} plans={}",
+            "OK resident={} plans={} spilled={}",
             store.resident_bytes(),
-            store.plan_bytes()
+            store.plan_bytes(),
+            store.spilled_bytes()
         ))),
         "QUIT" => Ok(None),
         other => bail!("unknown verb {other:?}"),
@@ -325,12 +329,15 @@ fn handle_line(
 fn stats_line(s: &StoreStats) -> String {
     format!(
         "OK requests={} batches={} mean_us={} max_us={} evictions={} \
-         plan_hits={} plan_misses={}",
+         spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
         s.max_latency_us,
         s.evictions,
+        s.spills,
+        s.reloads,
+        s.spill_bytes,
         s.plan_hits,
         s.plan_misses
     )
@@ -383,6 +390,11 @@ mod tests {
         assert!(line.starts_with("OK requests=0"), "{line}");
         assert!(line.contains("mean_us=0"), "{line}");
         assert!(line.contains("plan_hits=0") && line.contains("plan_misses=0"), "{line}");
+        assert!(
+            line.contains("spills=0") && line.contains("reloads=0")
+                && line.contains("spill_bytes=0"),
+            "{line}"
+        );
         // and a populated window reports the true per-request mean
         let s = StoreStats {
             requests: 4,

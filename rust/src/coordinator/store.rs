@@ -14,16 +14,35 @@
 //!   an insert pushes past the budget, least-recently-used models are
 //!   evicted until the store fits again; every prediction touches an atomic
 //!   LRU clock, no lock required.
-//! * **Zero-copy residency** — a stored model holds one `Arc<[u8]>`
-//!   container buffer; its predictor's sections are views into it, so
+//! * **Two tiers (RAM → disk)** — with a spill directory configured
+//!   ([`ModelStore::spill_dir`]), a budget eviction *spills* the model's
+//!   container bytes to disk instead of dropping it. The next request for a
+//!   spilled model reloads it through an `mmap`-backed buffer
+//!   ([`crate::util::mmap::Mmap`]): because the zero-copy parse only records
+//!   spans, the reload is a map + header parse — no read, no payload
+//!   memcpy. The disk tier has its own byte budget
+//!   ([`ModelStore::spill_bytes`]) with its own LRU; a model evicted from
+//!   *that* is gone. Tier lifecycle: `Resident → Spilled → (reload →
+//!   Resident | LRU → gone)`; spill files are deleted on reload, removal,
+//!   replacement, and store shutdown — they are cache, never durable state.
+//! * **Zero-copy residency** — a stored model holds one shared container
+//!   buffer; its predictor's sections are views into it, so
 //!   `resident_bytes` is an honest measure of what the model costs.
+//!
+//! Budget accounting order under pressure: decoded **plans** are dropped
+//! first (they rebuild on demand), then models **spill** to disk (a reload
+//! is an mmap away), and only past the spill budget is a model **evicted**
+//! outright.
 
+use crate::compress::container::parse_arc;
 use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
+use crate::util::mmap::Mmap;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -49,7 +68,15 @@ pub struct StoreStats {
     pub batches: u64,
     pub total_latency_us: u64,
     pub max_latency_us: u64,
+    /// Models dropped from the store entirely (RAM eviction with no spill
+    /// tier, or LRU eviction from the spill tier itself).
     pub evictions: u64,
+    /// Resident → Spilled transitions (container bytes written to disk).
+    pub spills: u64,
+    /// Spilled → Resident transitions (mmap-backed reloads).
+    pub reloads: u64,
+    /// Container bytes currently parked in the spill directory.
+    pub spill_bytes: u64,
     /// Flat-plan cache hits/misses across every resident model (a hit means
     /// a batch routed rows without touching the Huffman streams).
     pub plan_hits: u64,
@@ -77,27 +104,57 @@ struct StoredModel {
     last_used: AtomicU64,
 }
 
+/// A model parked on disk: its container bytes, verbatim, in one spill file.
+struct SpillEntry {
+    path: PathBuf,
+    bytes: u64,
+    /// LRU stamp frozen at spill time (only the shard write lock mutates a
+    /// spilled entry, so no atomic needed).
+    last_used: u64,
+}
+
+/// The tier a named model currently occupies.
+enum Tier {
+    Resident(Arc<StoredModel>),
+    Spilled(SpillEntry),
+}
+
 struct Shard {
-    models: RwLock<BTreeMap<String, Arc<StoredModel>>>,
+    models: RwLock<BTreeMap<String, Tier>>,
 }
 
 /// A thread-safe, sharded registry of compressed models with an optional
-/// resident-bytes budget.
+/// resident-bytes budget and an optional disk spill tier.
 pub struct ModelStore {
     shards: Vec<Shard>,
     stats: Mutex<StoreStats>,
     /// Monotone access clock driving LRU eviction.
     clock: AtomicU64,
-    /// Sum of `compressed_bytes` over resident models.
+    /// Sum of `compressed_bytes` over RAM-resident models.
     resident: AtomicU64,
     max_resident_bytes: Option<u64>,
+    /// Sum of spill-file bytes over disk-tier models.
+    spilled: AtomicU64,
+    /// Where evicted models spill to (None = evictions drop models).
+    spill_dir: Option<PathBuf>,
+    /// Byte cap of the spill tier (None = unbounded disk).
+    max_spill_bytes: Option<u64>,
+    /// Monotone spill-file sequence within this store.
+    spill_seq: AtomicU64,
+    /// Process-wide store token baked into spill filenames, so stores (or
+    /// restarted processes) sharing one spill directory never overwrite
+    /// each other's files.
+    spill_token: u64,
     predict_workers: usize,
     /// Decoded flat-tree plans, shared by every resident model's predictor.
     /// Plan bytes count against `max_resident_bytes`: budget enforcement
-    /// shrinks this cache *before* evicting any model (a dropped plan
-    /// rebuilds on the next batch; a dropped model needs a re-insert).
+    /// shrinks this cache *before* spilling or evicting any model (a
+    /// dropped plan rebuilds on the next batch).
     plans: Arc<PlanCache>,
 }
+
+/// Source of per-store [`ModelStore::spill_token`] values.
+static NEXT_STORE_TOKEN: AtomicU64 = AtomicU64::new(0);
 
 fn shard_index(name: &str, n: usize) -> usize {
     // FNV-1a over the model name; any stable spreading hash works
@@ -116,7 +173,8 @@ impl ModelStore {
     }
 
     /// Store with a resident-bytes budget: inserting past it evicts
-    /// least-recently-used models until the store fits again.
+    /// least-recently-used models until the store fits again (or spills
+    /// them, when a spill directory is configured).
     pub fn with_budget(max_resident_bytes: u64) -> Self {
         Self::with_config(DEFAULT_SHARDS, Some(max_resident_bytes))
     }
@@ -134,6 +192,11 @@ impl ModelStore {
             clock: AtomicU64::new(0),
             resident: AtomicU64::new(0),
             max_resident_bytes,
+            spilled: AtomicU64::new(0),
+            spill_dir: None,
+            max_spill_bytes: None,
+            spill_seq: AtomicU64::new(0),
+            spill_token: NEXT_STORE_TOKEN.fetch_add(1, Ordering::Relaxed),
             predict_workers: 1,
             plans: Arc::new(PlanCache::new(plan_cap)),
         }
@@ -155,8 +218,33 @@ impl ModelStore {
         self
     }
 
+    /// Builder: enable the disk tier. Budget evictions spill container
+    /// bytes into `dir` (created on first spill) instead of dropping the
+    /// model; the next request reloads it through an mmap-backed buffer.
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Builder: byte cap of the spill tier. Past it, the least-recently-used
+    /// *spilled* model's file is deleted and the model leaves the store for
+    /// good. Only meaningful together with [`Self::spill_dir`].
+    pub fn spill_bytes(mut self, bytes: u64) -> Self {
+        self.max_spill_bytes = Some(bytes);
+        self
+    }
+
     pub fn max_resident_bytes(&self) -> Option<u64> {
         self.max_resident_bytes
+    }
+
+    pub fn max_spill_bytes(&self) -> Option<u64> {
+        self.max_spill_bytes
+    }
+
+    /// The configured spill directory, if the disk tier is enabled.
+    pub fn spill_path(&self) -> Option<&std::path::Path> {
+        self.spill_dir.as_deref()
     }
 
     pub fn num_shards(&self) -> usize {
@@ -204,11 +292,20 @@ impl ModelStore {
             .models
             .write()
             .unwrap()
-            .insert(name.to_string(), model);
-        if let Some(old) = old {
-            self.resident.fetch_sub(old.compressed_bytes, Ordering::Relaxed);
-            // the replaced parse's plans can never be served again
-            self.plans.purge_model(old.predictor.model_id());
+            .insert(name.to_string(), Tier::Resident(model));
+        match old {
+            Some(Tier::Resident(old)) => {
+                self.resident.fetch_sub(old.compressed_bytes, Ordering::Relaxed);
+                // the replaced parse's plans can never be served again
+                self.plans.purge_model(old.predictor.model_id());
+            }
+            Some(Tier::Spilled(e)) => {
+                // replacing a spilled model retires its spill file (its
+                // plans were already purged at spill time)
+                self.spilled.fetch_sub(e.bytes, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&e.path);
+            }
+            None => {}
         }
         self.enforce_budget(name);
         Ok(())
@@ -222,9 +319,11 @@ impl ModelStore {
     }
 
     /// Enforce `max_resident_bytes` over compressed bytes **plus** decoded
-    /// plan bytes. Plans are dropped first (they rebuild on demand); only
-    /// when the compressed bytes alone still exceed the budget are
-    /// least-recently-used models (never `keep`) evicted.
+    /// plan bytes, in the documented order: plans are dropped first (they
+    /// rebuild on demand); then least-recently-used RAM models (never
+    /// `keep`) spill to disk when a spill directory is configured, or are
+    /// evicted outright when not; spilling past the spill budget deletes
+    /// the coldest spill files (those models are gone).
     fn enforce_budget(&self, keep: &str) {
         let Some(budget) = self.max_resident_bytes else { return };
         // cap the plan cache to whatever the budget leaves after the
@@ -232,36 +331,246 @@ impl ModelStore {
         self.plans
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
         while self.resident.load(Ordering::Relaxed) > budget {
-            let mut victim: Option<(String, u64)> = None;
-            for shard in &self.shards {
-                let models = shard.models.read().unwrap();
-                for (name, model) in models.iter() {
-                    if name == keep {
-                        continue;
-                    }
-                    let used = model.last_used.load(Ordering::Relaxed);
-                    if victim.as_ref().map_or(true, |(_, best)| used < *best) {
-                        victim = Some((name.clone(), used));
-                    }
+            let Some(name) = self.lru_resident_victim(keep) else { break };
+            if self.spill_dir.is_some() {
+                match self.spill(&name) {
+                    Ok(true) => continue,
+                    // raced with a concurrent remove/replace/spill of the
+                    // same name — that race freed bytes; rescan
+                    Ok(false) => continue,
+                    // the disk refused the spill (full, unwritable): fall
+                    // back to dropping so the RAM budget still holds
+                    Err(_) => {}
                 }
             }
-            let Some((name, _)) = victim else { break };
             if self.remove(&name) {
                 self.stats.lock().unwrap().evictions += 1;
             }
         }
-        // model evictions freed compressed bytes: let plans grow back into
+        // spills/evictions freed compressed bytes: let plans grow back into
         // the slack
         self.plans
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
     }
 
+    /// Least-recently-used RAM-resident model, excluding `keep`.
+    fn lru_resident_victim(&self, keep: &str) -> Option<String> {
+        let mut victim: Option<(String, u64)> = None;
+        for shard in &self.shards {
+            let models = shard.models.read().unwrap();
+            for (name, tier) in models.iter() {
+                let Tier::Resident(model) = tier else { continue };
+                if name == keep {
+                    continue;
+                }
+                let used = model.last_used.load(Ordering::Relaxed);
+                if victim.as_ref().map_or(true, |(_, best)| used < *best) {
+                    victim = Some((name.clone(), used));
+                }
+            }
+        }
+        victim.map(|(name, _)| name)
+    }
+
+    /// Least-recently-used model of the disk tier.
+    fn lru_spilled_victim(&self) -> Option<String> {
+        let mut victim: Option<(String, u64)> = None;
+        for shard in &self.shards {
+            let models = shard.models.read().unwrap();
+            for (name, tier) in models.iter() {
+                let Tier::Spilled(e) = tier else { continue };
+                if victim.as_ref().map_or(true, |(_, best)| e.last_used < *best) {
+                    victim = Some((name.clone(), e.last_used));
+                }
+            }
+        }
+        victim.map(|(name, _)| name)
+    }
+
+    /// Enforce the spill tier's byte cap: delete the coldest spill files
+    /// (Resident → Spilled → **gone**) until the tier fits.
+    fn enforce_spill_budget(&self) {
+        let Some(cap) = self.max_spill_bytes else { return };
+        while self.spilled.load(Ordering::Relaxed) > cap {
+            let Some(name) = self.lru_spilled_victim() else { break };
+            if self.remove(&name) {
+                self.stats.lock().unwrap().evictions += 1;
+            }
+        }
+    }
+
+    /// Spill a RAM-resident model's container bytes to the spill directory
+    /// (write-then-rename, so a crash mid-write can never leave a torn file
+    /// under a name the reload path would trust) and transition it to the
+    /// disk tier. Returns `Ok(false)` if the model is not RAM-resident (or
+    /// was removed/replaced while the file was being written). The spilled
+    /// parse's decoded plans are purged — they pin a dead `plan_id`; the
+    /// reload stamps a fresh one.
+    pub fn spill(&self, name: &str) -> Result<bool> {
+        let Some(dir) = self.spill_dir.as_ref() else {
+            bail!("store has no spill directory (configure ModelStore::spill_dir)");
+        };
+        // snapshot the model under the read lock; disk I/O runs outside it
+        let model = {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => m.clone(),
+                Some(Tier::Spilled(_)) | None => return Ok(false),
+            }
+        };
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let seq = self.spill_seq.fetch_add(1, Ordering::Relaxed);
+        // pid + store token + sequence: unique across store instances and
+        // process restarts sharing one directory, never reused within one
+        // store (a leftover file from a crashed run is inert and can never
+        // be overwritten by — or mistaken for — a live spill)
+        let stem = format!(
+            "spill-{pid:x}-{token:x}-{seq:08}.rfcz",
+            pid = std::process::id(),
+            token = self.spill_token
+        );
+        let final_path = dir.join(&stem);
+        let tmp_path = dir.join(format!("{stem}.tmp"));
+        let bytes: &[u8] = model.predictor.container().buffer();
+        let write = std::fs::write(&tmp_path, bytes)
+            .and_then(|()| std::fs::rename(&tmp_path, &final_path));
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp_path);
+            return Err(e).with_context(|| format!("spilling {name:?} to {}", final_path.display()));
+        }
+        let swapped = {
+            let mut models = self.shard(name).models.write().unwrap();
+            // still the exact model we wrote out (not removed or replaced
+            // while the file was in flight)?
+            let unchanged = matches!(
+                models.get(name),
+                Some(Tier::Resident(m)) if Arc::ptr_eq(m, &model)
+            );
+            if unchanged {
+                models.insert(
+                    name.to_string(),
+                    Tier::Spilled(SpillEntry {
+                        path: final_path.clone(),
+                        bytes: model.compressed_bytes,
+                        last_used: model.last_used.load(Ordering::Relaxed),
+                    }),
+                );
+                // counters move inside the lock: a concurrent reload of this
+                // name must never observe the Spilled entry before our
+                // fetch_add lands — its fetch_sub would wrap the u64 and
+                // read as an enormous spill tier (mass-evicting the disk)
+                self.resident.fetch_sub(model.compressed_bytes, Ordering::Relaxed);
+                self.spilled.fetch_add(model.compressed_bytes, Ordering::Relaxed);
+            }
+            unchanged
+        };
+        if !swapped {
+            let _ = std::fs::remove_file(&final_path);
+            return Ok(false);
+        }
+        // a spilled model's plans pin the dead parse's plan_id — drop them
+        // now; an in-flight batch still holding the old predictor can be
+        // served but can never repopulate the cache under the retired id
+        self.plans.purge_model(model.predictor.model_id());
+        self.stats.lock().unwrap().spills += 1;
+        self.enforce_spill_budget();
+        Ok(true)
+    }
+
+    /// Reload a spilled model through an mmap-backed buffer. The map + parse
+    /// + decoder build runs outside every lock; the winner of a reload race
+    /// installs its model, losers adopt it. On success the spill file is
+    /// unlinked (on unix the mapping keeps its pages alive; the non-unix
+    /// fallback copied them).
+    fn reload(&self, name: &str) -> Result<Arc<StoredModel>> {
+        let (path, bytes) = {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => {
+                    m.last_used.store(self.tick(), Ordering::Relaxed);
+                    return Ok(m.clone());
+                }
+                Some(Tier::Spilled(e)) => (e.path.clone(), e.bytes),
+                None => bail!("unknown model {name:?}"),
+            }
+        };
+        let map = match Mmap::map_path(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                // a racing reload may have won and already unlinked the file
+                if let Some(Tier::Resident(m)) =
+                    self.shard(name).models.read().unwrap().get(name)
+                {
+                    return Ok(m.clone());
+                }
+                return Err(e.context(format!("reloading spilled model {name:?}")));
+            }
+        };
+        if map.len() as u64 != bytes {
+            bail!(
+                "spill file {} is {} bytes, expected {bytes} (truncated or corrupted)",
+                path.display(),
+                map.len()
+            );
+        }
+        let pc = parse_arc(map)
+            .with_context(|| format!("parsing spill file {} of model {name:?}", path.display()))?;
+        let predictor = CompressedPredictor::new(pc)?
+            .with_workers(self.predict_workers)
+            .with_plan_cache(self.plans.clone());
+        let model = Arc::new(StoredModel {
+            predictor,
+            compressed_bytes: bytes,
+            last_used: AtomicU64::new(self.tick()),
+        });
+        enum Outcome {
+            Installed,
+            LostRace(Arc<StoredModel>),
+            Removed,
+        }
+        let outcome = {
+            let mut models = self.shard(name).models.write().unwrap();
+            let state = match models.get(name) {
+                Some(Tier::Spilled(_)) => Outcome::Installed,
+                // lost a reload race: adopt the winner's model
+                Some(Tier::Resident(m)) => Outcome::LostRace(m.clone()),
+                None => Outcome::Removed,
+            };
+            if matches!(state, Outcome::Installed) {
+                // same ordering rule as insert: account resident bytes
+                // before the entry becomes visible as Resident
+                self.resident.fetch_add(bytes, Ordering::Relaxed);
+                self.spilled.fetch_sub(bytes, Ordering::Relaxed);
+                models.insert(name.to_string(), Tier::Resident(model.clone()));
+            }
+            state
+        };
+        match outcome {
+            Outcome::LostRace(m) => return Ok(m),
+            Outcome::Removed => bail!("model {name:?} was removed during reload"),
+            Outcome::Installed => {}
+        }
+        {
+            let _ = std::fs::remove_file(&path);
+            self.stats.lock().unwrap().reloads += 1;
+            // the reload grew the RAM tier; it may need to spill someone else
+            self.enforce_budget(name);
+        }
+        Ok(model)
+    }
+
     pub fn remove(&self, name: &str) -> bool {
         let removed = self.shard(name).models.write().unwrap().remove(name);
         match removed {
-            Some(m) => {
+            Some(Tier::Resident(m)) => {
                 self.resident.fetch_sub(m.compressed_bytes, Ordering::Relaxed);
                 self.plans.purge_model(m.predictor.model_id());
+                true
+            }
+            Some(Tier::Spilled(e)) => {
+                self.spilled.fetch_sub(e.bytes, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&e.path);
                 true
             }
             None => false,
@@ -272,7 +581,15 @@ impl ModelStore {
         self.shard(name).models.read().unwrap().contains_key(name)
     }
 
-    /// Resident model names, sorted.
+    /// Whether a model currently sits in the disk tier.
+    pub fn is_spilled(&self, name: &str) -> bool {
+        matches!(
+            self.shard(name).models.read().unwrap().get(name),
+            Some(Tier::Spilled(_))
+        )
+    }
+
+    /// Model names across both tiers, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut out: Vec<String> = self
             .shards
@@ -291,10 +608,31 @@ impl ModelStore {
         self.len() == 0
     }
 
-    /// Total compressed bytes resident (the "storage budget" figure;
-    /// decoded plan bytes are reported separately by [`Self::plan_bytes`]).
+    /// Number of models currently in the disk tier.
+    pub fn spilled_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.models
+                    .read()
+                    .unwrap()
+                    .values()
+                    .filter(|t| matches!(t, Tier::Spilled(_)))
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Total compressed bytes RAM-resident (the "storage budget" figure;
+    /// decoded plan bytes are reported separately by [`Self::plan_bytes`],
+    /// disk-tier bytes by [`Self::spilled_bytes`]).
     pub fn resident_bytes(&self) -> u64 {
         self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Container bytes currently parked in the spill directory.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled.load(Ordering::Relaxed)
     }
 
     /// Decoded flat-plan bytes currently resident.
@@ -313,22 +651,26 @@ impl ModelStore {
         s.plan_hits = p.hits;
         s.plan_misses = p.misses;
         s.plan_bytes = p.resident_bytes;
+        s.spill_bytes = self.spilled.load(Ordering::Relaxed);
         s
     }
 
-    /// Look a model up (read lock held only for the map probe) and stamp
-    /// its LRU clock.
+    /// Look a model up and stamp its LRU clock. RAM-resident models come
+    /// back from a read-locked map probe; spilled models are reloaded
+    /// through the mmap path first ([`Self::reload`]).
     fn get(&self, name: &str) -> Result<Arc<StoredModel>> {
-        let model = self
-            .shard(name)
-            .models
-            .read()
-            .unwrap()
-            .get(name)
-            .cloned()
-            .with_context(|| format!("unknown model {name:?}"))?;
-        model.last_used.store(self.tick(), Ordering::Relaxed);
-        Ok(model)
+        {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => {
+                    m.last_used.store(self.tick(), Ordering::Relaxed);
+                    return Ok(m.clone());
+                }
+                Some(Tier::Spilled(_)) => {} // fall through to reload
+                None => bail!("unknown model {name:?}"),
+            }
+        }
+        self.reload(name)
     }
 
     /// Predict a single observation against a named model. The shard lock
@@ -389,6 +731,24 @@ impl ModelStore {
 impl Default for ModelStore {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl Drop for ModelStore {
+    /// Shutdown purge: spill files are cache, never durable state — delete
+    /// every disk-tier file this store still owns.
+    fn drop(&mut self) {
+        for shard in &mut self.shards {
+            let models = match shard.models.get_mut() {
+                Ok(m) => m,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            for tier in models.values() {
+                if let Tier::Spilled(e) = tier {
+                    let _ = std::fs::remove_file(&e.path);
+                }
+            }
+        }
     }
 }
 
@@ -475,6 +835,18 @@ mod tests {
                 Column::Categorical { values, .. } => ObsValue::Cat(values[row]),
             })
             .collect()
+    }
+
+    /// Unique spill directory per test (tests run in parallel).
+    fn temp_spill_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rfc-store-spill-{tag}-{}", std::process::id()))
+    }
+
+    fn spill_files(dir: &std::path::Path) -> Vec<PathBuf> {
+        match std::fs::read_dir(dir) {
+            Ok(entries) => entries.map(|e| e.unwrap().path()).collect(),
+            Err(_) => Vec::new(),
+        }
     }
 
     #[test]
@@ -636,5 +1008,203 @@ mod tests {
         // serving still works (plans rebuild on demand)
         let out = store.predict_batch("c", &rows).unwrap();
         assert_eq!(out[0], PredictOne::Class(f.predict_class(&ds, 0)));
+    }
+
+    // ------------------------------------------------------ spill tier
+
+    #[test]
+    fn spill_and_reload_round_trip_is_lossless() {
+        let dir = temp_spill_dir("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, f, ds) = iris_model(13);
+        let one = cf.total_bytes();
+        let store = ModelStore::with_budget(2 * one).spill_dir(&dir);
+        store.insert("m", &cf).unwrap();
+        let rows: Vec<Vec<ObsValue>> = (0..20).map(|r| row_values(&ds, r * 2)).collect();
+        let before = store.predict_batch("m", &rows).unwrap();
+
+        assert!(store.spill("m").unwrap());
+        assert!(store.is_spilled("m"));
+        assert!(store.contains("m"), "spilled models are still owned");
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(store.spilled_bytes(), one);
+        assert_eq!(store.spilled_len(), 1);
+        assert_eq!(spill_files(&dir).len(), 1, "one spill file on disk");
+        assert!(!store.spill("m").unwrap(), "already spilled: no-op");
+
+        // the next request reloads through the mmap path, bit-identical
+        let after = store.predict_batch("m", &rows).unwrap();
+        assert_eq!(after, before);
+        assert!(!store.is_spilled("m"));
+        assert_eq!(store.resident_bytes(), one);
+        assert_eq!(store.spilled_bytes(), 0);
+        assert_eq!(spill_files(&dir).len(), 0, "reload unlinks the spill file");
+        let s = store.stats();
+        assert_eq!((s.spills, s.reloads), (1, 1));
+        // the reloaded predictor rides the mapping, not a heap copy
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(store.get("m").unwrap().predictor.container().buffer().is_mapped());
+        for (i, out) in after.iter().enumerate() {
+            assert_eq!(*out, PredictOne::Class(f.predict_class(&ds, i * 2)));
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_eviction_spills_instead_of_dropping() {
+        let dir = temp_spill_dir("evict");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, f, ds) = iris_model(14);
+        let one = cf.total_bytes();
+        let store = ModelStore::with_budget(2 * one + one / 2).spill_dir(&dir);
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        store.predict("a", &row_values(&ds, 0)).unwrap(); // "b" is now LRU
+        store.insert("c", &cf).unwrap();
+        assert_eq!(store.len(), 3, "no model was lost");
+        assert!(store.is_spilled("b"), "the LRU model moved to disk");
+        assert!(!store.is_spilled("a") && !store.is_spilled("c"));
+        let s = store.stats();
+        assert_eq!(s.spills, 1);
+        assert_eq!(s.evictions, 0, "a spill is not an eviction");
+        assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+        // serving the spilled model reloads it — and the RAM budget holds by
+        // spilling the (then) coldest resident
+        let out = store.predict("b", &row_values(&ds, 3)).unwrap();
+        assert_eq!(out, PredictOne::Class(f.predict_class(&ds, 3)));
+        assert!(!store.is_spilled("b"));
+        assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+        assert_eq!(store.stats().reloads, 1);
+        assert_eq!(store.len(), 3);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_budget_lru_deletes_the_coldest_for_good() {
+        let dir = temp_spill_dir("spillbudget");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, _, _) = iris_model(15);
+        let one = cf.total_bytes();
+        // disk holds exactly one spilled model
+        let store = ModelStore::new().spill_dir(&dir).spill_bytes(one + one / 2);
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        assert!(store.spill("a").unwrap());
+        assert!(store.spill("b").unwrap());
+        // "a" (coldest spill) was deleted to fit "b": Resident → Spilled → gone
+        assert!(!store.contains("a"), "spill-tier LRU victim leaves the store");
+        assert!(store.is_spilled("b"));
+        assert_eq!(store.spilled_bytes(), one);
+        assert_eq!(spill_files(&dir).len(), 1);
+        let s = store.stats();
+        assert_eq!(s.spills, 2);
+        assert_eq!(s.evictions, 1, "a spill-tier deletion is a true eviction");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_files_purged_on_remove_replace_and_drop() {
+        let dir = temp_spill_dir("purge");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, _, _) = iris_model(16);
+        let store = ModelStore::new().spill_dir(&dir);
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        store.insert("c", &cf).unwrap();
+        assert!(store.spill("a").unwrap());
+        assert!(store.spill("b").unwrap());
+        assert!(store.spill("c").unwrap());
+        assert_eq!(spill_files(&dir).len(), 3);
+        // remove deletes the file
+        assert!(store.remove("a"));
+        assert_eq!(spill_files(&dir).len(), 2);
+        // replacement (re-insert under the same name) deletes the file
+        store.insert("b", &cf).unwrap();
+        assert!(!store.is_spilled("b"));
+        assert_eq!(spill_files(&dir).len(), 1);
+        assert_eq!(store.spilled_bytes(), cf.total_bytes());
+        // shutdown (drop) deletes whatever is left
+        drop(store);
+        assert_eq!(spill_files(&dir).len(), 0, "shutdown purges the spill dir");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_spill_file_surfaces_a_typed_error() {
+        let dir = temp_spill_dir("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, _, ds) = iris_model(17);
+        let store = ModelStore::new().spill_dir(&dir);
+        store.insert("m", &cf).unwrap();
+        assert!(store.spill("m").unwrap());
+        let file = spill_files(&dir).pop().unwrap();
+
+        // truncation: the length check trips before the parse
+        let full = std::fs::read(&file).unwrap();
+        std::fs::write(&file, &full[..full.len() / 2]).unwrap();
+        let err = store.predict("m", &row_values(&ds, 0)).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "typed error, not a panic: {err}");
+        assert!(store.is_spilled("m"), "a failed reload leaves the entry spilled");
+
+        // right length, garbage content: the parse itself errors
+        std::fs::write(&file, vec![0x5a; full.len()]).unwrap();
+        let err = format!("{:#}", store.predict("m", &row_values(&ds, 0)).unwrap_err());
+        assert!(err.contains("parsing spill file"), "{err}");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_purges_plans_and_reload_stamps_a_fresh_id() {
+        let dir = temp_spill_dir("planid");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cf, _, ds) = iris_model(18);
+        let store = ModelStore::new().spill_dir(&dir);
+        store.insert("m", &cf).unwrap();
+        let rows: Vec<Vec<ObsValue>> = (0..16).map(|r| row_values(&ds, r)).collect();
+        let cold = store.predict_batch("m", &rows).unwrap();
+        assert!(store.plan_bytes() > 0);
+        // hold the pre-spill predictor like an in-flight batch would
+        let old = store.get("m").unwrap();
+        let old_id = old.predictor.model_id();
+
+        assert!(store.spill("m").unwrap());
+        assert_eq!(store.plan_bytes(), 0, "a spilled model's plans are dropped");
+        // the in-flight predictor still serves, but the retired id can never
+        // repopulate the cache (regression: spilled ids must stay dead)
+        let inflight = old.predictor.predict_all_workers(&ds, 1).unwrap();
+        assert_eq!(store.plan_bytes(), 0, "retired plan_id cannot re-enter the cache");
+
+        // reload: fresh parse, fresh plan_id, cache fills under the new id
+        let warm = store.predict_batch("m", &rows).unwrap();
+        assert_eq!(warm, cold);
+        let new_id = store.get("m").unwrap().predictor.model_id();
+        assert_ne!(new_id, old_id, "reload must stamp a fresh plan id");
+        assert!(store.plan_bytes() > 0, "plans rebuild under the reloaded id");
+        // the in-flight predictor's answers (rows 0..16 of the training
+        // data) agree with the pre-spill batch over those same rows
+        match inflight {
+            crate::forest::forest::Predictions::Classes(cs) => {
+                for (i, out) in cold.iter().enumerate() {
+                    assert_eq!(*out, PredictOne::Class(cs[i]), "row {i}");
+                }
+            }
+            _ => panic!("classification expected"),
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_without_a_dir_is_an_error() {
+        let (cf, _, _) = iris_model(19);
+        let store = ModelStore::new();
+        store.insert("m", &cf).unwrap();
+        assert!(store.spill("m").is_err());
+        let with_dir = ModelStore::new().spill_dir(temp_spill_dir("nodir"));
+        assert!(!with_dir.spill("ghost").unwrap(), "unknown models spill to nothing");
     }
 }

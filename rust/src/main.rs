@@ -37,6 +37,7 @@ fn main() {
         "lossy" => cmd_lossy(&args),
         "serve" => cmd_serve(&args),
         "suite" => cmd_suite(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "datasets" => {
             for e in table2_suite() {
                 println!("{}", e.key);
@@ -56,13 +57,14 @@ fn main() {
 }
 
 const HELP: &str = "repro — lossless (and lossy) random-forest compression
-  compress --dataset KEY [--trees N] [--seed S] [--out FILE] [--native]
-  verify   --in FILE --dataset KEY [--trees N] [--seed S]
-  lossy    --dataset KEY [--trees N] [--bits B] [--keep N0]
-  serve    --port P --dataset KEY[,KEY...] [--trees N]
-           [--max-resident-bytes B] [--predict-workers W]
-           [--plan-cache-bytes B]
-  suite    [--trees N] [--paper-scale]
+  compress   --dataset KEY [--trees N] [--seed S] [--out FILE] [--native]
+  verify     --in FILE --dataset KEY [--trees N] [--seed S]
+  lossy      --dataset KEY [--trees N] [--bits B] [--keep N0]
+  serve      --port P --dataset KEY[,KEY...] [--trees N]
+             [--max-resident-bytes B] [--predict-workers W]
+             [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
+  suite      [--trees N] [--paper-scale]
+  bench-gate --baseline FILE --current FILE [--tolerance 0.25]
   datasets";
 
 fn load_dataset(args: &Args) -> Option<Dataset> {
@@ -279,6 +281,34 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut store =
         ModelStore::with_config(rf_compress::coordinator::store::DEFAULT_SHARDS, budget)
             .predict_workers(workers);
+    // disk tier: evictions spill container bytes here and reload via mmap
+    let spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
+    let spill_bytes = match args.get("spill-bytes") {
+        None => None,
+        Some(s) => match s.parse::<u64>() {
+            Ok(b) => Some(b),
+            Err(_) => {
+                eprintln!("serve: --spill-bytes expects a byte count, got {s:?}");
+                return 2;
+            }
+        },
+    };
+    if spill_bytes.is_some() && spill_dir.is_none() {
+        eprintln!("serve: --spill-bytes needs --spill-dir");
+        return 2;
+    }
+    if spill_dir.is_some() && budget.is_none() {
+        eprintln!(
+            "serve: note — --spill-dir without --max-resident-bytes never spills \
+             automatically (nothing evicts); set a budget to activate the tier"
+        );
+    }
+    if let Some(dir) = &spill_dir {
+        store = store.spill_dir(dir.clone());
+    }
+    if let Some(b) = spill_bytes {
+        store = store.spill_bytes(b);
+    }
     // flat-plan cache cap for unbounded stores (budgeted stores size the
     // cache from whatever max-resident-bytes leaves after compressed bytes)
     if let Some(s) = args.get("plan-cache-bytes") {
@@ -329,9 +359,49 @@ fn cmd_serve(args: &Args) -> i32 {
         "plan cache: up to {} of decoded flat trees",
         human_bytes(store.plan_cache().max_bytes())
     );
+    if let Some(dir) = store.spill_path() {
+        println!(
+            "spill tier: {} ({})",
+            dir.display(),
+            match store.max_spill_bytes() {
+                Some(b) => format!("budget {}", human_bytes(b)),
+                None => "unbounded".to_string(),
+            }
+        );
+    }
     println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// CI bench-regression gate: compare a fresh `BENCH_serve.json` against the
+/// committed `BENCH_baseline.json` (exit 1 on regression past ±tolerance).
+fn cmd_bench_gate(args: &Args) -> i32 {
+    let Some(baseline) = args.get("baseline") else {
+        eprintln!("bench-gate needs --baseline FILE");
+        return 2;
+    };
+    let Some(current) = args.get("current") else {
+        eprintln!("bench-gate needs --current FILE");
+        return 2;
+    };
+    let tolerance: f64 = args.get_or("tolerance", 0.25f64);
+    if !(0.0..1.0).contains(&tolerance) {
+        eprintln!("bench-gate: --tolerance must be in [0, 1), got {tolerance}");
+        return 2;
+    }
+    match rf_compress::util::benchgate::run_files(
+        std::path::Path::new(baseline),
+        std::path::Path::new(current),
+        tolerance,
+    ) {
+        Ok(true) => 0,
+        Ok(false) => 1,
+        Err(e) => {
+            eprintln!("bench-gate: {e:#}");
+            2
+        }
     }
 }
 

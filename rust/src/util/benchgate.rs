@@ -1,0 +1,215 @@
+//! The CI bench-regression gate.
+//!
+//! Compares the serve bench's machine-readable report (`BENCH_serve.json`,
+//! written by `cargo bench --bench hotpath -- serve`) against a committed
+//! baseline (`BENCH_baseline.json`) and fails on regression beyond a
+//! relative tolerance. Wired as the `repro bench-gate` subcommand and run by
+//! the `bench-gate` CI job, which uploads both JSONs as artifacts.
+//!
+//! Gated metrics (the serving SLO pair):
+//!
+//! * `rows_per_sec.flat_warm` — warm-flat batch throughput; **higher** is
+//!   better, the gate fails when current < baseline · (1 − tolerance);
+//! * `single_row_us.p99` — single-row tail latency; **lower** is better,
+//!   the gate fails when current > baseline · (1 + tolerance).
+//!
+//! Refreshing the baseline after an intentional perf change:
+//!
+//! ```text
+//! cargo bench --bench hotpath -- serve --quick --trees 16
+//! cp BENCH_serve.json BENCH_baseline.json   # commit it
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Whether a metric regresses by shrinking or by growing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+/// One gated metric's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateResult {
+    pub metric: String,
+    pub direction: Direction,
+    pub baseline: f64,
+    pub current: f64,
+    /// current / baseline.
+    pub ratio: f64,
+    pub ok: bool,
+}
+
+/// The serve-bench metrics under the gate: (label, JSON path, direction).
+const SERVE_GATES: &[(&str, &[&str], Direction)] = &[
+    (
+        "warm-flat throughput (rows/s)",
+        &["rows_per_sec", "flat_warm"],
+        Direction::HigherIsBetter,
+    ),
+    (
+        "single-row p99 latency (µs)",
+        &["single_row_us", "p99"],
+        Direction::LowerIsBetter,
+    ),
+];
+
+fn metric(doc: &Json, which: &str, path: &[&str]) -> Result<f64> {
+    let v = doc
+        .at(path)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{which} report is missing numeric {}", path.join(".")))?;
+    if !v.is_finite() || v < 0.0 {
+        anyhow::bail!("{which} report has implausible {} = {v}", path.join("."));
+    }
+    Ok(v)
+}
+
+/// Compare two parsed serve reports under a relative `tolerance`
+/// (0.25 = ±25%). Errors when either report lacks a gated metric —
+/// a silently-skipped gate is indistinguishable from a green one.
+pub fn compare_serve(baseline: &Json, current: &Json, tolerance: f64) -> Result<Vec<GateResult>> {
+    let mut out = Vec::with_capacity(SERVE_GATES.len());
+    for &(label, path, direction) in SERVE_GATES {
+        let base = metric(baseline, "baseline", path)?;
+        let cur = metric(current, "current", path)?;
+        let ratio = if base > 0.0 { cur / base } else { f64::INFINITY };
+        let ok = match direction {
+            Direction::HigherIsBetter => cur >= base * (1.0 - tolerance),
+            Direction::LowerIsBetter => cur <= base * (1.0 + tolerance),
+        };
+        out.push(GateResult {
+            metric: label.to_string(),
+            direction,
+            baseline: base,
+            current: cur,
+            ratio,
+            ok,
+        });
+    }
+    Ok(out)
+}
+
+/// Read both report files, print the verdict table, and return whether every
+/// gate passed.
+pub fn run_files(baseline: &Path, current: &Path, tolerance: f64) -> Result<bool> {
+    let read = |p: &Path, which: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {which} report {}", p.display()))?;
+        Json::parse(&text).with_context(|| format!("parsing {which} report {}", p.display()))
+    };
+    let results = compare_serve(
+        &read(baseline, "baseline")?,
+        &read(current, "current")?,
+        tolerance,
+    )?;
+
+    let mut table = super::bench::Table::new(&["metric", "baseline", "current", "ratio", "gate"]);
+    let mut all_ok = true;
+    for r in &results {
+        all_ok &= r.ok;
+        let bound = match r.direction {
+            Direction::HigherIsBetter => format!("≥ {:.3}", 1.0 - tolerance),
+            Direction::LowerIsBetter => format!("≤ {:.3}", 1.0 + tolerance),
+        };
+        table.row(&[
+            r.metric.clone(),
+            format!("{:.1}", r.baseline),
+            format!("{:.1}", r.current),
+            format!("{:.3} ({bound})", r.ratio),
+            if r.ok { "PASS".into() } else { "FAIL".into() },
+        ]);
+    }
+    table.print();
+    if all_ok {
+        println!("bench-gate: PASS (tolerance ±{:.0}%)", tolerance * 100.0);
+    } else {
+        println!(
+            "bench-gate: FAIL — perf regressed past ±{:.0}% of {}; if intentional, \
+             refresh the baseline (`cargo bench --bench hotpath -- serve --quick --trees 16 \
+             && cp BENCH_serve.json BENCH_baseline.json`)",
+            tolerance * 100.0,
+            baseline.display()
+        );
+    }
+    Ok(all_ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(flat_warm: f64, p99: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"rows_per_sec": {{"flat_warm": {flat_warm}, "baseline_redecode": 1.0}},
+                 "single_row_us": {{"p50": 1.0, "p99": {p99}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn unchanged_metrics_pass() {
+        let r = compare_serve(&report(1000.0, 50.0), &report(1000.0, 50.0), 0.25).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|g| g.ok));
+        assert!(r.iter().all(|g| (g.ratio - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn within_tolerance_passes_both_directions() {
+        // throughput −20%, latency +20%: inside ±25%
+        let r = compare_serve(&report(1000.0, 50.0), &report(800.0, 60.0), 0.25).unwrap();
+        assert!(r.iter().all(|g| g.ok), "{r:?}");
+        // improvements never fail, however large
+        let r = compare_serve(&report(1000.0, 50.0), &report(9000.0, 1.0), 0.25).unwrap();
+        assert!(r.iter().all(|g| g.ok), "{r:?}");
+    }
+
+    #[test]
+    fn throughput_regression_fails() {
+        let r = compare_serve(&report(1000.0, 50.0), &report(700.0, 50.0), 0.25).unwrap();
+        assert!(!r[0].ok, "throughput −30% must trip the gate: {r:?}");
+        assert!(r[1].ok);
+    }
+
+    #[test]
+    fn latency_regression_fails() {
+        let r = compare_serve(&report(1000.0, 50.0), &report(1000.0, 70.0), 0.25).unwrap();
+        assert!(r[0].ok);
+        assert!(!r[1].ok, "p99 +40% must trip the gate: {r:?}");
+    }
+
+    #[test]
+    fn missing_metric_is_an_error_not_a_skip() {
+        let empty = Json::parse("{}").unwrap();
+        assert!(compare_serve(&empty, &report(1.0, 1.0), 0.25).is_err());
+        assert!(compare_serve(&report(1.0, 1.0), &empty, 0.25).is_err());
+        let non_numeric =
+            Json::parse(r#"{"rows_per_sec": {"flat_warm": "fast"}, "single_row_us": {"p99": 1}}"#)
+                .unwrap();
+        assert!(compare_serve(&non_numeric, &report(1.0, 1.0), 0.25).is_err());
+    }
+
+    #[test]
+    fn run_files_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("rfc-gate-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let cur = dir.join("cur.json");
+        let body = |fw: f64, p99: f64| {
+            format!(
+                r#"{{"rows_per_sec": {{"flat_warm": {fw}}}, "single_row_us": {{"p99": {p99}}}}}"#
+            )
+        };
+        std::fs::write(&base, body(1000.0, 50.0)).unwrap();
+        std::fs::write(&cur, body(950.0, 55.0)).unwrap();
+        assert!(run_files(&base, &cur, 0.25).unwrap());
+        std::fs::write(&cur, body(100.0, 55.0)).unwrap();
+        assert!(!run_files(&base, &cur, 0.25).unwrap());
+        assert!(run_files(&dir.join("missing.json"), &cur, 0.25).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,330 @@
+//! A minimal JSON reader (no `serde` in the offline image).
+//!
+//! Parses the machine-readable bench reports (`BENCH_serve.json`,
+//! `BENCH_baseline.json`) for the CI regression gate. Full JSON value
+//! grammar — objects, arrays, strings with escapes, numbers, booleans,
+//! null — with a recursion-depth bound; no serialization (the benches write
+//! their JSON by hand).
+
+use anyhow::{bail, Context, Result};
+
+/// Maximum nesting depth accepted (bench reports are ~3 levels deep;
+/// anything past this is malformed or adversarial).
+const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value. Object keys keep insertion order (duplicate keys:
+/// first match wins on lookup).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing non-whitespace is an error).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Object member by key (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Walk a path of object keys: `at(&["rows_per_sec", "flat_warm"])`.
+    pub fn at(&self, path: &[&str]) -> Option<&Json> {
+        let mut cur = self;
+        for key in path {
+            cur = cur.get(key)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().context("unexpected end of JSON")
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected {:?} at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i);
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH}");
+        }
+        match self.peek()? {
+            b'{' => self.object(depth),
+            b'[' => self.array(depth),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected {:?} at byte {}", c as char, self.i),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value(depth + 1)?;
+            members.push((key, v));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(members));
+                }
+                c => bail!("expected ',' or '}}', got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']', got {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        _ => bail!("bad escape at byte {}", self.i - 1),
+                    }
+                }
+                // multi-byte UTF-8 continuation: copy the raw bytes through
+                _ => {
+                    let start = self.i - 1;
+                    while self.i < self.b.len()
+                        && self.b[self.i] >= 0x80
+                        && self.b[self.i] < 0xc0
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i]).context("bad utf8")?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4]).context("bad \\u escape")?;
+        let v = u32::from_str_radix(s, 16).context("bad \\u escape")?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        // surrogate pair: \uD800-\uDBFF must be followed by \uDC00-\uDFFF
+        let cp = if (0xd800..0xdc00).contains(&hi) {
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                self.i += 2;
+                let lo = self.hex4()?;
+                if !(0xdc00..0xe000).contains(&lo) {
+                    bail!("unpaired surrogate");
+                }
+                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+            } else {
+                bail!("unpaired surrogate");
+            }
+        } else if (0xdc00..0xe000).contains(&hi) {
+            bail!("unpaired surrogate");
+        } else {
+            hi
+        };
+        char::from_u32(cp).context("invalid code point")
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).context("bad number")?;
+        let v: f64 = s.parse().with_context(|| format!("bad number {s:?} at byte {start}"))?;
+        Ok(Json::Num(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_bench_report_shape() {
+        let doc = r#"{
+            "bench": "hotpath serve",
+            "trees": 16,
+            "single_row_us": {"p50": 42.5, "p99": 120.0},
+            "rows_per_sec": {"baseline_redecode": 1000.5, "flat_warm": 2.5e6},
+            "worker_scaling": [{"workers": 1, "rows_per_sec": 100.0}],
+            "ok": true, "missing": null
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("hotpath serve"));
+        assert_eq!(j.at(&["single_row_us", "p99"]).unwrap().as_f64(), Some(120.0));
+        assert_eq!(j.at(&["rows_per_sec", "flat_warm"]).unwrap().as_f64(), Some(2.5e6));
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("missing"), Some(&Json::Null));
+        assert_eq!(j.at(&["rows_per_sec", "nope"]), None);
+        match j.get("worker_scaling").unwrap() {
+            Json::Arr(items) => {
+                assert_eq!(items.len(), 1);
+                assert_eq!(items[0].at(&["workers"]).unwrap().as_f64(), Some(1.0));
+            }
+            _ => panic!("array expected"),
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let j = Json::parse(r#""a\"b\\c\n\u0041\u00e9\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\nAé😀"));
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        assert_eq!(Json::parse("-12.5e-2").unwrap().as_f64(), Some(-0.125));
+        assert_eq!(Json::parse("0").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn malformed_documents_error() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "{\"a\" 1}", "tru", "1 2", "\"unterminated",
+            "\"\\uD800\"", "nul", "{,}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn depth_bound_is_enforced() {
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(10) + &"]".repeat(10);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn utf8_passthrough() {
+        let j = Json::parse("\"héllo → wörld\"").unwrap();
+        assert_eq!(j.as_str(), Some("héllo → wörld"));
+    }
+}

@@ -1,0 +1,238 @@
+//! A vendored, dependency-free read-only memory map.
+//!
+//! The tiered model store spills cold containers to disk and reloads them on
+//! demand; because [`crate::compress::container::ParsedContainer`] only
+//! records `(offset, len)` spans into its buffer, an `mmap`-backed buffer
+//! makes the reload **zero-copy**: the header parse touches a few pages, and
+//! payload bytes are paged in by the kernel on first decode — no `read`, no
+//! payload memcpy.
+//!
+//! No `libc` crate exists in the offline build image, so the wrapper
+//! declares the two syscall shims (`mmap`/`munmap`) directly; `std` already
+//! links the platform C library on every supported target. The FFI path is
+//! gated to 64-bit unix (where `off_t` is `i64`); everywhere else
+//! [`Mmap::map_path`] degrades to reading the file into an owned buffer —
+//! same API, same semantics, one copy.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x2;
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+enum Inner {
+    /// A live kernel mapping (read-only, private). Unmapped on drop.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Fallback for targets without the FFI path, and for empty files
+    /// (`mmap` of zero bytes is an error by spec).
+    Owned(Box<[u8]>),
+}
+
+/// A read-only view of a file's bytes, memory-mapped where the platform
+/// allows it.
+///
+/// The mapping is private and immutable, so sharing it across threads is
+/// sound; on unix the bytes stay valid even if the file is unlinked while
+/// mapped (the store unlinks spill files the moment they reload).
+pub struct Mmap {
+    inner: Inner,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE — no &self method can
+// mutate the bytes, and the kernel keeps the pages alive until munmap.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Empty files yield an empty (unmapped) buffer.
+    pub fn map_path(path: &Path) -> Result<Mmap> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if len == 0 {
+            return Ok(Mmap { inner: Inner::Owned(Vec::new().into_boxed_slice()) });
+        }
+        let Ok(len) = usize::try_from(len) else {
+            bail!("{} is too large to map ({len} bytes)", path.display());
+        };
+        Self::map_file(&file, len, path)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn map_file(file: &std::fs::File, len: usize, path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        // SAFETY: fd is open for reading, len matches the file size read
+        // above, and we never hand out the pointer beyond `len`; the fd may
+        // close after mmap returns — the mapping holds its own reference.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            bail!(
+                "mmap of {} ({len} bytes) failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(Mmap { inner: Inner::Mapped { ptr: ptr as *const u8, len } })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn map_file(file: &std::fs::File, len: usize, path: &Path) -> Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut buf)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mmap { inner: Inner::Owned(buf.into_boxed_slice()) })
+    }
+
+    /// Whether this buffer is a live kernel mapping (false on the owned
+    /// fallback path) — the zero-copy acceptance checks assert on this.
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { .. } => true,
+            Inner::Owned(_) => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { len, .. } => *len,
+            Inner::Owned(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: ptr/len came from a successful mmap that lives until
+            // drop; the mapping is never mutated.
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned(b) => b,
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Inner::Mapped { ptr, len } = &self.inner {
+            // SAFETY: exactly the region mmap returned; dropped once.
+            unsafe {
+                sys::munmap(*ptr as *mut std::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn temp_file(contents: &[u8]) -> std::path::PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "rfc-mmap-test-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7) as u8).collect();
+        let path = temp_file(&data);
+        let map = Mmap::map_path(&path).unwrap();
+        assert_eq!(&map[..], &data[..]);
+        assert_eq!(map.len(), data.len());
+        assert!(!map.is_empty());
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(map.is_mapped(), "64-bit unix must take the real mmap path");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unlinked_file_stays_readable_while_mapped() {
+        // the store deletes spill files as soon as they reload; the mapping
+        // must keep serving the bytes
+        let data = vec![0xabu8; 4096 * 3 + 17];
+        let path = temp_file(&data);
+        let map = Mmap::map_path(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(&map[..], &data[..]);
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let path = temp_file(b"");
+        let map = Mmap::map_path(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(&map[..], b"");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_error() {
+        let path = std::env::temp_dir().join("rfc-mmap-test-definitely-missing");
+        assert!(Mmap::map_path(&path).is_err());
+    }
+}

@@ -5,7 +5,10 @@
 //! these substrates are implemented in-tree (see `DESIGN.md §3`).
 
 pub mod bench;
+pub mod benchgate;
 pub mod cli;
+pub mod json;
+pub mod mmap;
 pub mod rng;
 pub mod stats;
 pub mod threads;

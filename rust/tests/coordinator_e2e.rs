@@ -204,6 +204,217 @@ fn batcher_queues_reaped_after_model_removal() {
     server.stop();
 }
 
+/// Unique spill directory per test (tests run in parallel in one process).
+fn temp_spill_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rfc-e2e-spill-{tag}-{}", std::process::id()))
+}
+
+fn spill_file_count(dir: &std::path::Path) -> usize {
+    std::fs::read_dir(dir).map(|d| d.count()).unwrap_or(0)
+}
+
+#[test]
+fn spill_reload_bit_identical_across_workers_and_tiers() {
+    // regression dataset so "bit-identical" means f64 bit patterns, not
+    // just class labels; checked at worker counts 1/2/8 against a
+    // Resident, a Spilled-then-reloaded, and a freshly-parsed model
+    let ds = synthetic::airfoil_regression(96);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 6, 11, &CompressOptions::default()).unwrap();
+    let one = cf.total_bytes();
+    let rows: Vec<Vec<ObsValue>> = (0..32).map(|r| row_values(&ds, r * 7)).collect();
+
+    let fresh_predictor =
+        rf_compress::compress::CompressedPredictor::new(cf.parse().unwrap()).unwrap();
+    for workers in [1usize, 2, 8] {
+        let dir = temp_spill_dir(&format!("workers{workers}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            ModelStore::with_budget(2 * one).spill_dir(&dir).predict_workers(workers),
+        );
+        store.insert("m", &cf).unwrap();
+        let resident = store.predict_batch("m", &rows).unwrap();
+        assert!(store.spill("m").unwrap());
+        assert!(store.is_spilled("m"));
+        let reloaded = store.predict_batch("m", &rows).unwrap();
+        assert!(!store.is_spilled("m"), "the request pulled the model back to RAM");
+        for (i, (a, b)) in resident.iter().zip(&reloaded).enumerate() {
+            match (a, b) {
+                (PredictOne::Value(x), PredictOne::Value(y)) => assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "row {i}, {workers} workers: reload must be bit-identical"
+                ),
+                _ => panic!("regression values expected"),
+            }
+        }
+        // and both agree bit-exactly with a fresh parse of the original bytes
+        match fresh_predictor.predict_all_workers(&row_batch_dataset(&ds, &rows), workers) {
+            Ok(rf_compress::forest::forest::Predictions::Values(vs)) => {
+                for (i, out) in resident.iter().enumerate() {
+                    match out {
+                        PredictOne::Value(x) => assert_eq!(x.to_bits(), vs[i].to_bits(), "row {i}"),
+                        _ => panic!(),
+                    }
+                }
+            }
+            other => panic!("fresh predictor failed: {other:?}"),
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Rebuild a query dataset holding exactly the batch rows (so a fresh
+/// predictor can answer the same observations the store answered).
+fn row_batch_dataset(ds: &Dataset, rows: &[Vec<ObsValue>]) -> Dataset {
+    use rf_compress::data::{Feature, Target};
+    let d = ds.features.len();
+    let features = (0..d)
+        .map(|j| {
+            let column = match &ds.features[j].column {
+                Column::Numeric(_) => Column::Numeric(
+                    rows.iter()
+                        .map(|r| match r[j] {
+                            ObsValue::Num(x) => x,
+                            ObsValue::Cat(_) => panic!("numeric column"),
+                        })
+                        .collect(),
+                ),
+                Column::Categorical { levels, .. } => Column::Categorical {
+                    values: rows
+                        .iter()
+                        .map(|r| match r[j] {
+                            ObsValue::Cat(c) => c,
+                            ObsValue::Num(_) => panic!("categorical column"),
+                        })
+                        .collect(),
+                    levels: *levels,
+                },
+            };
+            Feature { name: ds.features[j].name.clone(), column }
+        })
+        .collect();
+    let target = if ds.target.is_classification() {
+        Target::Classification { labels: vec![0; rows.len()], classes: ds.target.num_classes() }
+    } else {
+        Target::Regression(vec![0.0; rows.len()])
+    };
+    Dataset { name: "batch".into(), features, target }
+}
+
+#[test]
+fn spill_tier_serves_over_tcp_with_stats() {
+    // budget for ~2.5 models + a spill dir: the third insert spills the LRU
+    // model instead of dropping it; the wire still serves it (via reload)
+    let ds = synthetic::iris(97);
+    let mut coord = Coordinator::native_only();
+    let (forest, cf, _) =
+        coord.train_and_compress(&ds, 5, 12, &CompressOptions::default()).unwrap();
+    let one = cf.total_bytes();
+    let dir = temp_spill_dir("tcp");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::with_budget(2 * one + one / 2).spill_dir(&dir));
+    store.insert("m0", &cf).unwrap();
+    store.insert("m1", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // touch m0 so m1 is the LRU spill victim
+    let wire = values_to_wire(&row_values(&ds, 0));
+    assert!(client.request(&format!("PREDICT m0 {wire}")).unwrap().starts_with("OK"));
+    store.insert("m2", &cf).unwrap();
+    assert!(store.is_spilled("m1"), "LRU model spilled, not dropped");
+
+    // LIST still owns all three; BYTES reports the disk tier
+    let list = client.request("LIST").unwrap();
+    assert!(list.contains("m0") && list.contains("m1") && list.contains("m2"), "{list}");
+    let bytes = client.request("BYTES").unwrap();
+    let spilled: u64 = bytes
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("spilled="))
+        .expect("BYTES reply carries spilled=")
+        .parse()
+        .unwrap();
+    assert_eq!(spilled, one, "{bytes}");
+
+    // a PREDICT against the spilled model reloads and answers correctly
+    for row in (0..ds.num_rows()).step_by(31) {
+        let wire = values_to_wire(&row_values(&ds, row));
+        let reply = client.request(&format!("PREDICT m1 {wire}")).unwrap();
+        assert_eq!(reply, format!("OK {}", forest.predict_class(&ds, row)), "row {row}");
+    }
+    assert!(!store.is_spilled("m1"));
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.contains("spills=") && stats.contains("reloads="), "{stats}");
+    let reloads: u64 = stats
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("reloads="))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(reloads >= 1, "{stats}");
+    server.stop();
+    drop(server);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_corrupted_file_is_an_error_over_the_wire() {
+    let ds = synthetic::iris(98);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 4, 13, &CompressOptions::default()).unwrap();
+    let dir = temp_spill_dir("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::new().spill_dir(&dir));
+    store.insert("m", &cf).unwrap();
+    assert!(store.spill("m").unwrap());
+    // truncate the spill file behind the store's back
+    let file = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+    let full = std::fs::read(&file).unwrap();
+    std::fs::write(&file, &full[..full.len() / 3]).unwrap();
+
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let wire = values_to_wire(&row_values(&ds, 0));
+    let reply = client.request(&format!("PREDICT m {wire}")).unwrap();
+    assert!(reply.starts_with("ERR"), "typed error, no panic: {reply}");
+    // the connection (and the server) survive the failed reload
+    assert!(client.request("LIST").unwrap().starts_with("OK"));
+    server.stop();
+    drop(server);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_files_lifecycle_remove_replace_shutdown() {
+    let ds = synthetic::wages(99);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 4, 14, &CompressOptions::default()).unwrap();
+    let dir = temp_spill_dir("lifecycle");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ModelStore::new().spill_dir(&dir);
+    for name in ["a", "b", "c"] {
+        store.insert(name, &cf).unwrap();
+        assert!(store.spill(name).unwrap());
+    }
+    assert_eq!(spill_file_count(&dir), 3);
+    assert_eq!(store.spilled_len(), 3);
+    // remove → file deleted
+    assert!(store.remove("a"));
+    assert_eq!(spill_file_count(&dir), 2);
+    // replace → old file deleted, new model resident
+    store.insert("b", &cf).unwrap();
+    assert!(!store.is_spilled("b"));
+    assert_eq!(spill_file_count(&dir), 1);
+    // shutdown → everything left is purged
+    drop(store);
+    assert_eq!(spill_file_count(&dir), 0, "shutdown must purge spill files");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn store_direct_api_matches_forest() {
     let ds = synthetic::naval_classification(93);

@@ -463,3 +463,87 @@ fn prop_kl_clustering_objective_nonincreasing_in_k() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_spill_reload_round_trip_is_transparent() {
+    // Tier transitions must be invisible to callers: for any model, the
+    // answers from a Resident store, the same store after Spilled → reloaded,
+    // and a fresh parse of the original bytes are identical (bit-identical
+    // for regression fits). Exercised across random schemas and both target
+    // kinds; ~12 cases keep the disk traffic reasonable for tier-1.
+    use rf_compress::compress::predict::PredictOne;
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::testing::prop::forall_cases;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static CASE: AtomicU64 = AtomicU64::new(0);
+    forall_cases("spill round trip", 12, &mut |g: &mut Gen| {
+        let n_rows = g.usize_in(12, 48);
+        let numeric = g.usize_in(0, 3);
+        let categorical = g.usize_in(if numeric == 0 { 1 } else { 0 }, 2);
+        let classification = g.bool(0.5);
+        let ds = g.dataset(n_rows, numeric, categorical, classification);
+        let params = if classification {
+            ForestParams::classification(g.usize_in(1, 4))
+        } else {
+            ForestParams::regression(g.usize_in(1, 4))
+        };
+        let forest = Forest::train(&ds, &params, g.u64_in(1, 1 << 40));
+        let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+            .map_err(|e| e.to_string())?;
+
+        let dir = std::env::temp_dir().join(format!(
+            "rfc-prop-spill-{}-{}",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::with_budget(2 * cf.total_bytes().max(1))
+            .spill_dir(&dir)
+            .predict_workers(g.usize_in(1, 8));
+        store.insert("m", &cf).map_err(|e| e.to_string())?;
+
+        let rows: Vec<Vec<ObsValue>> = (0..n_rows)
+            .map(|r| {
+                ds.features
+                    .iter()
+                    .map(|f| match &f.column {
+                        Column::Numeric(v) => ObsValue::Num(v[r]),
+                        Column::Categorical { values, .. } => ObsValue::Cat(values[r]),
+                    })
+                    .collect()
+            })
+            .collect();
+        let resident = store.predict_batch("m", &rows).map_err(|e| e.to_string())?;
+        if !store.spill("m").map_err(|e| e.to_string())? {
+            return Err("spill refused on a resident model".into());
+        }
+        let reloaded = store.predict_batch("m", &rows).map_err(|e| e.to_string())?;
+        for (i, (a, b)) in resident.iter().zip(&reloaded).enumerate() {
+            let same = match (a, b) {
+                (PredictOne::Class(x), PredictOne::Class(y)) => x == y,
+                (PredictOne::Value(x), PredictOne::Value(y)) => x.to_bits() == y.to_bits(),
+                _ => false,
+            };
+            if !same {
+                return Err(format!("row {i}: resident {a:?} != reloaded {b:?}"));
+            }
+        }
+        // the store's answers match the original forest on every row
+        for (i, out) in reloaded.iter().enumerate() {
+            let ok = match out {
+                PredictOne::Class(c) => *c == forest.predict_class(&ds, i),
+                PredictOne::Value(v) => v.to_bits() == forest.predict_regression(&ds, i).to_bits(),
+            };
+            if !ok {
+                return Err(format!("row {i}: store diverges from the forest"));
+            }
+        }
+        drop(store);
+        if std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0) != 0 {
+            return Err("spill dir not empty after reload + shutdown".into());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
