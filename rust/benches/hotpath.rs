@@ -11,12 +11,18 @@
 //! * tiered-store spill path: mmap-backed reload (map + header parse) vs a
 //!   cold full-read parse, p50/p99, plus the end-to-end spill→reload round
 //!   trip through the store; emits `BENCH_spill.json`
+//! * model packs: bytes/model and member-reload p50/p99 of one `RFPK`
+//!   archive vs per-file spill at N × ≤4 KiB models (the ROADMAP's
+//!   page-granularity-waste scenario), after a bit-identical extraction
+//!   gate over every member; emits `BENCH_pack.json`
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
 //!
 //! Run: `cargo bench --bench hotpath`
-//! (add `-- cluster|compress|predict|serve|spill|codec`; `-- serve --quick`
-//! and `-- spill --quick` are the CI smoke configurations: tiny forest,
-//! short timing budgets; `-- spill --spill-bytes B` caps the disk tier)
+//! (add `-- cluster|compress|predict|serve|spill|pack|codec`;
+//! `-- serve --quick`, `-- spill --quick`, and `-- pack --quick` are the CI
+//! smoke configurations: tiny forests / member counts, short timing
+//! budgets; `-- spill --spill-bytes B` caps the disk tier and
+//! `-- pack --members N` sets the cohort size)
 
 use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
 use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor, PlanCache};
@@ -45,6 +51,9 @@ fn main() {
     }
     if run("spill") {
         bench_spill(&cfg);
+    }
+    if run("pack") {
+        bench_pack(&cfg);
     }
     if run("codec") {
         bench_codec();
@@ -533,6 +542,229 @@ fn bench_spill(cfg: &rf_compress::util::bench::BenchConfig) {
     match std::fs::write("BENCH_spill.json", &json) {
         Ok(()) => println!("wrote BENCH_spill.json"),
         Err(e) => eprintln!("could not write BENCH_spill.json: {e}"),
+    }
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+}
+
+fn bench_pack(cfg: &rf_compress::util::bench::BenchConfig) {
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::forest::TreeParams;
+    use rf_compress::pack::{compress_cohort, PackArchive, PackBuilder};
+    use rf_compress::util::mmap::Mmap;
+    use rf_compress::util::stats::human_bytes;
+
+    println!("== model packs: one RFPK archive vs per-file spill ==");
+    let quick = cfg.args.flag("quick");
+    let members: usize = cfg.args.get_or("members", if quick { 96 } else { 1000 });
+    let dir = std::env::temp_dir().join(format!("rfc-pack-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // the ROADMAP scenario: many tiny per-user models (≤ 4 KiB each) on a
+    // common schema — depth-limited 2-tree forests over iris land well
+    // under the page size once the cohort shares its codebooks
+    let ds = synthetic::iris(1234);
+    let params = ForestParams {
+        tree: TreeParams { mtry: Some(2), min_leaf: 2, max_depth: 3 },
+        ..ForestParams::classification(2)
+    };
+    let forests: Vec<Forest> = (0..members)
+        .map(|i| Forest::train(&ds, &params, cfg.seed + i as u64))
+        .collect();
+    let cohort = compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+    let sizes: Vec<u64> = cohort.iter().map(|cf| cf.total_bytes()).collect();
+    let mean_model = sizes.iter().sum::<u64>() as f64 / members as f64;
+    let max_model = *sizes.iter().max().unwrap();
+    println!(
+        "cohort: {members} members, {:.0} B mean / {} max per standalone container{}",
+        mean_model,
+        human_bytes(max_model),
+        if max_model > 4096 { "  (WARNING: over the 4 KiB scenario)" } else { "" }
+    );
+
+    // one archive...
+    let mut builder = PackBuilder::new();
+    for (i, cf) in cohort.iter().enumerate() {
+        builder.add(&format!("user-{i:04}"), cf.bytes.clone()).unwrap();
+    }
+    let pack_path = dir.join("cohort.rfpk");
+    let stats = builder.write(&pack_path).unwrap();
+    let pack = PackArchive::open(&pack_path).unwrap();
+
+    // ...vs one file per member (the spill tier's layout)
+    let files_dir = dir.join("per-file");
+    std::fs::create_dir_all(&files_dir).unwrap();
+    let files: Vec<std::path::PathBuf> = cohort
+        .iter()
+        .enumerate()
+        .map(|(i, cf)| {
+            let p = files_dir.join(format!("user-{i:04}.rfcz"));
+            std::fs::write(&p, &cf.bytes).unwrap();
+            p
+        })
+        .collect();
+
+    // correctness gate (the CI pack-smoke stage trips on any divergence):
+    // every member must extract bit-identical to its source container, and
+    // sampled members must decode to their original forests
+    for (i, cf) in cohort.iter().enumerate() {
+        assert_eq!(
+            pack.extract_member(i).unwrap()[..],
+            cf.bytes[..],
+            "member {i} extraction must be bit-identical"
+        );
+    }
+    for i in (0..members).step_by((members / 16).max(1)) {
+        let pc = pack.parse_member(i).unwrap();
+        let g = rf_compress::compress::pipeline::decompress_container(&pc).unwrap();
+        assert!(g.identical(&forests[i]), "member {i} must decode losslessly");
+    }
+
+    // bytes on disk: the archive is one file (page waste amortized across
+    // the cohort); per-file pays it per member
+    const PAGE: u64 = 4096;
+    let round4k = |b: u64| b.div_ceil(PAGE) * PAGE;
+    let pack_disk = round4k(stats.archive_bytes);
+    let perfile_logical: u64 = sizes.iter().sum();
+    let perfile_disk: u64 = sizes.iter().map(|&b| round4k(b)).sum();
+    let mut t = Table::new(&["storage", "bytes on disk", "bytes/model", "vs per-file"]);
+    t.row(&[
+        "per-file spill (4 KiB pages)".into(),
+        human_bytes(perfile_disk),
+        format!("{:.0}", perfile_disk as f64 / members as f64),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "pack archive".into(),
+        human_bytes(pack_disk),
+        format!("{:.0}", pack_disk as f64 / members as f64),
+        format!("{:.2}x", perfile_disk as f64 / pack_disk as f64),
+    ]);
+    t.print();
+    println!(
+        "shared-codebook dedup: {} blob(s), {} excised ({} logical total)",
+        stats.blobs,
+        human_bytes(stats.shared_saved_bytes),
+        human_bytes(stats.logical_bytes)
+    );
+    assert!(
+        pack_disk < perfile_disk,
+        "a pack must beat per-file page-rounded storage ({pack_disk} vs {perfile_disk})"
+    );
+
+    // member reload latency: pack = parse out of the already-open mapping;
+    // per-file = open + mmap + parse per model (the spill reload path).
+    // Per-member samples across passes give honest p50/p99 tails.
+    let passes = if quick { 2 } else { 3 };
+    let mut pack_us = Vec::with_capacity(members * passes);
+    let mut file_us = Vec::with_capacity(members * passes);
+    for _ in 0..passes {
+        for i in 0..members {
+            let t0 = std::time::Instant::now();
+            let p = CompressedPredictor::new(pack.parse_member(i).unwrap()).unwrap();
+            assert_eq!(p.num_trees(), forests[i].num_trees());
+            pack_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        for (i, path) in files.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let map = Mmap::map_path(path).unwrap();
+            let pc = rf_compress::compress::container::parse_arc(map).unwrap();
+            let p = CompressedPredictor::new(pc).unwrap();
+            assert_eq!(p.num_trees(), forests[i].num_trees());
+            file_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let quantile = rf_compress::util::stats::quantile;
+    let (pack_p50, pack_p99) = (quantile(&pack_us, 0.5), quantile(&pack_us, 0.99));
+    let (file_p50, file_p99) = (quantile(&file_us, 0.5), quantile(&file_us, 0.99));
+    let mut t = Table::new(&["member reload", "p50", "p99", "p99 vs per-file"]);
+    t.row(&[
+        "per-file (open+mmap+parse)".into(),
+        format!("{file_p50:.1} µs"),
+        format!("{file_p99:.1} µs"),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "pack (parse off one mapping)".into(),
+        format!("{pack_p50:.1} µs"),
+        format!("{pack_p99:.1} µs"),
+        format!("{:.2}x", file_p99 / pack_p99.max(1e-9)),
+    ]);
+    t.print();
+
+    // end-to-end: a budgeted store churning through the whole cohort —
+    // members load out of the pack and release back under pressure
+    let budget = (mean_model as u64 * 8).max(max_model * 2);
+    let store = ModelStore::with_budget(budget);
+    let pack = std::sync::Arc::new(pack);
+    store.attach_pack(&pack).unwrap();
+    let vals: Vec<ObsValue> = ds
+        .features
+        .iter()
+        .map(|f| match &f.column {
+            rf_compress::data::Column::Numeric(v) => ObsValue::Num(v[0]),
+            rf_compress::data::Column::Categorical { values, .. } => ObsValue::Cat(values[0]),
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    for i in 0..members {
+        store.predict(&format!("user-{i:04}"), &vals).unwrap();
+    }
+    let sweep_s = t0.elapsed().as_secs_f64();
+    let s = store.stats();
+    println!(
+        "store sweep over {members} members under a {} budget: {:.0} members/s, \
+         pack_loads={} pack_releases={} spills={} evictions={}",
+        human_bytes(budget),
+        members as f64 / sweep_s,
+        s.pack_loads,
+        s.pack_releases,
+        s.spills,
+        s.evictions
+    );
+    assert_eq!(s.evictions, 0, "pack members must release, never drop");
+    assert_eq!(s.spills, 0, "pack members must never write spill files");
+
+    let json = [
+        "{".to_string(),
+        "  \"bench\": \"hotpath pack\",".to_string(),
+        format!("  \"members\": {members},"),
+        format!(
+            "  \"model_bytes\": {{\"mean\": {mean_model:.1}, \"max\": {max_model}}},"
+        ),
+        format!(
+            "  \"disk_bytes\": {{\"pack\": {pack_disk}, \"per_file_4k\": {perfile_disk}, \
+             \"per_file_logical\": {perfile_logical}}},"
+        ),
+        format!(
+            "  \"bytes_per_model\": {{\"pack\": {:.1}, \"per_file_4k\": {:.1}}},",
+            pack_disk as f64 / members as f64,
+            perfile_disk as f64 / members as f64
+        ),
+        format!(
+            "  \"reload_us\": {{\"pack\": {{\"p50\": {pack_p50:.2}, \"p99\": {pack_p99:.2}}}, \
+             \"per_file\": {{\"p50\": {file_p50:.2}, \"p99\": {file_p99:.2}}}}},"
+        ),
+        format!(
+            "  \"shared\": {{\"blobs\": {}, \"shared_members\": {}, \"saved_bytes\": {}}},",
+            stats.blobs, stats.shared_members, stats.shared_saved_bytes
+        ),
+        format!(
+            "  \"store_sweep\": {{\"members_per_sec\": {:.1}, \"pack_loads\": {}, \
+             \"pack_releases\": {}}}",
+            members as f64 / sweep_s,
+            s.pack_loads,
+            s.pack_releases
+        ),
+        "}".to_string(),
+    ]
+    .join("\n")
+        + "\n";
+    match std::fs::write("BENCH_pack.json", &json) {
+        Ok(()) => println!("wrote BENCH_pack.json"),
+        Err(e) => eprintln!("could not write BENCH_pack.json: {e}"),
     }
     drop(store);
     let _ = std::fs::remove_dir_all(&dir);

@@ -47,14 +47,22 @@ pub const VERSION: u8 = 1;
 ///   ([`crate::util::mmap::Mmap`]): reloading an evicted model is an `mmap`
 ///   plus a header parse — no `read`, no payload memcpy, the kernel pages
 ///   bytes in on first decode.
+/// * [`SharedBytes::View`] — a sub-range of another shared buffer: a pack
+///   member ([`crate::pack`]) aliasing its archive's single mapping, so one
+///   `mmap` of a pack serves every member without per-member copies.
 ///
-/// Cloning is a refcount bump in either case, so any number of parses and
+/// Cloning is a refcount bump in every case, so any number of parses and
 /// predictors keep sharing one resident copy (the zero-copy contract of
 /// [`ParsedContainer`]).
 #[derive(Clone)]
 pub enum SharedBytes {
     Heap(Arc<[u8]>),
     Mapped(Arc<Mmap>),
+    View {
+        base: Arc<SharedBytes>,
+        offset: usize,
+        len: usize,
+    },
 }
 
 impl SharedBytes {
@@ -62,7 +70,29 @@ impl SharedBytes {
         match self {
             SharedBytes::Heap(b) => b,
             SharedBytes::Mapped(m) => m,
+            SharedBytes::View { base, offset, len } => &base.as_slice()[*offset..*offset + *len],
         }
+    }
+
+    /// A zero-copy sub-range view of this buffer (bounds-checked). Views of
+    /// views collapse onto the root buffer, so chains never build up.
+    pub fn slice(&self, offset: usize, len: usize) -> Result<SharedBytes> {
+        let end = offset.checked_add(len).context("view span overflow")?;
+        if end > self.len() {
+            bail!("view {offset}..{end} out of bounds (buffer holds {})", self.len());
+        }
+        Ok(match self {
+            SharedBytes::View { base, offset: base_off, .. } => SharedBytes::View {
+                base: base.clone(),
+                offset: base_off + offset,
+                len,
+            },
+            other => SharedBytes::View {
+                base: Arc::new(other.clone()),
+                offset,
+                len,
+            },
+        })
     }
 
     pub fn as_ptr(&self) -> *const u8 {
@@ -79,10 +109,12 @@ impl SharedBytes {
 
     /// Whether this buffer is a live file mapping (the tiered store's
     /// reload path; heap buffers and the non-unix read fallback are not).
+    /// A view is mapped when its base is.
     pub fn is_mapped(&self) -> bool {
         match self {
             SharedBytes::Heap(_) => false,
             SharedBytes::Mapped(m) => m.is_mapped(),
+            SharedBytes::View { base, .. } => base.is_mapped(),
         }
     }
 }
@@ -99,7 +131,8 @@ impl std::fmt::Debug for SharedBytes {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SharedBytes")
             .field("len", &self.len())
-            .field("mapped", &matches!(self, SharedBytes::Mapped(_)))
+            .field("mapped", &self.is_mapped())
+            .field("view", &matches!(self, SharedBytes::View { .. }))
             .finish()
     }
 }
@@ -317,6 +350,24 @@ impl ParsedContainer {
         &self.fits_bytes()[s..e]
     }
 
+    /// Absolute byte span `[start, end)` of the decode side information
+    /// (TABLES + CLUSMAP + DICTS) within the serialized container — the
+    /// region a model pack ([`crate::pack`]) excises into a shared blob when
+    /// several members carry byte-identical coder tables. Every section is
+    /// byte-aligned, so the span boundaries are exact.
+    ///
+    /// Only meaningful for a container parsed from its full standalone
+    /// bytes (a [`parse_packed`] member's side info lives in the blob, not
+    /// in its buffer).
+    pub fn side_info_span(&self) -> (usize, usize) {
+        let start = self.sizes.header as usize;
+        let len = (self.sizes.split_value_tables
+            + self.sizes.fit_value_table
+            + self.sizes.cluster_maps
+            + self.sizes.dictionaries) as usize;
+        (start, start + len)
+    }
+
     /// Whether any split alphabet is dataset-indexed (paper mode) and must
     /// be regenerated via [`Self::attach_dataset`] before decoding.
     pub fn needs_dataset(&self) -> bool {
@@ -415,11 +466,23 @@ fn write_map(w: &mut BitWriter, map: &BTreeMap<ContextKey, u32>) {
     }
 }
 
+/// Checked `u64 → usize` for counts and section lengths read from container
+/// or pack-archive bytes. On 32-bit targets (or corrupt/adversarial
+/// headers) an oversized value surfaces a typed error instead of silently
+/// truncating — a truncated length would pass the plausibility caps and
+/// then mis-slice the buffer. Shared with [`crate::pack::format`].
+pub(crate) fn cast_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v)
+        .ok()
+        .with_context(|| format!("{what} {v} does not fit this platform's usize"))
+}
+
 fn read_map(r: &mut BitReader) -> Result<BTreeMap<ContextKey, u32>> {
-    let n = r.read_varint().context("map len")? as usize;
-    if n > 50_000_000 {
-        bail!("implausible map size {n}");
+    let n_raw = r.read_varint().context("map len")?;
+    if n_raw > 50_000_000 {
+        bail!("implausible map size {n_raw}");
     }
+    let n = cast_usize(n_raw, "map size")?;
     let mut map = BTreeMap::new();
     for _ in 0..n {
         let depth = r.read_varint().context("map depth")? as u16;
@@ -451,24 +514,26 @@ fn read_payload_spans(
     r: &mut BitReader,
     buf_len: usize,
 ) -> Result<(Vec<(usize, usize)>, (usize, usize))> {
-    let n = r.read_varint().context("payload tree count")? as usize;
-    if n > 50_000_000 {
-        bail!("implausible tree count {n}");
+    let n_raw = r.read_varint().context("payload tree count")?;
+    if n_raw > 50_000_000 {
+        bail!("implausible tree count {n_raw}");
     }
+    let n = cast_usize(n_raw, "payload tree count")?;
     let mut lens = Vec::with_capacity(n);
-    let mut total = 0usize;
+    // lengths accumulate in u64 and are range-checked BEFORE the usize
+    // casts: a 32-bit target must reject, not truncate, oversized sections
+    let mut total = 0u64;
     for _ in 0..n {
-        let l = r.read_varint().context("payload tree len")? as usize;
-        lens.push(l);
-        total = total
-            .checked_add(l)
-            .context("payload length overflow")?;
+        let l = r.read_varint().context("payload tree len")?;
+        total = total.checked_add(l).context("payload length overflow")?;
+        if total > (1u64 << 33) {
+            bail!("implausible payload size {total}");
+        }
+        lens.push(cast_usize(l, "payload tree len")?);
     }
-    if total > (1 << 33) {
-        bail!("implausible payload size {total}");
-    }
+    let total = cast_usize(total, "payload section size")?;
     r.align_byte();
-    let start = (r.bit_pos() / 8) as usize;
+    let start = cast_usize(r.bit_pos() / 8, "payload offset")?;
     let end = start.checked_add(total).context("payload span overflow")?;
     if end > buf_len {
         bail!("payload section truncated ({total} bytes at {start}, buffer holds {buf_len})");
@@ -651,12 +716,69 @@ pub fn parse(bytes: &[u8]) -> Result<ParsedContainer> {
 /// [`SharedBytes`] — with full validation; payload sections are recorded as
 /// spans into `buf`, never copied.
 pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
-    let buf: SharedBytes = buf.into();
-    let bytes: &[u8] = &buf;
-    let mut r = BitReader::new(bytes);
-    let mut sizes = SectionSizes::default();
+    parse_with_shared(buf.into(), None)
+}
 
-    // ---- HEADER ----
+/// Parse a **pack member** whose side-information span (TABLES + CLUSMAP +
+/// DICTS) was excised into a pack-level shared blob ([`crate::pack`]): the
+/// member buffer holds `header ++ struct ++ payloads` contiguously and
+/// `shared` holds exactly the excised bytes. The payload sections stay
+/// zero-copy spans into `buf` (one mmap of a pack serves every member); the
+/// side information — decoded into owned tables in any parse — is read from
+/// the shared blob instead.
+///
+/// `sizes.total()` reports the *logical* container size (member + blob), the
+/// size the reconstructed standalone `RFCZ` file would have.
+pub fn parse_packed(buf: impl Into<SharedBytes>, shared: &[u8]) -> Result<ParsedContainer> {
+    parse_with_shared(buf.into(), Some(shared))
+}
+
+/// Header fields (everything before the TABLES section).
+struct ParsedHeader {
+    classification: bool,
+    classes: u32,
+    n_trees: usize,
+    features: Vec<FeatureMeta>,
+    fit_codec: FitCodec,
+    conditioning: ModelConditioning,
+    header_bytes: u64,
+}
+
+/// The decode side information: TABLES + CLUSMAP + DICTS, plus the byte
+/// size of each (the middle of [`SectionSizes`]).
+struct ParsedSideInfo {
+    alphabets: ValueAlphabets,
+    indexed_splits: Vec<Option<Vec<u64>>>,
+    vn_map: BTreeMap<ContextKey, u32>,
+    split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    fit_map: BTreeMap<ContextKey, u32>,
+    vn_dicts: Vec<HuffmanCode>,
+    split_dicts: Vec<Vec<HuffmanCode>>,
+    fit_dicts: Vec<HuffmanCode>,
+    fit_models: Vec<FreqModel>,
+    fit_raw_codec: Option<F64Codec>,
+    split_value_tables: u64,
+    fit_value_table: u64,
+    cluster_maps: u64,
+    dictionaries: u64,
+}
+
+/// STRUCT + the three payload sections (spans relative to the member buffer).
+struct ParsedTail {
+    zaks_bits: Vec<bool>,
+    vars_ranges: Vec<(usize, usize)>,
+    splits_ranges: Vec<(usize, usize)>,
+    fits_ranges: Vec<(usize, usize)>,
+    vars_span: (usize, usize),
+    splits_span: (usize, usize),
+    fits_span: (usize, usize),
+    structure: u64,
+    var_names: u64,
+    split_values: u64,
+    fits: u64,
+}
+
+fn read_header(r: &mut BitReader) -> Result<ParsedHeader> {
     let mut magic = [0u8; 4];
     for m in magic.iter_mut() {
         *m = r.read_byte().context("magic")?;
@@ -670,14 +792,16 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
     }
     let classification = r.read_bits(8).context("kind")? != 0;
     let classes = r.read_varint().context("classes")? as u32;
-    let n_trees = r.read_varint().context("n_trees")? as usize;
-    if n_trees == 0 || n_trees > 50_000_000 {
-        bail!("implausible tree count {n_trees}");
+    let n_trees_raw = r.read_varint().context("n_trees")?;
+    if n_trees_raw == 0 || n_trees_raw > 50_000_000 {
+        bail!("implausible tree count {n_trees_raw}");
     }
-    let d = r.read_varint().context("features")? as usize;
-    if d == 0 || d > 10_000_000 {
-        bail!("implausible feature count {d}");
+    let n_trees = cast_usize(n_trees_raw, "tree count")?;
+    let d_raw = r.read_varint().context("features")?;
+    if d_raw == 0 || d_raw > 10_000_000 {
+        bail!("implausible feature count {d_raw}");
     }
+    let d = cast_usize(d_raw, "feature count")?;
     let mut features = Vec::with_capacity(d);
     for _ in 0..d {
         let kind = r.read_bits(8).context("feature kind")?;
@@ -686,10 +810,11 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
             1 => Some(r.read_varint().context("levels")? as u32),
             v => bail!("unknown feature kind {v}"),
         };
-        let name_len = r.read_varint().context("name len")? as usize;
-        if name_len > 4096 {
+        let name_len_raw = r.read_varint().context("name len")?;
+        if name_len_raw > 4096 {
             bail!("implausible feature name length");
         }
+        let name_len = cast_usize(name_len_raw, "feature name length")?;
         let mut name_bytes = Vec::with_capacity(name_len);
         for _ in 0..name_len {
             name_bytes.push(r.read_byte().context("name")?);
@@ -705,9 +830,21 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
         2 => FitCodec::Raw64,
         v => bail!("unknown fit codec {v}"),
     };
-    let conditioning = read_conditioning(&mut r)?;
+    let conditioning = read_conditioning(r)?;
     r.align_byte();
-    sizes.header = r.bit_pos() / 8;
+    Ok(ParsedHeader {
+        classification,
+        classes,
+        n_trees,
+        features,
+        fit_codec,
+        conditioning,
+        header_bytes: r.bit_pos() / 8,
+    })
+}
+
+fn read_side_info(r: &mut BitReader, h: &ParsedHeader) -> Result<ParsedSideInfo> {
+    let d = h.features.len();
 
     // ---- TABLES ----
     let mark = r.bit_pos();
@@ -717,21 +854,22 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
         let kind = r.read_bits(8).context("table kind")?;
         match kind {
             0 => {
-                if features[f].levels.is_some() {
+                if h.features[f].levels.is_some() {
                     bail!("numeric table for categorical feature {f}");
                 }
                 let vals =
-                    f64pack::read_block(&mut r).with_context(|| format!("split table {f}"))?;
+                    f64pack::read_block(r).with_context(|| format!("split table {f}"))?;
                 splits.push(SplitAlphabet::Numeric(vals));
             }
             2 => {
-                if features[f].levels.is_some() {
+                if h.features[f].levels.is_some() {
                     bail!("numeric table for categorical feature {f}");
                 }
-                let n = r.read_varint().context("indexed table len")? as usize;
-                if n > 500_000_000 {
+                let n_raw = r.read_varint().context("indexed table len")?;
+                if n_raw > 500_000_000 {
                     bail!("implausible indexed alphabet size");
                 }
+                let n = cast_usize(n_raw, "indexed alphabet size")?;
                 let mut ranks = Vec::with_capacity(n);
                 let mut prev = 0u64;
                 for i in 0..n {
@@ -744,13 +882,14 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
                 splits.push(SplitAlphabet::Numeric(Vec::new()));
             }
             1 => {
-                if features[f].levels.is_none() {
+                if h.features[f].levels.is_none() {
                     bail!("categorical table for numeric feature {f}");
                 }
-                let n = r.read_varint().context("table len")? as usize;
-                if n > 500_000_000 {
+                let n_raw = r.read_varint().context("table len")?;
+                if n_raw > 500_000_000 {
                     bail!("implausible alphabet size");
                 }
+                let n = cast_usize(n_raw, "alphabet size")?;
                 let mut masks = Vec::with_capacity(n);
                 for _ in 0..n {
                     masks.push(r.read_varint().context("table mask")?);
@@ -761,85 +900,105 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
         }
     }
     r.align_byte();
-    sizes.split_value_tables = (r.bit_pos() - mark) / 8;
+    let split_value_tables = (r.bit_pos() - mark) / 8;
 
     let mark = r.bit_pos();
-    let fits = f64pack::read_block(&mut r).context("fit table")?;
+    let fits = f64pack::read_block(r).context("fit table")?;
     r.align_byte();
-    sizes.fit_value_table = (r.bit_pos() - mark) / 8;
+    let fit_value_table = (r.bit_pos() - mark) / 8;
     let alphabets = ValueAlphabets { splits, fits };
 
     // ---- CLUSMAP ----
     let mark = r.bit_pos();
-    let vn_map = read_map(&mut r)?;
-    let n_split_maps = r.read_varint().context("split maps")? as usize;
-    if n_split_maps != d {
+    let vn_map = read_map(r)?;
+    let n_split_maps = r.read_varint().context("split maps")?;
+    if n_split_maps != d as u64 {
         bail!("split map count {n_split_maps} != features {d}");
     }
     let mut split_maps = Vec::with_capacity(d);
     for _ in 0..d {
-        split_maps.push(read_map(&mut r)?);
+        split_maps.push(read_map(r)?);
     }
-    let fit_map = read_map(&mut r)?;
+    let fit_map = read_map(r)?;
     r.align_byte();
-    sizes.cluster_maps = (r.bit_pos() - mark) / 8;
+    let cluster_maps = (r.bit_pos() - mark) / 8;
 
     // ---- DICTS ----
     let mark = r.bit_pos();
-    let n_vn = r.read_varint().context("vn dicts")? as usize;
-    let mut vn_dicts = Vec::with_capacity(n_vn);
+    let n_vn = cast_usize(r.read_varint().context("vn dicts")?, "vn dict count")?;
+    let mut vn_dicts = Vec::with_capacity(n_vn.min(1 << 20));
     for _ in 0..n_vn {
-        vn_dicts.push(HuffmanCode::read_dict(&mut r)?);
+        vn_dicts.push(HuffmanCode::read_dict(r)?);
     }
-    let n_sd = r.read_varint().context("split dicts")? as usize;
-    if n_sd != d {
+    let n_sd = r.read_varint().context("split dicts")?;
+    if n_sd != d as u64 {
         bail!("split dict group count mismatch");
     }
     let mut split_dicts = Vec::with_capacity(d);
     for _ in 0..d {
-        let k = r.read_varint().context("split dict k")? as usize;
-        let mut per = Vec::with_capacity(k);
+        let k = cast_usize(r.read_varint().context("split dict k")?, "split dict count")?;
+        let mut per = Vec::with_capacity(k.min(1 << 20));
         for _ in 0..k {
-            per.push(HuffmanCode::read_dict(&mut r)?);
+            per.push(HuffmanCode::read_dict(r)?);
         }
         split_dicts.push(per);
     }
-    let n_fd = r.read_varint().context("fit dicts")? as usize;
-    let mut fit_dicts = Vec::with_capacity(n_fd);
+    let n_fd = cast_usize(r.read_varint().context("fit dicts")?, "fit dict count")?;
+    let mut fit_dicts = Vec::with_capacity(n_fd.min(1 << 20));
     for _ in 0..n_fd {
-        fit_dicts.push(HuffmanCode::read_dict(&mut r)?);
+        fit_dicts.push(HuffmanCode::read_dict(r)?);
     }
-    let n_fm = r.read_varint().context("fit models")? as usize;
-    let mut fit_models = Vec::with_capacity(n_fm);
+    let n_fm = cast_usize(r.read_varint().context("fit models")?, "fit model count")?;
+    let mut fit_models = Vec::with_capacity(n_fm.min(1 << 20));
     for _ in 0..n_fm {
-        fit_models.push(FreqModel::read(&mut r)?);
+        fit_models.push(FreqModel::read(r)?);
     }
     let fit_raw_codec = if r.read_bit().context("raw codec flag")? {
-        Some(F64Codec::read_dict(&mut r)?)
+        Some(F64Codec::read_dict(r)?)
     } else {
         None
     };
-    if (fit_codec == FitCodec::Raw64) != fit_raw_codec.is_some() {
+    if (h.fit_codec == FitCodec::Raw64) != fit_raw_codec.is_some() {
         bail!("raw fit codec presence disagrees with fit codec");
     }
     r.align_byte();
-    sizes.dictionaries = (r.bit_pos() - mark) / 8;
+    let dictionaries = (r.bit_pos() - mark) / 8;
 
+    Ok(ParsedSideInfo {
+        alphabets,
+        indexed_splits,
+        vn_map,
+        split_maps,
+        fit_map,
+        vn_dicts,
+        split_dicts,
+        fit_dicts,
+        fit_models,
+        fit_raw_codec,
+        split_value_tables,
+        fit_value_table,
+        cluster_maps,
+        dictionaries,
+    })
+}
+
+fn read_tail(r: &mut BitReader, bytes: &[u8], n_trees: usize) -> Result<ParsedTail> {
     // ---- STRUCT ----
     let mark = r.bit_pos();
-    let sb_len = r.read_varint().context("struct len")? as usize;
-    if sb_len > (1 << 33) {
+    let sb_len_raw = r.read_varint().context("struct len")?;
+    if sb_len_raw > (1u64 << 33) {
         bail!("implausible struct size");
     }
+    let sb_len = cast_usize(sb_len_raw, "struct size")?;
     r.align_byte();
-    let sb_start = (r.bit_pos() / 8) as usize;
+    let sb_start = cast_usize(r.bit_pos() / 8, "struct offset")?;
     let sb_end = sb_start.checked_add(sb_len).context("struct span overflow")?;
     if sb_end > bytes.len() {
         bail!("structure section truncated");
     }
     let struct_bytes = &bytes[sb_start..sb_end];
     r.seek_bits(sb_end as u64 * 8);
-    sizes.structure = (r.bit_pos() - mark) / 8;
+    let structure = (r.bit_pos() - mark) / 8;
 
     // decode structure: 1-byte mode prefix (0 = LZSS, 1 = raw packed)
     if struct_bytes.is_empty() {
@@ -868,14 +1027,14 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
 
     // ---- VARS / SPLITS / FITS ----
     let mark = r.bit_pos();
-    let (vars_ranges, vars_span) = read_payload_spans(&mut r, bytes.len())?;
-    sizes.var_names = (r.bit_pos() - mark) / 8;
+    let (vars_ranges, vars_span) = read_payload_spans(r, bytes.len())?;
+    let var_names = (r.bit_pos() - mark) / 8;
     let mark = r.bit_pos();
-    let (splits_ranges, splits_span) = read_payload_spans(&mut r, bytes.len())?;
-    sizes.split_values = (r.bit_pos() - mark) / 8;
+    let (splits_ranges, splits_span) = read_payload_spans(r, bytes.len())?;
+    let split_values = (r.bit_pos() - mark) / 8;
     let mark = r.bit_pos();
-    let (fits_ranges, fits_span) = read_payload_spans(&mut r, bytes.len())?;
-    sizes.fits = (r.bit_pos() - mark) / 8;
+    let (fits_ranges, fits_span) = read_payload_spans(r, bytes.len())?;
+    let fits = (r.bit_pos() - mark) / 8;
 
     if vars_ranges.len() != n_trees
         || splits_ranges.len() != n_trees
@@ -884,32 +1043,88 @@ pub fn parse_arc(buf: impl Into<SharedBytes>) -> Result<ParsedContainer> {
         bail!("payload tree counts disagree with header");
     }
 
-    Ok(ParsedContainer {
-        classification,
-        classes,
-        n_trees,
-        features,
-        fit_codec,
-        conditioning,
-        alphabets,
-        indexed_splits,
-        vn_map,
-        split_maps,
-        fit_map,
-        vn_dicts,
-        split_dicts,
-        fit_dicts,
-        fit_models,
-        fit_raw_codec,
+    Ok(ParsedTail {
         zaks_bits,
         vars_ranges,
         splits_ranges,
         fits_ranges,
-        buf,
-        plan_id: NEXT_PLAN_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         vars_span,
         splits_span,
         fits_span,
+        structure,
+        var_names,
+        split_values,
+        fits,
+    })
+}
+
+/// The shared parse core. With `shared: None` the side information is read
+/// from `buf` in place (a plain standalone container); with `Some(blob)` it
+/// is read from the blob and `buf` must hold `header ++ struct ++ payloads`
+/// (a pack member). The blob must be consumed exactly — leftover bytes mean
+/// the member and the blob disagree about the format.
+fn parse_with_shared(buf: SharedBytes, shared: Option<&[u8]>) -> Result<ParsedContainer> {
+    let (h, side, tail) = {
+        let bytes: &[u8] = &buf;
+        let mut r = BitReader::new(bytes);
+        let h = read_header(&mut r)?;
+        let side = match shared {
+            None => read_side_info(&mut r, &h)?,
+            Some(blob) => {
+                let mut rs = BitReader::new(blob);
+                let side = read_side_info(&mut rs, &h)
+                    .context("shared side-information blob")?;
+                let consumed = rs.bit_pos() / 8;
+                if consumed != blob.len() as u64 {
+                    bail!(
+                        "shared side-information blob mismatch: consumed {consumed} of {} bytes",
+                        blob.len()
+                    );
+                }
+                side
+            }
+        };
+        let tail = read_tail(&mut r, bytes, h.n_trees)?;
+        (h, side, tail)
+    };
+
+    let sizes = SectionSizes {
+        header: h.header_bytes,
+        split_value_tables: side.split_value_tables,
+        fit_value_table: side.fit_value_table,
+        cluster_maps: side.cluster_maps,
+        dictionaries: side.dictionaries,
+        structure: tail.structure,
+        var_names: tail.var_names,
+        split_values: tail.split_values,
+        fits: tail.fits,
+    };
+    Ok(ParsedContainer {
+        classification: h.classification,
+        classes: h.classes,
+        n_trees: h.n_trees,
+        features: h.features,
+        fit_codec: h.fit_codec,
+        conditioning: h.conditioning,
+        alphabets: side.alphabets,
+        indexed_splits: side.indexed_splits,
+        vn_map: side.vn_map,
+        split_maps: side.split_maps,
+        fit_map: side.fit_map,
+        vn_dicts: side.vn_dicts,
+        split_dicts: side.split_dicts,
+        fit_dicts: side.fit_dicts,
+        fit_models: side.fit_models,
+        fit_raw_codec: side.fit_raw_codec,
+        zaks_bits: tail.zaks_bits,
+        vars_ranges: tail.vars_ranges,
+        splits_ranges: tail.splits_ranges,
+        fits_ranges: tail.fits_ranges,
+        buf,
+        plan_id: NEXT_PLAN_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        vars_span: tail.vars_span,
+        splits_span: tail.splits_span,
+        fits_span: tail.fits_span,
         sizes,
     })
 }
@@ -1070,5 +1285,93 @@ mod tests {
         // fresh plan ids per parse: mapped and heap parses never share plans
         assert_ne!(pc.plan_id(), heap.plan_id());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn view_aliases_its_base_and_composes() {
+        let backing: Arc<[u8]> = (0u8..64).collect::<Vec<u8>>().into();
+        let sb = SharedBytes::from(backing.clone());
+        let v = sb.slice(8, 32).unwrap();
+        assert_eq!(v.len(), 32);
+        assert_eq!(v.as_ptr() as usize, backing.as_ptr() as usize + 8, "view must alias");
+        assert_eq!(&v[..4], &[8, 9, 10, 11]);
+        // a view of a view collapses onto the root buffer
+        let vv = v.slice(4, 8).unwrap();
+        assert_eq!(vv.as_ptr() as usize, backing.as_ptr() as usize + 12);
+        assert!(matches!(&vv, SharedBytes::View { base, .. } if matches!(**base, SharedBytes::Heap(_))));
+        assert!(!vv.is_mapped());
+        // out-of-bounds views are rejected, never mis-sliced
+        assert!(sb.slice(60, 8).is_err());
+        assert!(v.slice(30, 4).is_err());
+        assert!(sb.slice(usize::MAX, 2).is_err(), "offset+len overflow must error");
+    }
+
+    #[test]
+    fn parse_packed_reconstitutes_an_excised_member() {
+        // split a standalone container at its side-info span and parse the
+        // member (header ++ struct ++ payloads) against the excised blob:
+        // every decoded field must match the plain parse
+        use crate::compress::pipeline::{CompressOptions, CompressedForest};
+        use crate::data::synthetic;
+        use crate::forest::{Forest, ForestParams};
+        let ds = synthetic::iris(77);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 78);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let plain = parse_arc(cf.bytes.clone()).unwrap();
+        let (s, e) = plain.side_info_span();
+        let blob = cf.bytes[s..e].to_vec();
+        let mut member = cf.bytes[..s].to_vec();
+        member.extend_from_slice(&cf.bytes[e..]);
+
+        let member: Arc<[u8]> = member.into();
+        let pc = parse_packed(member.clone(), &blob).unwrap();
+        assert_eq!(pc.n_trees, plain.n_trees);
+        assert_eq!(pc.features, plain.features);
+        assert_eq!(pc.zaks_bits, plain.zaks_bits);
+        assert_eq!(pc.vn_map, plain.vn_map);
+        assert_eq!(pc.vn_dicts, plain.vn_dicts);
+        for t in 0..pc.n_trees {
+            assert_eq!(pc.tree_vars(t), plain.tree_vars(t), "tree {t} vars");
+            assert_eq!(pc.tree_splits(t), plain.tree_splits(t), "tree {t} splits");
+            assert_eq!(pc.tree_fits(t), plain.tree_fits(t), "tree {t} fits");
+        }
+        // sizes report the LOGICAL container (member + blob)
+        assert_eq!(pc.sizes, plain.sizes);
+        assert_eq!(pc.sizes.total() as usize, member.len() + blob.len());
+        // payload sections are zero-copy spans into the member buffer
+        let base = member.as_ptr() as usize;
+        for sect in [pc.vars_bytes(), pc.splits_bytes(), pc.fits_bytes()] {
+            let p = sect.as_ptr() as usize;
+            assert!(p >= base && p + sect.len() <= base + member.len());
+        }
+        // the packed parse decodes to the identical forest
+        let g = crate::compress::pipeline::decompress_container(&pc).unwrap();
+        assert!(g.identical(&f));
+        // a wrong / truncated blob is a typed error, not a mis-parse
+        assert!(parse_packed(member.clone(), &blob[..blob.len() - 1]).is_err());
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(parse_packed(member, &long).is_err(), "trailing blob bytes must error");
+    }
+
+    #[test]
+    fn oversized_counts_error_before_any_cast() {
+        // a header claiming u64::MAX trees must surface a typed error on
+        // every platform (plausibility cap on 64-bit, checked cast on
+        // 32-bit) — never a silent truncation
+        let mut w = BitWriter::new();
+        for &b in MAGIC {
+            w.write_byte(b);
+        }
+        w.write_bits(VERSION as u64, 8);
+        w.write_bits(1, 8); // classification
+        w.write_varint(2); // classes
+        w.write_varint(u64::MAX); // n_trees
+        let bytes = w.into_bytes();
+        let err = parse(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("implausible") || err.contains("usize"),
+            "typed error expected, got: {err}"
+        );
     }
 }

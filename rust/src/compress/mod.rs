@@ -24,5 +24,5 @@ pub mod predict;
 
 pub use container::{FitCodec, SectionSizes, SharedBytes};
 pub use flat::{FlatTree, PlanCache};
-pub use pipeline::{CompressOptions, CompressedForest};
+pub use pipeline::{CodecPlan, CompressOptions, CompressedForest};
 pub use predict::CompressedPredictor;

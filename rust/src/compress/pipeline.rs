@@ -101,337 +101,8 @@ impl CompressedForest {
         opts: &CompressOptions,
         engine: &mut dyn LloydEngine,
     ) -> Result<Self> {
-        if forest.trees.is_empty() {
-            bail!("cannot compress an empty forest");
-        }
-        ds.validate()?;
-        let d = ds.num_features();
-
-        // ---- stage 1: structure ----
-        let (zaks_bits, _lens) = zaks::concat_forest_zaks(&forest.trees);
-        let packed = container::pack_bits(&zaks_bits);
-        // LZ helps when trees resemble each other (shallow forests, small
-        // data); deep unpruned forests have near-i.i.d. structure bits and
-        // LZ's flags only add overhead — keep whichever is smaller (the
-        // container records the choice).
-        let lz = crate::coding::lz::compress_to_bytes(&packed);
-        let struct_bytes = if lz.len() < packed.len() {
-            let mut v = vec![0u8]; // mode 0 = LZSS
-            v.extend(lz);
-            v
-        } else {
-            let mut v = vec![1u8]; // mode 1 = raw packed
-            v.extend(packed);
-            v
-        };
-
-        // ---- stage 2: models ----
-        let alphabets = ValueAlphabets::collect(forest, ds)?;
-        let models = ForestModels::extract(forest, &alphabets, opts.conditioning, opts.workers);
-
-        // ---- stage 3: clustering ----
-        let mut cluster_ks = Vec::new();
-
-        // variable names
-        let (vn_map, vn_counts) = cluster_family(
-            &models.var_names,
-            DictCost::variable_names(d),
-            opts.k_max,
-            opts.seed,
-            engine,
-        )?;
-        cluster_ks.push(("var_names".to_string(), vn_counts.len().max(1)));
-        let vn_dicts: Vec<HuffmanCode> = vn_counts
-            .iter()
-            .map(|c| huffman_from_counts(c))
-            .collect::<Result<_>>()?;
-
-        // split values, per feature
-        let n_obs = ds.num_rows();
-        let mut split_maps = Vec::with_capacity(d);
-        let mut split_dicts = Vec::with_capacity(d);
-        for f in 0..d {
-            let alpha = match &alphabets.splits[f] {
-                SplitAlphabet::Numeric(vals) => DictCost::numerical_splits(n_obs, vals.len()),
-                SplitAlphabet::Categorical(masks) => DictCost::categorical_splits(masks.len()),
-            };
-            let (map, counts) =
-                cluster_family(&models.splits[f], alpha, opts.k_max, opts.seed ^ (f as u64), engine)?;
-            if !counts.is_empty() {
-                cluster_ks.push((format!("splits[{f}]"), counts.len()));
-            }
-            split_maps.push(map);
-            split_dicts.push(
-                counts
-                    .iter()
-                    .map(|c| huffman_from_counts(c))
-                    .collect::<Result<Vec<_>>>()?,
-            );
-        }
-
-        // fits
-        let fit_alpha_size = alphabets.fit_alphabet_size(forest);
-        let mut fit_codec = if forest.classification && forest.classes == 2 {
-            FitCodec::Arith
-        } else {
-            FitCodec::Huffman
-        };
-        let (mut fit_map, fit_counts) = cluster_family(
-            &models.fits,
-            DictCost::fits(opts.fit_alpha_bits, fit_alpha_size),
-            opts.k_max,
-            opts.seed ^ 0xf17,
-            engine,
-        )?;
-        let (mut fit_dicts, fit_models_arith): (Vec<HuffmanCode>, Vec<FreqModel>) =
-            match fit_codec {
-                FitCodec::Huffman => (
-                    fit_counts
-                        .iter()
-                        .map(|c| huffman_from_counts(c))
-                        .collect::<Result<_>>()?,
-                    Vec::new(),
-                ),
-                _ => (
-                    Vec::new(),
-                    fit_counts
-                        .iter()
-                        .map(|c| FreqModel::from_probs(&crate::coding::entropy::normalize(c)))
-                        .collect::<Result<_>>()?,
-                ),
-            };
-        // Regression escape hatch: when fits are mostly unique, the value
-        // table + Huffman indices cost more than writing each fit inline
-        // through the sign/exponent codec (~54 bits for typical data; the
-        // paper's fits barely compress either: 122.1 → 118 MB on Liberty⁺).
-        // Compare exactly and pick the cheaper representation. Quantized
-        // forests (lossy §7) have C ≪ N and stay indexed.
-        let mut fit_raw_codec: Option<F64Codec> = None;
-        if !forest.classification {
-            let total_fits: u64 = models.fits.values().flat_map(|v| v.iter()).sum();
-            let indexed_bits: f64 = fit_counts
-                .iter()
-                .zip(&fit_dicts)
-                .map(|(counts, dict)| {
-                    let payload: u64 = counts
-                        .iter()
-                        .enumerate()
-                        .map(|(s, &c)| c * dict.length(s as u32) as u64)
-                        .sum();
-                    (payload + dict.dict_bits()) as f64
-                })
-                .sum::<f64>()
-                // table cost under the f64 block codec (~54 bits/value)
-                + alphabets.fits.len() as f64 * 54.0;
-            let codec = F64Codec::from_values(alphabets.fits.iter())?;
-            // expected raw bits: each node fit once, weighted by counts —
-            // approximate with the table values (every fit is in the table)
-            let raw_bits =
-                codec.expected_bits(&alphabets.fits) * total_fits as f64 + codec.dict_bits() as f64;
-            if raw_bits <= indexed_bits {
-                fit_codec = FitCodec::Raw64;
-                fit_map = BTreeMap::new();
-                fit_dicts = Vec::new();
-                fit_raw_codec = Some(codec);
-            }
-        }
-        cluster_ks.push((
-            "fits".to_string(),
-            if fit_codec == FitCodec::Raw64 { 1 } else { fit_counts.len().max(1) },
-        ));
-
-        // ---- stage 4: per-tree encoding ----
-        let vn_decode_map = &vn_map;
-        let encode_one = |tree: &Tree| -> Result<(Vec<u8>, Vec<u8>, Vec<u8>)> {
-            let mut vars_w = BitWriter::new();
-            let mut splits_w = BitWriter::new();
-            let mut fits_w = BitWriter::new();
-            let mut err: Option<anyhow::Error> = None;
-            match fit_codec {
-                FitCodec::Raw64 => {
-                    let codec = fit_raw_codec.as_ref().expect("raw codec built");
-                    tree.visit_preorder(|_, node, depth, father| {
-                        if err.is_some() {
-                            return;
-                        }
-                        let key = opts.conditioning.project(ContextKey::new(depth, father));
-                        if let Err(e) = encode_node(
-                            node,
-                            key,
-                            &alphabets,
-                            vn_decode_map,
-                            &vn_dicts,
-                            &split_maps,
-                            &split_dicts,
-                            &mut vars_w,
-                            &mut splits_w,
-                        ) {
-                            err = Some(e);
-                            return;
-                        }
-                        match node.fit {
-                            Fit::Regression(v) => {
-                                if let Err(e) = codec.encode(v, &mut fits_w) {
-                                    err = Some(e);
-                                }
-                            }
-                            Fit::Class(_) => {
-                                err = Some(anyhow::anyhow!("class fit in raw regression mode"))
-                            }
-                        }
-                    });
-                }
-                FitCodec::Huffman => {
-                    tree.visit_preorder(|_, node, depth, father| {
-                        if err.is_some() {
-                            return;
-                        }
-                        let key = opts.conditioning.project(ContextKey::new(depth, father));
-                        if let Err(e) = encode_node(
-                            node,
-                            key,
-                            &alphabets,
-                            vn_decode_map,
-                            &vn_dicts,
-                            &split_maps,
-                            &split_dicts,
-                            &mut vars_w,
-                            &mut splits_w,
-                        )
-                        .and_then(|_| {
-                            let sym = alphabets.fit_symbol(&node.fit);
-                            let cl = *fit_map.get(&key).context("fit cluster missing")?;
-                            fit_dicts[cl as usize].encode(sym, &mut fits_w)
-                        }) {
-                            err = Some(e);
-                        }
-                    });
-                }
-                FitCodec::Arith => {
-                    // collect (cluster, symbol) first: the arith encoder
-                    // borrows the writer for the whole tree
-                    let mut fit_syms: Vec<(u32, u32)> = Vec::with_capacity(tree.nodes.len());
-                    tree.visit_preorder(|_, node, depth, father| {
-                        if err.is_some() {
-                            return;
-                        }
-                        let key = opts.conditioning.project(ContextKey::new(depth, father));
-                        if let Err(e) = encode_node(
-                            node,
-                            key,
-                            &alphabets,
-                            vn_decode_map,
-                            &vn_dicts,
-                            &split_maps,
-                            &split_dicts,
-                            &mut vars_w,
-                            &mut splits_w,
-                        ) {
-                            err = Some(e);
-                            return;
-                        }
-                        let sym = alphabets.fit_symbol(&node.fit);
-                        match fit_map.get(&key) {
-                            Some(&cl) => fit_syms.push((cl, sym)),
-                            None => err = Some(anyhow::anyhow!("fit cluster missing")),
-                        }
-                    });
-                    if err.is_none() {
-                        let mut enc = ArithEncoder::new(&mut fits_w);
-                        for (cl, sym) in fit_syms {
-                            enc.encode(&fit_models_arith[cl as usize], sym)?;
-                        }
-                        enc.finish();
-                    }
-                }
-            }
-            if let Some(e) = err {
-                return Err(e);
-            }
-            Ok((vars_w.into_bytes(), splits_w.into_bytes(), fits_w.into_bytes()))
-        };
-
-        let encoded = crate::util::threads::parallel_map(&forest.trees, opts.workers, |_, t| {
-            encode_one(t)
-        });
-        let mut vars_trees = Vec::with_capacity(forest.trees.len());
-        let mut splits_trees = Vec::with_capacity(forest.trees.len());
-        let mut fits_trees = Vec::with_capacity(forest.trees.len());
-        for r in encoded {
-            let (v, s, f) = r?;
-            vars_trees.push(v);
-            splits_trees.push(s);
-            fits_trees.push(f);
-        }
-
-        // ---- assemble ----
-        let mut alphabets = alphabets;
-        if fit_codec == FitCodec::Raw64 {
-            // raw mode stores fits inline; drop the (otherwise dominant)
-            // value table
-            alphabets.fits.clear();
-        }
-        // paper mode: numeric thresholds → observation ranks
-        let indexed_splits: Vec<Option<Vec<u64>>> = if opts.dataset_indexed_splits {
-            alphabets
-                .splits
-                .iter()
-                .enumerate()
-                .map(|(f, a)| match a {
-                    SplitAlphabet::Numeric(vals) if !vals.is_empty() => {
-                        let uniq = crate::model::extract::ValueAlphabets::column_unique(ds, f)
-                            .expect("numeric column");
-                        let ranks = vals
-                            .iter()
-                            .map(|v| {
-                                uniq.binary_search_by(|x| x.partial_cmp(v).unwrap())
-                                    .expect("threshold is an observed value")
-                                    as u64
-                            })
-                            .collect();
-                        Some(ranks)
-                    }
-                    _ => None,
-                })
-                .collect()
-        } else {
-            vec![None; alphabets.splits.len()]
-        };
-        let features = ds
-            .features
-            .iter()
-            .map(|f| FeatureMeta {
-                name: f.name.clone(),
-                levels: match &f.column {
-                    Column::Numeric(_) => None,
-                    Column::Categorical { levels, .. } => Some(*levels),
-                },
-            })
-            .collect();
-        let builder = ContainerBuilder {
-            classification: forest.classification,
-            classes: forest.classes,
-            n_trees: forest.trees.len(),
-            features,
-            fit_codec,
-            conditioning: opts.conditioning,
-            alphabets,
-            indexed_splits,
-            vn_map,
-            split_maps,
-            fit_map,
-            vn_dicts,
-            split_dicts,
-            fit_dicts,
-            fit_models: fit_models_arith,
-            fit_raw_codec,
-            struct_bytes,
-            vars_trees,
-            splits_trees,
-            fits_trees,
-        };
-        let (bytes, sizes) = builder.serialize();
-        Ok(CompressedForest { bytes: bytes.into(), sizes, cluster_ks })
+        let plan = build_codec_plan(forest, ds, opts, engine)?;
+        encode_with_plan(forest, &plan, opts.workers)
     }
 
     /// Total compressed size in bytes.
@@ -474,6 +145,431 @@ impl CompressedForest {
         let sizes = pc.sizes;
         Ok(CompressedForest { bytes, sizes, cluster_ks: Vec::new() })
     }
+}
+
+/// Everything the per-tree encoder needs, independent of which trees it
+/// encodes: shared value alphabets, cluster maps, and codebooks — stages
+/// 2–3 of Algorithm 1 frozen into a reusable plan.
+///
+/// [`CompressedForest::compress_with_engine`] builds one plan per forest;
+/// [`crate::pack::compress_cohort`] builds one plan per **cohort** (the
+/// clustering runs across the union of every member's tree-model tables) and
+/// encodes each member against it — which is what makes the members'
+/// side-information sections byte-identical, and therefore dedupable into a
+/// pack-level shared-codebook blob.
+pub struct CodecPlan {
+    pub(crate) classification: bool,
+    pub(crate) classes: u32,
+    pub(crate) features: Vec<FeatureMeta>,
+    pub(crate) fit_codec: FitCodec,
+    pub(crate) conditioning: ModelConditioning,
+    pub(crate) alphabets: ValueAlphabets,
+    pub(crate) indexed_splits: Vec<Option<Vec<u64>>>,
+    pub(crate) vn_map: BTreeMap<ContextKey, u32>,
+    pub(crate) split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    pub(crate) fit_map: BTreeMap<ContextKey, u32>,
+    pub(crate) vn_dicts: Vec<HuffmanCode>,
+    pub(crate) split_dicts: Vec<Vec<HuffmanCode>>,
+    pub(crate) fit_dicts: Vec<HuffmanCode>,
+    pub(crate) fit_models: Vec<FreqModel>,
+    pub(crate) fit_raw_codec: Option<F64Codec>,
+    pub(crate) cluster_ks: Vec<(String, usize)>,
+}
+
+impl CodecPlan {
+    /// The chosen K per clustering sweep (diagnostics).
+    pub fn cluster_ks(&self) -> &[(String, usize)] {
+        &self.cluster_ks
+    }
+}
+
+/// Stages 2–3 of Algorithm 1: extract the conditional count tables from
+/// `forest` (for a cohort: the **union** forest of every member's trees),
+/// sweep the clustering per model family, pick the fit codec, and freeze the
+/// result into a [`CodecPlan`] any subset of those trees can be encoded
+/// against (losslessness only needs codebook support ⊇ member support, which
+/// the union guarantees).
+pub(crate) fn build_codec_plan(
+    forest: &Forest,
+    ds: &Dataset,
+    opts: &CompressOptions,
+    engine: &mut dyn LloydEngine,
+) -> Result<CodecPlan> {
+    if forest.trees.is_empty() {
+        bail!("cannot compress an empty forest");
+    }
+    ds.validate()?;
+    let d = ds.num_features();
+
+    // ---- stage 2: models ----
+    let alphabets = ValueAlphabets::collect(forest, ds)?;
+    let models = ForestModels::extract(forest, &alphabets, opts.conditioning, opts.workers);
+
+    // ---- stage 3: clustering ----
+    let mut cluster_ks = Vec::new();
+
+    // variable names
+    let (vn_map, vn_counts) = cluster_family(
+        &models.var_names,
+        DictCost::variable_names(d),
+        opts.k_max,
+        opts.seed,
+        engine,
+    )?;
+    cluster_ks.push(("var_names".to_string(), vn_counts.len().max(1)));
+    let vn_dicts: Vec<HuffmanCode> = vn_counts
+        .iter()
+        .map(|c| huffman_from_counts(c))
+        .collect::<Result<_>>()?;
+
+    // split values, per feature
+    let n_obs = ds.num_rows();
+    let mut split_maps = Vec::with_capacity(d);
+    let mut split_dicts = Vec::with_capacity(d);
+    for f in 0..d {
+        let alpha = match &alphabets.splits[f] {
+            SplitAlphabet::Numeric(vals) => DictCost::numerical_splits(n_obs, vals.len()),
+            SplitAlphabet::Categorical(masks) => DictCost::categorical_splits(masks.len()),
+        };
+        let (map, counts) =
+            cluster_family(&models.splits[f], alpha, opts.k_max, opts.seed ^ (f as u64), engine)?;
+        if !counts.is_empty() {
+            cluster_ks.push((format!("splits[{f}]"), counts.len()));
+        }
+        split_maps.push(map);
+        split_dicts.push(
+            counts
+                .iter()
+                .map(|c| huffman_from_counts(c))
+                .collect::<Result<Vec<_>>>()?,
+        );
+    }
+
+    // fits
+    let fit_alpha_size = alphabets.fit_alphabet_size(forest);
+    let mut fit_codec = if forest.classification && forest.classes == 2 {
+        FitCodec::Arith
+    } else {
+        FitCodec::Huffman
+    };
+    let (mut fit_map, fit_counts) = cluster_family(
+        &models.fits,
+        DictCost::fits(opts.fit_alpha_bits, fit_alpha_size),
+        opts.k_max,
+        opts.seed ^ 0xf17,
+        engine,
+    )?;
+    let (mut fit_dicts, fit_models_arith): (Vec<HuffmanCode>, Vec<FreqModel>) = match fit_codec {
+        FitCodec::Huffman => (
+            fit_counts
+                .iter()
+                .map(|c| huffman_from_counts(c))
+                .collect::<Result<_>>()?,
+            Vec::new(),
+        ),
+        _ => (
+            Vec::new(),
+            fit_counts
+                .iter()
+                .map(|c| FreqModel::from_probs(&crate::coding::entropy::normalize(c)))
+                .collect::<Result<_>>()?,
+        ),
+    };
+    // Regression escape hatch: when fits are mostly unique, the value
+    // table + Huffman indices cost more than writing each fit inline
+    // through the sign/exponent codec (~54 bits for typical data; the
+    // paper's fits barely compress either: 122.1 → 118 MB on Liberty⁺).
+    // Compare exactly and pick the cheaper representation. Quantized
+    // forests (lossy §7) have C ≪ N and stay indexed.
+    let mut fit_raw_codec: Option<F64Codec> = None;
+    if !forest.classification {
+        let total_fits: u64 = models.fits.values().flat_map(|v| v.iter()).sum();
+        let indexed_bits: f64 = fit_counts
+            .iter()
+            .zip(&fit_dicts)
+            .map(|(counts, dict)| {
+                let payload: u64 = counts
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &c)| c * dict.length(s as u32) as u64)
+                    .sum();
+                (payload + dict.dict_bits()) as f64
+            })
+            .sum::<f64>()
+            // table cost under the f64 block codec (~54 bits/value)
+            + alphabets.fits.len() as f64 * 54.0;
+        let codec = F64Codec::from_values(alphabets.fits.iter())?;
+        // expected raw bits: each node fit once, weighted by counts —
+        // approximate with the table values (every fit is in the table)
+        let raw_bits =
+            codec.expected_bits(&alphabets.fits) * total_fits as f64 + codec.dict_bits() as f64;
+        if raw_bits <= indexed_bits {
+            fit_codec = FitCodec::Raw64;
+            fit_map = BTreeMap::new();
+            fit_dicts = Vec::new();
+            fit_raw_codec = Some(codec);
+        }
+    }
+    cluster_ks.push((
+        "fits".to_string(),
+        if fit_codec == FitCodec::Raw64 { 1 } else { fit_counts.len().max(1) },
+    ));
+
+    // paper mode: numeric thresholds → observation ranks (a property of the
+    // shared alphabets, so it lives in the plan, not the per-member encode)
+    let indexed_splits: Vec<Option<Vec<u64>>> = if opts.dataset_indexed_splits {
+        alphabets
+            .splits
+            .iter()
+            .enumerate()
+            .map(|(f, a)| match a {
+                SplitAlphabet::Numeric(vals) if !vals.is_empty() => {
+                    let uniq = crate::model::extract::ValueAlphabets::column_unique(ds, f)
+                        .expect("numeric column");
+                    let ranks = vals
+                        .iter()
+                        .map(|v| {
+                            uniq.binary_search_by(|x| x.partial_cmp(v).unwrap())
+                                .expect("threshold is an observed value")
+                                as u64
+                        })
+                        .collect();
+                    Some(ranks)
+                }
+                _ => None,
+            })
+            .collect()
+    } else {
+        vec![None; alphabets.splits.len()]
+    };
+    let features = ds
+        .features
+        .iter()
+        .map(|f| FeatureMeta {
+            name: f.name.clone(),
+            levels: match &f.column {
+                Column::Numeric(_) => None,
+                Column::Categorical { levels, .. } => Some(*levels),
+            },
+        })
+        .collect();
+
+    Ok(CodecPlan {
+        classification: forest.classification,
+        classes: forest.classes,
+        features,
+        fit_codec,
+        conditioning: opts.conditioning,
+        alphabets,
+        indexed_splits,
+        vn_map,
+        split_maps,
+        fit_map,
+        vn_dicts,
+        split_dicts,
+        fit_dicts,
+        fit_models: fit_models_arith,
+        fit_raw_codec,
+        cluster_ks,
+    })
+}
+
+/// Stages 1 + 4 of Algorithm 1 against a frozen [`CodecPlan`]: Zaks-code the
+/// member's structure, Huffman/arith-encode its nodes with the plan's
+/// codebooks, and serialize a fully standalone `RFCZ` container carrying the
+/// plan's complete side information. Members of a cohort encoded against one
+/// plan therefore serialize **byte-identical** TABLES/CLUSMAP/DICTS sections
+/// — the invariant the pack format's shared-codebook dedup rides on.
+pub(crate) fn encode_with_plan(
+    forest: &Forest,
+    plan: &CodecPlan,
+    workers: usize,
+) -> Result<CompressedForest> {
+    if forest.trees.is_empty() {
+        bail!("cannot compress an empty forest");
+    }
+    if forest.classification != plan.classification || forest.classes != plan.classes {
+        bail!(
+            "forest target (classification={}, classes={}) disagrees with the codec plan \
+             (classification={}, classes={})",
+            forest.classification,
+            forest.classes,
+            plan.classification,
+            plan.classes
+        );
+    }
+
+    // ---- stage 1: structure ----
+    let (zaks_bits, _lens) = zaks::concat_forest_zaks(&forest.trees);
+    let packed = container::pack_bits(&zaks_bits);
+    // LZ helps when trees resemble each other (shallow forests, small
+    // data); deep unpruned forests have near-i.i.d. structure bits and
+    // LZ's flags only add overhead — keep whichever is smaller (the
+    // container records the choice).
+    let lz = crate::coding::lz::compress_to_bytes(&packed);
+    let struct_bytes = if lz.len() < packed.len() {
+        let mut v = vec![0u8]; // mode 0 = LZSS
+        v.extend(lz);
+        v
+    } else {
+        let mut v = vec![1u8]; // mode 1 = raw packed
+        v.extend(packed);
+        v
+    };
+
+    // ---- stage 4: per-tree encoding ----
+    let encode_one = |tree: &Tree| -> Result<(Vec<u8>, Vec<u8>, Vec<u8>)> {
+        let mut vars_w = BitWriter::new();
+        let mut splits_w = BitWriter::new();
+        let mut fits_w = BitWriter::new();
+        let mut err: Option<anyhow::Error> = None;
+        match plan.fit_codec {
+            FitCodec::Raw64 => {
+                let codec = plan.fit_raw_codec.as_ref().expect("raw codec built");
+                tree.visit_preorder(|_, node, depth, father| {
+                    if err.is_some() {
+                        return;
+                    }
+                    let key = plan.conditioning.project(ContextKey::new(depth, father));
+                    if let Err(e) = encode_node(
+                        node,
+                        key,
+                        &plan.alphabets,
+                        &plan.vn_map,
+                        &plan.vn_dicts,
+                        &plan.split_maps,
+                        &plan.split_dicts,
+                        &mut vars_w,
+                        &mut splits_w,
+                    ) {
+                        err = Some(e);
+                        return;
+                    }
+                    match node.fit {
+                        Fit::Regression(v) => {
+                            if let Err(e) = codec.encode(v, &mut fits_w) {
+                                err = Some(e);
+                            }
+                        }
+                        Fit::Class(_) => {
+                            err = Some(anyhow::anyhow!("class fit in raw regression mode"))
+                        }
+                    }
+                });
+            }
+            FitCodec::Huffman => {
+                tree.visit_preorder(|_, node, depth, father| {
+                    if err.is_some() {
+                        return;
+                    }
+                    let key = plan.conditioning.project(ContextKey::new(depth, father));
+                    if let Err(e) = encode_node(
+                        node,
+                        key,
+                        &plan.alphabets,
+                        &plan.vn_map,
+                        &plan.vn_dicts,
+                        &plan.split_maps,
+                        &plan.split_dicts,
+                        &mut vars_w,
+                        &mut splits_w,
+                    )
+                    .and_then(|_| {
+                        let sym = plan.alphabets.fit_symbol(&node.fit);
+                        let cl = *plan.fit_map.get(&key).context("fit cluster missing")?;
+                        plan.fit_dicts[cl as usize].encode(sym, &mut fits_w)
+                    }) {
+                        err = Some(e);
+                    }
+                });
+            }
+            FitCodec::Arith => {
+                // collect (cluster, symbol) first: the arith encoder
+                // borrows the writer for the whole tree
+                let mut fit_syms: Vec<(u32, u32)> = Vec::with_capacity(tree.nodes.len());
+                tree.visit_preorder(|_, node, depth, father| {
+                    if err.is_some() {
+                        return;
+                    }
+                    let key = plan.conditioning.project(ContextKey::new(depth, father));
+                    if let Err(e) = encode_node(
+                        node,
+                        key,
+                        &plan.alphabets,
+                        &plan.vn_map,
+                        &plan.vn_dicts,
+                        &plan.split_maps,
+                        &plan.split_dicts,
+                        &mut vars_w,
+                        &mut splits_w,
+                    ) {
+                        err = Some(e);
+                        return;
+                    }
+                    let sym = plan.alphabets.fit_symbol(&node.fit);
+                    match plan.fit_map.get(&key) {
+                        Some(&cl) => fit_syms.push((cl, sym)),
+                        None => err = Some(anyhow::anyhow!("fit cluster missing")),
+                    }
+                });
+                if err.is_none() {
+                    let mut enc = ArithEncoder::new(&mut fits_w);
+                    for (cl, sym) in fit_syms {
+                        enc.encode(&plan.fit_models[cl as usize], sym)?;
+                    }
+                    enc.finish();
+                }
+            }
+        }
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok((vars_w.into_bytes(), splits_w.into_bytes(), fits_w.into_bytes()))
+    };
+
+    let encoded =
+        crate::util::threads::parallel_map(&forest.trees, workers, |_, t| encode_one(t));
+    let mut vars_trees = Vec::with_capacity(forest.trees.len());
+    let mut splits_trees = Vec::with_capacity(forest.trees.len());
+    let mut fits_trees = Vec::with_capacity(forest.trees.len());
+    for r in encoded {
+        let (v, s, f) = r?;
+        vars_trees.push(v);
+        splits_trees.push(s);
+        fits_trees.push(f);
+    }
+
+    // ---- assemble ----
+    let mut alphabets = plan.alphabets.clone();
+    if plan.fit_codec == FitCodec::Raw64 {
+        // raw mode stores fits inline; drop the (otherwise dominant)
+        // value table
+        alphabets.fits.clear();
+    }
+    let builder = ContainerBuilder {
+        classification: forest.classification,
+        classes: forest.classes,
+        n_trees: forest.trees.len(),
+        features: plan.features.clone(),
+        fit_codec: plan.fit_codec,
+        conditioning: plan.conditioning,
+        alphabets,
+        indexed_splits: plan.indexed_splits.clone(),
+        vn_map: plan.vn_map.clone(),
+        split_maps: plan.split_maps.clone(),
+        fit_map: plan.fit_map.clone(),
+        vn_dicts: plan.vn_dicts.clone(),
+        split_dicts: plan.split_dicts.clone(),
+        fit_dicts: plan.fit_dicts.clone(),
+        fit_models: plan.fit_models.clone(),
+        fit_raw_codec: plan.fit_raw_codec.clone(),
+        struct_bytes,
+        vars_trees,
+        splits_trees,
+        fits_trees,
+    };
+    let (bytes, sizes) = builder.serialize();
+    Ok(CompressedForest { bytes: bytes.into(), sizes, cluster_ks: plan.cluster_ks.clone() })
 }
 
 /// Cluster one model family: sweep K, densify cluster ids to the non-empty

@@ -12,8 +12,9 @@
 //!                                         spills=.. reloads=..
 //!                                         spill_bytes=..
 //!                                         plan_hits=.. plan_misses=..
+//!                                         pack_loads=.. pack_releases=..
 //! BYTES                             → OK resident=<bytes> plans=<bytes>
-//!                                         spilled=<bytes>
+//!                                         spilled=<bytes> packed=<bytes>
 //! QUIT                              → connection closes
 //! ```
 //!
@@ -314,10 +315,11 @@ fn handle_line(
         "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
         "STATS" => Ok(Some(stats_line(&store.stats()))),
         "BYTES" => Ok(Some(format!(
-            "OK resident={} plans={} spilled={}",
+            "OK resident={} plans={} spilled={} packed={}",
             store.resident_bytes(),
             store.plan_bytes(),
-            store.spilled_bytes()
+            store.spilled_bytes(),
+            store.packed_bytes()
         ))),
         "QUIT" => Ok(None),
         other => bail!("unknown verb {other:?}"),
@@ -329,7 +331,8 @@ fn handle_line(
 fn stats_line(s: &StoreStats) -> String {
     format!(
         "OK requests={} batches={} mean_us={} max_us={} evictions={} \
-         spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={}",
+         spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
+         pack_loads={} pack_releases={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
@@ -339,7 +342,9 @@ fn stats_line(s: &StoreStats) -> String {
         s.reloads,
         s.spill_bytes,
         s.plan_hits,
-        s.plan_misses
+        s.plan_misses,
+        s.pack_loads,
+        s.pack_releases
     )
 }
 
@@ -393,6 +398,10 @@ mod tests {
         assert!(
             line.contains("spills=0") && line.contains("reloads=0")
                 && line.contains("spill_bytes=0"),
+            "{line}"
+        );
+        assert!(
+            line.contains("pack_loads=0") && line.contains("pack_releases=0"),
             "{line}"
         );
         // and a populated window reports the true per-request mean

@@ -14,10 +14,10 @@
 //!   an insert pushes past the budget, least-recently-used models are
 //!   evicted until the store fits again; every prediction touches an atomic
 //!   LRU clock, no lock required.
-//! * **Two tiers (RAM → disk)** — with a spill directory configured
-//!   ([`ModelStore::spill_dir`]), a budget eviction *spills* the model's
-//!   container bytes to disk instead of dropping it. The next request for a
-//!   spilled model reloads it through an `mmap`-backed buffer
+//! * **Three tiers (RAM → disk spill → pack)** — with a spill directory
+//!   configured ([`ModelStore::spill_dir`]), a budget eviction *spills* the
+//!   model's container bytes to disk instead of dropping it. The next
+//!   request for a spilled model reloads it through an `mmap`-backed buffer
 //!   ([`crate::util::mmap::Mmap`]): because the zero-copy parse only records
 //!   spans, the reload is a map + header parse — no read, no payload
 //!   memcpy. The disk tier has its own byte budget
@@ -25,12 +25,22 @@
 //!   *that* is gone. Tier lifecycle: `Resident → Spilled → (reload →
 //!   Resident | LRU → gone)`; spill files are deleted on reload, removal,
 //!   replacement, and store shutdown — they are cache, never durable state.
+//!   Separately, [`ModelStore::attach_pack`] mounts every member of an
+//!   `RFPK` archive ([`crate::pack::PackArchive`]) as a **Packed**-tier
+//!   model: nothing is parsed until the first request
+//!   (`Packed → Resident`), and a budget eviction of a pack member
+//!   *releases* it back to its archive (`Resident → Packed`) — no spill
+//!   file, no disk write, the pack keeps the bytes. Removing a member (or
+//!   the whole store) never deletes the pack: archives are durable
+//!   artifacts, unlike spill files.
 //! * **Zero-copy residency** — a stored model holds one shared container
-//!   buffer; its predictor's sections are views into it, so
-//!   `resident_bytes` is an honest measure of what the model costs.
+//!   buffer; its predictor's sections are views into it (for a pack member:
+//!   into the pack's single mapping), so `resident_bytes` is an honest
+//!   measure of what the model costs.
 //!
 //! Budget accounting order under pressure: decoded **plans** are dropped
-//! first (they rebuild on demand), then models **spill** to disk (a reload
+//! first (they rebuild on demand), then pack members **release** to their
+//! archive (free) and directly-inserted models **spill** to disk (a reload
 //! is an mmap away), and only past the spill budget is a model **evicted**
 //! outright.
 
@@ -39,6 +49,7 @@ use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
+use crate::pack::PackArchive;
 use crate::util::mmap::Mmap;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -84,6 +95,14 @@ pub struct StoreStats {
     /// Decoded plan bytes currently resident (charged against the store's
     /// `max_resident_bytes` budget).
     pub plan_bytes: u64,
+    /// Packed → Resident transitions (a member parsed out of its archive).
+    pub pack_loads: u64,
+    /// Resident → Packed transitions (a member released back to its archive
+    /// under budget pressure — free, no disk write).
+    pub pack_releases: u64,
+    /// Logical container bytes currently parked in the Packed tier
+    /// (unloaded pack members).
+    pub packed_bytes: u64,
 }
 
 impl StoreStats {
@@ -97,9 +116,19 @@ impl StoreStats {
     }
 }
 
+/// Where a resident model's bytes came from — decides what a budget
+/// eviction does with it (spill/drop vs release to its pack).
+enum ModelOrigin {
+    /// Directly inserted ([`ModelStore::insert`]).
+    Direct,
+    /// Loaded out of a model pack; eviction releases back to the archive.
+    Packed { pack: Arc<PackArchive>, member: usize },
+}
+
 struct StoredModel {
     predictor: CompressedPredictor,
     compressed_bytes: u64,
+    origin: ModelOrigin,
     /// LRU stamp: the store clock value of the last touch.
     last_used: AtomicU64,
 }
@@ -113,10 +142,25 @@ struct SpillEntry {
     last_used: u64,
 }
 
+/// An unloaded pack member: the archive holds the bytes; nothing is parsed
+/// or resident until the first request.
+struct PackedEntry {
+    pack: Arc<PackArchive>,
+    member: usize,
+    /// Logical container bytes (what the member costs once Resident).
+    bytes: u64,
+    /// LRU stamp frozen at attach/release time. No eviction scans the
+    /// Packed tier today (its members cost nothing until loaded); the
+    /// stamp is kept for symmetry with [`SpillEntry`] and as the input a
+    /// future pack-prefetch heuristic would rank members by.
+    last_used: u64,
+}
+
 /// The tier a named model currently occupies.
 enum Tier {
     Resident(Arc<StoredModel>),
     Spilled(SpillEntry),
+    Packed(PackedEntry),
 }
 
 struct Shard {
@@ -135,6 +179,8 @@ pub struct ModelStore {
     max_resident_bytes: Option<u64>,
     /// Sum of spill-file bytes over disk-tier models.
     spilled: AtomicU64,
+    /// Sum of logical bytes over unloaded Packed-tier members.
+    packed: AtomicU64,
     /// Where evicted models spill to (None = evictions drop models).
     spill_dir: Option<PathBuf>,
     /// Byte cap of the spill tier (None = unbounded disk).
@@ -193,6 +239,7 @@ impl ModelStore {
             resident: AtomicU64::new(0),
             max_resident_bytes,
             spilled: AtomicU64::new(0),
+            packed: AtomicU64::new(0),
             spill_dir: None,
             max_spill_bytes: None,
             spill_seq: AtomicU64::new(0),
@@ -279,6 +326,7 @@ impl ModelStore {
         let model = Arc::new(StoredModel {
             predictor,
             compressed_bytes: bytes,
+            origin: ModelOrigin::Direct,
             last_used: AtomicU64::new(self.tick()),
         });
         // account the bytes BEFORE the model becomes visible in its shard:
@@ -293,6 +341,15 @@ impl ModelStore {
             .write()
             .unwrap()
             .insert(name.to_string(), Tier::Resident(model));
+        self.retire_replaced(old);
+        self.enforce_budget(name);
+        Ok(())
+    }
+
+    /// Release a replaced tier entry's resources: bytes accounting, decoded
+    /// plans, spill file. A pack archive is never touched — it may back any
+    /// number of other members (and is durable, unlike spill files).
+    fn retire_replaced(&self, old: Option<Tier>) {
         match old {
             Some(Tier::Resident(old)) => {
                 self.resident.fetch_sub(old.compressed_bytes, Ordering::Relaxed);
@@ -305,10 +362,11 @@ impl ModelStore {
                 self.spilled.fetch_sub(e.bytes, Ordering::Relaxed);
                 let _ = std::fs::remove_file(&e.path);
             }
+            Some(Tier::Packed(e)) => {
+                self.packed.fetch_sub(e.bytes, Ordering::Relaxed);
+            }
             None => {}
         }
-        self.enforce_budget(name);
-        Ok(())
     }
 
     /// Load a container file from disk.
@@ -316,6 +374,44 @@ impl ModelStore {
         let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         let cf = CompressedForest::from_bytes(bytes)?;
         self.insert(name, &cf)
+    }
+
+    /// Mount every member of a pack archive as a model of this store, named
+    /// by its member key (replacing same-named models). Members start in
+    /// the **Packed** tier — nothing is parsed and no RAM budget is spent
+    /// until the first request loads a member ([`StoreStats::pack_loads`]);
+    /// budget evictions of loaded members *release* them back here instead
+    /// of spilling ([`StoreStats::pack_releases`]). Returns the number of
+    /// members attached.
+    pub fn attach_pack(&self, pack: &Arc<PackArchive>) -> Result<usize> {
+        // refuse up front any member that could never be loaded, like
+        // insert() does for oversized models — attach is the admin surface
+        if let Some(budget) = self.max_resident_bytes {
+            for i in 0..pack.member_count() {
+                let bytes = pack.member_logical_bytes(i);
+                if bytes > budget {
+                    bail!(
+                        "pack member {:?} ({bytes} container bytes) exceeds the store \
+                         budget ({budget} bytes) on its own",
+                        pack.key(i)
+                    );
+                }
+            }
+        }
+        for i in 0..pack.member_count() {
+            let name = pack.key(i).to_string();
+            let bytes = pack.member_logical_bytes(i);
+            let entry = Tier::Packed(PackedEntry {
+                pack: pack.clone(),
+                member: i,
+                bytes,
+                last_used: self.tick(),
+            });
+            self.packed.fetch_add(bytes, Ordering::Relaxed);
+            let old = self.shard(&name).models.write().unwrap().insert(name, entry);
+            self.retire_replaced(old);
+        }
+        Ok(pack.member_count())
     }
 
     /// Enforce `max_resident_bytes` over compressed bytes **plus** decoded
@@ -332,6 +428,27 @@ impl ModelStore {
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
         while self.resident.load(Ordering::Relaxed) > budget {
             let Some(name) = self.lru_resident_victim(keep) else { break };
+            // snapshot the victim: every destructive action below verifies
+            // it still acts on THIS model, so losing a race to a concurrent
+            // release/spill/replace of the same name can only make us
+            // rescan — never delete a successor entry (in particular, a
+            // pack member another thread just released must not fall
+            // through to an eviction)
+            let victim = {
+                let models = self.shard(&name).models.read().unwrap();
+                match models.get(&name) {
+                    Some(Tier::Resident(m)) => m.clone(),
+                    // raced away already; that freed bytes — rescan
+                    _ => continue,
+                }
+            };
+            if matches!(victim.origin, ModelOrigin::Packed { .. }) {
+                // pack members release back to their archive: free, no disk
+                // write, the pack keeps the bytes. A false return means a
+                // racing thread beat us to it — either way, rescan.
+                self.release(&name);
+                continue;
+            }
             if self.spill_dir.is_some() {
                 match self.spill(&name) {
                     Ok(true) => continue,
@@ -343,7 +460,7 @@ impl ModelStore {
                     Err(_) => {}
                 }
             }
-            if self.remove(&name) {
+            if self.evict_exact(&name, &victim) {
                 self.stats.lock().unwrap().evictions += 1;
             }
         }
@@ -351,6 +468,28 @@ impl ModelStore {
         // the slack
         self.plans
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
+    }
+
+    /// Drop `name` only if it is still the exact Resident model chosen as
+    /// the eviction victim (`Arc` identity). A concurrent release, spill,
+    /// or replace between victim selection and here leaves the successor
+    /// entry untouched and reports `false` (the racer already freed bytes).
+    fn evict_exact(&self, name: &str, victim: &Arc<StoredModel>) -> bool {
+        let removed = {
+            let mut models = self.shard(name).models.write().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) if Arc::ptr_eq(m, victim) => models.remove(name),
+                _ => None,
+            }
+        };
+        match removed {
+            Some(Tier::Resident(m)) => {
+                self.resident.fetch_sub(m.compressed_bytes, Ordering::Relaxed);
+                self.plans.purge_model(m.predictor.model_id());
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Least-recently-used RAM-resident model, excluding `keep`.
@@ -415,9 +554,14 @@ impl ModelStore {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
                 Some(Tier::Resident(m)) => m.clone(),
-                Some(Tier::Spilled(_)) | None => return Ok(false),
+                Some(Tier::Spilled(_) | Tier::Packed(_)) | None => return Ok(false),
             }
         };
+        // a pack member never spills: its bytes already live in the archive
+        // — a spill file would duplicate them. Release instead.
+        if matches!(model.origin, ModelOrigin::Packed { .. }) {
+            return Ok(self.release(name));
+        }
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating spill dir {}", dir.display()))?;
         let seq = self.spill_seq.fetch_add(1, Ordering::Relaxed);
@@ -478,6 +622,131 @@ impl ModelStore {
         Ok(true)
     }
 
+    /// Release a RAM-resident pack member back to its archive's Packed tier
+    /// (`Resident → Packed`). Free: the pack still holds the bytes, so
+    /// nothing is written and nothing can fail — which is why the budget
+    /// path tries release before spill. Returns `false` when the model is
+    /// not resident or did not come from a pack. The released parse's plans
+    /// are purged (they pin the dead `plan_id`); the next load stamps a
+    /// fresh one, same discipline as spill/reload.
+    pub fn release(&self, name: &str) -> bool {
+        let model = {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => m.clone(),
+                _ => return false,
+            }
+        };
+        let ModelOrigin::Packed { pack, member } = &model.origin else {
+            return false;
+        };
+        let released = {
+            let mut models = self.shard(name).models.write().unwrap();
+            // still the exact model we snapshotted (not removed/replaced)?
+            let unchanged = matches!(
+                models.get(name),
+                Some(Tier::Resident(m)) if Arc::ptr_eq(m, &model)
+            );
+            if unchanged {
+                models.insert(
+                    name.to_string(),
+                    Tier::Packed(PackedEntry {
+                        pack: pack.clone(),
+                        member: *member,
+                        bytes: model.compressed_bytes,
+                        last_used: model.last_used.load(Ordering::Relaxed),
+                    }),
+                );
+                // counters move inside the lock (same ordering rule as
+                // spill: a racing load must never observe Packed before
+                // the fetch_add lands)
+                self.resident.fetch_sub(model.compressed_bytes, Ordering::Relaxed);
+                self.packed.fetch_add(model.compressed_bytes, Ordering::Relaxed);
+            }
+            unchanged
+        };
+        if released {
+            self.plans.purge_model(model.predictor.model_id());
+            self.stats.lock().unwrap().pack_releases += 1;
+        }
+        released
+    }
+
+    /// Parse a Packed-tier member out of its archive and make it Resident
+    /// (`Packed → Resident`). The parse rides the pack's mapping — verbatim
+    /// members are fully zero-copy; shared-codebook members decode their
+    /// side information from the pack blob. Parse + decoder build run
+    /// outside every lock; the winner of a load race installs its model,
+    /// losers adopt it (the reload discipline).
+    fn load_packed(&self, name: &str) -> Result<Arc<StoredModel>> {
+        let (pack, member, bytes) = {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => {
+                    m.last_used.store(self.tick(), Ordering::Relaxed);
+                    return Ok(m.clone());
+                }
+                Some(Tier::Packed(e)) => (e.pack.clone(), e.member, e.bytes),
+                // the name was replaced by a different (spilled) model in
+                // the instant between dispatch and here — rare admin race;
+                // surface it rather than chase the new tier
+                Some(Tier::Spilled(_)) => bail!("model {name:?} changed during pack load"),
+                None => bail!("unknown model {name:?}"),
+            }
+        };
+        let pc = pack
+            .parse_member(member)
+            .with_context(|| format!("loading pack member {name:?}"))?;
+        let predictor = CompressedPredictor::new(pc)?
+            .with_workers(self.predict_workers)
+            .with_plan_cache(self.plans.clone());
+        let model = Arc::new(StoredModel {
+            predictor,
+            compressed_bytes: bytes,
+            origin: ModelOrigin::Packed { pack: pack.clone(), member },
+            last_used: AtomicU64::new(self.tick()),
+        });
+        enum Outcome {
+            Installed,
+            LostRace(Arc<StoredModel>),
+            Gone,
+        }
+        let outcome = {
+            let mut models = self.shard(name).models.write().unwrap();
+            let state = match models.get(name) {
+                // still the exact entry we snapshotted — same archive, same
+                // member. A same-named entry from a *re-attached* pack must
+                // not be overwritten by our (now stale) parse, and its
+                // byte count must not be mixed into our accounting.
+                Some(Tier::Packed(e)) if Arc::ptr_eq(&e.pack, &pack) && e.member == member => {
+                    Outcome::Installed
+                }
+                // lost a load race: adopt the winner's model
+                Some(Tier::Resident(m)) => Outcome::LostRace(m.clone()),
+                Some(Tier::Packed(_) | Tier::Spilled(_)) | None => Outcome::Gone,
+            };
+            if matches!(state, Outcome::Installed) {
+                // same ordering rule as insert: account resident bytes
+                // before the entry becomes visible as Resident
+                self.resident.fetch_add(bytes, Ordering::Relaxed);
+                self.packed.fetch_sub(bytes, Ordering::Relaxed);
+                models.insert(name.to_string(), Tier::Resident(model.clone()));
+            }
+            state
+        };
+        match outcome {
+            Outcome::LostRace(m) => return Ok(m),
+            // removed, or replaced by a different entry (e.g. a re-attached
+            // archive) mid-load: surface the transient race like reload does
+            Outcome::Gone => bail!("model {name:?} changed or was removed during pack load"),
+            Outcome::Installed => {}
+        }
+        self.stats.lock().unwrap().pack_loads += 1;
+        // the load grew the RAM tier; it may need to release/spill another
+        self.enforce_budget(name);
+        Ok(model)
+    }
+
     /// Reload a spilled model through an mmap-backed buffer. The map + parse
     /// + decoder build runs outside every lock; the winner of a reload race
     /// installs its model, losers adopt it. On success the spill file is
@@ -492,6 +761,8 @@ impl ModelStore {
                     return Ok(m.clone());
                 }
                 Some(Tier::Spilled(e)) => (e.path.clone(), e.bytes),
+                // replaced by a pack attach mid-request — rare admin race
+                Some(Tier::Packed(_)) => bail!("model {name:?} changed during reload"),
                 None => bail!("unknown model {name:?}"),
             }
         };
@@ -522,6 +793,7 @@ impl ModelStore {
         let model = Arc::new(StoredModel {
             predictor,
             compressed_bytes: bytes,
+            origin: ModelOrigin::Direct,
             last_used: AtomicU64::new(self.tick()),
         });
         enum Outcome {
@@ -535,7 +807,7 @@ impl ModelStore {
                 Some(Tier::Spilled(_)) => Outcome::Installed,
                 // lost a reload race: adopt the winner's model
                 Some(Tier::Resident(m)) => Outcome::LostRace(m.clone()),
-                None => Outcome::Removed,
+                Some(Tier::Packed(_)) | None => Outcome::Removed,
             };
             if matches!(state, Outcome::Installed) {
                 // same ordering rule as insert: account resident bytes
@@ -573,6 +845,12 @@ impl ModelStore {
                 let _ = std::fs::remove_file(&e.path);
                 true
             }
+            // the member leaves the store; the archive (shared, durable)
+            // stays on disk untouched
+            Some(Tier::Packed(e)) => {
+                self.packed.fetch_sub(e.bytes, Ordering::Relaxed);
+                true
+            }
             None => false,
         }
     }
@@ -586,6 +864,16 @@ impl ModelStore {
         matches!(
             self.shard(name).models.read().unwrap().get(name),
             Some(Tier::Spilled(_))
+        )
+    }
+
+    /// Whether a model currently sits unloaded in the Packed tier (a loaded
+    /// pack member is Resident and reports `false` here, mirroring
+    /// [`Self::is_spilled`]).
+    pub fn is_packed(&self, name: &str) -> bool {
+        matches!(
+            self.shard(name).models.read().unwrap().get(name),
+            Some(Tier::Packed(_))
         )
     }
 
@@ -623,6 +911,21 @@ impl ModelStore {
             .sum()
     }
 
+    /// Number of members currently unloaded in the Packed tier.
+    pub fn packed_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.models
+                    .read()
+                    .unwrap()
+                    .values()
+                    .filter(|t| matches!(t, Tier::Packed(_)))
+                    .count()
+            })
+            .sum()
+    }
+
     /// Total compressed bytes RAM-resident (the "storage budget" figure;
     /// decoded plan bytes are reported separately by [`Self::plan_bytes`],
     /// disk-tier bytes by [`Self::spilled_bytes`]).
@@ -633,6 +936,13 @@ impl ModelStore {
     /// Container bytes currently parked in the spill directory.
     pub fn spilled_bytes(&self) -> u64 {
         self.spilled.load(Ordering::Relaxed)
+    }
+
+    /// Logical container bytes of unloaded Packed-tier members (what they
+    /// would cost Resident; the archive's bytes on disk are shared and
+    /// counted once per pack, not per member).
+    pub fn packed_bytes(&self) -> u64 {
+        self.packed.load(Ordering::Relaxed)
     }
 
     /// Decoded flat-plan bytes currently resident.
@@ -652,25 +962,32 @@ impl ModelStore {
         s.plan_misses = p.misses;
         s.plan_bytes = p.resident_bytes;
         s.spill_bytes = self.spilled.load(Ordering::Relaxed);
+        s.packed_bytes = self.packed.load(Ordering::Relaxed);
         s
     }
 
     /// Look a model up and stamp its LRU clock. RAM-resident models come
     /// back from a read-locked map probe; spilled models are reloaded
-    /// through the mmap path first ([`Self::reload`]).
+    /// through the mmap path ([`Self::reload`]); unloaded pack members are
+    /// parsed out of their archive ([`Self::load_packed`]).
     fn get(&self, name: &str) -> Result<Arc<StoredModel>> {
-        {
+        let packed = {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
                 Some(Tier::Resident(m)) => {
                     m.last_used.store(self.tick(), Ordering::Relaxed);
                     return Ok(m.clone());
                 }
-                Some(Tier::Spilled(_)) => {} // fall through to reload
+                Some(Tier::Spilled(_)) => false,
+                Some(Tier::Packed(_)) => true,
                 None => bail!("unknown model {name:?}"),
             }
+        };
+        if packed {
+            self.load_packed(name)
+        } else {
+            self.reload(name)
         }
-        self.reload(name)
     }
 
     /// Predict a single observation against a named model. The shard lock
@@ -1206,5 +1523,129 @@ mod tests {
         assert!(store.spill("m").is_err());
         let with_dir = ModelStore::new().spill_dir(temp_spill_dir("nodir"));
         assert!(!with_dir.spill("ghost").unwrap(), "unknown models spill to nothing");
+    }
+
+    // ------------------------------------------------------ packed tier
+
+    /// A cohort pack over n tiny iris forests, keys `user-<i>`.
+    fn iris_pack(n: usize, seed: u64) -> (Arc<PackArchive>, Vec<crate::forest::Forest>, Dataset) {
+        use crate::forest::{Forest, ForestParams};
+        let ds = synthetic::iris(83);
+        let forests: Vec<Forest> = (0..n)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+            .collect();
+        let cohort =
+            crate::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        let mut b = crate::pack::PackBuilder::new();
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("user-{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, _) = b.build().unwrap();
+        (Arc::new(PackArchive::from_bytes(bytes).unwrap()), forests, ds)
+    }
+
+    #[test]
+    fn attach_load_release_round_trip() {
+        let (pack, forests, ds) = iris_pack(4, 21);
+        let store = ModelStore::new();
+        assert_eq!(store.attach_pack(&pack).unwrap(), 4);
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.packed_len(), 4, "members start unloaded");
+        assert_eq!(store.resident_bytes(), 0, "attach costs no RAM");
+        assert!(store.packed_bytes() > 0);
+        assert!(store.is_packed("user-0") && store.contains("user-0"));
+
+        // first request loads the member out of the archive
+        let vals = row_values(&ds, 0);
+        let out = store.predict("user-0", &vals).unwrap();
+        assert_eq!(out, PredictOne::Class(forests[0].predict_class(&ds, 0)));
+        assert!(!store.is_packed("user-0"), "loaded member is Resident");
+        assert_eq!(store.packed_len(), 3);
+        assert!(store.resident_bytes() > 0);
+        let s = store.stats();
+        assert_eq!((s.pack_loads, s.pack_releases), (1, 0));
+
+        // a batch decodes flat plans for the loaded member...
+        let rows: Vec<Vec<ObsValue>> = (0..16).map(|r| row_values(&ds, r)).collect();
+        store.predict_batch("user-0", &rows).unwrap();
+        assert!(store.plan_bytes() > 0);
+
+        // release parks it back in the archive — no disk write, no eviction
+        assert!(store.release("user-0"));
+        assert!(store.is_packed("user-0"));
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(store.stats().pack_releases, 1);
+        assert!(!store.release("user-0"), "already released: no-op");
+        assert_eq!(store.plan_bytes(), 0, "released member's plans are purged");
+
+        // and it serves again, identically, through a fresh load
+        let again = store.predict("user-0", &vals).unwrap();
+        assert_eq!(again, out);
+        assert_eq!(store.stats().pack_loads, 2);
+    }
+
+    #[test]
+    fn budget_releases_pack_members_instead_of_spilling() {
+        let (pack, forests, ds) = iris_pack(4, 22);
+        let one = pack.member_logical_bytes(0);
+        let dir = temp_spill_dir("packrelease");
+        let _ = std::fs::remove_dir_all(&dir);
+        // room for ~2 loaded members, spill dir armed — members must still
+        // RELEASE (free) rather than spill (disk write)
+        let store = ModelStore::with_budget(2 * one + one / 2).spill_dir(&dir);
+        store.attach_pack(&pack).unwrap();
+        for i in 0..4 {
+            let name = format!("user-{i}");
+            let out = store.predict(&name, &row_values(&ds, i)).unwrap();
+            assert_eq!(out, PredictOne::Class(forests[i].predict_class(&ds, i)));
+        }
+        assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+        let s = store.stats();
+        assert_eq!(s.pack_loads, 4);
+        assert!(s.pack_releases >= 1, "budget pressure must release members");
+        assert_eq!(s.spills, 0, "pack members never spill");
+        assert_eq!(s.evictions, 0, "pack members never drop");
+        assert_eq!(spill_files(&dir).len(), 0, "no spill files for pack members");
+        assert_eq!(store.len(), 4, "every member is still owned");
+        // spill() on a loaded pack member delegates to release
+        let loaded = store
+            .names()
+            .into_iter()
+            .find(|n| !store.is_packed(n))
+            .expect("some member is resident");
+        assert!(store.spill(&loaded).unwrap());
+        assert!(store.is_packed(&loaded), "spill of a pack member = release");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pack_member_removal_and_replacement_keep_the_archive_intact() {
+        let (pack, _, _) = iris_pack(3, 23);
+        let store = ModelStore::new();
+        store.attach_pack(&pack).unwrap();
+        // removing a member never touches the archive
+        assert!(store.remove("user-0"));
+        assert!(!store.contains("user-0"));
+        assert_eq!(store.len(), 2);
+        assert!(pack.parse_member(0).is_ok(), "the archive still serves member 0");
+        // a direct insert replaces a packed member cleanly
+        let (cf, _, _) = iris_model(24);
+        store.insert("user-1", &cf).unwrap();
+        assert!(!store.is_packed("user-1"));
+        assert_eq!(store.resident_bytes(), cf.total_bytes());
+        // re-attach restores every member (replacing the direct insert)
+        store.attach_pack(&pack).unwrap();
+        assert_eq!(store.len(), 3);
+        assert!(store.is_packed("user-1"));
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(store.packed_bytes(), (0..3).map(|i| pack.member_logical_bytes(i)).sum());
+    }
+
+    #[test]
+    fn attach_refuses_members_over_the_whole_budget() {
+        let (pack, _, _) = iris_pack(2, 25);
+        let tiny = ModelStore::with_budget(pack.member_logical_bytes(0) / 2);
+        assert!(tiny.attach_pack(&pack).is_err());
+        assert_eq!(tiny.len(), 0, "refusal leaves nothing half-attached");
     }
 }

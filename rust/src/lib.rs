@@ -33,6 +33,8 @@
 //!   (the clustering hot path), with a native fallback
 //! * [`coordinator`] — the L3 system: parallel compression pipeline and a
 //!   model-store prediction server answering from compressed forests
+//! * [`pack`]   — `RFPK` model packs: many-tenant archives with shared
+//!   cross-forest codebooks, served zero-copy as the store's third tier
 //! * [`util`]   — RNG, stats, CLI, thread pool
 //! * [`testing`] — in-tree property-testing mini-framework
 //!
@@ -59,6 +61,7 @@ pub mod data;
 pub mod forest;
 pub mod lossy;
 pub mod model;
+pub mod pack;
 pub mod runtime;
 pub mod testing;
 pub mod util;

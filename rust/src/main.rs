@@ -7,7 +7,9 @@
 //!                  [--k-max K] [--fit-alpha-bits 64] [--native]
 //! repro verify     --in FILE --dataset <key> [--trees N] [--seed S]
 //! repro lossy      --dataset <key> [--trees N] [--bits B] [--keep N0]
-//! repro serve      --port P --dataset <key>[,<key>...] [--trees N]
+//! repro serve      --port P [--dataset <key>[,<key>...]] [--pack FILE,...]
+//!                  [--trees N]
+//! repro pack       build|list|extract               # RFPK model packs
 //! repro suite      [--trees N] [--paper-scale]      # Table-2 style report
 //! repro datasets                                    # list dataset keys
 //! ```
@@ -36,6 +38,7 @@ fn main() {
         "verify" => cmd_verify(&args),
         "lossy" => cmd_lossy(&args),
         "serve" => cmd_serve(&args),
+        "pack" => cmd_pack(&args),
         "suite" => cmd_suite(&args),
         "bench-gate" => cmd_bench_gate(&args),
         "datasets" => {
@@ -60,11 +63,17 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   compress   --dataset KEY [--trees N] [--seed S] [--out FILE] [--native]
   verify     --in FILE --dataset KEY [--trees N] [--seed S]
   lossy      --dataset KEY [--trees N] [--bits B] [--keep N0]
-  serve      --port P --dataset KEY[,KEY...] [--trees N]
-             [--max-resident-bytes B] [--predict-workers W]
+  serve      --port P [--dataset KEY[,KEY...]] [--pack FILE[,FILE...]]
+             [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
+  pack build   --out FILE (--inputs A.rfcz[,B.rfcz...] |
+                           --dataset KEY --members N [--trees T])
+               [--no-shared] [--seed S]
+  pack list    --in FILE
+  pack extract --in FILE (--key K --out FILE | --out-dir DIR)
   suite      [--trees N] [--paper-scale]
   bench-gate --baseline FILE --current FILE [--tolerance 0.25]
+  bench-gate --current FILE --write-baseline [--baseline FILE]
   datasets";
 
 fn load_dataset(args: &Args) -> Option<Dataset> {
@@ -256,10 +265,12 @@ fn cmd_lossy(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let Some(keys) = args.get_list::<String>("dataset") else {
-        eprintln!("serve needs --dataset KEY[,KEY...]");
+    let keys = args.get_list::<String>("dataset").unwrap_or_default();
+    let packs = args.get_list::<String>("pack").unwrap_or_default();
+    if keys.is_empty() && packs.is_empty() {
+        eprintln!("serve needs --dataset KEY[,KEY...] and/or --pack FILE[,FILE...]");
         return 2;
-    };
+    }
     let trees = args.get_or("trees", 50usize);
     let port: u16 = args.get_or("port", 7878u16);
     // storage-budget simulator (paper §1): optional resident-bytes cap with
@@ -338,6 +349,29 @@ fn cmd_serve(args: &Args) -> i32 {
         store.insert(key, &cf).unwrap();
         println!("loaded {key}: {}", human_bytes(report.ours_bytes));
     }
+    // model packs mount as the third tier: members stay unloaded (and cost
+    // no RAM) until their first request
+    for path in &packs {
+        let pack = match rf_compress::pack::PackArchive::open(std::path::Path::new(path)) {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                eprintln!("pack {path}: {e:#}");
+                return 1;
+            }
+        };
+        let n = match store.attach_pack(&pack) {
+            Ok(n) => n,
+            Err(e) => {
+                eprintln!("pack {path}: {e:#}");
+                return 1;
+            }
+        };
+        println!(
+            "attached pack {path}: {n} members, {} archive ({} blobs shared)",
+            human_bytes(pack.archive_bytes()),
+            pack.blob_count()
+        );
+    }
     let server = match Server::start(store.clone(), port) {
         Ok(s) => s,
         Err(e) => {
@@ -369,15 +403,230 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         );
     }
+    if store.packed_len() > 0 {
+        println!(
+            "packed tier: {} members unloaded ({} when resident)",
+            store.packed_len(),
+            human_bytes(store.packed_bytes())
+        );
+    }
     println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
+/// RFPK model packs: `pack build` (from container files, or a synthetic
+/// per-user cohort trained on a dataset key), `pack list`, `pack extract`.
+fn cmd_pack(args: &Args) -> i32 {
+    use rf_compress::pack::{PackArchive, PackBuilder};
+    match args.positional(1).unwrap_or("") {
+        "build" => {
+            let Some(out) = args.get("out") else {
+                eprintln!("pack build needs --out FILE");
+                return 2;
+            };
+            let mut builder = PackBuilder::new().shared(!args.flag("no-shared"));
+            if let Some(inputs) = args.get_list::<String>("inputs") {
+                // container-file mode: keys are the file stems
+                for path in &inputs {
+                    let p = std::path::Path::new(path);
+                    let key = p
+                        .file_stem()
+                        .and_then(|s| s.to_str())
+                        .unwrap_or("model")
+                        .to_string();
+                    let bytes = match std::fs::read(p) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("read {path}: {e}");
+                            return 1;
+                        }
+                    };
+                    if let Err(e) = builder.add(&key, bytes) {
+                        eprintln!("pack build: {e:#}");
+                        return 1;
+                    }
+                }
+            } else if args.get("dataset").is_some() {
+                // synthetic cohort mode: N tiny per-user forests on one
+                // dataset, compressed against shared cohort codebooks
+                let Some(ds) = load_dataset(args) else { return 2 };
+                let members = args.get_or("members", 16usize);
+                let trees = args.get_or("trees", 2usize);
+                let seed = args.get_or("seed", 7u64);
+                let params = if ds.target.is_classification() {
+                    rf_compress::forest::ForestParams::classification(trees)
+                } else {
+                    rf_compress::forest::ForestParams::regression(trees)
+                };
+                let forests: Vec<rf_compress::forest::Forest> = (0..members)
+                    .map(|i| {
+                        rf_compress::forest::Forest::train(&ds, &params, seed + i as u64)
+                    })
+                    .collect();
+                let cohort = match rf_compress::pack::compress_cohort(
+                    &forests,
+                    &ds,
+                    &opts_from(args),
+                ) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("pack build: {e:#}");
+                        return 1;
+                    }
+                };
+                let width = members.to_string().len().max(4);
+                for (i, cf) in cohort.iter().enumerate() {
+                    let key = format!("user-{i:0width$}");
+                    if let Err(e) = builder.add(&key, cf.bytes.clone()) {
+                        eprintln!("pack build: {e:#}");
+                        return 1;
+                    }
+                }
+            } else {
+                eprintln!("pack build needs --inputs FILES or --dataset KEY --members N");
+                return 2;
+            }
+            match builder.write(std::path::Path::new(out)) {
+                Ok(stats) => {
+                    println!(
+                        "wrote {out}: {} members, {} ({} logical, {} saved by {} shared \
+                         blob(s), {:.1} bytes/member)",
+                        stats.members,
+                        human_bytes(stats.archive_bytes),
+                        human_bytes(stats.logical_bytes),
+                        human_bytes(stats.shared_saved_bytes),
+                        stats.blobs,
+                        stats.archive_bytes as f64 / stats.members.max(1) as f64
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("pack build: {e:#}");
+                    1
+                }
+            }
+        }
+        "list" => {
+            let Some(input) = args.get("in") else {
+                eprintln!("pack list needs --in FILE");
+                return 2;
+            };
+            let pack = match PackArchive::open(std::path::Path::new(input)) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("pack list: {e:#}");
+                    return 1;
+                }
+            };
+            println!("{:<24} {:>12} {:>12}  storage", "key", "stored", "container");
+            for i in 0..pack.member_count() {
+                println!(
+                    "{:<24} {:>12} {:>12}  {}",
+                    pack.key(i),
+                    human_bytes(pack.member_stored_bytes(i)),
+                    human_bytes(pack.member_logical_bytes(i)),
+                    if pack.member_is_shared(i) { "shared-dicts" } else { "verbatim" }
+                );
+            }
+            let s = pack.stats();
+            println!(
+                "total: {} members, {} archive ({} logical; {} saved by {} shared blob(s))",
+                s.members,
+                human_bytes(s.archive_bytes),
+                human_bytes(s.logical_bytes),
+                human_bytes(s.shared_saved_bytes),
+                s.blobs
+            );
+            0
+        }
+        "extract" => {
+            let Some(input) = args.get("in") else {
+                eprintln!("pack extract needs --in FILE");
+                return 2;
+            };
+            let pack = match PackArchive::open(std::path::Path::new(input)) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("pack extract: {e:#}");
+                    return 1;
+                }
+            };
+            if let Some(key) = args.get("key") {
+                let Some(out) = args.get("out") else {
+                    eprintln!("pack extract --key needs --out FILE");
+                    return 2;
+                };
+                match pack.extract_by_key(key).and_then(|bytes| {
+                    std::fs::write(out, &bytes)?;
+                    Ok(bytes.len())
+                }) {
+                    Ok(n) => {
+                        println!("extracted {key} → {out} ({})", human_bytes(n as u64));
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("pack extract: {e:#}");
+                        1
+                    }
+                }
+            } else {
+                let Some(dir) = args.get("out-dir") else {
+                    eprintln!("pack extract needs --key K --out FILE or --out-dir DIR");
+                    return 2;
+                };
+                let dir = std::path::Path::new(dir);
+                if let Err(e) = std::fs::create_dir_all(dir) {
+                    eprintln!("pack extract: creating {}: {e}", dir.display());
+                    return 1;
+                }
+                for i in 0..pack.member_count() {
+                    let path = dir.join(format!("{}.rfcz", pack.key(i)));
+                    match pack.extract_member(i).and_then(|bytes| {
+                        std::fs::write(&path, &bytes)?;
+                        Ok(())
+                    }) {
+                        Ok(()) => {}
+                        Err(e) => {
+                            eprintln!("pack extract {}: {e:#}", pack.key(i));
+                            return 1;
+                        }
+                    }
+                }
+                println!("extracted {} members to {}", pack.member_count(), dir.display());
+                0
+            }
+        }
+        other => {
+            eprintln!("unknown pack subcommand {other:?} (build | list | extract)");
+            2
+        }
+    }
+}
+
 /// CI bench-regression gate: compare a fresh `BENCH_serve.json` against the
 /// committed `BENCH_baseline.json` (exit 1 on regression past ±tolerance).
+/// With `--write-baseline`, rewrite the baseline from the current report
+/// instead (validating the gated metrics first).
 fn cmd_bench_gate(args: &Args) -> i32 {
+    if args.flag("write-baseline") {
+        let Some(current) = args.get("current") else {
+            eprintln!("bench-gate --write-baseline needs --current FILE");
+            return 2;
+        };
+        let baseline = args.get("baseline").unwrap_or("BENCH_baseline.json");
+        return match rf_compress::util::benchgate::write_baseline(
+            std::path::Path::new(current),
+            std::path::Path::new(baseline),
+        ) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("bench-gate: {e:#}");
+                2
+            }
+        };
+    }
     let Some(baseline) = args.get("baseline") else {
         eprintln!("bench-gate needs --baseline FILE");
         return 2;

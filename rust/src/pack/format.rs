@@ -1,0 +1,805 @@
+//! The `RFPK` archive format.
+//!
+//! ```text
+//! ┌─────────┬──────────────────────────────────────────────────────────┐
+//! │ HEADER  │ magic "RFPK", version, member count, blob count          │
+//! │ INDEX   │ per member: key, storage mode, stored length,            │
+//! │         │ (shared mode) blob id + splice position                  │
+//! │ BLOBS   │ shared-codebook section: deduplicated side-information   │
+//! │         │ byte blobs (TABLES + CLUSMAP + DICTS of ≥ 2 members)     │
+//! │ PAYLOAD │ per-member stored bytes, concatenated                    │
+//! └─────────┴──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Two storage modes per member:
+//!
+//! * **verbatim** — the member's `RFCZ` container bytes, unmodified. Parsing
+//!   is [`crate::compress::container::parse_arc`] over a pack-relative
+//!   [`SharedBytes`] view; extraction is a plain copy.
+//! * **shared** — the member's side-information span (everything between the
+//!   header and the STRUCT section; see
+//!   [`crate::compress::container::ParsedContainer::side_info_span`]) is
+//!   excised into a pack-level blob that every byte-identical member
+//!   references. The stored payload is `header ++ struct ++ payloads`,
+//!   still contiguous, so the big per-tree streams parse zero-copy off the
+//!   pack mapping via [`crate::compress::container::parse_packed`];
+//!   extraction splices `head ++ blob ++ tail` — **bit-identical** to the
+//!   source container by construction.
+//!
+//! The builder only assigns a member to a blob when the bytes match
+//! *exactly* (losslessness is never traded for sharing); producing members
+//! that actually share bytes is [`crate::pack::shared::compress_cohort`]'s
+//! job. Offsets in the index are implicit — stored lengths accumulate in
+//! index order — so the directory stays a few bytes per member.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::compress::container::{cast_usize, parse_arc, parse_packed, ParsedContainer};
+use crate::compress::SharedBytes;
+use crate::util::mmap::Mmap;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+
+pub const PACK_MAGIC: &[u8; 4] = b"RFPK";
+pub const PACK_VERSION: u8 = 1;
+
+/// Storage-mode tags in the index.
+const MODE_VERBATIM: u64 = 0;
+const MODE_SHARED: u64 = 1;
+
+/// Longest accepted member key (bytes).
+const MAX_KEY_LEN: usize = 4096;
+
+/// Shared key rules, enforced by builder AND reader: keys travel over the
+/// space-delimited wire protocol (whitespace/control would make a member
+/// unaddressable) and become filenames under `pack extract --out-dir`
+/// (separators or `..` would let a hostile archive write outside the
+/// output directory).
+fn validate_key(key: &str) -> Result<()> {
+    if key.is_empty() || key.len() > MAX_KEY_LEN {
+        bail!("pack key must be 1..={MAX_KEY_LEN} bytes, got {}", key.len());
+    }
+    if key.chars().any(|c| c.is_whitespace() || c.is_control()) {
+        bail!("pack key {key:?} may not contain whitespace or control characters");
+    }
+    if key.contains('/') || key.contains('\\') {
+        bail!("pack key {key:?} may not contain path separators");
+    }
+    if key == "." || key == ".." {
+        bail!("pack key {key:?} is not allowed");
+    }
+    Ok(())
+}
+
+/// Build-time summary of an archive (also printed by `repro pack build`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PackStats {
+    pub members: usize,
+    /// Shared-codebook blobs in the archive.
+    pub blobs: usize,
+    /// Members stored in shared mode (side info excised).
+    pub shared_members: usize,
+    /// Total archive size in bytes.
+    pub archive_bytes: u64,
+    /// Sum of the members' standalone container sizes.
+    pub logical_bytes: u64,
+    /// Bytes the shared-codebook dedup removed versus storing every member
+    /// verbatim in the archive.
+    pub shared_saved_bytes: u64,
+}
+
+struct PendingMember {
+    key: String,
+    bytes: Arc<[u8]>,
+    /// Side-information span within `bytes` (exact byte boundaries).
+    side: (usize, usize),
+}
+
+/// Assembles an `RFPK` archive from validated `RFCZ` containers.
+pub struct PackBuilder {
+    members: Vec<PendingMember>,
+    shared: bool,
+}
+
+impl PackBuilder {
+    /// New builder with shared-codebook dedup enabled.
+    pub fn new() -> Self {
+        PackBuilder { members: Vec::new(), shared: true }
+    }
+
+    /// Toggle the shared-codebook section (`false` stores every member
+    /// verbatim; round-trips are bit-identical either way).
+    pub fn shared(mut self, on: bool) -> Self {
+        self.shared = on;
+        self
+    }
+
+    /// Add a member under `key`. The container is fully parsed here — a
+    /// corrupt member fails the build, not some later reader — and its
+    /// side-information span is recorded for the dedup pass.
+    pub fn add(&mut self, key: &str, bytes: impl Into<Arc<[u8]>>) -> Result<()> {
+        validate_key(key)?;
+        if self.members.iter().any(|m| m.key == key) {
+            bail!("duplicate pack key {key:?}");
+        }
+        let bytes: Arc<[u8]> = bytes.into();
+        let pc = parse_arc(bytes.clone())
+            .with_context(|| format!("pack member {key:?} is not a valid RFCZ container"))?;
+        let side = pc.side_info_span();
+        self.members.push(PendingMember { key: key.to_string(), bytes, side });
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Serialize the archive. Members whose side-information bytes are
+    /// byte-identical to at least one other member's share a single blob;
+    /// everyone else is stored verbatim.
+    pub fn build(&self) -> Result<(Vec<u8>, PackStats)> {
+        if self.members.is_empty() {
+            bail!("cannot build an empty pack");
+        }
+
+        // dedup pass: side-info bytes → (first-appearance order id, count)
+        let mut seen: HashMap<&[u8], (usize, usize)> = HashMap::new();
+        let mut order: Vec<&[u8]> = Vec::new();
+        if self.shared {
+            for m in &self.members {
+                let span = &m.bytes[m.side.0..m.side.1];
+                if span.is_empty() {
+                    continue;
+                }
+                match seen.get_mut(span) {
+                    Some((_, count)) => *count += 1,
+                    None => {
+                        seen.insert(span, (order.len(), 1));
+                        order.push(span);
+                    }
+                }
+            }
+        }
+        // only spans shared by ≥ 2 members become blobs (a singleton would
+        // trade index overhead for nothing)
+        let mut blob_id: HashMap<&[u8], u64> = HashMap::new();
+        let mut blobs: Vec<&[u8]> = Vec::new();
+        for span in &order {
+            if seen[span].1 >= 2 {
+                blob_id.insert(span, blobs.len() as u64);
+                blobs.push(span);
+            }
+        }
+
+        let mut w = BitWriter::new();
+        for &b in PACK_MAGIC {
+            w.write_byte(b);
+        }
+        w.write_bits(PACK_VERSION as u64, 8);
+        w.write_varint(self.members.len() as u64);
+        w.write_varint(blobs.len() as u64);
+        w.align_byte();
+
+        // ---- INDEX ----
+        let mut stats = PackStats {
+            members: self.members.len(),
+            blobs: blobs.len(),
+            ..Default::default()
+        };
+        for m in &self.members {
+            let span = &m.bytes[m.side.0..m.side.1];
+            let shared = blob_id.get(span).copied();
+            w.write_varint(m.key.len() as u64);
+            w.write_bytes(m.key.as_bytes());
+            stats.logical_bytes += m.bytes.len() as u64;
+            match shared {
+                Some(id) => {
+                    let stored_len = m.bytes.len() - span.len();
+                    w.write_bits(MODE_SHARED, 8);
+                    w.write_varint(stored_len as u64);
+                    w.write_varint(id);
+                    w.write_varint(m.side.0 as u64); // splice position = head length
+                    stats.shared_members += 1;
+                    stats.shared_saved_bytes += span.len() as u64;
+                }
+                None => {
+                    w.write_bits(MODE_VERBATIM, 8);
+                    w.write_varint(m.bytes.len() as u64);
+                }
+            }
+        }
+        w.align_byte();
+
+        // ---- BLOBS ----
+        for blob in &blobs {
+            w.write_varint(blob.len() as u64);
+        }
+        w.align_byte();
+        for blob in &blobs {
+            w.write_bytes(blob);
+            stats.shared_saved_bytes -= blob.len() as u64; // one copy stays
+        }
+
+        // ---- PAYLOAD ---- (byte-aligned: these are bulk appends)
+        for m in &self.members {
+            let span = &m.bytes[m.side.0..m.side.1];
+            if blob_id.contains_key(span) {
+                w.write_bytes(&m.bytes[..m.side.0]);
+                w.write_bytes(&m.bytes[m.side.1..]);
+            } else {
+                w.write_bytes(&m.bytes);
+            }
+        }
+
+        let bytes = w.into_bytes();
+        stats.archive_bytes = bytes.len() as u64;
+        Ok((bytes, stats))
+    }
+
+    /// Build and write the archive to `path` (write-tmp-then-rename, same
+    /// crash discipline as the store's spill files).
+    pub fn write(&self, path: &Path) -> Result<PackStats> {
+        let (bytes, stats) = self.build()?;
+        let tmp = path.with_extension("rfpk.tmp");
+        std::fs::write(&tmp, &bytes)
+            .and_then(|()| std::fs::rename(&tmp, path))
+            .map_err(|e| {
+                let _ = std::fs::remove_file(&tmp);
+                e
+            })
+            .with_context(|| format!("writing pack {}", path.display()))?;
+        Ok(stats)
+    }
+}
+
+impl Default for PackBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct Member {
+    key: String,
+    /// Absolute span of the stored bytes within the archive buffer.
+    stored: (usize, usize),
+    /// `Some((blob id, splice position))` for shared-mode members.
+    shared: Option<(usize, usize)>,
+    /// Standalone container size (stored + referenced blob).
+    logical: u64,
+}
+
+/// A parsed, immutable `RFPK` archive over one shared buffer (typically a
+/// single `mmap` of the pack file — every member parse aliases it).
+pub struct PackArchive {
+    buf: SharedBytes,
+    members: Vec<Member>,
+    by_key: BTreeMap<String, usize>,
+    /// Absolute spans of the shared-codebook blobs.
+    blobs: Vec<(usize, usize)>,
+}
+
+impl PackArchive {
+    /// Map a pack file and parse its directory. The payload bytes are not
+    /// touched — the kernel pages them in as members are parsed.
+    pub fn open(path: &Path) -> Result<PackArchive> {
+        let map = Mmap::map_path(path)
+            .with_context(|| format!("opening pack {}", path.display()))?;
+        Self::from_shared(map.into())
+            .with_context(|| format!("parsing pack {}", path.display()))
+    }
+
+    /// Parse an archive from heap bytes (tests, network ingestion).
+    pub fn from_bytes(bytes: impl Into<Arc<[u8]>>) -> Result<PackArchive> {
+        Self::from_shared(SharedBytes::Heap(bytes.into()))
+    }
+
+    /// Parse an archive over any shared buffer.
+    pub fn from_shared(buf: SharedBytes) -> Result<PackArchive> {
+        let (members, by_key, blobs) = {
+            let bytes: &[u8] = &buf;
+            let mut r = BitReader::new(bytes);
+            let mut magic = [0u8; 4];
+            for m in magic.iter_mut() {
+                *m = r.read_byte().context("pack magic")?;
+            }
+            if &magic != PACK_MAGIC {
+                bail!("not an RFPK archive (bad magic)");
+            }
+            let version = r.read_bits(8).context("pack version")? as u8;
+            if version != PACK_VERSION {
+                bail!("unsupported pack version {version}");
+            }
+            let n_members_raw = r.read_varint().context("member count")?;
+            if n_members_raw == 0 || n_members_raw > 10_000_000 {
+                bail!("implausible pack member count {n_members_raw}");
+            }
+            let n_members = cast_usize(n_members_raw, "member count")?;
+            let n_blobs_raw = r.read_varint().context("blob count")?;
+            if n_blobs_raw > n_members_raw {
+                bail!("more blobs ({n_blobs_raw}) than members ({n_members_raw})");
+            }
+            let n_blobs = cast_usize(n_blobs_raw, "blob count")?;
+            r.align_byte();
+
+            // ---- INDEX ----
+            struct RawMember {
+                key: String,
+                stored_len: usize,
+                shared: Option<(usize, usize)>,
+            }
+            let mut raw = Vec::with_capacity(n_members);
+            let mut by_key = BTreeMap::new();
+            for i in 0..n_members {
+                let key_len =
+                    cast_usize(r.read_varint().context("key len")?, "member key length")?;
+                if key_len == 0 || key_len > MAX_KEY_LEN {
+                    bail!("implausible member key length {key_len}");
+                }
+                let mut key_bytes = Vec::with_capacity(key_len);
+                for _ in 0..key_len {
+                    key_bytes.push(r.read_byte().context("member key")?);
+                }
+                let key = String::from_utf8(key_bytes).context("member key utf8")?;
+                // a hostile archive must not smuggle what the builder
+                // refuses: unaddressable wire names or extract-path escapes
+                validate_key(&key)?;
+                if by_key.insert(key.clone(), i).is_some() {
+                    bail!("duplicate member key {key:?}");
+                }
+                let mode = r.read_bits(8).context("storage mode")?;
+                let stored_len =
+                    cast_usize(r.read_varint().context("stored len")?, "stored length")?;
+                let shared = match mode {
+                    MODE_VERBATIM => None,
+                    MODE_SHARED => {
+                        let blob = cast_usize(r.read_varint().context("blob id")?, "blob id")?;
+                        if blob >= n_blobs {
+                            bail!("member {key:?} references blob {blob} of {n_blobs}");
+                        }
+                        let splice =
+                            cast_usize(r.read_varint().context("splice pos")?, "splice pos")?;
+                        if splice > stored_len {
+                            bail!("member {key:?}: splice {splice} beyond stored {stored_len}");
+                        }
+                        Some((blob, splice))
+                    }
+                    v => bail!("unknown storage mode {v}"),
+                };
+                raw.push(RawMember { key, stored_len, shared });
+            }
+            r.align_byte();
+
+            // ---- BLOBS ----
+            let mut blob_lens = Vec::with_capacity(n_blobs);
+            for _ in 0..n_blobs {
+                blob_lens.push(cast_usize(r.read_varint().context("blob len")?, "blob length")?);
+            }
+            r.align_byte();
+            let mut off = cast_usize(r.bit_pos() / 8, "blob offset")?;
+            let mut blobs = Vec::with_capacity(n_blobs);
+            for len in blob_lens {
+                let end = off.checked_add(len).context("blob span overflow")?;
+                if end > bytes.len() {
+                    bail!("blob section truncated ({len} bytes at {off}, archive holds {})", bytes.len());
+                }
+                blobs.push((off, end));
+                off = end;
+            }
+            r.seek_bits(off as u64 * 8);
+
+            // ---- PAYLOAD ----
+            // every blob must be referenced: the builder only emits blobs
+            // shared by ≥ 2 members, and an orphan blob would corrupt the
+            // shared-savings accounting (stats would underflow)
+            let mut blob_refs = vec![0usize; n_blobs];
+            for m in &raw {
+                if let Some((b, _)) = m.shared {
+                    blob_refs[b] += 1;
+                }
+            }
+            if let Some(orphan) = blob_refs.iter().position(|&c| c == 0) {
+                bail!("blob {orphan} is referenced by no member");
+            }
+            let mut members = Vec::with_capacity(n_members);
+            for m in raw {
+                let end = off.checked_add(m.stored_len).context("member span overflow")?;
+                if end > bytes.len() {
+                    bail!(
+                        "member {:?} truncated ({} bytes at {off}, archive holds {})",
+                        m.key,
+                        m.stored_len,
+                        bytes.len()
+                    );
+                }
+                let logical = m.stored_len as u64
+                    + m.shared
+                        .map(|(b, _)| (blobs[b].1 - blobs[b].0) as u64)
+                        .unwrap_or(0);
+                members.push(Member { key: m.key, stored: (off, end), shared: m.shared, logical });
+                off = end;
+            }
+            if off != bytes.len() {
+                bail!("archive has {} trailing bytes past the last member", bytes.len() - off);
+            }
+            (members, by_key, blobs)
+        };
+        Ok(PackArchive { buf, members, by_key, blobs })
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Member keys in index order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.members.iter().map(|m| m.key.as_str())
+    }
+
+    pub fn key(&self, member: usize) -> &str {
+        &self.members[member].key
+    }
+
+    /// Index of a member by key.
+    pub fn find(&self, key: &str) -> Option<usize> {
+        self.by_key.get(key).copied()
+    }
+
+    /// Number of shared-codebook blobs.
+    pub fn blob_count(&self) -> usize {
+        self.blobs.len()
+    }
+
+    /// Whether a member is stored in shared mode (side info in a blob).
+    pub fn member_is_shared(&self, member: usize) -> bool {
+        self.members[member].shared.is_some()
+    }
+
+    /// Bytes the member occupies inside the archive (excluding any shared
+    /// blob, which is amortized across its referents).
+    pub fn member_stored_bytes(&self, member: usize) -> u64 {
+        let (s, e) = self.members[member].stored;
+        (e - s) as u64
+    }
+
+    /// Size of the member's standalone `RFCZ` container (what
+    /// [`Self::extract_member`] returns).
+    pub fn member_logical_bytes(&self, member: usize) -> u64 {
+        self.members[member].logical
+    }
+
+    /// Total archive size.
+    pub fn archive_bytes(&self) -> u64 {
+        self.buf.len() as u64
+    }
+
+    /// The archive's backing buffer (pointer-identity checks in tests).
+    pub fn buffer(&self) -> &SharedBytes {
+        &self.buf
+    }
+
+    /// Parse a member zero-copy: the returned container's payload sections
+    /// alias the archive buffer (one mmap serves every member). Shared-mode
+    /// members read their side information out of the referenced blob.
+    pub fn parse_member(&self, member: usize) -> Result<ParsedContainer> {
+        let m = self
+            .members
+            .get(member)
+            .with_context(|| format!("pack member {member} out of range"))?;
+        let view = self.buf.slice(m.stored.0, m.stored.1 - m.stored.0)?;
+        match m.shared {
+            None => parse_arc(view)
+                .with_context(|| format!("parsing pack member {:?}", m.key)),
+            Some((blob, _)) => {
+                let (bs, be) = self.blobs[blob];
+                parse_packed(view, &self.buf.as_slice()[bs..be])
+                    .with_context(|| format!("parsing pack member {:?}", m.key))
+            }
+        }
+    }
+
+    /// Parse a member by key.
+    pub fn parse_by_key(&self, key: &str) -> Result<ParsedContainer> {
+        let i = self.find(key).with_context(|| format!("unknown pack member {key:?}"))?;
+        self.parse_member(i)
+    }
+
+    /// Reconstruct the member's standalone `RFCZ` bytes — **bit-identical**
+    /// to the container handed to [`PackBuilder::add`]: verbatim members
+    /// copy out; shared members splice `head ++ blob ++ tail`.
+    pub fn extract_member(&self, member: usize) -> Result<Vec<u8>> {
+        let m = self
+            .members
+            .get(member)
+            .with_context(|| format!("pack member {member} out of range"))?;
+        let stored = &self.buf.as_slice()[m.stored.0..m.stored.1];
+        Ok(match m.shared {
+            None => stored.to_vec(),
+            Some((blob, splice)) => {
+                let (bs, be) = self.blobs[blob];
+                let blob_bytes = &self.buf.as_slice()[bs..be];
+                let mut out = Vec::with_capacity(stored.len() + blob_bytes.len());
+                out.extend_from_slice(&stored[..splice]);
+                out.extend_from_slice(blob_bytes);
+                out.extend_from_slice(&stored[splice..]);
+                out
+            }
+        })
+    }
+
+    /// Extract a member by key.
+    pub fn extract_by_key(&self, key: &str) -> Result<Vec<u8>> {
+        let i = self.find(key).with_context(|| format!("unknown pack member {key:?}"))?;
+        self.extract_member(i)
+    }
+
+    /// Archive-level summary (mirrors the builder's [`PackStats`]).
+    pub fn stats(&self) -> PackStats {
+        let logical: u64 = self.members.iter().map(|m| m.logical).sum();
+        let shared_members = self.members.iter().filter(|m| m.shared.is_some()).count();
+        let blob_bytes: u64 = self.blobs.iter().map(|&(s, e)| (e - s) as u64).sum();
+        let shared_excised: u64 = self
+            .members
+            .iter()
+            .filter_map(|m| m.shared.map(|(b, _)| (self.blobs[b].1 - self.blobs[b].0) as u64))
+            .sum();
+        PackStats {
+            members: self.members.len(),
+            blobs: self.blobs.len(),
+            shared_members,
+            archive_bytes: self.archive_bytes(),
+            logical_bytes: logical,
+            // parse validation guarantees every blob has ≥ 1 referent, so
+            // excised ≥ blob bytes; saturate anyway — a wrong stat must
+            // never wrap to ~1.8e19
+            shared_saved_bytes: shared_excised.saturating_sub(blob_bytes),
+        }
+    }
+}
+
+impl std::fmt::Debug for PackArchive {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackArchive")
+            .field("members", &self.members.len())
+            .field("blobs", &self.blobs.len())
+            .field("bytes", &self.buf.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{CompressOptions, CompressedForest};
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+
+    fn containers(n: usize, seed: u64) -> (Vec<CompressedForest>, Vec<Forest>) {
+        let ds = synthetic::iris(41);
+        let forests: Vec<Forest> = (0..n)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+            .collect();
+        let cohort = crate::pack::compress_cohort(&forests, &ds, &CompressOptions::default())
+            .unwrap();
+        (cohort, forests)
+    }
+
+    #[test]
+    fn build_open_extract_bit_identical() {
+        let (cohort, forests) = containers(5, 100);
+        let mut b = PackBuilder::new();
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("user-{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, stats) = b.build().unwrap();
+        assert_eq!(stats.members, 5);
+        assert_eq!(stats.blobs, 1, "a cohort shares one side-info blob");
+        assert_eq!(stats.shared_members, 5);
+        assert!(stats.archive_bytes < stats.logical_bytes, "dedup must shrink the pack");
+
+        let pack = PackArchive::from_bytes(bytes).unwrap();
+        assert_eq!(pack.member_count(), 5);
+        assert_eq!(pack.blob_count(), 1);
+        for (i, cf) in cohort.iter().enumerate() {
+            let key = format!("user-{i}");
+            assert_eq!(pack.find(&key), Some(i));
+            let extracted = pack.extract_by_key(&key).unwrap();
+            assert_eq!(&extracted[..], &cf.bytes[..], "member {i} must be bit-identical");
+            assert_eq!(pack.member_logical_bytes(i), cf.total_bytes());
+            // and it parses straight out of the archive to the same forest
+            let pc = pack.parse_member(i).unwrap();
+            let g = crate::compress::pipeline::decompress_container(&pc).unwrap();
+            assert!(g.identical(&forests[i]), "member {i} decodes losslessly");
+        }
+        assert!(pack.find("ghost").is_none());
+        assert!(pack.extract_by_key("ghost").is_err());
+        assert!(pack.parse_member(99).is_err());
+    }
+
+    #[test]
+    fn unshared_builder_stores_verbatim() {
+        let (cohort, _) = containers(3, 200);
+        let mut b = PackBuilder::new().shared(false);
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("m{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, stats) = b.build().unwrap();
+        assert_eq!(stats.blobs, 0);
+        assert_eq!(stats.shared_members, 0);
+        assert_eq!(stats.shared_saved_bytes, 0);
+        let pack = PackArchive::from_bytes(bytes).unwrap();
+        for (i, cf) in cohort.iter().enumerate() {
+            assert!(!pack.member_is_shared(i));
+            assert_eq!(pack.member_stored_bytes(i), cf.total_bytes());
+            assert_eq!(pack.extract_member(i).unwrap()[..], cf.bytes[..]);
+        }
+    }
+
+    #[test]
+    fn independently_compressed_members_fall_back_to_verbatim() {
+        // two forests compressed separately almost surely differ in their
+        // side bytes: the shared pass must not force a bogus match
+        let ds = synthetic::iris(42);
+        let mut b = PackBuilder::new();
+        for i in 0..2u64 {
+            let f = Forest::train(&ds, &ForestParams::classification(3), 300 + i);
+            let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+            b.add(&format!("solo-{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, stats) = b.build().unwrap();
+        assert_eq!(stats.blobs, 0, "distinct side bytes must not share");
+        assert!(PackArchive::from_bytes(bytes).is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_bad_keys_and_bad_members() {
+        let (cohort, _) = containers(1, 400);
+        let mut b = PackBuilder::new();
+        assert!(b.add("", cohort[0].bytes.clone()).is_err());
+        assert!(b.add("has space", cohort[0].bytes.clone()).is_err());
+        // keys become extract filenames: separators and dot-dirs are refused
+        assert!(b.add("a/b", cohort[0].bytes.clone()).is_err());
+        assert!(b.add("a\\b", cohort[0].bytes.clone()).is_err());
+        assert!(b.add("..", cohort[0].bytes.clone()).is_err());
+        assert!(b.add("ok", cohort[0].bytes.clone()).is_ok());
+        assert!(b.add("ok", cohort[0].bytes.clone()).is_err(), "duplicate key");
+        assert!(b.add("junk", vec![1u8, 2, 3]).is_err(), "non-RFCZ member");
+        assert!(PackBuilder::new().build().is_err(), "empty pack");
+    }
+
+    #[test]
+    fn corrupt_archives_error_cleanly() {
+        let (cohort, _) = containers(3, 500);
+        let mut b = PackBuilder::new();
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("m{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, _) = b.build().unwrap();
+        assert!(PackArchive::from_bytes(b"RFXX".to_vec()).is_err(), "bad magic");
+        assert!(PackArchive::from_bytes(Vec::<u8>::new()).is_err(), "empty");
+        for cut in [4, bytes.len() / 3, bytes.len() - 3] {
+            assert!(
+                PackArchive::from_bytes(bytes[..cut].to_vec()).is_err(),
+                "truncation at {cut} must error"
+            );
+        }
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0; 7]);
+        assert!(PackArchive::from_bytes(padded).is_err(), "trailing bytes must error");
+    }
+
+    /// Hand-craft an archive: one verbatim member under `key`, plus
+    /// `orphan_blob` optionally appending a blob no member references.
+    fn craft_archive(key: &str, payload: &[u8], orphan_blob: bool) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for &b in PACK_MAGIC {
+            w.write_byte(b);
+        }
+        w.write_bits(PACK_VERSION as u64, 8);
+        w.write_varint(1); // members
+        w.write_varint(orphan_blob as u64); // blobs
+        w.align_byte();
+        w.write_varint(key.len() as u64);
+        for &b in key.as_bytes() {
+            w.write_byte(b);
+        }
+        w.write_bits(MODE_VERBATIM, 8);
+        w.write_varint(payload.len() as u64);
+        w.align_byte();
+        if orphan_blob {
+            w.write_varint(4); // one 4-byte blob
+        }
+        w.align_byte();
+        if orphan_blob {
+            for b in [1u8, 2, 3, 4] {
+                w.write_byte(b);
+            }
+        }
+        for &b in payload {
+            w.write_byte(b);
+        }
+        w.into_bytes()
+    }
+
+    #[test]
+    fn reader_rejects_hostile_archives() {
+        let (cohort, _) = containers(1, 800);
+        let payload = &cohort[0].bytes;
+        // a clean crafted archive parses (the harness itself is sound)
+        let ok = craft_archive("fine", payload, false);
+        assert!(PackArchive::from_bytes(ok).is_ok());
+        // whitespace in a key would make the member unaddressable over the
+        // space-delimited wire protocol — the reader must refuse it
+        let bad_key = craft_archive("user 1", payload, false);
+        let err = PackArchive::from_bytes(bad_key).unwrap_err().to_string();
+        assert!(err.contains("whitespace"), "{err}");
+        // a traversal key would let `pack extract --out-dir` write outside
+        // the output directory — the reader must refuse it too
+        for hostile in ["../../escape", "/etc/cron.d/x", ".."] {
+            let bad = craft_archive(hostile, payload, false);
+            assert!(
+                PackArchive::from_bytes(bad).is_err(),
+                "hostile key {hostile:?} must be rejected"
+            );
+        }
+        // an orphan blob (referenced by no member) corrupts the savings
+        // accounting — refuse it at parse time
+        let orphan = craft_archive("fine", payload, true);
+        let err = PackArchive::from_bytes(orphan).unwrap_err().to_string();
+        assert!(err.contains("referenced by no member"), "{err}");
+    }
+
+    #[test]
+    fn mmap_open_serves_members_zero_copy() {
+        let (cohort, _) = containers(4, 600);
+        let mut b = PackBuilder::new();
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("m{i}"), cf.bytes.clone()).unwrap();
+        }
+        let path = std::env::temp_dir()
+            .join(format!("rfc-pack-zero-copy-{}.rfpk", std::process::id()));
+        b.write(&path).unwrap();
+
+        let pack = PackArchive::open(&path).unwrap();
+        let base = pack.buffer().as_ptr() as usize;
+        let len = pack.buffer().len();
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(pack.buffer().is_mapped(), "open must ride a mapping");
+        for i in 0..pack.member_count() {
+            let pc = pack.parse_member(i).unwrap();
+            assert!(
+                matches!(pc.buffer(), SharedBytes::View { .. }),
+                "member parses over a pack-relative view"
+            );
+            for sect in [pc.vars_bytes(), pc.splits_bytes(), pc.fits_bytes()] {
+                let p = sect.as_ptr() as usize;
+                assert!(
+                    p >= base && p + sect.len() <= base + len,
+                    "member {i} payloads must alias the pack mapping"
+                );
+            }
+            assert_eq!(pack.extract_member(i).unwrap()[..], cohort[i].bytes[..]);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn archive_stats_match_builder_stats() {
+        let (cohort, _) = containers(6, 700);
+        let mut b = PackBuilder::new();
+        for (i, cf) in cohort.iter().enumerate() {
+            b.add(&format!("m{i}"), cf.bytes.clone()).unwrap();
+        }
+        let (bytes, built) = b.build().unwrap();
+        let pack = PackArchive::from_bytes(bytes).unwrap();
+        assert_eq!(pack.stats(), built);
+    }
+}

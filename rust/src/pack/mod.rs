@@ -1,0 +1,34 @@
+//! Model packs (`RFPK`) — many-tenant archives of compressed forests.
+//!
+//! The paper's motivating deployment is subscriber-scale: **millions of
+//! user-specific ensembles, each small, each needing cheap storage** (§1).
+//! Below ~4 KiB per model, the per-file overhead — filesystem page
+//! granularity, inode metadata, one `open`+`mmap` per reload — dominates the
+//! model bytes themselves. A pack amortizes all of it:
+//!
+//! * [`format`] — the `RFPK` archive: a directory index (model key →
+//!   offset/len span), per-model `RFCZ` payloads stored verbatim, and an
+//!   optional **shared-codebook section** holding deduplicated
+//!   side-information blobs (TABLES + CLUSMAP + DICTS) that byte-identical
+//!   members reference instead of carrying their own. Extraction splices the
+//!   blob back — reconstruction is **bit-identical** to the source container.
+//! * [`shared`] — cohort compression: run the existing [`crate::cluster`]
+//!   machinery once across the **union** of every member forest's tree-model
+//!   tables ([`crate::compress::CodecPlan`]), then encode each member
+//!   against the shared codebooks. Members then serialize byte-identical
+//!   side-information sections by construction, which is what the pack's
+//!   dedup collapses to a single copy.
+//!
+//! Serving: one `mmap` of a pack serves every member zero-copy — a member is
+//! parsed straight out of the mapping through a pack-relative
+//! [`crate::compress::SharedBytes`] view ([`PackArchive::parse_member`]).
+//! The model store mounts packs as a third tier (Resident → Spilled →
+//! **Packed**): members load without per-model spill files and evict by
+//! *releasing* back to the pack — no disk write, the archive keeps the bytes
+//! ([`crate::coordinator::store::ModelStore::attach_pack`]).
+
+pub mod format;
+pub mod shared;
+
+pub use format::{PackArchive, PackBuilder, PackStats};
+pub use shared::{compress_cohort, compress_cohort_with_engine};

@@ -1,0 +1,177 @@
+//! Cohort compression: shared codebooks across many forests.
+//!
+//! The paper's Bregman clustering (eq. 6) finds a minimal set of
+//! probabilistic models describing the trees of *one* forest. Nothing in the
+//! objective is forest-specific — the count tables extend naturally across
+//! forests, and for subscriber workloads (thousands of tiny per-user models
+//! on a common schema) the dictionary cost `α·B·K` is paid **once per
+//! cohort** instead of once per model.
+//!
+//! [`compress_cohort`] builds the union forest of every member's trees, runs
+//! stages 2–3 of Algorithm 1 once over it
+//! ([`crate::compress::pipeline::build_codec_plan`]), and encodes each
+//! member against the frozen [`CodecPlan`]. Each output is a fully
+//! standalone `RFCZ` container — decompressible with no side information,
+//! bit-exact per member — whose TABLES/CLUSMAP/DICTS sections are
+//! **byte-identical across the cohort**. [`crate::pack::PackBuilder`]
+//! dedupes that span into one shared-codebook blob, which is where the
+//! bytes-per-model win at ≤ 4 KiB models comes from.
+//!
+//! Losslessness: a Huffman code built from a cluster-merged (here:
+//! cohort-merged) distribution still decodes exactly (paper §5, Cover &
+//! Thomas) — the union tables guarantee codebook support ⊇ every member's
+//! support, so per-member round trips stay bit-exact.
+
+use crate::cluster::kmeans::{LloydEngine, NativeEngine};
+use crate::compress::pipeline::{build_codec_plan, encode_with_plan};
+use crate::compress::{CodecPlan, CompressOptions, CompressedForest};
+use crate::data::Dataset;
+use crate::forest::Forest;
+use anyhow::{bail, Context, Result};
+
+/// Compress every forest of a cohort against codebooks clustered over the
+/// union of all members' tree-model tables (native clustering engine).
+///
+/// Requirements: at least one member, every member non-empty, and all
+/// members sharing the dataset's schema and target kind (the subscriber
+/// scenario: one product model family, many per-user instances).
+pub fn compress_cohort(
+    forests: &[Forest],
+    ds: &Dataset,
+    opts: &CompressOptions,
+) -> Result<Vec<CompressedForest>> {
+    compress_cohort_with_engine(forests, ds, opts, &mut NativeEngine)
+}
+
+/// As [`compress_cohort`] with an explicit clustering engine.
+pub fn compress_cohort_with_engine(
+    forests: &[Forest],
+    ds: &Dataset,
+    opts: &CompressOptions,
+    engine: &mut dyn LloydEngine,
+) -> Result<Vec<CompressedForest>> {
+    let plan = cohort_plan(forests, ds, opts, engine)?;
+    forests
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            encode_with_plan(f, &plan, opts.workers)
+                .with_context(|| format!("encoding cohort member {i}"))
+        })
+        .collect()
+}
+
+/// Build the cohort-wide [`CodecPlan`]: union the members' trees and run the
+/// clustering sweeps once over the merged count tables.
+pub(crate) fn cohort_plan(
+    forests: &[Forest],
+    ds: &Dataset,
+    opts: &CompressOptions,
+    engine: &mut dyn LloydEngine,
+) -> Result<CodecPlan> {
+    if forests.is_empty() {
+        bail!("cannot compress an empty cohort");
+    }
+    let first = &forests[0];
+    for (i, f) in forests.iter().enumerate() {
+        if f.trees.is_empty() {
+            bail!("cohort member {i} is an empty forest");
+        }
+        if f.classification != first.classification || f.classes != first.classes {
+            bail!(
+                "cohort member {i} target (classification={}, classes={}) disagrees with \
+                 member 0 (classification={}, classes={})",
+                f.classification,
+                f.classes,
+                first.classification,
+                first.classes
+            );
+        }
+    }
+    let union = Forest {
+        trees: forests.iter().flat_map(|f| f.trees.iter().cloned()).collect(),
+        classification: first.classification,
+        classes: first.classes,
+    };
+    build_codec_plan(&union, ds, opts, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::forest::ForestParams;
+
+    fn cohort(n: usize, trees: usize, seed: u64) -> (Dataset, Vec<Forest>) {
+        let ds = synthetic::iris(55);
+        let forests = (0..n)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(trees), seed + i as u64))
+            .collect();
+        (ds, forests)
+    }
+
+    #[test]
+    fn cohort_members_round_trip_losslessly() {
+        let (ds, forests) = cohort(4, 3, 900);
+        let out = compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        assert_eq!(out.len(), forests.len());
+        for (cf, f) in out.iter().zip(&forests) {
+            let g = cf.decompress().unwrap();
+            assert!(g.identical(f), "cohort member must round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn cohort_members_share_side_info_bytes() {
+        let (ds, forests) = cohort(5, 2, 1000);
+        let out = compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        let spans: Vec<Vec<u8>> = out
+            .iter()
+            .map(|cf| {
+                let pc = cf.parse().unwrap();
+                let (s, e) = pc.side_info_span();
+                cf.bytes[s..e].to_vec()
+            })
+            .collect();
+        for (i, span) in spans.iter().enumerate().skip(1) {
+            assert_eq!(
+                span, &spans[0],
+                "member {i}'s TABLES/CLUSMAP/DICTS must be byte-identical to member 0's"
+            );
+        }
+        assert!(!spans[0].is_empty());
+    }
+
+    #[test]
+    fn cohort_regression_members_stay_bit_exact() {
+        let ds = synthetic::airfoil_regression(56);
+        let forests: Vec<Forest> = (0..3)
+            .map(|i| Forest::train(&ds, &ForestParams::regression(2), 1100 + i))
+            .collect();
+        let out = compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        for (cf, f) in out.iter().zip(&forests) {
+            assert!(cf.decompress().unwrap().identical(f));
+        }
+    }
+
+    #[test]
+    fn cohort_rejects_mismatched_members() {
+        let (ds, mut forests) = cohort(2, 2, 1200);
+        assert!(compress_cohort(&[], &ds, &CompressOptions::default()).is_err());
+        // a regression member in a classification cohort must be refused
+        let rds = synthetic::airfoil_regression(57);
+        forests.push(Forest::train(&rds, &ForestParams::regression(2), 1));
+        assert!(compress_cohort(&forests, &ds, &CompressOptions::default()).is_err());
+    }
+
+    #[test]
+    fn singleton_cohort_matches_plain_compression() {
+        // a cohort of one builds its plan from exactly the member's trees —
+        // the output must equal CompressedForest::compress byte for byte
+        let (ds, forests) = cohort(1, 4, 1300);
+        let opts = CompressOptions::default();
+        let a = compress_cohort(&forests, &ds, &opts).unwrap().remove(0);
+        let b = CompressedForest::compress(&forests[0], &ds, &opts).unwrap();
+        assert_eq!(a.bytes, b.bytes);
+    }
+}

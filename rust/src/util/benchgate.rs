@@ -13,11 +13,12 @@
 //! * `single_row_us.p99` — single-row tail latency; **lower** is better,
 //!   the gate fails when current > baseline · (1 + tolerance).
 //!
-//! Refreshing the baseline after an intentional perf change:
+//! Refreshing the baseline after an intentional perf change (validates the
+//! gated metrics exist before overwriting anything, unlike a blind `cp`):
 //!
 //! ```text
 //! cargo bench --bench hotpath -- serve --quick --trees 16
-//! cp BENCH_serve.json BENCH_baseline.json   # commit it
+//! repro bench-gate --current BENCH_serve.json --write-baseline   # commit it
 //! ```
 
 use crate::util::json::Json;
@@ -130,12 +131,37 @@ pub fn run_files(baseline: &Path, current: &Path, tolerance: f64) -> Result<bool
         println!(
             "bench-gate: FAIL — perf regressed past ±{:.0}% of {}; if intentional, \
              refresh the baseline (`cargo bench --bench hotpath -- serve --quick --trees 16 \
-             && cp BENCH_serve.json BENCH_baseline.json`)",
+             && repro bench-gate --current BENCH_serve.json --write-baseline`)",
             tolerance * 100.0,
             baseline.display()
         );
     }
     Ok(all_ok)
+}
+
+/// Rewrite the committed baseline from a current run (`repro bench-gate
+/// --write-baseline`). The current report must carry every gated metric —
+/// a baseline missing one would hard-fail every future gate run — and is
+/// then copied **verbatim**, so ungated context fields (trees, rows, worker
+/// scaling) stay diffable across refreshes.
+pub fn write_baseline(current: &Path, baseline: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(current)
+        .with_context(|| format!("reading current report {}", current.display()))?;
+    let doc = Json::parse(&text)
+        .with_context(|| format!("parsing current report {}", current.display()))?;
+    for &(label, path, _) in SERVE_GATES {
+        metric(&doc, "current", path)
+            .with_context(|| format!("refusing to write a baseline without {label}"))?;
+    }
+    std::fs::write(baseline, &text)
+        .with_context(|| format!("writing baseline {}", baseline.display()))?;
+    println!(
+        "bench-gate: baseline {} refreshed from {} ({} gated metrics verified)",
+        baseline.display(),
+        current.display(),
+        SERVE_GATES.len()
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -191,6 +217,32 @@ mod tests {
             Json::parse(r#"{"rows_per_sec": {"flat_warm": "fast"}, "single_row_us": {"p99": 1}}"#)
                 .unwrap();
         assert!(compare_serve(&non_numeric, &report(1.0, 1.0), 0.25).is_err());
+    }
+
+    #[test]
+    fn write_baseline_validates_then_copies_verbatim() {
+        let dir = std::env::temp_dir().join(format!("rfc-gate-wb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cur = dir.join("cur.json");
+        let base = dir.join("base.json");
+        // extra fields and formatting must survive the refresh byte-for-byte
+        let body = "{\n  \"rows_per_sec\": {\"flat_warm\": 1234.5},\n  \
+                    \"single_row_us\": {\"p99\": 9.5},\n  \"trees\": 16\n}\n";
+        std::fs::write(&cur, body).unwrap();
+        write_baseline(&cur, &base).unwrap();
+        assert_eq!(std::fs::read_to_string(&base).unwrap(), body);
+        // the refreshed baseline immediately passes the gate against itself
+        assert!(run_files(&base, &cur, 0.25).unwrap());
+
+        // a report missing a gated metric must NOT overwrite the baseline
+        std::fs::write(&cur, r#"{"rows_per_sec": {"flat_warm": 1.0}}"#).unwrap();
+        assert!(write_baseline(&cur, &base).is_err());
+        assert_eq!(std::fs::read_to_string(&base).unwrap(), body, "baseline untouched");
+        // unreadable / malformed current reports error out too
+        assert!(write_baseline(&dir.join("missing.json"), &base).is_err());
+        std::fs::write(&cur, "not json").unwrap();
+        assert!(write_baseline(&cur, &base).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

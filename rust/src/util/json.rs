@@ -327,4 +327,97 @@ mod tests {
         let j = Json::parse("\"héllo → wörld\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo → wörld"));
     }
+
+    #[test]
+    fn escaped_quotes_and_backslashes_in_strings() {
+        // every escape position: leading, trailing, adjacent, doubled
+        for (doc, want) in [
+            (r#""\"""#, "\""),
+            (r#""\\""#, "\\"),
+            (r#""\\\\""#, "\\\\"),
+            (r#""\"\"""#, "\"\""),
+            (r#""a\\\"b""#, "a\\\"b"),
+            (r#""\\n""#, "\\n"),
+            (r#""path\\to\\file""#, "path\\to\\file"),
+            (r#""end with \\""#, "end with \\"),
+        ] {
+            assert_eq!(Json::parse(doc).unwrap().as_str(), Some(want), "{doc}");
+        }
+        // a lone backslash before the closing quote swallows it: the
+        // document is unterminated and must error, not mis-parse
+        assert!(Json::parse(r#""\""#).is_err());
+        // escaped quotes inside object KEYS work too
+        let j = Json::parse(r#"{"a\"b": 1}"#).unwrap();
+        assert_eq!(j.get("a\"b").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn exponent_float_forms() {
+        for (doc, want) in [
+            ("1e10", 1e10),
+            ("1E10", 1e10),
+            ("1e+10", 1e10),
+            ("1e-10", 1e-10),
+            ("-2.5E-3", -2.5e-3),
+            ("0.0e0", 0.0),
+            ("123.456e2", 12345.6),
+            ("5e0", 5.0),
+        ] {
+            let got = Json::parse(doc).unwrap().as_f64().unwrap();
+            assert!((got - want).abs() <= want.abs() * 1e-12, "{doc}: {got} != {want}");
+        }
+        // malformed exponents must error, not round to something
+        for bad in ["1e", "1e+", "e10", "1.2.3", "--1", "1e10e10"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // exponent metrics survive a realistic report lookup
+        let j = Json::parse(r#"{"rows_per_sec": {"flat_warm": 2.5e6}}"#).unwrap();
+        assert_eq!(j.at(&["rows_per_sec", "flat_warm"]).unwrap().as_f64(), Some(2.5e6));
+    }
+
+    #[test]
+    fn deeply_nested_arrays_to_the_bound() {
+        // inside the bound parses; past it errors (no stack overflow). The
+        // innermost of n nested arrays runs at depth n-1, so n = MAX_DEPTH
+        // is safely inside and n = MAX_DEPTH + 2 is guaranteed past it.
+        let at = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&at).is_ok(), "{MAX_DEPTH} nested arrays must parse");
+        let past = "[".repeat(MAX_DEPTH + 2) + &"]".repeat(MAX_DEPTH + 2);
+        assert!(Json::parse(&past).is_err(), "{} nested arrays must error", MAX_DEPTH + 2);
+        // mixed nesting counts every level
+        let mixed = r#"{"a": [{"b": [[{"c": [1, [2, [3]]]}]]}]}"#;
+        let j = Json::parse(mixed).unwrap();
+        assert!(j.at(&["a"]).is_some());
+        // nesting with content at the leaves round-trips values
+        let deep = format!("{}42{}", "[".repeat(20), "]".repeat(20));
+        let mut cur = Json::parse(&deep).unwrap();
+        for _ in 0..20 {
+            cur = match cur {
+                Json::Arr(mut items) => items.remove(0),
+                other => panic!("array expected, got {other:?}"),
+            };
+        }
+        assert_eq!(cur.as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        for bad in [
+            "{} {}",
+            "[1] [2]",
+            "1 2",
+            "null null",
+            "{\"a\": 1} x",
+            "\"s\"garbage",
+            "[1],",
+            "{}]",
+            "true false",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must reject trailing garbage");
+        }
+        // trailing WHITESPACE (including newlines) is fine
+        for ok in ["{} ", "[1]\n", " 1 ", "null\r\n", "\t\"s\"\t"] {
+            assert!(Json::parse(ok).is_ok(), "{ok:?} must parse");
+        }
+    }
 }

@@ -431,3 +431,141 @@ fn store_direct_api_matches_forest() {
         assert_eq!(got, PredictOne::Class(forest.predict_class(&ds, row)));
     }
 }
+
+/// Build an in-memory cohort pack over tiny per-user iris forests.
+fn cohort_pack(
+    members: usize,
+    seed: u64,
+) -> (
+    Arc<rf_compress::pack::PackArchive>,
+    Vec<rf_compress::forest::Forest>,
+    Dataset,
+) {
+    use rf_compress::forest::{Forest, ForestParams};
+    let ds = synthetic::iris(90);
+    let forests: Vec<Forest> = (0..members)
+        .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+        .collect();
+    let cohort =
+        rf_compress::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+    let mut builder = rf_compress::pack::PackBuilder::new();
+    for (i, cf) in cohort.iter().enumerate() {
+        builder.add(&format!("user-{i}"), cf.bytes.clone()).unwrap();
+    }
+    let (bytes, _) = builder.build().unwrap();
+    let pack = rf_compress::pack::PackArchive::from_bytes(bytes).unwrap();
+    (Arc::new(pack), forests, ds)
+}
+
+#[test]
+fn pack_members_serve_over_tcp_with_stats() {
+    // a pack attaches as the third tier; members load on first PREDICT and
+    // the wire protocol reports the pack counters
+    let (pack, forests, ds) = cohort_pack(4, 31);
+    let store = Arc::new(ModelStore::new());
+    store.attach_pack(&pack).unwrap();
+    assert_eq!(store.packed_len(), 4, "members start unloaded");
+
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let list = client.request("LIST").unwrap();
+    for i in 0..4 {
+        assert!(list.contains(&format!("user-{i}")), "{list}");
+    }
+    // BYTES reports the packed tier before any load
+    let bytes = client.request("BYTES").unwrap();
+    let packed: u64 = bytes
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("packed="))
+        .expect("BYTES reply carries packed=")
+        .parse()
+        .unwrap();
+    assert!(packed > 0, "{bytes}");
+
+    // every member answers exactly like its original forest
+    for (m, forest) in forests.iter().enumerate() {
+        for row in (0..ds.num_rows()).step_by(37) {
+            let wire = values_to_wire(&row_values(&ds, row));
+            let reply = client.request(&format!("PREDICT user-{m} {wire}")).unwrap();
+            assert_eq!(reply, format!("OK {}", forest.predict_class(&ds, row)), "member {m}");
+        }
+    }
+    let stats = client.request("STATS").unwrap();
+    let loads: u64 = stats
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("pack_loads="))
+        .expect("STATS reply carries pack_loads=")
+        .parse()
+        .unwrap();
+    assert_eq!(loads, 4, "{stats}");
+    assert!(stats.contains("pack_releases=0"), "{stats}");
+    // loaded members left the packed tier
+    let bytes = client.request("BYTES").unwrap();
+    assert!(bytes.contains("packed=0"), "{bytes}");
+    server.stop();
+}
+
+#[test]
+fn pack_release_under_budget_keeps_every_member_servable() {
+    // budget for ~2 loaded members, 6 in the pack: sweeping all of them
+    // twice must release under pressure (never spill, never evict) and
+    // still answer correctly on both passes
+    let (pack, forests, ds) = cohort_pack(6, 32);
+    let one = pack.member_logical_bytes(0);
+    let store = Arc::new(ModelStore::with_budget(2 * one + one / 2));
+    store.attach_pack(&pack).unwrap();
+
+    for pass in 0..2 {
+        for (m, forest) in forests.iter().enumerate() {
+            let vals = row_values(&ds, m);
+            let got = store.predict(&format!("user-{m}"), &vals).unwrap();
+            assert_eq!(
+                got,
+                PredictOne::Class(forest.predict_class(&ds, m)),
+                "pass {pass}, member {m}"
+            );
+        }
+    }
+    assert!(store.resident_bytes() <= store.max_resident_bytes().unwrap());
+    let s = store.stats();
+    assert!(s.pack_loads >= 6, "every member loaded at least once");
+    assert!(s.pack_releases >= 4, "budget pressure must release members");
+    assert_eq!(s.spills, 0, "pack members never spill");
+    assert_eq!(s.evictions, 0, "pack members never drop");
+    assert_eq!(store.len(), 6, "all members still owned");
+}
+
+#[test]
+fn pack_file_round_trip_through_cli_surfaces() {
+    // the repro CLI path: write the archive to disk, reopen via mmap,
+    // extract every member bit-identical (what `repro pack extract` does)
+    use rf_compress::forest::{Forest, ForestParams};
+    let ds = synthetic::iris(93);
+    let forests: Vec<Forest> =
+        (0..3).map(|i| Forest::train(&ds, &ForestParams::classification(2), 60 + i)).collect();
+    let cohort =
+        rf_compress::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+    let mut builder = rf_compress::pack::PackBuilder::new();
+    for (i, cf) in cohort.iter().enumerate() {
+        builder.add(&format!("user-{i}"), cf.bytes.clone()).unwrap();
+    }
+    let path = std::env::temp_dir()
+        .join(format!("rfc-e2e-pack-{}.rfpk", std::process::id()));
+    let stats = builder.write(&path).unwrap();
+    assert!(stats.shared_saved_bytes > 0, "cohort must dedup side info");
+
+    let pack = rf_compress::pack::PackArchive::open(&path).unwrap();
+    for (i, cf) in cohort.iter().enumerate() {
+        assert_eq!(
+            pack.extract_member(i).unwrap()[..],
+            cf.bytes[..],
+            "member {i} bit-identical through disk + mmap"
+        );
+    }
+    // and a store mounted on the reopened pack serves from the mapping
+    let store = ModelStore::new();
+    store.attach_pack(&Arc::new(pack)).unwrap();
+    let got = store.predict("user-0", &row_values(&ds, 5)).unwrap();
+    assert_eq!(got, PredictOne::Class(forests[0].predict_class(&ds, 5)));
+    std::fs::remove_file(&path).unwrap();
+}

@@ -547,3 +547,93 @@ fn prop_spill_reload_round_trip_is_transparent() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_pack_round_trip_is_bit_identical() {
+    // ISSUE-4 acceptance property: build → mmap → extract reproduces every
+    // member container bit for bit, over random schemas, member counts
+    // 1/2/32, and with/without shared cohort codebooks; parsed members
+    // decode to their original forests straight out of the mapping.
+    use rf_compress::pack::{compress_cohort, PackArchive, PackBuilder};
+    use rf_compress::testing::prop::forall_cases;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static CASE: AtomicU64 = AtomicU64::new(0);
+    forall_cases("pack round trip", 12, &mut |g: &mut Gen| {
+        let n_rows = g.usize_in(12, 40);
+        let numeric = g.usize_in(0, 3);
+        let categorical = g.usize_in(if numeric == 0 { 1 } else { 0 }, 2);
+        let classification = g.bool(0.5);
+        let ds = g.dataset(n_rows, numeric, categorical, classification);
+        let members = [1usize, 2, 32][g.usize_in(0, 2)];
+        let shared = g.bool(0.5);
+        let params = if classification {
+            ForestParams {
+                tree: TreeParams { mtry: None, min_leaf: 2, max_depth: 3 },
+                ..ForestParams::classification(g.usize_in(1, 3))
+            }
+        } else {
+            ForestParams {
+                tree: TreeParams { mtry: None, min_leaf: 2, max_depth: 3 },
+                ..ForestParams::regression(g.usize_in(1, 3))
+            }
+        };
+        let forests: Vec<Forest> = (0..members)
+            .map(|i| Forest::train(&ds, &params, g.u64_in(1, 1 << 40) + i as u64))
+            .collect();
+        let opts = CompressOptions::default();
+        // shared mode compresses the cohort against union codebooks (the
+        // side sections then dedup); unshared compresses independently
+        let containers: Vec<std::sync::Arc<[u8]>> = if shared {
+            compress_cohort(&forests, &ds, &opts)
+                .map_err(|e| e.to_string())?
+                .into_iter()
+                .map(|cf| cf.bytes)
+                .collect()
+        } else {
+            forests
+                .iter()
+                .map(|f| CompressedForest::compress(f, &ds, &opts).map(|cf| cf.bytes))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?
+        };
+
+        let mut builder = PackBuilder::new().shared(shared);
+        for (i, bytes) in containers.iter().enumerate() {
+            builder.add(&format!("m{i}"), bytes.clone()).map_err(|e| e.to_string())?;
+        }
+        let path = std::env::temp_dir().join(format!(
+            "rfc-prop-pack-{}-{}.rfpk",
+            std::process::id(),
+            CASE.fetch_add(1, Ordering::Relaxed)
+        ));
+        builder.write(&path).map_err(|e| e.to_string())?;
+
+        // mmap the archive back and check every member
+        let pack = PackArchive::open(&path).map_err(|e| e.to_string())?;
+        if pack.member_count() != members {
+            return Err(format!("{} members stored, {members} expected", pack.member_count()));
+        }
+        if shared && members >= 2 && pack.blob_count() == 0 {
+            return Err("cohort members must share a side-info blob".into());
+        }
+        for (i, bytes) in containers.iter().enumerate() {
+            let extracted = pack.extract_member(i).map_err(|e| e.to_string())?;
+            if extracted[..] != bytes[..] {
+                return Err(format!(
+                    "member {i}: extraction differs (got {} bytes, want {}, shared={shared})",
+                    extracted.len(),
+                    bytes.len()
+                ));
+            }
+            let pc = pack.parse_member(i).map_err(|e| e.to_string())?;
+            let decoded = rf_compress::compress::pipeline::decompress_container(&pc)
+                .map_err(|e| e.to_string())?;
+            if !decoded.identical(&forests[i]) {
+                return Err(format!("member {i}: packed decode diverges from the forest"));
+            }
+        }
+        std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
