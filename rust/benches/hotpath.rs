@@ -5,8 +5,11 @@
 //! * prediction latency: compressed prefix-decode vs decompressed forest
 //! * serving hot path: single-row latency (p50/p99), batch throughput of
 //!   the PR-1 re-decode baseline vs the flat-tree engine (cold and with a
-//!   warm plan cache), worker scaling on both parallelism axes; emits the
-//!   machine-readable `BENCH_serve.json` tracked across PRs (and gated by
+//!   warm plan cache), worker scaling on both parallelism axes, and the
+//!   serial-vs-pipelined client tail-latency comparison over a mixed
+//!   hot/cold model set (one connection, `PIPE` out-of-order replies vs
+//!   head-of-line-blocked `PREDICT`); emits the machine-readable
+//!   `BENCH_serve.json` tracked across PRs (and gated by
 //!   `repro bench-gate` in CI)
 //! * tiered-store spill path: mmap-backed reload (map + header parse) vs a
 //!   cold full-read parse, p50/p99, plus the end-to-end spill→reload round
@@ -324,6 +327,9 @@ fn bench_serve(cfg: &rf_compress::util::bench::BenchConfig) {
         rps(&t_small_8)
     );
 
+    // pipelined vs serial tail latency over TCP (mixed hot/cold models)
+    let pipeline = bench_pipeline(&ds, &cf, &small_cf, quick);
+
     let ps = cache.stats();
     write_serve_json(
         n_trees,
@@ -335,8 +341,167 @@ fn bench_serve(cfg: &rf_compress::util::bench::BenchConfig) {
         &scaling,
         (rps(&t_small_1), rps(&t_small_8)),
         (ps.hits, ps.misses, ps.resident_bytes),
+        &pipeline,
     );
     println!();
+}
+
+/// Serial-vs-pipelined client comparison: one connection fires a flash
+/// crowd of requests over a **mixed hot/cold model set** — most target a
+/// tiny resident model, every eighth targets a big model that was just
+/// spilled to disk (so answering it pays the reload). Latency is measured
+/// per request from the common issue epoch (the moment the crowd arrives),
+/// which is what a user behind the connection experiences: the serial
+/// client pays head-of-line blocking — every request waits for all earlier
+/// replies, each with its own batch window — while the pipelined client
+/// overlaps the cold reloads with every hot answer and collects replies
+/// out of order.
+struct PipelineBench {
+    requests: usize,
+    /// Pooled median over all passes.
+    serial_p50_us: f64,
+    /// Median of the per-pass p99s (robust to one stalled pass).
+    serial_p99_us: f64,
+    /// Pooled median over all passes.
+    pipe_p50_us: f64,
+    /// Median of the per-pass p99s (robust to one stalled pass).
+    pipe_p99_us: f64,
+}
+
+fn bench_pipeline(
+    ds: &rf_compress::data::Dataset,
+    cold_cf: &CompressedForest,
+    hot_cf: &CompressedForest,
+    quick: bool,
+) -> PipelineBench {
+    use rf_compress::coordinator::server::{values_to_wire, Client, PipeReply, Server};
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::data::Column;
+
+    println!("== pipelined vs serial tail latency (mixed hot/cold models) ==");
+    let n_req = if quick { 32 } else { 64 };
+    let passes = if quick { 3 } else { 5 };
+    const COLD_MODELS: usize = 4;
+    let dir = std::env::temp_dir().join(format!("rfc-pipe-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let store = std::sync::Arc::new(ModelStore::new().spill_dir(&dir));
+    store.insert("hot", hot_cf).unwrap();
+    for i in 0..COLD_MODELS {
+        store.insert(&format!("cold-{i}"), cold_cf).unwrap();
+    }
+    let server = Server::start(store.clone(), 0).unwrap();
+
+    let row0: Vec<ObsValue> = ds
+        .features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => ObsValue::Num(v[0]),
+            Column::Categorical { values, .. } => ObsValue::Cat(values[0]),
+        })
+        .collect();
+    let wire = values_to_wire(&row0);
+    // request i targets a cold (just-spilled, big) model every 8th slot and
+    // the hot resident model otherwise
+    let target = |i: usize| {
+        if i % 8 == 0 {
+            format!("cold-{}", (i / 8) % COLD_MODELS)
+        } else {
+            "hot".to_string()
+        }
+    };
+    // warm the hot model once so both clients measure steady-state heat
+    let mut warm = Client::connect(server.addr()).unwrap();
+    let reply = warm.request(&format!("PREDICT hot {wire}")).unwrap();
+    assert!(reply.starts_with("OK"), "{reply}");
+
+    let spill_all_cold = || {
+        for i in 0..COLD_MODELS {
+            assert!(
+                store.spill(&format!("cold-{i}")).unwrap(),
+                "cold model must spill between passes"
+            );
+        }
+    };
+    let quantile = rf_compress::util::stats::quantile;
+    let mut serial_us: Vec<f64> = Vec::with_capacity(n_req * passes);
+    let mut pipe_us: Vec<f64> = Vec::with_capacity(n_req * passes);
+    // per-pass p99s: the headline tail metric is the MEDIAN of these, so a
+    // single scheduler stall in one pass (a pooled p99 is effectively the
+    // max sample) cannot flip the serial-vs-pipelined comparison in CI
+    let mut serial_pass_p99: Vec<f64> = Vec::with_capacity(passes);
+    let mut pipe_pass_p99: Vec<f64> = Vec::with_capacity(passes);
+    for _ in 0..passes {
+        // serial: each request waits for the previous reply (head-of-line)
+        spill_all_cold();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let epoch = std::time::Instant::now();
+        let mut pass: Vec<f64> = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            let reply = client.request(&format!("PREDICT {} {wire}", target(i))).unwrap();
+            assert!(reply.starts_with("OK"), "serial request {i}: {reply}");
+            pass.push(epoch.elapsed().as_secs_f64() * 1e6);
+        }
+        serial_pass_p99.push(quantile(&pass, 0.99));
+        serial_us.extend(pass);
+        // pipelined: issue the whole crowd, collect replies as they arrive
+        spill_all_cold();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let epoch = std::time::Instant::now();
+        for i in 0..n_req {
+            client.pipe_predict(i as u64, &target(i), &wire).unwrap();
+        }
+        let mut seen = vec![false; n_req];
+        let mut pass: Vec<f64> = Vec::with_capacity(n_req);
+        for _ in 0..n_req {
+            let reply = client.recv_pipelined().unwrap();
+            pass.push(epoch.elapsed().as_secs_f64() * 1e6);
+            match reply {
+                PipeReply::Ok { id, .. } => seen[id as usize] = true,
+                PipeReply::Err { id, message } => {
+                    panic!("pipelined request {id:?} failed: {message}")
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every id answered exactly once");
+        pipe_pass_p99.push(quantile(&pass, 0.99));
+        pipe_us.extend(pass);
+    }
+    let out = PipelineBench {
+        requests: n_req,
+        serial_p50_us: quantile(&serial_us, 0.5),
+        serial_p99_us: quantile(&serial_pass_p99, 0.5),
+        pipe_p50_us: quantile(&pipe_us, 0.5),
+        pipe_p99_us: quantile(&pipe_pass_p99, 0.5),
+    };
+    let mut t = Table::new(&["client", "p50", "p99", "p99 vs serial"]);
+    t.row(&[
+        "serial PREDICT (in order)".into(),
+        format!("{:.0} µs", out.serial_p50_us),
+        format!("{:.0} µs", out.serial_p99_us),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "pipelined PIPE (out of order)".into(),
+        format!("{:.0} µs", out.pipe_p50_us),
+        format!("{:.0} µs", out.pipe_p99_us),
+        format!("{:.2}x", out.serial_p99_us / out.pipe_p99_us.max(1e-9)),
+    ]);
+    t.print();
+    // the acceptance gate: removing head-of-line blocking must show up as
+    // a strictly better client-observed tail on the mixed workload
+    assert!(
+        out.pipe_p99_us < out.serial_p99_us,
+        "pipelined p99 ({:.0} µs) must beat serial p99 ({:.0} µs)",
+        out.pipe_p99_us,
+        out.serial_p99_us
+    );
+    server.stop();
+    drop(server);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
 }
 
 /// Machine-readable serve-bench results, tracked across PRs
@@ -352,6 +517,7 @@ fn write_serve_json(
     scaling: &[(usize, f64)],
     row_axis: (f64, f64),
     plans: (u64, u64, u64),
+    pipeline: &PipelineBench,
 ) {
     let scaling_json: Vec<String> = scaling
         .iter()
@@ -382,8 +548,20 @@ fn write_serve_json(
             row_axis.0, row_axis.1
         ),
         format!(
-            "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"resident_bytes\": {}}}",
+            "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"resident_bytes\": {}}},",
             plans.0, plans.1, plans.2
+        ),
+        format!(
+            "  \"pipeline\": {{\"requests\": {}, \
+             \"serial_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"pipelined_us\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"p99_speedup\": {:.3}}}",
+            pipeline.requests,
+            pipeline.serial_p50_us,
+            pipeline.serial_p99_us,
+            pipeline.pipe_p50_us,
+            pipeline.pipe_p99_us,
+            pipeline.serial_p99_us / pipeline.pipe_p99_us.max(1e-9)
         ),
         "}".to_string(),
     ];

@@ -24,6 +24,7 @@ pub fn gzip(data: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Inverse of [`gzip`]: decompress an `RFGZ` stream.
 pub fn gunzip(data: &[u8]) -> Result<Vec<u8>> {
     let Some(body) = data.strip_prefix(&GZ_MAGIC[..]) else {
         bail!("gunzip: not an RFGZ stream");
@@ -68,6 +69,7 @@ fn huffman_pass(lzb: &[u8]) -> Result<Vec<u8>> {
     Ok(w.into_bytes())
 }
 
+/// Inverse of [`zstd_strong`]: decompress an `RFZS` stream.
 pub fn unzstd(data: &[u8]) -> Result<Vec<u8>> {
     let Some(body) = data.strip_prefix(&ZS_MAGIC[..]) else {
         bail!("unzstd: not an RFZS stream");

@@ -79,9 +79,13 @@ pub fn standard_representation(forest: &Forest, ds: &Dataset) -> Vec<u8> {
 /// "light comp." row is this, gzip'd per component).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LightSections {
+    /// Tree-structure bytes.
     pub structure: u64,
+    /// Variable-name bytes.
     pub var_names: u64,
+    /// Split-value bytes.
     pub split_values: u64,
+    /// Fit bytes.
     pub fits: u64,
 }
 

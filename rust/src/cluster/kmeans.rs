@@ -131,7 +131,9 @@ impl LloydEngine for NativeEngine {
 /// A fixed-K clustering result.
 #[derive(Debug, Clone)]
 pub struct Clustering {
+    /// Number of clusters.
     pub k: usize,
+    /// Cluster index per input row.
     pub assignments: Vec<u32>,
     /// Final centroids (K×B row-major), un-smoothed weighted means.
     pub centroids: Vec<f64>,

@@ -18,6 +18,7 @@ use crate::model::extract::CountTable;
 /// Result of a K sweep.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
+    /// The winning clustering over the swept K values.
     pub best: Clustering,
     /// Total objective of the winner (data bits + α·B·K).
     pub objective: f64,

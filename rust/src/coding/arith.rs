@@ -97,14 +97,17 @@ impl FreqModel {
         Ok(FreqModel { cum })
     }
 
+    /// Number of symbols in the model's alphabet.
     pub fn alphabet_size(&self) -> usize {
         self.cum.len() - 1
     }
 
+    /// Sum of all symbol frequencies.
     pub fn total(&self) -> u64 {
         *self.cum.last().unwrap()
     }
 
+    /// Frequency of one symbol.
     pub fn freq(&self, sym: u32) -> u64 {
         self.cum[sym as usize + 1] - self.cum[sym as usize]
     }
@@ -153,6 +156,7 @@ impl FreqModel {
         }
     }
 
+    /// Deserialize a model written by `write`.
     pub fn read(r: &mut BitReader) -> Result<Self> {
         let n = r.read_varint().context("freq model: n")? as usize;
         if n == 0 || n > 100_000_000 {
@@ -184,6 +188,7 @@ pub struct ArithEncoder<'a> {
 }
 
 impl<'a> ArithEncoder<'a> {
+    /// An encoder emitting into `out`.
     pub fn new(out: &'a mut BitWriter) -> Self {
         ArithEncoder {
             low: 0,

@@ -13,6 +13,7 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -140,6 +141,7 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// A reader positioned at the first bit of `data`.
     pub fn new(data: &'a [u8]) -> Self {
         BitReader { data, pos: 0 }
     }
@@ -195,6 +197,7 @@ impl<'a> BitReader<'a> {
         Some(v)
     }
 
+    /// Read 8 bits as a byte (`None` past the end).
     pub fn read_byte(&mut self) -> Option<u8> {
         self.read_bits(8).map(|v| v as u8)
     }

@@ -60,12 +60,14 @@ impl F64Codec {
         total / values.len() as f64
     }
 
+    /// Encode one value (Huffman-coded high bits + raw mantissa).
     pub fn encode(&self, v: f64, w: &mut BitWriter) -> Result<()> {
         self.code.encode(high(v), w)?;
         w.write_bits(v.to_bits() & ((1u64 << MANTISSA_BITS) - 1), MANTISSA_BITS);
         Ok(())
     }
 
+    /// Decode one value written by [`Self::encode`].
     pub fn decode(&self, r: &mut BitReader) -> Result<f64> {
         let h = self.decoder.decode(r)? as u64;
         let m = r.read_bits(MANTISSA_BITS).context("f64 mantissa")?;
@@ -78,6 +80,7 @@ impl F64Codec {
         self.code.write_dict(w);
     }
 
+    /// Deserialize a codec written by [`Self::write_dict`].
     pub fn read_dict(r: &mut BitReader) -> Result<Self> {
         let code = HuffmanCode::read_dict(r)?;
         let decoder = code.decoder();
@@ -102,6 +105,7 @@ pub fn write_block(values: &[f64], w: &mut BitWriter) -> Result<()> {
     Ok(())
 }
 
+/// Read a block written by [`write_block`].
 pub fn read_block(r: &mut BitReader) -> Result<Vec<f64>> {
     let codec = F64Codec::read_dict(r)?;
     let n = r.read_varint().context("f64 block count")? as usize;

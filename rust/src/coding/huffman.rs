@@ -256,6 +256,7 @@ pub struct HuffmanDecoder {
 pub const FAST_BITS: u8 = 10;
 
 impl HuffmanDecoder {
+    /// Build the fast-table decoder for a canonical code.
     pub fn new(code: &HuffmanCode) -> Self {
         let max_len = code.lengths.iter().copied().max().unwrap_or(0);
         let mut order: Vec<u32> = (0..code.lengths.len() as u32)

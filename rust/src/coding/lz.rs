@@ -135,6 +135,7 @@ pub fn compress_to_bytes(data: &[u8]) -> Vec<u8> {
     w.into_bytes()
 }
 
+/// Decompress a buffer produced by [`compress_to_bytes`].
 pub fn decompress_from_bytes(bytes: &[u8]) -> Result<Vec<u8>> {
     let mut r = BitReader::new(bytes);
     decompress(&mut r)

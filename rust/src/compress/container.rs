@@ -35,7 +35,9 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+/// Container file magic (`RFCZ`).
 pub const MAGIC: &[u8; 4] = b"RFCZ";
+/// Container format version this build reads and writes.
 pub const VERSION: u8 = 1;
 
 /// A parsed container's byte source. Payload sections alias this buffer
@@ -56,16 +58,24 @@ pub const VERSION: u8 = 1;
 /// [`ParsedContainer`]).
 #[derive(Clone)]
 pub enum SharedBytes {
+    /// A heap buffer (freshly compressed or read into memory).
     Heap(Arc<[u8]>),
+    /// A read-only file mapping (spill reload, pack archive).
     Mapped(Arc<Mmap>),
+    /// A bounds-checked sub-range of another buffer (a pack member's
+    /// span within its archive's single mapping).
     View {
+        /// The buffer this view aliases.
         base: Arc<SharedBytes>,
+        /// Start of the view within `base`.
         offset: usize,
+        /// Length of the view in bytes.
         len: usize,
     },
 }
 
 impl SharedBytes {
+    /// The underlying bytes, wherever they live.
     pub fn as_slice(&self) -> &[u8] {
         match self {
             SharedBytes::Heap(b) => b,
@@ -95,14 +105,18 @@ impl SharedBytes {
         })
     }
 
+    /// Address of the first byte (pointer-identity tests use this to
+    /// assert zero-copy parsing).
     pub fn as_ptr(&self) -> *const u8 {
         self.as_slice().as_ptr()
     }
 
+    /// Buffer length in bytes.
     pub fn len(&self) -> usize {
         self.as_slice().len()
     }
 
+    /// Whether the buffer is empty.
     pub fn is_empty(&self) -> bool {
         self.as_slice().is_empty()
     }
@@ -179,20 +193,28 @@ pub enum FitCodec {
 /// Per-section byte sizes — the paper's Table 1 breakdown.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SectionSizes {
+    /// Fixed header + feature metadata bytes.
     pub header: u64,
     /// TABLES minus the fit value table (split-value alphabets).
     pub split_value_tables: u64,
     /// Regression fit value alphabet (64 bits per distinct fit).
     pub fit_value_table: u64,
+    /// Context-key → cluster assignment maps.
     pub cluster_maps: u64,
+    /// Per-cluster Huffman codebooks.
     pub dictionaries: u64,
+    /// Zaks tree-structure stream.
     pub structure: u64,
+    /// Variable-name (split feature) stream.
     pub var_names: u64,
+    /// Split-value stream.
     pub split_values: u64,
+    /// Leaf/node fit stream.
     pub fits: u64,
 }
 
 impl SectionSizes {
+    /// Total container bytes across every section.
     pub fn total(&self) -> u64 {
         self.header
             + self.split_value_tables
@@ -222,14 +244,20 @@ impl SectionSizes {
 /// The five columns of the paper's Table 1.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PaperColumns {
+    /// Tree-structure bytes (Zaks stream).
     pub structure: u64,
+    /// Variable-name bytes.
     pub var_names: u64,
+    /// Split-value bytes.
     pub split_values: u64,
+    /// Fit bytes.
     pub fits: u64,
+    /// Dictionary bytes (tables + cluster maps + codebooks).
     pub dict: u64,
 }
 
 impl PaperColumns {
+    /// Sum over the five columns.
     pub fn total(&self) -> u64 {
         self.structure + self.var_names + self.split_values + self.fits + self.dict
     }
@@ -239,6 +267,7 @@ impl PaperColumns {
 /// reproduce the original model exactly).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FeatureMeta {
+    /// Feature name, reproduced exactly on decompression.
     pub name: String,
     /// `None` = numeric; `Some(levels)` = categorical.
     pub levels: Option<u32>,
@@ -254,12 +283,19 @@ pub struct FeatureMeta {
 /// (the model store's resident-bytes accounting counts the buffer once).
 #[derive(Debug, Clone)]
 pub struct ParsedContainer {
+    /// Whether the forest classifies (vs regresses).
     pub classification: bool,
+    /// Number of classes (classification only).
     pub classes: u32,
+    /// Number of trees in the forest.
     pub n_trees: usize,
+    /// Per-feature metadata from the header.
     pub features: Vec<FeatureMeta>,
+    /// How fit values are coded.
     pub fit_codec: FitCodec,
+    /// The `(depth, father)` conditioning scheme of the tree models.
     pub conditioning: ModelConditioning,
+    /// Decoded split/fit value alphabets (TABLES section).
     pub alphabets: ValueAlphabets,
     /// Per-feature: `Some(ranks)` when the numeric split alphabet is
     /// **dataset-indexed** (paper mode §3.2.2: each used threshold is the
@@ -269,12 +305,17 @@ pub struct ParsedContainer {
     pub indexed_splits: Vec<Option<Vec<u64>>>,
     /// context-key → cluster, per model family
     pub vn_map: BTreeMap<ContextKey, u32>,
+    /// Per-feature context-key → cluster maps for split values.
     pub split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    /// Context-key → cluster map for fits.
     pub fit_map: BTreeMap<ContextKey, u32>,
     /// per-cluster codebooks
     pub vn_dicts: Vec<HuffmanCode>,
+    /// Per-feature, per-cluster split-value codebooks.
     pub split_dicts: Vec<Vec<HuffmanCode>>,
+    /// Per-cluster fit codebooks.
     pub fit_dicts: Vec<HuffmanCode>,
+    /// Per-cluster arithmetic-coder fit models.
     pub fit_models: Vec<FreqModel>,
     /// sign/exponent codec for [`FitCodec::Raw64`] fit streams
     pub fit_raw_codec: Option<F64Codec>,
@@ -282,7 +323,9 @@ pub struct ParsedContainer {
     pub zaks_bits: Vec<bool>,
     /// per-tree byte ranges (start, end) into each payload section
     pub vars_ranges: Vec<(usize, usize)>,
+    /// Per-tree byte ranges into the split-value section.
     pub splits_ranges: Vec<(usize, usize)>,
+    /// Per-tree byte ranges into the fit section.
     pub fits_ranges: Vec<(usize, usize)>,
     /// the shared container buffer (heap or mmap); payload sections are
     /// views into it
@@ -295,6 +338,7 @@ pub struct ParsedContainer {
     vars_span: (usize, usize),
     splits_span: (usize, usize),
     fits_span: (usize, usize),
+    /// Per-section byte accounting of this container.
     pub sizes: SectionSizes,
 }
 
@@ -411,29 +455,46 @@ impl ParsedContainer {
 
 /// Everything the encoder assembled, ready for serialization.
 pub struct ContainerBuilder {
+    /// Whether the forest classifies (vs regresses).
     pub classification: bool,
+    /// Number of classes (classification only).
     pub classes: u32,
+    /// Number of trees in the forest.
     pub n_trees: usize,
+    /// Per-feature metadata for the header.
     pub features: Vec<FeatureMeta>,
+    /// How fit values are coded.
     pub fit_codec: FitCodec,
+    /// The `(depth, father)` conditioning scheme of the tree models.
     pub conditioning: ModelConditioning,
+    /// Split/fit value alphabets (serialized into TABLES).
     pub alphabets: ValueAlphabets,
     /// `Some(ranks)` per feature ⇒ emit the numeric split alphabet as
     /// dataset ranks (sorted, delta-gamma coded) instead of f64 values.
     pub indexed_splits: Vec<Option<Vec<u64>>>,
+    /// Context-key → cluster map for variable names.
     pub vn_map: BTreeMap<ContextKey, u32>,
+    /// Per-feature context-key → cluster maps for split values.
     pub split_maps: Vec<BTreeMap<ContextKey, u32>>,
+    /// Context-key → cluster map for fits.
     pub fit_map: BTreeMap<ContextKey, u32>,
+    /// Per-cluster variable-name codebooks.
     pub vn_dicts: Vec<HuffmanCode>,
+    /// Per-feature, per-cluster split-value codebooks.
     pub split_dicts: Vec<Vec<HuffmanCode>>,
+    /// Per-cluster fit codebooks.
     pub fit_dicts: Vec<HuffmanCode>,
+    /// Per-cluster arithmetic-coder fit models.
     pub fit_models: Vec<FreqModel>,
+    /// Sign/exponent codec for raw-64 fit streams.
     pub fit_raw_codec: Option<F64Codec>,
     /// LZ-compressed packed Zaks stream (already encoded)
     pub struct_bytes: Vec<u8>,
     /// per-tree payloads, each byte-aligned
     pub vars_trees: Vec<Vec<u8>>,
+    /// Per-tree split-value payloads, each byte-aligned.
     pub splits_trees: Vec<Vec<u8>>,
+    /// Per-tree fit payloads, each byte-aligned.
     pub fits_trees: Vec<Vec<u8>>,
 }
 

@@ -55,7 +55,9 @@ pub const DEFAULT_PLAN_CACHE_BYTES: u64 = 64 << 20;
 /// skip-decode that keeps the streams in sync).
 #[derive(Debug, Clone, PartialEq)]
 pub enum FlatFits {
+    /// Classification fits: one class label per node.
     Classes(Vec<u32>),
+    /// Regression fits: one value per node.
     Values(Vec<f64>),
 }
 
@@ -81,7 +83,9 @@ pub struct FlatTree {
 /// per feature, not once per node visit.
 #[derive(Clone, Copy)]
 pub enum ColRef<'a> {
+    /// A numeric column's values.
     Num(&'a [f64]),
+    /// A categorical column's level indices.
     Cat(&'a [u32]),
 }
 
@@ -218,6 +222,7 @@ impl FlatTree {
         Ok(FlatTree { feature, threshold, mask, left, right, fits })
     }
 
+    /// Number of nodes in this flat tree.
     pub fn node_count(&self) -> usize {
         self.left.len()
     }
@@ -233,6 +238,7 @@ impl FlatTree {
         n * (4 + 8 + 8 + 4 + 4) + fit_bytes
     }
 
+    /// The per-node fit payloads.
     pub fn fits(&self) -> &FlatFits {
         &self.fits
     }
@@ -321,10 +327,15 @@ impl FlatTree {
 /// `STATS` verb as `plan_hits`/`plan_misses`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PlanStats {
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that had to decode a tree.
     pub misses: u64,
+    /// Plans dropped to fit the byte budget.
     pub evictions: u64,
+    /// Decoded plan bytes currently resident.
     pub resident_bytes: u64,
+    /// Number of plans currently resident.
     pub plans: u64,
 }
 
@@ -362,6 +373,7 @@ pub struct PlanCache {
 }
 
 impl PlanCache {
+    /// An empty cache capped at `max_bytes` of decoded plans.
     pub fn new(max_bytes: u64) -> Self {
         PlanCache {
             max_bytes: AtomicU64::new(max_bytes),
@@ -464,6 +476,7 @@ impl PlanCache {
         self.shrink_to(max_bytes);
     }
 
+    /// The current byte budget.
     pub fn max_bytes(&self) -> u64 {
         self.max_bytes.load(Ordering::Relaxed)
     }
@@ -487,18 +500,22 @@ impl PlanCache {
         freed
     }
 
+    /// Decoded plan bytes currently resident.
     pub fn resident_bytes(&self) -> u64 {
         self.inner.lock().unwrap().bytes
     }
 
+    /// Number of plans currently resident.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().plans.len()
     }
 
+    /// Whether the cache holds no plans.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Snapshot of the cache counters and residency.
     pub fn stats(&self) -> PlanStats {
         let g = self.inner.lock().unwrap();
         PlanStats {

@@ -81,7 +81,9 @@ impl Default for CompressOptions {
 /// container.
 #[derive(Debug, Clone)]
 pub struct CompressedForest {
+    /// The complete `RFCZ` container bytes.
     pub bytes: std::sync::Arc<[u8]>,
+    /// Per-section byte accounting.
     pub sizes: SectionSizes,
     /// (family label, chosen K) per clustering sweep, for §6-style analysis.
     pub cluster_ks: Vec<(String, usize)>,

@@ -142,6 +142,7 @@ impl CompressedPredictor {
         Ok(())
     }
 
+    /// Number of trees in the underlying forest.
     pub fn num_trees(&self) -> usize {
         self.pc.n_trees
     }
@@ -537,7 +538,9 @@ impl CompressedPredictor {
 /// One aggregated prediction.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PredictOne {
+    /// A regression mean.
     Value(f64),
+    /// A majority-vote class label.
     Class(u32),
 }
 

@@ -9,8 +9,10 @@
 //!   memory, answering predictions straight from the compressed bytes (the
 //!   paper's subscriber-device scenario)
 //! * [`server`]  — a TCP front-end over the store with per-model
-//!   micro-batching: a line protocol (`PREDICT`, `LIST`, `STATS`) suitable
-//!   for the end-to-end example and the latency benches
+//!   micro-batching and per-connection pipelining: a line protocol
+//!   (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `QUIT`; specified in
+//!   `rust/PROTOCOL.md`) suitable for the end-to-end example and the
+//!   latency benches
 
 pub mod pipeline;
 pub mod server;

@@ -18,33 +18,45 @@ use std::time::Instant;
 /// straight from this.
 #[derive(Debug, Clone)]
 pub struct CompressionReport {
+    /// Dataset name.
     pub dataset: String,
+    /// Number of trees compressed.
     pub n_trees: usize,
+    /// Total nodes across the forest.
     pub total_nodes: usize,
+    /// Mean tree depth.
     pub mean_depth: f64,
     /// paper's comparators (bytes, after gzip)
     pub standard_bytes: u64,
+    /// The "light" baseline's bytes.
     pub light_bytes: u64,
     /// Algorithm 1 (bytes) + per-section breakdown
     pub ours_bytes: u64,
+    /// Per-section byte breakdown of the container.
     pub sections: crate::compress::SectionSizes,
     /// chosen cluster counts per model family
     pub cluster_ks: Vec<(String, usize)>,
     /// timings (seconds)
     pub train_s: f64,
+    /// Compression wall time, seconds.
     pub compress_s: f64,
+    /// Baseline (gzip comparators) wall time, seconds.
     pub baseline_s: f64,
     /// engine used and how many Lloyd steps ran where
     pub engine: &'static str,
+    /// Lloyd steps answered by the XLA artifact.
     pub xla_steps: u64,
+    /// Lloyd steps answered by the native fallback.
     pub native_steps: u64,
 }
 
 impl CompressionReport {
+    /// Compression ratio vs the "standard" baseline.
     pub fn standard_ratio(&self) -> f64 {
         self.standard_bytes as f64 / self.ours_bytes.max(1) as f64
     }
 
+    /// Compression ratio vs the "light" baseline.
     pub fn light_ratio(&self) -> f64 {
         self.light_bytes as f64 / self.ours_bytes.max(1) as f64
     }
@@ -67,6 +79,7 @@ impl CompressionReport {
 /// The coordinator: a reusable engine + worker configuration.
 pub struct Coordinator {
     engine: HybridEngine,
+    /// Worker threads for the extraction/encoding passes.
     pub workers: usize,
 }
 
@@ -81,6 +94,7 @@ impl Coordinator {
         Coordinator { engine: HybridEngine::native_only(), workers: 1 }
     }
 
+    /// Label of the clustering engine in use (logs/benches).
     pub fn engine_name(&self) -> &'static str {
         self.engine.name()
     }

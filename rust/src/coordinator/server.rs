@@ -1,35 +1,58 @@
-//! TCP front-end over the [`ModelStore`] with per-model micro-batching —
-//! the "subscriber" serving loop of the end-to-end example.
+//! TCP front-end over the [`ModelStore`] with per-model micro-batching and
+//! per-connection request pipelining.
 //!
-//! Line protocol (UTF-8, one request per line):
+//! **Wire protocol:** see [`PROTOCOL.md`](../../PROTOCOL.md) (in the
+//! `rust/` crate root) for the complete specification — every verb
+//! (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `QUIT`), the reply and
+//! error-line grammar, ordering guarantees, timeout/backpressure behavior,
+//! and the glossary of every `STATS`/`BYTES` counter. A unit test in this
+//! module (`protocol_doc_covers_every_counter`) keeps that document and the
+//! `STATS` renderer from drifting apart.
+//!
+//! Connection anatomy (one TCP connection):
 //!
 //! ```text
-//! PREDICT <model> <v1>,<v2>,...     → OK <class|value>       (numeric vi;
-//!                                      categorical levels as c<idx>, e.g. c3)
-//! LIST                              → OK <model> <model> ...
-//! STATS                             → OK requests=.. batches=.. mean_us=..
-//!                                         max_us=.. evictions=..
-//!                                         spills=.. reloads=..
-//!                                         spill_bytes=..
-//!                                         plan_hits=.. plan_misses=..
-//!                                         pack_loads=.. pack_releases=..
-//! BYTES                             → OK resident=<bytes> plans=<bytes>
-//!                                         spilled=<bytes> packed=<bytes>
-//! QUIT                              → connection closes
+//!            ┌─────────────── reader thread ────────────────┐ serial replies
+//! client ──► │ parse line → verb                            │ written directly,
+//!            │   PREDICT …      rendezvous with the batcher │ in order, blocking
+//!            │   PIPE id …      admit (cap) + dispatch      │ ──► client
+//!            │   LIST/STATS/…   answer inline               │ (backpressure)
+//!            └──────────────────────────┬───────────────────┘
+//!                         tagged jobs   │
+//!            ┌── per-model batchers ────▼──────────────────┐
+//!            │ drain ≤ BATCH_WINDOW, answer the batch,     │
+//!            │ enqueue `OK <id> …` into the conn outbox    │
+//!            └──────────────────────────┬──────────────────┘
+//!                     outbox (≤ in-flight cap entries)
+//!            ┌─────── writer thread ────▼───────────────────┐
+//! client ◄── │ drain the outbox, answer OUT OF ORDER as     │
+//!            │ batches complete; expire overdue ids with    │
+//!            │ `ERR timeout id=<n>`; drain-then-close on    │
+//!            │ QUIT (socket shared via a write mutex)       │
+//!            └──────────────────────────────────────────────┘
 //! ```
 //!
-//! Batching: every `PREDICT` goes into a per-model queue; a batcher thread
+//! Pipelining (`PIPE <id> PREDICT …`) removes head-of-line blocking: one
+//! connection can keep the batcher, spill, and pack tiers busy at once, and
+//! a slow model (cold spill reload, first pack load) no longer stalls every
+//! other request the client has in flight. Bare `PREDICT` keeps the
+//! original in-order semantics — the reader waits for the reply before it
+//! reads the next line. A bounded in-flight cap per connection
+//! ([`ServerConfig::inflight_cap`]) answers `ERR busy id=<n>` past the cap;
+//! overdue requests answer `ERR timeout id=<n>` after
+//! [`ServerConfig::request_timeout`] and the connection stays open.
+//!
+//! Batching: every prediction goes into a per-model queue; a batcher thread
 //! drains whatever accumulated within [`BATCH_WINDOW`] (up to
 //! [`BATCH_MAX`]) and answers the whole batch against the store at once.
-//! With one queued request the store takes the cheap prefix-decode path;
-//! bigger flash crowds amortize a full per-tree decode across the batch.
-//!
-//! Lifecycle: the accept loop **blocks** on the listener (no nonblocking
-//! busy-spin); [`Server::stop`] wakes it with a loopback connection.
 //! Batcher threads retire themselves — deregistering their queue — when the
 //! server shuts down, when their channel is dropped, or when their model
-//! leaves the store (removal or LRU eviction), so dead per-model queues are
-//! reaped instead of accumulating.
+//! leaves the store, so dead per-model queues are reaped.
+//!
+//! Lifecycle: the accept loop **blocks** on the listener (no nonblocking
+//! busy-spin); [`Server::stop`] wakes it with a loopback connection. On
+//! `QUIT` (or peer EOF) the reader stops and the writer drains every reply
+//! still in flight — or times it out — before the socket closes.
 
 use super::store::{ModelStore, ObsValue, StoreStats};
 use crate::compress::predict::PredictOne;
@@ -40,7 +63,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Max requests answered in one batch.
 pub const BATCH_MAX: usize = 64;
@@ -48,10 +71,210 @@ pub const BATCH_MAX: usize = 64;
 pub const BATCH_WINDOW: Duration = Duration::from_millis(2);
 /// Idle tick on which a batcher re-checks shutdown and model residency.
 const IDLE_TICK: Duration = Duration::from_millis(100);
+/// Default per-connection cap on in-flight pipelined requests.
+pub const DEFAULT_INFLIGHT_CAP: usize = 256;
+/// Default request timeout (serial rendezvous and pipelined deadline alike).
+pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-connection serving knobs ([`Server::start_with`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max pipelined requests a single connection may have in flight;
+    /// admission past it answers `ERR busy id=<n>` and bumps the store's
+    /// `rejected_busy` counter.
+    pub inflight_cap: usize,
+    /// How long a request may remain unanswered. A serial `PREDICT` past it
+    /// answers `ERR timeout`; a pipelined request answers
+    /// `ERR timeout id=<n>`. The connection stays open either way.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            inflight_cap: DEFAULT_INFLIGHT_CAP,
+            request_timeout: DEFAULT_REQUEST_TIMEOUT,
+        }
+    }
+}
+
+/// Where a finished prediction's answer goes.
+enum JobReply {
+    /// Bare `PREDICT`: rendezvous channel the reader thread blocks on
+    /// (serial, in-order semantics).
+    Sync(Sender<Result<PredictOne, String>>),
+    /// `PIPE <id> PREDICT`: the formatted reply line goes straight into the
+    /// connection's outbox; the writer thread answers out of order.
+    Pipe(PipeTicket),
+}
+
+/// The answering handle of one admitted pipelined request. Dropping it
+/// unanswered — e.g. the job died in a retiring batcher's queue — fails the
+/// request immediately instead of leaving the client to wait out the full
+/// request timeout (an already-answered admission makes the drop a no-op,
+/// so a normal delivery never double-answers).
+struct PipeTicket {
+    id: u64,
+    /// The admission's generation stamp: completion matches `(id,
+    /// generation)`, so a stale ticket can never answer a reused id.
+    generation: u64,
+    outbox: Sender<String>,
+    tracker: Arc<PipeTracker>,
+}
+
+impl Drop for PipeTicket {
+    fn drop(&mut self) {
+        let _ = self.tracker.finish_and_send(
+            self.id,
+            self.generation,
+            &self.outbox,
+            format!("ERR request dropped before prediction id={}", self.id),
+        );
+    }
+}
 
 struct Job {
     values: Vec<ObsValue>,
-    reply: Sender<Result<PredictOne, String>>,
+    reply: JobReply,
+}
+
+/// Per-connection registry of in-flight pipelined requests: admission
+/// (in-flight cap, duplicate ids), completion (late replies of timed-out
+/// ids are dropped), and deadline expiry. Shared by the reader (admission),
+/// the batchers (completion), and the writer (expiry).
+struct PipeTracker {
+    store: Arc<ModelStore>,
+    cap: usize,
+    timeout: Duration,
+    /// Every admitted, not-yet-answered pipelined request, by client id.
+    inflight: Mutex<Inflight>,
+    /// Set when the reader stops (QUIT / EOF / shutdown): the writer may
+    /// exit once the in-flight map drains.
+    closing: AtomicBool,
+}
+
+/// The in-flight map plus the generation counter that disambiguates
+/// **reused** ids: the protocol lets a client reuse an id once its reply
+/// (or timeout) arrived, so a timed-out request's job may still be alive
+/// in a batcher when the same id is admitted again. Completion matches on
+/// `(id, generation)`, never the bare id — the stale job's late reply can
+/// only miss, it can never be delivered as the new request's answer.
+#[derive(Default)]
+struct Inflight {
+    map: HashMap<u64, InflightEntry>,
+    next_generation: u64,
+}
+
+struct InflightEntry {
+    generation: u64,
+    deadline: Instant,
+}
+
+/// Admission verdict for a pipelined request.
+enum Admit {
+    /// Admitted; the generation stamp must accompany the reply.
+    Ok(u64),
+    /// The connection is at its in-flight cap.
+    Busy,
+    /// The id is already in flight on this connection.
+    Duplicate,
+}
+
+impl PipeTracker {
+    fn new(store: Arc<ModelStore>, cfg: &ServerConfig) -> Self {
+        PipeTracker {
+            store,
+            cap: cfg.inflight_cap.max(1),
+            // clamp to a year: `Instant + Duration` (admission deadlines,
+            // `recv_timeout`) panics on overflow, so an absurd
+            // --request-timeout-ms must not let a client kill the reader
+            timeout: cfg.request_timeout.min(Duration::from_secs(365 * 24 * 3600)),
+            inflight: Mutex::new(Inflight::default()),
+            closing: AtomicBool::new(false),
+        }
+    }
+
+    /// Try to register a pipelined request. On success the store's
+    /// `inflight` gauge grows; `Busy` bumps `rejected_busy`.
+    fn admit(&self, id: u64) -> Admit {
+        let mut g = self.inflight.lock().unwrap();
+        if g.map.contains_key(&id) {
+            return Admit::Duplicate;
+        }
+        if g.map.len() >= self.cap {
+            drop(g);
+            self.store.note_rejected_busy();
+            return Admit::Busy;
+        }
+        let generation = g.next_generation;
+        g.next_generation += 1;
+        g.map.insert(id, InflightEntry { generation, deadline: Instant::now() + self.timeout });
+        self.store.note_pipe_dispatched();
+        Admit::Ok(generation)
+    }
+
+    /// Mark a request answered and enqueue its reply line, atomically with
+    /// respect to [`Self::drained`]: the outbox send happens under the
+    /// in-flight lock, so a closing writer can never observe the map empty
+    /// before this reply is in the channel (it would exit and drop a reply
+    /// QUIT is documented to drain). `mpsc` sends never block, so holding
+    /// the lock across the send is safe. Returns `false` when this exact
+    /// admission already left the map — timed out, never admitted, or the
+    /// id was reused by a newer request (generation mismatch) — and the
+    /// reply is then dropped instead of answering an id twice or handing a
+    /// stale payload to a reused id.
+    fn finish_and_send(
+        &self,
+        id: u64,
+        generation: u64,
+        outbox: &Sender<String>,
+        line: String,
+    ) -> bool {
+        let mut g = self.inflight.lock().unwrap();
+        match g.map.get(&id) {
+            Some(e) if e.generation == generation => {
+                g.map.remove(&id);
+            }
+            _ => return false,
+        }
+        let _ = outbox.send(line);
+        drop(g);
+        self.store.note_pipe_retired();
+        true
+    }
+
+    /// Remove and return every id whose deadline has passed (each counts a
+    /// store `timeouts` and shrinks the `inflight` gauge).
+    fn expire(&self) -> Vec<u64> {
+        let now = Instant::now();
+        let mut g = self.inflight.lock().unwrap();
+        let expired: Vec<u64> = g
+            .map
+            .iter()
+            .filter(|(_, e)| e.deadline <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &expired {
+            g.map.remove(id);
+        }
+        drop(g);
+        for _ in &expired {
+            self.store.note_pipe_retired();
+            self.store.note_request_timeout();
+        }
+        expired
+    }
+
+    /// Release pairs with the Acquire in [`Self::drained`]: everything the
+    /// reader enqueued before closing (serial replies included) is visible
+    /// to the writer's final drain sweep once it observes `closing`.
+    fn close(&self) {
+        self.closing.store(true, Ordering::Release);
+    }
+
+    fn drained(&self) -> bool {
+        self.closing.load(Ordering::Acquire) && self.inflight.lock().unwrap().map.is_empty()
+    }
 }
 
 /// Per-model batcher registry. Each entry carries a generation stamp so a
@@ -68,7 +291,8 @@ impl Batchers {
     }
 }
 
-/// The running server: blocking listener thread + per-model batcher threads.
+/// The running server: blocking listener thread + per-model batcher threads
+/// + a reader/writer thread pair per connection.
 pub struct Server {
     store: Arc<ModelStore>,
     addr: std::net::SocketAddr,
@@ -77,8 +301,14 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and start serving on `127.0.0.1:port` (0 = ephemeral).
+    /// Bind and start serving on `127.0.0.1:port` (0 = ephemeral) with the
+    /// default [`ServerConfig`].
     pub fn start(store: Arc<ModelStore>, port: u16) -> Result<Server> {
+        Self::start_with(store, port, ServerConfig::default())
+    }
+
+    /// Bind and start serving with explicit pipelining knobs.
+    pub fn start_with(store: Arc<ModelStore>, port: u16, cfg: ServerConfig) -> Result<Server> {
         let listener =
             TcpListener::bind(("127.0.0.1", port)).context("binding server socket")?;
         let addr = listener.local_addr()?;
@@ -101,8 +331,10 @@ impl Server {
                             let store = store.clone();
                             let batchers = batchers.clone();
                             let shutdown = shutdown.clone();
+                            let cfg = cfg.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, &store, &batchers, &shutdown);
+                                let _ =
+                                    handle_conn(stream, &store, &batchers, &shutdown, &cfg);
                             });
                         }
                         Err(_) => {
@@ -120,10 +352,12 @@ impl Server {
         Ok(Server { store, addr, shutdown, batchers })
     }
 
+    /// The bound address (useful with port 0).
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// The store this server answers from.
     pub fn store(&self) -> &Arc<ModelStore> {
         &self.store
     }
@@ -178,6 +412,39 @@ fn batcher_for(
     tx
 }
 
+/// Route a finished prediction to wherever its request came from: the
+/// serial rendezvous channel, or (pipelined) the connection outbox — unless
+/// the id already timed out, in which case the late reply is dropped so one
+/// id is never answered twice.
+fn deliver(reply: JobReply, out: Result<PredictOne, String>) {
+    match reply {
+        JobReply::Sync(tx) => {
+            let _ = tx.send(out);
+        }
+        JobReply::Pipe(ticket) => {
+            // answer through the tracker; the ticket's Drop then sees the
+            // admission already retired and does nothing
+            ticket.tracker.finish_and_send(
+                ticket.id,
+                ticket.generation,
+                &ticket.outbox,
+                render_pipe_reply(ticket.id, &out),
+            );
+        }
+    }
+}
+
+/// Wire shape of a pipelined reply: `OK <id> <value>` on success,
+/// `ERR <message> id=<id>` on failure (the id token is last so the message
+/// may contain spaces).
+fn render_pipe_reply(id: u64, out: &Result<PredictOne, String>) -> String {
+    match out {
+        Ok(PredictOne::Class(c)) => format!("OK {id} {c}"),
+        Ok(PredictOne::Value(v)) => format!("OK {id} {v}"),
+        Err(e) => format!("ERR {e} id={id}"),
+    }
+}
+
 fn run_batcher(
     name: &str,
     generation: u64,
@@ -214,7 +481,7 @@ fn run_batcher(
         match store.predict_batch(name, &rows) {
             Ok(outs) => {
                 for (job, out) in jobs.into_iter().zip(outs) {
-                    let _ = job.reply.send(Ok(out));
+                    deliver(job.reply, Ok(out));
                 }
             }
             Err(e) => {
@@ -224,7 +491,7 @@ fn run_batcher(
                     let out = store
                         .predict(name, &job.values)
                         .map_err(|e| e.to_string());
-                    let _ = job.reply.send(out);
+                    deliver(job.reply, out);
                 }
                 let _ = e; // recorded via per-row errors
             }
@@ -241,9 +508,70 @@ fn run_batcher(
     // ...and fail any stragglers that raced into the queue while retiring,
     // instead of leaving them to time out against a dead queue
     while let Ok(job) = rx.try_recv() {
-        let _ = job
-            .reply
-            .send(Err(format!("model {name:?} is no longer resident")));
+        deliver(job.reply, Err(format!("model {name:?} is no longer resident")));
+    }
+}
+
+/// Write one protocol line under the connection's socket-write mutex (the
+/// mutex keeps reader-written serial replies and writer-thread pipelined
+/// replies from interleaving mid-line). Blocks when the peer stops
+/// reading — that block **is** the backpressure: a reader stuck here stops
+/// parsing further requests, exactly like the pre-pipelining server.
+fn write_line(stream: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
+    let mut s = stream.lock().unwrap();
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")
+}
+
+/// The writer half of a connection: drains the outbox of **pipelined**
+/// replies (enqueued by batchers as batches complete — out of order; the
+/// in-flight cap bounds how many can ever be queued), expires overdue
+/// pipelined ids with `ERR timeout id=<n>`, and exits when the channel
+/// disconnects (reader gone and every in-flight job answered), when a
+/// close was requested and the in-flight map has drained, or when the peer
+/// stops accepting writes. Serial replies never pass through here — the
+/// reader writes them directly.
+fn writer_loop(stream: Arc<Mutex<TcpStream>>, rx: Receiver<String>, tracker: Arc<PipeTracker>) {
+    // tick often enough to notice deadlines without spinning: the writer
+    // wakes at most once per second on an idle connection (an expiry may
+    // run up to one tick late — proportionate, since the tick never
+    // exceeds the timeout itself), and the lower clamp keeps a zero/tiny
+    // timeout (used by tests) from busy-looping
+    let tick = tracker
+        .timeout
+        .min(Duration::from_secs(1))
+        .max(Duration::from_millis(1));
+    loop {
+        let msg = rx.recv_timeout(tick);
+        // overdue ids answer a typed error; the connection stays open
+        for id in tracker.expire() {
+            if write_line(&stream, &format!("ERR timeout id={id}")).is_err() {
+                return; // peer dropped: late replies have nowhere to go
+            }
+        }
+        match msg {
+            Ok(line) => {
+                if write_line(&stream, &line).is_err() {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // close requested and nothing left in flight. drained()
+                // can only turn true after every reply was enqueued
+                // (finish_and_send sends under the in-flight lock), so a
+                // final non-blocking sweep flushes any reply that raced
+                // this tick into the channel
+                if tracker.drained() {
+                    while let Ok(line) = rx.try_recv() {
+                        if write_line(&stream, &line).is_err() {
+                            return;
+                        }
+                    }
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return, // all senders gone
+        }
     }
 }
 
@@ -252,87 +580,218 @@ fn handle_conn(
     store: &Arc<ModelStore>,
     batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
+    cfg: &ServerConfig,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
+    let wire = Arc::new(Mutex::new(stream.try_clone()?));
+    let (out_tx, out_rx) = channel::<String>();
+    let tracker = Arc::new(PipeTracker::new(store.clone(), cfg));
+    let writer = {
+        let tracker = tracker.clone();
+        let wire = wire.clone();
+        std::thread::spawn(move || writer_loop(wire, out_rx, tracker))
+    };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else { break };
         if shutdown.load(Ordering::Relaxed) {
             break;
         }
-        let reply = match handle_line(&line, store, batchers, shutdown) {
-            Ok(Some(s)) => s,
-            Ok(None) => break, // QUIT
-            Err(e) => format!("ERR {e}"),
+        let reply = match handle_line(&line, store, batchers, shutdown, &tracker, &out_tx) {
+            Ok(Handled::Reply(r)) => Some(r),
+            Ok(Handled::Dispatched) => None,
+            Ok(Handled::Quit) => break,
+            Err(e) => Some(format!("ERR {e}")),
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+        if let Some(r) = reply {
+            // direct blocking write: serial replies (and admission errors)
+            // never queue — a peer that stops reading stalls this reader,
+            // and a write error tears the connection down
+            if write_line(&wire, &r).is_err() {
+                break;
+            }
+        }
     }
+    // drain-then-close: the reader stops accepting input; dropping our
+    // outbox sender lets the writer exit once every in-flight job (each
+    // holds its own sender clone) has answered or timed out
+    tracker.close();
+    drop(out_tx);
+    let _ = writer.join();
     Ok(())
 }
 
+/// What the reader does after parsing one request line.
+enum Handled {
+    /// Write this reply now, directly (serial verbs, admission errors).
+    Reply(String),
+    /// A pipelined job is in flight; its reply reaches the writer thread
+    /// through the outbox when the batch completes.
+    Dispatched,
+    /// `QUIT`: stop reading and wind the connection down.
+    Quit,
+}
+
+/// Parse and act on one request line. `Handled::Reply` lines are written
+/// directly by the reader; `Err` is a protocol-level error the caller
+/// answers with a bare `ERR <message>` line.
 fn handle_line(
     line: &str,
     store: &Arc<ModelStore>,
     batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
-) -> Result<Option<String>> {
+    tracker: &Arc<PipeTracker>,
+    out_tx: &Sender<String>,
+) -> Result<Handled> {
     let mut parts = line.trim().splitn(3, ' ');
     match parts.next().unwrap_or("") {
         "PREDICT" => {
             let model = parts.next().context("PREDICT needs a model name")?;
             let values = parse_values(parts.next().context("PREDICT needs values")?)?;
-            // answer unknown models inline: no batcher is spawned for a
-            // name that is not resident (bad requests must not grow the
-            // queue registry)
-            if !store.contains(model) {
-                bail!("unknown model {model:?}");
-            }
-            let (rtx, rrx) = channel();
-            let q = batcher_for(model, store, batchers, shutdown);
-            let out = match q.send(Job { values: values.clone(), reply: rtx }) {
-                // batcher already retired (model evicted or re-inserted in
-                // the same instant): answer directly from the store
-                Err(_) => store.predict(model, &values).map_err(|e| e.to_string()),
-                Ok(()) => match rrx.recv_timeout(Duration::from_secs(30)) {
-                    Ok(out) => out,
-                    // the batcher retired with our job still queued; its
-                    // queue (and our reply sender) died with it — answer
-                    // directly instead of surfacing a channel error
-                    Err(RecvTimeoutError::Disconnected) => {
-                        store.predict(model, &values).map_err(|e| e.to_string())
-                    }
-                    Err(RecvTimeoutError::Timeout) => bail!("prediction timed out"),
-                },
+            let reply = serial_predict(model, values, store, batchers, shutdown, tracker);
+            Ok(Handled::Reply(reply))
+        }
+        "PIPE" => {
+            let id: u64 = parts
+                .next()
+                .context("PIPE needs a request id")?
+                .parse()
+                .ok()
+                .context("PIPE id must be an unsigned integer")?;
+            // once the id parsed, every error line must carry it (the
+            // protocol's attribution contract) — including a missing body
+            let Some(rest) = parts.next() else {
+                return Ok(Handled::Reply(format!("ERR PIPE needs a request body id={id}")));
             };
-            match out {
-                Ok(PredictOne::Class(c)) => Ok(Some(format!("OK {c}"))),
-                Ok(PredictOne::Value(v)) => Ok(Some(format!("OK {v}"))),
-                Err(e) => Ok(Some(format!("ERR {e}"))),
+            // an admission error answers now, directly; a dispatched job
+            // answers later through the outbox
+            match pipe_dispatch(id, rest, store, batchers, shutdown, tracker, out_tx) {
+                Some(err) => Ok(Handled::Reply(err)),
+                None => Ok(Handled::Dispatched),
             }
         }
-        "LIST" => Ok(Some(format!("OK {}", store.names().join(" ")))),
-        "STATS" => Ok(Some(stats_line(&store.stats()))),
-        "BYTES" => Ok(Some(format!(
+        "LIST" => Ok(Handled::Reply(format!("OK {}", store.names().join(" ")))),
+        "STATS" => Ok(Handled::Reply(stats_line(&store.stats()))),
+        "BYTES" => Ok(Handled::Reply(format!(
             "OK resident={} plans={} spilled={} packed={}",
             store.resident_bytes(),
             store.plan_bytes(),
             store.spilled_bytes(),
             store.packed_bytes()
         ))),
-        "QUIT" => Ok(None),
+        "QUIT" => Ok(Handled::Quit),
         other => bail!("unknown verb {other:?}"),
     }
 }
 
+/// The in-order `PREDICT` path: dispatch to the batcher and block until the
+/// reply arrives (or the request timeout passes — `ERR timeout`, the
+/// connection stays open). Returns the formatted reply line.
+fn serial_predict(
+    model: &str,
+    values: Vec<ObsValue>,
+    store: &Arc<ModelStore>,
+    batchers: &Arc<Batchers>,
+    shutdown: &Arc<AtomicBool>,
+    tracker: &Arc<PipeTracker>,
+) -> String {
+    // answer unknown models inline: no batcher is spawned for a name that
+    // is not resident (bad requests must not grow the queue registry)
+    if !store.contains(model) {
+        return format!("ERR unknown model {model:?}");
+    }
+    let (rtx, rrx) = channel();
+    let q = batcher_for(model, store, batchers, shutdown);
+    let out = match q.send(Job { values: values.clone(), reply: JobReply::Sync(rtx) }) {
+        // batcher already retired (model evicted or re-inserted in the
+        // same instant): answer directly from the store
+        Err(_) => store.predict(model, &values).map_err(|e| e.to_string()),
+        Ok(()) => match rrx.recv_timeout(tracker.timeout) {
+            Ok(out) => out,
+            // the batcher retired with our job still queued; its queue (and
+            // our reply sender) died with it — answer directly instead of
+            // surfacing a channel error
+            Err(RecvTimeoutError::Disconnected) => {
+                store.predict(model, &values).map_err(|e| e.to_string())
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                store.note_request_timeout();
+                return "ERR timeout".to_string();
+            }
+        },
+    };
+    match out {
+        Ok(PredictOne::Class(c)) => format!("OK {c}"),
+        Ok(PredictOne::Value(v)) => format!("OK {v}"),
+        Err(e) => format!("ERR {e}"),
+    }
+}
+
+/// Admit and dispatch one pipelined request (`rest` is everything after
+/// `PIPE <id> `, i.e. `PREDICT <model> <vals>`). Returns `Some(reply)` for
+/// admission errors the caller answers **now**; `None` means the job was
+/// handed to a batcher (or answered inline on a retire race) and its reply
+/// reaches the outbox when the batch completes.
+fn pipe_dispatch(
+    id: u64,
+    rest: &str,
+    store: &Arc<ModelStore>,
+    batchers: &Arc<Batchers>,
+    shutdown: &Arc<AtomicBool>,
+    tracker: &Arc<PipeTracker>,
+    out_tx: &Sender<String>,
+) -> Option<String> {
+    let mut parts = rest.trim().splitn(3, ' ');
+    match parts.next().unwrap_or("") {
+        "PREDICT" => {}
+        other => return Some(format!("ERR PIPE supports only PREDICT, got {other:?} id={id}")),
+    }
+    let Some(model) = parts.next() else {
+        return Some(format!("ERR PREDICT needs a model name id={id}"));
+    };
+    let values = match parts.next().map(parse_values) {
+        Some(Ok(v)) => v,
+        Some(Err(e)) => return Some(format!("ERR {e} id={id}")),
+        None => return Some(format!("ERR PREDICT needs values id={id}")),
+    };
+    if !store.contains(model) {
+        return Some(format!("ERR unknown model {model:?} id={id}"));
+    }
+    let generation = match tracker.admit(id) {
+        Admit::Busy => return Some(format!("ERR busy id={id}")),
+        Admit::Duplicate => return Some(format!("ERR duplicate id id={id}")),
+        Admit::Ok(generation) => generation,
+    };
+    let reply = JobReply::Pipe(PipeTicket {
+        id,
+        generation,
+        outbox: out_tx.clone(),
+        tracker: tracker.clone(),
+    });
+    let q = batcher_for(model, store, batchers, shutdown);
+    match q.send(Job { values, reply }) {
+        Ok(()) => {}
+        // batcher already retired (model evicted or re-inserted in the same
+        // instant): answer directly from the store — the failed send hands
+        // the job back, so no up-front clone is needed — through the
+        // tracker so the in-flight accounting stays balanced
+        Err(std::sync::mpsc::SendError(job)) => {
+            let out = store.predict(model, &job.values).map_err(|e| e.to_string());
+            deliver(job.reply, out);
+        }
+    }
+    None
+}
+
 /// Render the `STATS` reply. `StoreStats::mean_latency_us` guards the
 /// empty window (zero recorded requests reports `mean_us=0`, no division).
+/// Every counter named here must be documented in `rust/PROTOCOL.md` — the
+/// `protocol_doc_covers_every_counter` test enforces it.
 fn stats_line(s: &StoreStats) -> String {
     format!(
         "OK requests={} batches={} mean_us={} max_us={} evictions={} \
          spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
-         pack_loads={} pack_releases={}",
+         pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
@@ -344,8 +803,26 @@ fn stats_line(s: &StoreStats) -> String {
         s.plan_hits,
         s.plan_misses,
         s.pack_loads,
-        s.pack_releases
+        s.pack_releases,
+        s.inflight,
+        s.rejected_busy,
+        s.timeouts
     )
+}
+
+/// Encode values for a `PREDICT` line — the inverse of [`parse_values`]:
+/// numerics as decimal literals, categorical levels as `c<idx>`,
+/// comma-separated. The single authority on the wire value encoding,
+/// shared by the client helper, the integration suites, and the benches.
+pub fn values_to_wire(values: &[ObsValue]) -> String {
+    values
+        .iter()
+        .map(|v| match v {
+            ObsValue::Num(x) => format!("{x}"),
+            ObsValue::Cat(c) => format!("c{c}"),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
 }
 
 /// Parse `1.5,c3,0.25` → [Num(1.5), Cat(3), Num(0.25)].
@@ -362,26 +839,113 @@ pub fn parse_values(s: &str) -> Result<Vec<ObsValue>> {
         .collect()
 }
 
-/// Blocking client helper (used by tests/examples/benches).
+/// One pipelined reply, decoded off the wire by [`Client::recv_pipelined`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipeReply {
+    /// `OK <id> <value>` — a successful prediction for request `id`.
+    Ok {
+        /// The client-supplied request id this reply answers.
+        id: u64,
+        /// The prediction, formatted as on the wire (class or value).
+        value: String,
+    },
+    /// `ERR <message> id=<id>` (or a bare `ERR <message>` with no id).
+    Err {
+        /// The request id, when the error is attributable to one.
+        id: Option<u64>,
+        /// The error message, without the `ERR ` prefix or `id=` suffix.
+        message: String,
+    },
+}
+
+impl PipeReply {
+    /// The request id this reply answers, if it carries one.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            PipeReply::Ok { id, .. } => Some(*id),
+            PipeReply::Err { id, .. } => *id,
+        }
+    }
+}
+
+/// Blocking client helper (used by tests/examples/benches): serial
+/// [`Client::request`], or pipelined mode — issue N requests with
+/// [`Client::pipe_predict`], then collect N replies by id with
+/// [`Client::collect_pipelined`].
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
 impl Client {
+    /// Connect to a [`Server`]'s address.
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
         stream.set_nodelay(true).ok();
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
+    /// Serial round trip: send one request line, block for its reply.
     pub fn request(&mut self, line: &str) -> Result<String> {
+        self.send(line)?;
+        self.recv()
+    }
+
+    /// Send one request line without waiting for a reply (pipelined mode).
+    pub fn send(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read one reply line (empty string on EOF).
+    pub fn recv(&mut self) -> Result<String> {
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;
         Ok(reply.trim_end().to_string())
     }
+
+    /// Issue `PIPE <id> PREDICT <model> <values>` without waiting.
+    pub fn pipe_predict(&mut self, id: u64, model: &str, wire_values: &str) -> Result<()> {
+        self.send(&format!("PIPE {id} PREDICT {model} {wire_values}"))
+    }
+
+    /// Read one pipelined reply and decode its id.
+    pub fn recv_pipelined(&mut self) -> Result<PipeReply> {
+        let line = self.recv()?;
+        parse_pipe_reply(&line)
+    }
+
+    /// Collect `n` pipelined replies in arrival order (which is **not**
+    /// issue order — that is the point of pipelining).
+    pub fn collect_pipelined(&mut self, n: usize) -> Result<Vec<PipeReply>> {
+        (0..n).map(|_| self.recv_pipelined()).collect()
+    }
+}
+
+/// Decode one pipelined reply line (see [`PipeReply`] for the grammar).
+pub fn parse_pipe_reply(line: &str) -> Result<PipeReply> {
+    if let Some(rest) = line.strip_prefix("OK ") {
+        let mut parts = rest.splitn(2, ' ');
+        let id: u64 = parts
+            .next()
+            .unwrap_or("")
+            .parse()
+            .ok()
+            .with_context(|| format!("pipelined OK reply carries no id: {line:?}"))?;
+        let value = parts.next().unwrap_or("").to_string();
+        return Ok(PipeReply::Ok { id, value });
+    }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        // the id token, when present, is last: `ERR <message> id=<id>`
+        if let Some((message, id_tok)) = rest.rsplit_once(" id=") {
+            if let Ok(id) = id_tok.parse::<u64>() {
+                return Ok(PipeReply::Err { id: Some(id), message: message.to_string() });
+            }
+        }
+        return Ok(PipeReply::Err { id: None, message: rest.to_string() });
+    }
+    bail!("unparseable reply line {line:?}")
 }
 
 #[cfg(test)]
@@ -404,6 +968,11 @@ mod tests {
             line.contains("pack_loads=0") && line.contains("pack_releases=0"),
             "{line}"
         );
+        assert!(
+            line.contains("inflight=0") && line.contains("rejected_busy=0")
+                && line.contains("timeouts=0"),
+            "{line}"
+        );
         // and a populated window reports the true per-request mean
         let s = StoreStats {
             requests: 4,
@@ -420,9 +989,126 @@ mod tests {
             v,
             vec![ObsValue::Num(1.5), ObsValue::Cat(3), ObsValue::Num(0.25), ObsValue::Cat(0)]
         );
+        // the encoder is the parser's inverse
+        assert_eq!(values_to_wire(&v), "1.5,c3,0.25,c0");
+        assert_eq!(parse_values(&values_to_wire(&v)).unwrap(), v);
         assert!(parse_values("x").is_err());
         assert!(parse_values("cX").is_err());
     }
 
-    // live server tests are in rust/tests/coordinator_e2e.rs
+    #[test]
+    fn pipe_reply_wire_shapes_round_trip() {
+        let ok = render_pipe_reply(7, &Ok(PredictOne::Class(2)));
+        assert_eq!(ok, "OK 7 2");
+        assert_eq!(
+            parse_pipe_reply(&ok).unwrap(),
+            PipeReply::Ok { id: 7, value: "2".into() }
+        );
+        let okv = render_pipe_reply(8, &Ok(PredictOne::Value(1.5)));
+        assert_eq!(okv, "OK 8 1.5");
+        // error messages may contain spaces; the id token stays parseable
+        let err = render_pipe_reply(9, &Err("unknown model \"x\"".into()));
+        assert_eq!(err, "ERR unknown model \"x\" id=9");
+        assert_eq!(
+            parse_pipe_reply(&err).unwrap(),
+            PipeReply::Err { id: Some(9), message: "unknown model \"x\"".into() }
+        );
+        // a bare serial error line still parses (no id)
+        assert_eq!(
+            parse_pipe_reply("ERR timeout").unwrap(),
+            PipeReply::Err { id: None, message: "timeout".into() }
+        );
+        assert_eq!(parse_pipe_reply("ERR timeout id=3").unwrap().id(), Some(3));
+        assert!(parse_pipe_reply("GARBAGE").is_err());
+    }
+
+    #[test]
+    fn tracker_admission_cap_duplicates_and_expiry() {
+        let store = Arc::new(ModelStore::new());
+        let cfg = ServerConfig { inflight_cap: 2, request_timeout: Duration::ZERO };
+        let tracker = PipeTracker::new(store.clone(), &cfg);
+        let g1 = match tracker.admit(1) {
+            Admit::Ok(g) => g,
+            _ => panic!("admit 1"),
+        };
+        assert!(matches!(tracker.admit(1), Admit::Duplicate));
+        let g2 = match tracker.admit(2) {
+            Admit::Ok(g) => g,
+            _ => panic!("admit 2"),
+        };
+        assert!(matches!(tracker.admit(3), Admit::Busy), "past the cap");
+        let s = store.stats();
+        assert_eq!(s.inflight, 2, "gauge tracks admitted requests");
+        assert_eq!(s.rejected_busy, 1);
+        // finishing an admission enqueues its reply and frees a slot
+        // exactly once
+        let (tx, rx) = channel::<String>();
+        assert!(tracker.finish_and_send(1, g1, &tx, "OK 1 0".into()));
+        assert_eq!(rx.try_recv().as_deref(), Ok("OK 1 0"));
+        assert!(
+            !tracker.finish_and_send(1, g1, &tx, "OK 1 0".into()),
+            "an admission is answered at most once"
+        );
+        assert!(rx.try_recv().is_err(), "the duplicate reply was dropped");
+        assert_eq!(store.stats().inflight, 1);
+        // a zero timeout expires the remaining id immediately
+        let expired = tracker.expire();
+        assert_eq!(expired, vec![2]);
+        assert!(
+            !tracker.finish_and_send(2, g2, &tx, "OK 2 0".into()),
+            "late replies of expired ids are dropped"
+        );
+        let s = store.stats();
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.timeouts, 1);
+        // id reuse after the timeout: the stale admission's late reply must
+        // never be delivered as the NEW request's answer (generation match)
+        let g2b = match tracker.admit(2) {
+            Admit::Ok(g) => g,
+            _ => panic!("re-admit 2"),
+        };
+        assert_ne!(g2, g2b);
+        assert!(
+            !tracker.finish_and_send(2, g2, &tx, "OK 2 stale".into()),
+            "a stale generation can never answer a reused id"
+        );
+        assert!(rx.try_recv().is_err(), "the stale payload was dropped");
+        assert!(tracker.finish_and_send(2, g2b, &tx, "OK 2 fresh".into()));
+        assert_eq!(rx.try_recv().as_deref(), Ok("OK 2 fresh"));
+        // drained only once closing AND empty
+        assert!(!tracker.drained());
+        tracker.close();
+        assert!(tracker.drained());
+    }
+
+    #[test]
+    fn protocol_doc_covers_every_counter() {
+        // drift guard: every counter the wire emits must appear in the
+        // PROTOCOL.md glossary (STATS keys and BYTES keys alike)
+        let doc = include_str!("../../PROTOCOL.md");
+        let line = stats_line(&StoreStats::default());
+        for tok in line.split_whitespace().skip(1) {
+            let key = tok.split('=').next().unwrap();
+            assert!(
+                doc.contains(&format!("`{key}`")),
+                "STATS counter `{key}` is missing from rust/PROTOCOL.md"
+            );
+        }
+        for key in ["resident", "plans", "spilled", "packed"] {
+            assert!(
+                doc.contains(&format!("`{key}`")),
+                "BYTES counter `{key}` is missing from rust/PROTOCOL.md"
+            );
+        }
+        // and every verb is specified
+        for verb in ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "QUIT"] {
+            assert!(
+                doc.contains(&format!("`{verb}`")),
+                "verb `{verb}` is missing from rust/PROTOCOL.md"
+            );
+        }
+    }
+
+    // live server tests are in rust/tests/coordinator_e2e.rs and
+    // rust/tests/pipeline_e2e.rs
 }

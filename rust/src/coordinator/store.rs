@@ -63,7 +63,9 @@ pub const DEFAULT_SHARDS: usize = 16;
 /// One observation value, matching the model's feature schema.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ObsValue {
+    /// A numeric feature value.
     Num(f64),
+    /// A categorical level index (written `c<idx>` on the wire).
     Cat(u32),
 }
 
@@ -75,9 +77,13 @@ pub enum ObsValue {
 /// no longer skew it.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StoreStats {
+    /// Prediction requests answered (each batch member counts once).
     pub requests: u64,
+    /// Prediction calls into the store (a whole batch counts once).
     pub batches: u64,
+    /// Sum of per-request latencies in µs (see the accounting note above).
     pub total_latency_us: u64,
+    /// Slowest single store call observed, in µs.
     pub max_latency_us: u64,
     /// Models dropped from the store entirely (RAM eviction with no spill
     /// tier, or LRU eviction from the spill tier itself).
@@ -91,6 +97,7 @@ pub struct StoreStats {
     /// Flat-plan cache hits/misses across every resident model (a hit means
     /// a batch routed rows without touching the Huffman streams).
     pub plan_hits: u64,
+    /// Flat-plan cache misses (each miss decoded a tree into a plan).
     pub plan_misses: u64,
     /// Decoded plan bytes currently resident (charged against the store's
     /// `max_resident_bytes` budget).
@@ -103,6 +110,15 @@ pub struct StoreStats {
     /// Logical container bytes currently parked in the Packed tier
     /// (unloaded pack members).
     pub packed_bytes: u64,
+    /// Pipelined requests currently in flight across every connection (a
+    /// gauge, not a counter: admitted via `PIPE` but not yet answered).
+    pub inflight: u64,
+    /// Pipelined requests refused with `ERR busy` because their connection
+    /// was at its in-flight cap.
+    pub rejected_busy: u64,
+    /// Requests that outlived the configured request timeout and were
+    /// answered with a typed `ERR timeout` line (serial and pipelined).
+    pub timeouts: u64,
 }
 
 impl StoreStats {
@@ -191,6 +207,9 @@ pub struct ModelStore {
     /// restarted processes) sharing one spill directory never overwrite
     /// each other's files.
     spill_token: u64,
+    /// In-flight pipelined requests, summed over every live connection
+    /// (see [`StoreStats::inflight`]; the server moves it).
+    inflight: AtomicU64,
     predict_workers: usize,
     /// Decoded flat-tree plans, shared by every resident model's predictor.
     /// Plan bytes count against `max_resident_bytes`: budget enforcement
@@ -244,6 +263,7 @@ impl ModelStore {
             max_spill_bytes: None,
             spill_seq: AtomicU64::new(0),
             spill_token: NEXT_STORE_TOKEN.fetch_add(1, Ordering::Relaxed),
+            inflight: AtomicU64::new(0),
             predict_workers: 1,
             plans: Arc::new(PlanCache::new(plan_cap)),
         }
@@ -281,10 +301,12 @@ impl ModelStore {
         self
     }
 
+    /// The RAM budget, when one was configured.
     pub fn max_resident_bytes(&self) -> Option<u64> {
         self.max_resident_bytes
     }
 
+    /// The disk-tier byte cap, when one was configured.
     pub fn max_spill_bytes(&self) -> Option<u64> {
         self.max_spill_bytes
     }
@@ -294,6 +316,7 @@ impl ModelStore {
         self.spill_dir.as_deref()
     }
 
+    /// Number of lock shards the registry spreads names over.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -832,6 +855,9 @@ impl ModelStore {
         Ok(model)
     }
 
+    /// Remove a model from whichever tier holds it (deleting its spill
+    /// file; a backing pack archive is never touched). Returns whether the
+    /// name was present.
     pub fn remove(&self, name: &str) -> bool {
         let removed = self.shard(name).models.write().unwrap().remove(name);
         match removed {
@@ -855,6 +881,7 @@ impl ModelStore {
         }
     }
 
+    /// Whether any tier currently owns a model of this name.
     pub fn contains(&self, name: &str) -> bool {
         self.shard(name).models.read().unwrap().contains_key(name)
     }
@@ -888,10 +915,12 @@ impl ModelStore {
         out
     }
 
+    /// Number of models owned, across every tier.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.models.read().unwrap().len()).sum()
     }
 
+    /// Whether the store owns no models at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -955,6 +984,7 @@ impl ModelStore {
         &self.plans
     }
 
+    /// Snapshot of the serving counters (the `STATS` verb's source).
     pub fn stats(&self) -> StoreStats {
         let mut s = *self.stats.lock().unwrap();
         let p = self.plans.stats();
@@ -963,7 +993,35 @@ impl ModelStore {
         s.plan_bytes = p.resident_bytes;
         s.spill_bytes = self.spilled.load(Ordering::Relaxed);
         s.packed_bytes = self.packed.load(Ordering::Relaxed);
+        s.inflight = self.inflight.load(Ordering::Relaxed);
         s
+    }
+
+    /// A pipelined request was admitted: grow the in-flight gauge.
+    pub fn note_pipe_dispatched(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A pipelined request left flight (answered or timed out): shrink the
+    /// in-flight gauge. Callers pair this 1:1 with
+    /// [`Self::note_pipe_dispatched`] — the saturating sub only guards a
+    /// misuse from reading as an enormous gauge.
+    pub fn note_pipe_retired(&self) {
+        let _ = self.inflight.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// A pipelined request was refused with `ERR busy` (connection at its
+    /// in-flight cap).
+    pub fn note_rejected_busy(&self) {
+        self.stats.lock().unwrap().rejected_busy += 1;
+    }
+
+    /// A request outlived the configured timeout and was answered with a
+    /// typed `ERR timeout` line.
+    pub fn note_request_timeout(&self) {
+        self.stats.lock().unwrap().timeouts += 1;
     }
 
     /// Look a model up and stamp its LRU clock. RAM-resident models come

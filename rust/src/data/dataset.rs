@@ -14,10 +14,16 @@ pub enum Column {
     /// Numerical feature values.
     Numeric(Vec<f64>),
     /// Categorical feature: level index per row + number of levels.
-    Categorical { values: Vec<u32>, levels: u32 },
+    Categorical {
+        /// Level index per row.
+        values: Vec<u32>,
+        /// Number of distinct levels.
+        levels: u32,
+    },
 }
 
 impl Column {
+    /// Number of rows in the column.
     pub fn len(&self) -> usize {
         match self {
             Column::Numeric(v) => v.len(),
@@ -25,10 +31,12 @@ impl Column {
         }
     }
 
+    /// Whether the column has no rows.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether the column is numeric (vs categorical).
     pub fn is_numeric(&self) -> bool {
         matches!(self, Column::Numeric(_))
     }
@@ -37,7 +45,9 @@ impl Column {
 /// Feature descriptor (name + column data).
 #[derive(Debug, Clone)]
 pub struct Feature {
+    /// Feature name.
     pub name: String,
+    /// The column's values.
     pub column: Column,
 }
 
@@ -47,10 +57,16 @@ pub enum Target {
     /// Regression: real-valued response.
     Regression(Vec<f64>),
     /// Classification: class index per row + number of classes.
-    Classification { labels: Vec<u32>, classes: u32 },
+    Classification {
+        /// Class index per row.
+        labels: Vec<u32>,
+        /// Number of classes.
+        classes: u32,
+    },
 }
 
 impl Target {
+    /// Number of rows in the target.
     pub fn len(&self) -> usize {
         match self {
             Target::Regression(v) => v.len(),
@@ -58,10 +74,12 @@ impl Target {
         }
     }
 
+    /// Whether the target is categorical.
     pub fn is_classification(&self) -> bool {
         matches!(self, Target::Classification { .. })
     }
 
+    /// Number of classes (`0` for regression).
     pub fn num_classes(&self) -> u32 {
         match self {
             Target::Regression(_) => 0,
@@ -73,8 +91,11 @@ impl Target {
 /// A dataset: named features + target.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset name (reports and error messages).
     pub name: String,
+    /// The feature columns.
     pub features: Vec<Feature>,
+    /// The prediction target.
     pub target: Target,
 }
 
@@ -108,10 +129,12 @@ impl Dataset {
         Ok(())
     }
 
+    /// Number of observations.
     pub fn num_rows(&self) -> usize {
         self.target.len()
     }
 
+    /// Number of features.
     pub fn num_features(&self) -> usize {
         self.features.len()
     }
@@ -191,7 +214,9 @@ impl Dataset {
 /// An 80/20-style split.
 #[derive(Debug, Clone)]
 pub struct TrainTest {
+    /// The training split.
     pub train: Dataset,
+    /// The held-out test split.
     pub test: Dataset,
 }
 

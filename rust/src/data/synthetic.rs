@@ -28,9 +28,13 @@ enum Cond {
 
 /// Generator configuration; public so ablations can craft custom workloads.
 pub struct SynthSpec {
+    /// Dataset name.
     pub name: &'static str,
+    /// Number of observations.
     pub n_obs: usize,
+    /// Number of numeric features.
     pub n_numeric: usize,
+    /// Number of categorical features.
     pub n_categorical: usize,
     /// max category levels (levels per feature drawn in 2..=max)
     pub max_levels: u32,
@@ -411,10 +415,15 @@ pub fn otto(seed: u64) -> Dataset {
 /// A Table-2 row: the generator plus the paper's reported numbers (MB) for
 /// comparison in benches/EXPERIMENTS.md.
 pub struct SuiteEntry {
+    /// CLI dataset key (Table-2 row name).
     pub key: &'static str,
+    /// Generator: seed → dataset.
     pub make: fn(u64) -> Dataset,
+    /// Paper-reported "standard" baseline size, MB.
     pub paper_standard_mb: f64,
+    /// Paper-reported "light" baseline size, MB.
     pub paper_light_mb: f64,
+    /// Paper-reported compressed size, MB.
     pub paper_ours_mb: f64,
 }
 

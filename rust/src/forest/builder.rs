@@ -29,10 +29,12 @@ pub struct TreeParams {
 }
 
 impl TreeParams {
+    /// `treeBagger` classification defaults (unpruned, min leaf 1).
     pub fn default_classification() -> Self {
         TreeParams { mtry: None, min_leaf: 1, max_depth: u32::MAX }
     }
 
+    /// `treeBagger` regression defaults (unpruned, min leaf 5).
     pub fn default_regression() -> Self {
         TreeParams { mtry: None, min_leaf: 5, max_depth: u32::MAX }
     }

@@ -46,6 +46,7 @@ impl ForestParams {
 /// A trained random forest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Forest {
+    /// The ensemble's trees.
     pub trees: Vec<Tree>,
     /// True when the target was classification (drives aggregation).
     pub classification: bool,
@@ -80,6 +81,7 @@ impl Forest {
         }
     }
 
+    /// Number of trees in the ensemble.
     pub fn num_trees(&self) -> usize {
         self.trees.len()
     }
@@ -197,7 +199,9 @@ impl Forest {
 /// Forest predictions for a whole dataset.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Predictions {
+    /// Regression means, one per row.
     Values(Vec<f64>),
+    /// Majority-vote class labels, one per row.
     Classes(Vec<u32>),
 }
 

@@ -24,7 +24,9 @@ pub enum SplitValue {
 /// Feature index + split value.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Split {
+    /// Index of the feature this node splits on.
     pub feature: u32,
+    /// The split threshold or category mask.
     pub value: SplitValue,
 }
 
@@ -34,7 +36,9 @@ pub struct Split {
 /// regression fits compare by `to_bits()`.
 #[derive(Debug, Clone, Copy)]
 pub enum Fit {
+    /// A regression mean.
     Regression(f64),
+    /// A class label.
     Class(u32),
 }
 
@@ -60,6 +64,7 @@ pub struct Node {
 }
 
 impl Node {
+    /// Whether the node has no split (a leaf).
     pub fn is_leaf(&self) -> bool {
         self.split.is_none()
     }
@@ -68,6 +73,7 @@ impl Node {
 /// A decision tree with preorder node storage; `nodes[0]` is the root.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tree {
+    /// Nodes in preorder; `nodes[0]` is the root.
     pub nodes: Vec<Node>,
 }
 

@@ -52,6 +52,8 @@
 //! assert!(forest.identical(&restored));
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod baseline;
 pub mod cluster;
 pub mod coding;

@@ -25,9 +25,14 @@ use anyhow::{bail, Result};
 /// Quantization method.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QuantizeMethod {
+    /// Uniform mid-rise quantizer over the value range.
     Uniform,
     /// Subtractive dither with the given seed.
-    Dithered { seed: u64 },
+    Dithered {
+        /// RNG seed of the dither sequence.
+        seed: u64,
+    },
+    /// Lloyd-Max (MSE-optimal representative placement).
     LloydMax,
 }
 

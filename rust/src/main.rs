@@ -8,7 +8,7 @@
 //! repro verify     --in FILE --dataset <key> [--trees N] [--seed S]
 //! repro lossy      --dataset <key> [--trees N] [--bits B] [--keep N0]
 //! repro serve      --port P [--dataset <key>[,<key>...]] [--pack FILE,...]
-//!                  [--trees N]
+//!                  [--trees N] [--inflight-cap N] [--request-timeout-ms MS]
 //! repro pack       build|list|extract               # RFPK model packs
 //! repro suite      [--trees N] [--paper-scale]      # Table-2 style report
 //! repro datasets                                    # list dataset keys
@@ -20,7 +20,7 @@
 //! --target-col I [--target-kind reg|cls]`.
 
 use rf_compress::compress::{CompressOptions, CompressedForest};
-use rf_compress::coordinator::server::Server;
+use rf_compress::coordinator::server::{Server, ServerConfig};
 use rf_compress::coordinator::store::ModelStore;
 use rf_compress::coordinator::Coordinator;
 use rf_compress::data::synthetic::table2_suite;
@@ -66,6 +66,7 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   serve      --port P [--dataset KEY[,KEY...]] [--pack FILE[,FILE...]]
              [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
+             [--inflight-cap N] [--request-timeout-ms MS]
   pack build   --out FILE (--inputs A.rfcz[,B.rfcz...] |
                            --dataset KEY --members N [--trees T])
                [--no-shared] [--seed S]
@@ -372,7 +373,35 @@ fn cmd_serve(args: &Args) -> i32 {
             pack.blob_count()
         );
     }
-    let server = match Server::start(store.clone(), port) {
+    // per-connection pipelining knobs: in-flight cap (ERR busy past it)
+    // and the request timeout (typed ERR timeout, connection stays open)
+    let mut server_cfg = ServerConfig::default();
+    if let Some(s) = args.get("inflight-cap") {
+        match s.parse::<usize>() {
+            Ok(n) if n > 0 => server_cfg.inflight_cap = n,
+            _ => {
+                eprintln!("serve: --inflight-cap expects a positive count, got {s:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("request-timeout-ms") {
+        match s.parse::<u64>() {
+            // 0 would time every request out before its batch window
+            // closes — reject it rather than serve nothing but errors
+            Ok(ms) if ms > 0 => {
+                server_cfg.request_timeout = std::time::Duration::from_millis(ms);
+            }
+            _ => {
+                eprintln!(
+                    "serve: --request-timeout-ms expects a positive millisecond \
+                     count, got {s:?}"
+                );
+                return 2;
+            }
+        }
+    }
+    let server = match Server::start_with(store.clone(), port, server_cfg.clone()) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("server: {e:#}");
@@ -410,7 +439,15 @@ fn cmd_serve(args: &Args) -> i32 {
             human_bytes(store.packed_bytes())
         );
     }
-    println!("protocol: PREDICT <model> <v1,v2,...> | LIST | STATS | BYTES | QUIT");
+    println!(
+        "protocol: PREDICT <model> <v1,v2,...> | PIPE <id> PREDICT ... | LIST | STATS \
+         | BYTES | QUIT  (see rust/PROTOCOL.md)"
+    );
+    println!(
+        "pipelining: up to {} in flight per connection, {} ms request timeout",
+        server_cfg.inflight_cap,
+        server_cfg.request_timeout.as_millis()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

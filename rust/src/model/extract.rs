@@ -30,6 +30,7 @@ pub enum SplitAlphabet {
 }
 
 impl SplitAlphabet {
+    /// Number of distinct symbols in the alphabet.
     pub fn len(&self) -> usize {
         match self {
             SplitAlphabet::Numeric(v) => v.len(),
@@ -37,6 +38,7 @@ impl SplitAlphabet {
         }
     }
 
+    /// Whether the alphabet is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -69,6 +71,7 @@ impl SplitAlphabet {
 /// alphabet for classification).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ValueAlphabets {
+    /// Per-feature split-value alphabets.
     pub splits: Vec<SplitAlphabet>,
     /// Sorted distinct regression fit values (by bit pattern order of the
     /// underlying f64s sorted numerically); empty for classification.

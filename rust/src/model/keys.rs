@@ -20,6 +20,7 @@ pub struct ContextKey {
 }
 
 impl ContextKey {
+    /// Key for a node at `depth` whose father split on `father`.
     pub fn new(depth: u32, father: Option<u32>) -> Self {
         ContextKey {
             depth: depth.min(u16::MAX as u32) as u16,

@@ -41,7 +41,9 @@ use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::Arc;
 
+/// Archive file magic (`RFPK`).
 pub const PACK_MAGIC: &[u8; 4] = b"RFPK";
+/// Archive format version this build reads and writes.
 pub const PACK_VERSION: u8 = 1;
 
 /// Storage-mode tags in the index.
@@ -75,6 +77,7 @@ fn validate_key(key: &str) -> Result<()> {
 /// Build-time summary of an archive (also printed by `repro pack build`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PackStats {
+    /// Number of members in the archive.
     pub members: usize,
     /// Shared-codebook blobs in the archive.
     pub blobs: usize,
@@ -131,10 +134,12 @@ impl PackBuilder {
         Ok(())
     }
 
+    /// Number of members added so far.
     pub fn len(&self) -> usize {
         self.members.len()
     }
 
+    /// Whether no members were added yet.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }
@@ -431,10 +436,12 @@ impl PackArchive {
         Ok(PackArchive { buf, members, by_key, blobs })
     }
 
+    /// Number of members in the archive.
     pub fn member_count(&self) -> usize {
         self.members.len()
     }
 
+    /// Whether the archive has no members.
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }
@@ -444,6 +451,7 @@ impl PackArchive {
         self.members.iter().map(|m| m.key.as_str())
     }
 
+    /// Key of one member by index.
     pub fn key(&self, member: usize) -> &str {
         &self.members[member].key
     }

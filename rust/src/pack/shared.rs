@@ -9,7 +9,7 @@
 //!
 //! [`compress_cohort`] builds the union forest of every member's trees, runs
 //! stages 2–3 of Algorithm 1 once over it
-//! ([`crate::compress::pipeline::build_codec_plan`]), and encodes each
+//! (`compress::pipeline::build_codec_plan`), and encodes each
 //! member against the frozen [`CodecPlan`]. Each output is a fully
 //! standalone `RFCZ` container — decompressible with no side information,
 //! bit-exact per member — whose TABLES/CLUSMAP/DICTS sections are

@@ -82,7 +82,7 @@ impl XlaRuntime {
     /// artifact arithmetic-bound on zeros (e.g. B=55 padded to 2048 wastes
     /// 37× the FLOPs); such problems run faster on the native engine. A
     /// bucket is eligible when its padded element count is within
-    /// [`PAD_WASTE_LIMIT`]× of the real problem's.
+    /// `PAD_WASTE_LIMIT`× of the real problem's.
     pub fn fits(&self, m: usize, b: usize, k: usize) -> bool {
         self.find_bucket(m, b, k).is_some()
     }
@@ -168,8 +168,9 @@ impl XlaRuntime {
 pub struct HybridEngine {
     runtime: Option<XlaRuntime>,
     native: NativeEngine,
-    /// counters for the benches: (xla steps, native steps)
+    /// Clustering steps answered by the XLA artifact (bench counter).
     pub xla_steps: u64,
+    /// Clustering steps answered by the native fallback (bench counter).
     pub native_steps: u64,
 }
 
@@ -180,14 +181,17 @@ impl HybridEngine {
         HybridEngine { runtime, native: NativeEngine, xla_steps: 0, native_steps: 0 }
     }
 
+    /// Wrap an explicit, already-loaded runtime.
     pub fn with_runtime(runtime: XlaRuntime) -> Self {
         HybridEngine { runtime: Some(runtime), native: NativeEngine, xla_steps: 0, native_steps: 0 }
     }
 
+    /// An engine that never touches the XLA runtime.
     pub fn native_only() -> Self {
         HybridEngine { runtime: None, native: NativeEngine, xla_steps: 0, native_steps: 0 }
     }
 
+    /// Whether an XLA runtime is loaded.
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
     }

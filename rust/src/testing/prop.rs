@@ -13,6 +13,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// A generator seeded deterministically.
     pub fn new(seed: u64) -> Self {
         Gen {
             rng: Pcg64::with_stream(seed, 0x6e6),
@@ -24,19 +25,23 @@ impl Gen {
         &mut self.rng
     }
 
+    /// Uniform `u64` in `[lo, hi]`.
     pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
         debug_assert!(lo <= hi);
         lo + self.rng.gen_range(hi - lo + 1)
     }
 
+    /// Uniform `usize` in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         self.u64_in(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform `f64` in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.gen_f64() * (hi - lo)
     }
 
+    /// Biased coin: `true` with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.gen_bool(p)
     }

@@ -7,16 +7,21 @@ use std::time::Instant;
 /// Timing summary in seconds.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
+    /// Median sample, seconds.
     pub median: f64,
+    /// 10th-percentile sample, seconds.
     pub p10: f64,
+    /// 90th-percentile sample, seconds.
     pub p90: f64,
     /// Tail latency (used by the machine-readable bench reports); with few
     /// iterations this degrades toward the max sample.
     pub p99: f64,
+    /// Number of timed iterations.
     pub iters: usize,
 }
 
 impl Timing {
+    /// Throughput at the median: `items` per second.
     pub fn per_sec(&self, items: f64) -> f64 {
         items / self.median.max(1e-12)
     }
@@ -70,15 +75,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Print the table with aligned columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -104,12 +112,17 @@ impl Table {
 /// Common bench flags: `--trees`, `--seed`, `--paper-scale`; `default_trees`
 /// is used when neither `--trees` nor `--paper-scale` is given.
 pub struct BenchConfig {
+    /// Forest size for the bench workloads.
     pub trees: usize,
+    /// Training/workload seed.
     pub seed: u64,
+    /// Whether `--paper-scale` was given.
     pub paper_scale: bool,
+    /// The raw parsed arguments, for bench-specific flags.
     pub args: super::cli::Args,
 }
 
+/// Parse the common bench flags from the environment.
 pub fn bench_config(default_trees: usize) -> BenchConfig {
     let args = super::cli::Args::from_env();
     let paper_scale = args.flag("paper-scale");

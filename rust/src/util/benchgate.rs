@@ -28,19 +28,26 @@ use std::path::Path;
 /// Whether a metric regresses by shrinking or by growing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Direction {
+    /// Regression = current below baseline (throughput-like).
     HigherIsBetter,
+    /// Regression = current above baseline (latency-like).
     LowerIsBetter,
 }
 
 /// One gated metric's verdict.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GateResult {
+    /// Human-readable metric label.
     pub metric: String,
+    /// Which way this metric regresses.
     pub direction: Direction,
+    /// The committed baseline value.
     pub baseline: f64,
+    /// The freshly-measured value.
     pub current: f64,
     /// current / baseline.
     pub ratio: f64,
+    /// Whether the metric stayed within tolerance.
     pub ok: bool,
 }
 

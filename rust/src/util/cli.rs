@@ -61,6 +61,7 @@ impl Args {
         out
     }
 
+    /// The program name (`argv[0]`).
     pub fn program(&self) -> &str {
         &self.program
     }
@@ -70,6 +71,7 @@ impl Args {
         self.positional.get(i).map(|s| s.as_str())
     }
 
+    /// All positional arguments, in order.
     pub fn positionals(&self) -> &[String] {
         &self.positional
     }

@@ -129,6 +129,7 @@ impl Mmap {
         }
     }
 
+    /// Mapped (or owned) length in bytes.
     pub fn len(&self) -> usize {
         match &self.inner {
             #[cfg(all(unix, target_pointer_width = "64"))]
@@ -137,10 +138,12 @@ impl Mmap {
         }
     }
 
+    /// Whether the buffer is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The mapped bytes.
     pub fn as_slice(&self) -> &[u8] {
         match &self.inner {
             #[cfg(all(unix, target_pointer_width = "64"))]

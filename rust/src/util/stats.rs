@@ -12,6 +12,7 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// An empty accumulator.
     pub fn new() -> Self {
         OnlineStats {
             n: 0,
@@ -22,6 +23,7 @@ impl OnlineStats {
         }
     }
 
+    /// Fold one sample in (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -31,9 +33,11 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -53,12 +57,15 @@ impl OnlineStats {
             self.m2 / (self.n - 1) as f64
         }
     }
+    /// Sample standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }

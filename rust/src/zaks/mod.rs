@@ -50,14 +50,17 @@ pub fn is_valid_zaks(bits: &[bool]) -> bool {
 /// `children[i] = Some((left, right))` for internal nodes, `None` for leaves.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TreeShape {
+    /// `Some((left, right))` for internal nodes, `None` for leaves.
     pub children: Vec<Option<(u32, u32)>>,
 }
 
 impl TreeShape {
+    /// Total number of nodes.
     pub fn node_count(&self) -> usize {
         self.children.len()
     }
 
+    /// Number of internal (splitting) nodes.
     pub fn internal_count(&self) -> usize {
         self.children.iter().filter(|c| c.is_some()).count()
     }

@@ -1,0 +1,19 @@
+//! Helpers shared by the integration suites (`coordinator_e2e`,
+//! `pipeline_e2e`): observation extraction, plus a re-export of the
+//! library's wire encoder so a wire-format change cannot leave one suite
+//! silently testing a stale encoding.
+
+pub use rf_compress::coordinator::server::values_to_wire;
+use rf_compress::coordinator::store::ObsValue;
+use rf_compress::data::{Column, Dataset};
+
+/// The observation values of one dataset row, in schema order.
+pub fn row_values(ds: &Dataset, row: usize) -> Vec<ObsValue> {
+    ds.features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => ObsValue::Num(v[row]),
+            Column::Categorical { values, .. } => ObsValue::Cat(values[row]),
+        })
+        .collect()
+}

@@ -1,6 +1,9 @@
 //! End-to-end coordinator tests: train → compress → store → serve over TCP
 //! → predictions from compressed bytes match the original forest.
 
+mod common;
+
+use common::{row_values, values_to_wire};
 use rf_compress::compress::predict::PredictOne;
 use rf_compress::compress::CompressOptions;
 use rf_compress::coordinator::server::{Client, Server};
@@ -8,27 +11,6 @@ use rf_compress::coordinator::store::{ModelStore, ObsValue};
 use rf_compress::coordinator::Coordinator;
 use rf_compress::data::{synthetic, Column, Dataset};
 use std::sync::Arc;
-
-fn row_values(ds: &Dataset, row: usize) -> Vec<ObsValue> {
-    ds.features
-        .iter()
-        .map(|f| match &f.column {
-            Column::Numeric(v) => ObsValue::Num(v[row]),
-            Column::Categorical { values, .. } => ObsValue::Cat(values[row]),
-        })
-        .collect()
-}
-
-fn values_to_wire(values: &[ObsValue]) -> String {
-    values
-        .iter()
-        .map(|v| match v {
-            ObsValue::Num(x) => format!("{x}"),
-            ObsValue::Cat(c) => format!("c{c}"),
-        })
-        .collect::<Vec<_>>()
-        .join(",")
-}
 
 #[test]
 fn coordinator_to_server_round_trip() {

@@ -1,0 +1,338 @@
+//! End-to-end tests of per-connection request pipelining (`PIPE`):
+//! out-of-order reply arrival, in-flight cap backpressure, typed timeouts,
+//! drain-then-close on QUIT/shutdown, and the permutation property
+//! (pipelined replies carry exactly the payloads serial replies would).
+//!
+//! The wire protocol under test is specified in `rust/PROTOCOL.md`.
+
+mod common;
+
+use common::{row_values, values_to_wire};
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::coordinator::server::{Client, PipeReply, Server, ServerConfig};
+use rf_compress::coordinator::store::ModelStore;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn pipelined_replies_arrive_out_of_order_with_matching_ids() {
+    // one connection, two models: "slow" is a big forest mounted through a
+    // pack archive and never yet loaded (answering pays the pack load + a
+    // large batch decode), "fast" is a tiny resident one. All slow
+    // requests are issued BEFORE any fast request; pipelining must let the
+    // fast replies overtake.
+    let ds = synthetic::iris(41);
+    let mut coord = Coordinator::native_only();
+    let (slow_forest, slow_cf, _) =
+        coord.train_and_compress(&ds, 192, 21, &CompressOptions::default()).unwrap();
+    let (fast_forest, fast_cf, _) =
+        coord.train_and_compress(&ds, 2, 22, &CompressOptions::default()).unwrap();
+    let mut builder = rf_compress::pack::PackBuilder::new();
+    builder.add("slow", slow_cf.bytes.clone()).unwrap();
+    let (pack_bytes, _) = builder.build().unwrap();
+    let pack = Arc::new(rf_compress::pack::PackArchive::from_bytes(pack_bytes).unwrap());
+    let store = Arc::new(ModelStore::new());
+    store.attach_pack(&pack).unwrap();
+    store.insert("fast", &fast_cf).unwrap();
+    assert!(store.is_packed("slow"), "slow model starts unloaded in its pack");
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    const N: usize = 24; // per model, well under one batch
+    for i in 0..N {
+        let wire = values_to_wire(&row_values(&ds, i));
+        client.pipe_predict(i as u64, "slow", &wire).unwrap();
+    }
+    for i in 0..N {
+        let wire = values_to_wire(&row_values(&ds, i));
+        client.pipe_predict((N + i) as u64, "fast", &wire).unwrap();
+    }
+    let replies = client.collect_pipelined(2 * N).unwrap();
+
+    // every id answered exactly once, with the payload its forest predicts
+    let mut seen = vec![false; 2 * N];
+    for r in &replies {
+        match r {
+            PipeReply::Ok { id, value } => {
+                let id = *id as usize;
+                assert!(!seen[id], "id {id} answered twice");
+                seen[id] = true;
+                let (forest, row) =
+                    if id < N { (&slow_forest, id) } else { (&fast_forest, id - N) };
+                assert_eq!(
+                    *value,
+                    format!("{}", forest.predict_class(&ds, row)),
+                    "id {id}: wrong payload"
+                );
+            }
+            PipeReply::Err { id, message } => panic!("id {id:?} failed: {message}"),
+        }
+    }
+    assert!(seen.iter().all(|&s| s));
+
+    // out of order: some fast reply (issued later) must arrive before the
+    // last slow reply — i.e. the reply stream is NOT the issue order
+    let first_fast = replies.iter().position(|r| r.id().unwrap() >= N as u64).unwrap();
+    let last_slow = replies
+        .iter()
+        .rposition(|r| r.id().unwrap() < N as u64)
+        .expect("slow replies present");
+    assert!(
+        first_fast < last_slow,
+        "pipelining must let fast replies overtake the slow batch \
+         (first fast at {first_fast}, last slow at {last_slow})"
+    );
+    let issue_order: Vec<u64> = (0..2 * N as u64).collect();
+    let arrival: Vec<u64> = replies.iter().map(|r| r.id().unwrap()).collect();
+    assert_ne!(arrival, issue_order, "replies must not be head-of-line blocked");
+
+    // the slow model's first request went through the pack-load path
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.contains("pack_loads=1"), "{stats}");
+    server.stop();
+}
+
+#[test]
+fn inflight_cap_rejects_with_err_busy() {
+    let ds = synthetic::iris(42);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 3, 23, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let cfg = ServerConfig { inflight_cap: 1, ..ServerConfig::default() };
+    let server = Server::start_with(store.clone(), 0, cfg).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // eight requests in one TCP write against cap 1: the reader admits the
+    // first and rejects the rest while the 2 ms batch window still holds
+    // its reply. The asserts are deliberately order-loose: for `busy` to
+    // come back EMPTY the reader would have to stall longer than a full
+    // batch window between every consecutive pair of lines — seven times
+    // in a row — so "at least one rejection" is robust on a loaded CI box.
+    const BURST: usize = 8;
+    let wire = values_to_wire(&row_values(&ds, 0));
+    let burst: String = (0..BURST)
+        .map(|id| format!("PIPE {id} PREDICT m {wire}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    client.send(&burst).unwrap();
+    let replies = client.collect_pipelined(BURST).unwrap();
+    let busy: Vec<u64> = replies
+        .iter()
+        .filter_map(|r| match r {
+            PipeReply::Err { id, message } if message == "busy" => Some(id.unwrap()),
+            _ => None,
+        })
+        .collect();
+    let ok: Vec<u64> = replies
+        .iter()
+        .filter_map(|r| match r {
+            PipeReply::Ok { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert!(ok.contains(&0), "the first request fits the cap: {replies:?}");
+    assert!(!busy.is_empty(), "the burst past the cap answers ERR busy: {replies:?}");
+    assert_eq!(ok.len() + busy.len(), BURST, "{replies:?}");
+
+    // the rejections are counted and the gauge drains back to zero
+    let stats = client.request("STATS").unwrap();
+    assert!(
+        stats.contains(&format!("rejected_busy={}", busy.len())),
+        "{stats} (busy: {busy:?})"
+    );
+    assert!(stats.contains("inflight=0"), "{stats}");
+    // the connection survives rejection: the next pipelined request works
+    client.pipe_predict(9, "m", &wire).unwrap();
+    assert!(matches!(
+        client.recv_pipelined().unwrap(),
+        PipeReply::Ok { id: 9, .. }
+    ));
+    server.stop();
+}
+
+#[test]
+fn zero_timeout_answers_typed_error_and_keeps_the_connection() {
+    // a big forest makes the answer path slow (≥ the 2 ms batch window +
+    // a 16-row full per-tree decode), so a zero request timeout reliably
+    // expires every request long before its batch could answer it
+    let ds = synthetic::iris(43);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) =
+        coord.train_and_compress(&ds, 192, 24, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let cfg = ServerConfig { request_timeout: Duration::ZERO, ..ServerConfig::default() };
+    let server = Server::start_with(store.clone(), 0, cfg).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let wire = values_to_wire(&row_values(&ds, 0));
+    // serial: a typed `ERR timeout` line, not a dropped connection
+    let reply = client.request(&format!("PREDICT m {wire}")).unwrap();
+    assert_eq!(reply, "ERR timeout");
+    // pipelined: every id of a burst comes back in its own typed line,
+    // and the late real replies are dropped, never answered twice
+    const N: u64 = 16;
+    for id in 0..N {
+        client.pipe_predict(id, "m", &wire).unwrap();
+    }
+    let replies = client.collect_pipelined(N as usize).unwrap();
+    let mut ids: Vec<u64> = replies
+        .iter()
+        .map(|r| match r {
+            PipeReply::Err { id, message } if message == "timeout" => id.unwrap(),
+            other => panic!("expected ERR timeout id=<n>, got {other:?}"),
+        })
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..N).collect::<Vec<_>>());
+    // the connection is still alive and the counters moved
+    let list = client.request("LIST").unwrap();
+    assert!(list.starts_with("OK"), "{list}");
+    let stats = client.request("STATS").unwrap();
+    let timeouts: u64 = stats
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("timeouts="))
+        .expect("STATS carries timeouts=")
+        .parse()
+        .unwrap();
+    assert!(timeouts >= N + 1, "{stats}");
+    assert!(stats.contains("inflight=0"), "expired ids drain the gauge: {stats}");
+    server.stop();
+}
+
+#[test]
+fn quit_drains_outstanding_replies_before_closing() {
+    let ds = synthetic::iris(44);
+    let mut coord = Coordinator::native_only();
+    let (forest, cf, _) =
+        coord.train_and_compress(&ds, 3, 25, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // a burst of requests immediately followed by QUIT: the writer must
+    // drain every reply still in the outbox (or in a batcher) first
+    const N: usize = 8;
+    for id in 0..N as u64 {
+        let wire = values_to_wire(&row_values(&ds, id as usize));
+        client.pipe_predict(id, "m", &wire).unwrap();
+    }
+    client.send("QUIT").unwrap();
+    let replies = client.collect_pipelined(N).unwrap();
+    let mut ids: Vec<u64> = replies.iter().map(|r| r.id().unwrap()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..N as u64).collect::<Vec<_>>(), "all in-flight ids answered");
+    for r in &replies {
+        let PipeReply::Ok { id, value } = r else { panic!("{r:?}") };
+        assert_eq!(*value, format!("{}", forest.predict_class(&ds, *id as usize)));
+    }
+    // ...and only then does the connection close
+    assert_eq!(client.recv().unwrap(), "", "EOF after the drain");
+    server.stop();
+}
+
+#[test]
+fn shutdown_with_inflight_replies_neither_hangs_nor_panics() {
+    let ds = synthetic::iris(45);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 3, 26, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    for id in 0..4u64 {
+        let wire = values_to_wire(&row_values(&ds, id as usize));
+        client.pipe_predict(id, "m", &wire).unwrap();
+    }
+    // stop the server with the burst still in flight; the connection must
+    // wind down (replies, errors, or EOF) without hanging this test
+    server.stop();
+    for _ in 0..4 {
+        match client.recv() {
+            Ok(line) if line.is_empty() => break, // EOF: connection closed
+            Ok(_) => {}                           // a drained reply or error
+            Err(_) => break,                      // reset mid-shutdown
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_replies_are_a_permutation_of_serial() {
+    use rf_compress::forest::{Forest, ForestParams};
+    use rf_compress::testing::prop::{forall_cases, Gen};
+
+    // over random schemas and interleavings: issuing N requests pipelined
+    // yields exactly the payloads the serial protocol yields for the same
+    // (model, row) pairs — pipelining may reorder replies, never change or
+    // drop them
+    forall_cases("pipelined == permutation of serial", 8, &mut |g: &mut Gen| {
+        let n_rows = g.usize_in(12, 32);
+        let numeric = g.usize_in(0, 3);
+        let categorical = g.usize_in(if numeric == 0 { 1 } else { 0 }, 2);
+        let ds = g.dataset(n_rows, numeric, categorical, true);
+        let n_models = g.usize_in(1, 3);
+        let store = Arc::new(ModelStore::new());
+        for m in 0..n_models {
+            let params = ForestParams::classification(g.usize_in(1, 5));
+            let forest = Forest::train(&ds, &params, g.u64_in(1, 1 << 40));
+            let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default())
+                .map_err(|e| e.to_string())?;
+            store.insert(&format!("m{m}"), &cf).map_err(|e| e.to_string())?;
+        }
+        let server = Server::start(store.clone(), 0).map_err(|e| e.to_string())?;
+        let mut client = Client::connect(server.addr()).map_err(|e| e.to_string())?;
+
+        let n_req = g.usize_in(2, 24);
+        let plan: Vec<(String, usize)> = (0..n_req)
+            .map(|_| {
+                (format!("m{}", g.usize_in(0, n_models - 1)), g.usize_in(0, n_rows - 1))
+            })
+            .collect();
+        // serial ground truth, in issue order
+        let serial: Vec<String> = plan
+            .iter()
+            .map(|(model, row)| {
+                let wire = values_to_wire(&row_values(&ds, *row));
+                client.request(&format!("PREDICT {model} {wire}")).map_err(|e| e.to_string())
+            })
+            .collect::<Result<_, String>>()?;
+        // the same plan, pipelined on the same connection
+        for (id, (model, row)) in plan.iter().enumerate() {
+            let wire = values_to_wire(&row_values(&ds, *row));
+            client.pipe_predict(id as u64, model, &wire).map_err(|e| e.to_string())?;
+        }
+        let replies = client.collect_pipelined(n_req).map_err(|e| e.to_string())?;
+        if replies.len() != n_req {
+            return Err(format!("expected {n_req} replies, got {}", replies.len()));
+        }
+        let mut by_id: Vec<Option<String>> = vec![None; n_req];
+        for r in replies {
+            let PipeReply::Ok { id, value } = r else {
+                return Err(format!("pipelined request failed: {r:?}"));
+            };
+            let slot = &mut by_id[id as usize];
+            if slot.is_some() {
+                return Err(format!("id {id} answered twice"));
+            }
+            *slot = Some(value);
+        }
+        for (id, (serial_reply, pipe_value)) in serial.iter().zip(&by_id).enumerate() {
+            let pipe_value =
+                pipe_value.as_ref().ok_or_else(|| format!("id {id} unanswered"))?;
+            let expect = serial_reply
+                .strip_prefix("OK ")
+                .ok_or_else(|| format!("serial request {id} failed: {serial_reply}"))?;
+            if pipe_value != expect {
+                return Err(format!(
+                    "id {id}: pipelined {pipe_value:?} != serial {expect:?}"
+                ));
+            }
+        }
+        server.stop();
+        Ok(())
+    });
+}
