@@ -7,6 +7,10 @@
 //! * `conditioning` — §3.2.2: (depth, father) vs depth-only vs none
 //! * `coder`        — §2.2/§4: arithmetic vs Huffman on binary fits, and
 //!                    zstd-19 as a modern general-purpose comparator
+//! * `stages`       — transform-stage codec pipeline: per-stage
+//!                    encode/decode throughput on a real fit-table stream,
+//!                    and container sizes under candidate chains vs the
+//!                    fixed pipeline
 //!
 //! Run all: `cargo bench --bench ablations`; one: `-- alpha`.
 
@@ -41,6 +45,9 @@ fn main() {
     }
     if run("coder") {
         ablation_coder(&cfg);
+    }
+    if run("stages") {
+        ablation_stages(&cfg);
     }
 }
 
@@ -175,6 +182,96 @@ fn ablation_conditioning(cfg: &rf_compress::util::bench::BenchConfig) {
     }
     t.print();
     println!("richer conditioning shrinks payload at the cost of more models/dictionaries\n");
+}
+
+/// Transform-stage codec pipeline: per-stage throughput + chain sizes.
+fn ablation_stages(cfg: &rf_compress::util::bench::BenchConfig) {
+    use rf_compress::coding::stage::{parse_chain, BufferList, SectionChains, StageSpec};
+    use rf_compress::forest::Fit;
+    use rf_compress::util::bench::time_it;
+
+    println!("== ablation: transform-stage codec pipeline ==");
+    let ds = synthetic::airfoil_regression(1234);
+    let forest =
+        Forest::train(&ds, &ForestParams::regression(cfg.trees.min(30)), cfg.seed);
+    // the raw f64 byte stream a fit chain sees: every node fit in order
+    let vals: Vec<f64> = forest
+        .trees
+        .iter()
+        .flat_map(|t| t.nodes.iter())
+        .filter_map(|n| match n.fit {
+            Fit::Regression(v) => Some(v),
+            Fit::Class(_) => None,
+        })
+        .collect();
+    let mut bytes = Vec::with_capacity(vals.len() * 8);
+    for v in &vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let mb = bytes.len() as f64 / (1024.0 * 1024.0);
+    let mut t = Table::new(&["stage", "out/in", "enc MB/s", "dec MB/s"]);
+    for spec in [
+        StageSpec::DeltaU64,
+        StageSpec::XorU64,
+        StageSpec::ColumnSplit(8),
+        StageSpec::Lzss,
+        StageSpec::Huffman,
+        StageSpec::Arith,
+        StageSpec::ConvertF64F32,
+        StageSpec::ConvertF64Bf16,
+    ] {
+        let st = spec.build();
+        let input = BufferList::from_single(bytes.clone());
+        let enc = st.encode(&input).unwrap();
+        let te = time_it(0.1, 3, || {
+            std::hint::black_box(st.encode(&input).unwrap());
+        });
+        let td = time_it(0.1, 3, || {
+            std::hint::black_box(st.decode(&enc).unwrap());
+        });
+        t.row(&[
+            spec.name(),
+            format!("{:.3}", enc.total_bytes() as f64 / bytes.len().max(1) as f64),
+            format!("{:.1}", mb / te.median.max(1e-12)),
+            format!("{:.1}", mb / td.median.max(1e-12)),
+        ]);
+    }
+    t.print();
+
+    // whole containers: candidate chains vs the fixed pipeline (no chains)
+    let base = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let mut t = Table::new(&["chains (struct | split | fit)", "container", "vs fixed"]);
+    for (s, sp, f) in [
+        ("-", "-", "-"),
+        ("lzss", "delta+lzss", "-"),
+        ("-", "split8+lzss", "split8+huff"),
+        ("-", "-", "bf16+lzss"),
+    ] {
+        let chains = SectionChains {
+            structure: parse_chain(s).unwrap(),
+            split_tables: parse_chain(sp).unwrap(),
+            fit_table: parse_chain(f).unwrap(),
+        };
+        let lossy = chains.is_lossy();
+        let opts = CompressOptions { chains, ..Default::default() };
+        let cf = CompressedForest::compress(&forest, &ds, &opts).unwrap();
+        if !lossy {
+            assert!(
+                cf.decompress().unwrap().identical(&forest),
+                "lossless chain must round-trip bit-exactly"
+            );
+        }
+        t.row(&[
+            format!("{s} | {sp} | {f}{}", if lossy { " (lossy)" } else { "" }),
+            human_bytes(cf.total_bytes()),
+            format!(
+                "{:+.1}%",
+                (cf.total_bytes() as f64 / base.total_bytes() as f64 - 1.0) * 100.0
+            ),
+        ]);
+    }
+    t.print();
+    println!("empty chains reproduce the fixed pipeline exactly (the +0.0% row)\n");
 }
 
 /// §4: arithmetic coding beats Huffman on skewed binary fits.

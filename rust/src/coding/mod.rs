@@ -10,6 +10,8 @@
 //!   constants `α` of eq. (6)
 //! * [`f64pack`] — bit-exact f64 coding (Huffman'd sign/exponent + raw
 //!   mantissa) for value tables and raw fit streams
+//! * [`stage`]   — composable transform-stage chains (delta/XOR,
+//!   mantissa-split, lossy float converts) layered over the coders above
 
 pub mod arith;
 pub mod bitio;
@@ -17,6 +19,7 @@ pub mod entropy;
 pub mod f64pack;
 pub mod huffman;
 pub mod lz;
+pub mod stage;
 
 pub use bitio::{BitReader, BitWriter};
 pub use huffman::{HuffmanCode, HuffmanDecoder};

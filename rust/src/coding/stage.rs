@@ -1,0 +1,1098 @@
+//! Composable transform-stage codec pipeline.
+//!
+//! The paper's §4 encoder is one fixed four-stage function; its lossy
+//! scheme (§5) is explicitly a *family* of rate–distortion trade-offs.
+//! This module expresses both as declared chains of composable stages:
+//! a [`Stage`] maps a [`BufferList`] (one or more byte buffers) to a
+//! [`BufferList`], invertibly for lossless stages and within a
+//! [`crate::lossy::theory`]-accounted distortion bound for lossy ones.
+//!
+//! Stage kinds (wire tag in parentheses):
+//!
+//! | stage              | tag | kind      | effect                                     |
+//! |--------------------|-----|-----------|--------------------------------------------|
+//! | `Lzss`             | 0   | entropy   | LZSS over each buffer                      |
+//! | `Huffman`          | 1   | entropy   | order-0 byte Huffman, self-framed dict     |
+//! | `Arith`            | 2   | entropy   | order-0 byte arithmetic coding             |
+//! | `DeltaU64`         | 3   | transform | wrapping delta over LE 64-bit words        |
+//! | `XorU64`           | 4   | transform | XOR-diff over LE 64-bit words              |
+//! | `ColumnSplit(w)`   | 5   | transform | byte-plane transpose of `w`-byte records   |
+//! | `ConvertF64F32`    | 6   | **lossy** | f64 → f32 round-to-nearest                 |
+//! | `ConvertF64Bf16`   | 7   | **lossy** | f64 → bfloat16 round-to-nearest-even       |
+//!
+//! Transform stages are bit-pattern transforms: `DeltaU64`/`XorU64`
+//! operate on the raw 64-bit words (any trailing `len % 8` bytes pass
+//! through unchanged), so they are exactly invertible on **every** input —
+//! NaNs, negative zero, and subnormals included. The lossy converts widen
+//! back to f64 on decode, so a decoded chain always yields the section's
+//! native f64 byte layout.
+//!
+//! A chain is serialized into the container header (see
+//! [`crate::compress::container`]); [`encode_chain`] / [`decode_chain`]
+//! run it forwards/backwards over a section payload.
+
+use crate::coding::arith::{self, FreqModel};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::huffman::HuffmanCode;
+use crate::coding::lz;
+use anyhow::{bail, Context, Result};
+
+/// Hard cap on the number of stages in one chain (header plausibility
+/// bound; real chains are 1–4 stages).
+pub const MAX_CHAIN_LEN: usize = 8;
+
+/// An ordered list of byte buffers flowing through a stage chain.
+///
+/// Most sections enter as a single buffer; [`StageSpec::ColumnSplit`]
+/// fans one buffer out into per-byte planes (and merges them back on
+/// decode).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BufferList {
+    bufs: Vec<Vec<u8>>,
+}
+
+impl BufferList {
+    /// A list holding one buffer.
+    pub fn from_single(buf: Vec<u8>) -> Self {
+        BufferList { bufs: vec![buf] }
+    }
+
+    /// A list holding the given buffers in order.
+    pub fn from_bufs(bufs: Vec<Vec<u8>>) -> Self {
+        BufferList { bufs }
+    }
+
+    /// Number of buffers.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Whether the list holds no buffers.
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Total bytes across all buffers.
+    pub fn total_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Iterate over the buffers in order.
+    pub fn iter(&self) -> impl Iterator<Item = &Vec<u8>> {
+        self.bufs.iter()
+    }
+
+    /// Unwrap a single-buffer list (the shape every fully-decoded section
+    /// chain must end in).
+    pub fn into_single(mut self) -> Result<Vec<u8>> {
+        if self.bufs.len() != 1 {
+            bail!("expected a single buffer, found {}", self.bufs.len());
+        }
+        Ok(self.bufs.pop().unwrap())
+    }
+}
+
+/// One stage of a codec chain: a declared, serializable transform over a
+/// [`BufferList`]. `decode` inverts `encode` exactly for lossless stages;
+/// lossy stages decode to the nearest representable value (distortion
+/// accounted by [`crate::lossy::theory::convert_mse_bound`]).
+pub trait Stage {
+    /// The serializable description of this stage.
+    fn spec(&self) -> StageSpec;
+    /// Forward transform.
+    fn encode(&self, input: &BufferList) -> Result<BufferList>;
+    /// Inverse transform (exact for lossless stages).
+    fn decode(&self, input: &BufferList) -> Result<BufferList>;
+}
+
+/// Serializable description of one stage (the form stored in the `RFCZ`
+/// header). [`StageSpec::build`] instantiates the matching [`Stage`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageSpec {
+    /// LZSS over each buffer (tag 0).
+    Lzss,
+    /// Order-0 byte-level Huffman with a self-framed dictionary (tag 1).
+    Huffman,
+    /// Order-0 byte-level arithmetic coding (tag 2).
+    Arith,
+    /// Wrapping delta over little-endian 64-bit words (tag 3).
+    DeltaU64,
+    /// XOR-diff over little-endian 64-bit words (tag 4).
+    XorU64,
+    /// Byte-plane transpose of `w`-byte records (tag 5): splits the
+    /// mantissa/exponent bytes of numeric arrays into separate planes so a
+    /// following entropy stage sees homogeneous distributions.
+    ColumnSplit(u8),
+    /// Lossy f64 → f32 conversion, round-to-nearest (tag 6).
+    ConvertF64F32,
+    /// Lossy f64 → bfloat16 conversion, round-to-nearest-even (tag 7).
+    ConvertF64Bf16,
+}
+
+impl StageSpec {
+    /// Whether this stage discards information (§5 lossy compression).
+    pub fn is_lossy(&self) -> bool {
+        matches!(self, StageSpec::ConvertF64F32 | StageSpec::ConvertF64Bf16)
+    }
+
+    /// Short human-readable name (bench reports, CLI chain syntax).
+    pub fn name(&self) -> String {
+        match self {
+            StageSpec::Lzss => "lzss".into(),
+            StageSpec::Huffman => "huff".into(),
+            StageSpec::Arith => "arith".into(),
+            StageSpec::DeltaU64 => "delta".into(),
+            StageSpec::XorU64 => "xor".into(),
+            StageSpec::ColumnSplit(w) => format!("split{w}"),
+            StageSpec::ConvertF64F32 => "f32".into(),
+            StageSpec::ConvertF64Bf16 => "bf16".into(),
+        }
+    }
+
+    /// Instantiate the stage implementation this spec describes.
+    pub fn build(&self) -> Box<dyn Stage> {
+        match *self {
+            StageSpec::Lzss => Box::new(LzssStage),
+            StageSpec::Huffman => Box::new(HuffmanStage),
+            StageSpec::Arith => Box::new(ArithStage),
+            StageSpec::DeltaU64 => Box::new(DeltaStage),
+            StageSpec::XorU64 => Box::new(XorStage),
+            StageSpec::ColumnSplit(w) => Box::new(ColumnSplitStage { width: w }),
+            StageSpec::ConvertF64F32 => Box::new(ConvertF32Stage),
+            StageSpec::ConvertF64Bf16 => Box::new(ConvertBf16Stage),
+        }
+    }
+
+    /// Serialize one spec (tag byte + parameters).
+    pub fn write(&self, w: &mut BitWriter) {
+        let tag: u64 = match self {
+            StageSpec::Lzss => 0,
+            StageSpec::Huffman => 1,
+            StageSpec::Arith => 2,
+            StageSpec::DeltaU64 => 3,
+            StageSpec::XorU64 => 4,
+            StageSpec::ColumnSplit(_) => 5,
+            StageSpec::ConvertF64F32 => 6,
+            StageSpec::ConvertF64Bf16 => 7,
+        };
+        w.write_bits(tag, 8);
+        if let StageSpec::ColumnSplit(width) = self {
+            w.write_bits(*width as u64, 8);
+        }
+    }
+
+    /// Deserialize one spec.
+    pub fn read(r: &mut BitReader) -> Result<Self> {
+        Ok(match r.read_bits(8).context("stage tag")? {
+            0 => StageSpec::Lzss,
+            1 => StageSpec::Huffman,
+            2 => StageSpec::Arith,
+            3 => StageSpec::DeltaU64,
+            4 => StageSpec::XorU64,
+            5 => {
+                let w = r.read_bits(8).context("column-split width")? as u8;
+                StageSpec::ColumnSplit(w)
+            }
+            6 => StageSpec::ConvertF64F32,
+            7 => StageSpec::ConvertF64Bf16,
+            v => bail!("unknown stage tag {v}"),
+        })
+    }
+}
+
+/// Serialize a chain: varint stage count, then each spec.
+pub fn write_chain(chain: &[StageSpec], w: &mut BitWriter) {
+    w.write_varint(chain.len() as u64);
+    for s in chain {
+        s.write(w);
+    }
+}
+
+/// Deserialize a chain (bounded by [`MAX_CHAIN_LEN`]).
+pub fn read_chain(r: &mut BitReader) -> Result<Vec<StageSpec>> {
+    let n = r.read_varint().context("chain length")?;
+    if n > MAX_CHAIN_LEN as u64 {
+        bail!("implausible chain length {n}");
+    }
+    (0..n).map(|_| StageSpec::read(r)).collect()
+}
+
+/// `"delta+lzss"`-style label for bench reports; the default (empty)
+/// chain prints as `"-"`.
+pub fn chain_label(chain: &[StageSpec]) -> String {
+    if chain.is_empty() {
+        return "-".into();
+    }
+    chain.iter().map(|s| s.name()).collect::<Vec<_>>().join("+")
+}
+
+/// Parse a `"delta+lzss"` / `"delta,lzss"` chain label (the CLI syntax;
+/// see [`chain_label`] for the stage names).
+pub fn parse_chain(s: &str) -> Result<Vec<StageSpec>> {
+    let s = s.trim();
+    if s.is_empty() || s == "-" {
+        return Ok(Vec::new());
+    }
+    s.split(['+', ','])
+        .map(|part| {
+            Ok(match part.trim() {
+                "lzss" => StageSpec::Lzss,
+                "huff" => StageSpec::Huffman,
+                "arith" => StageSpec::Arith,
+                "delta" => StageSpec::DeltaU64,
+                "xor" => StageSpec::XorU64,
+                "split2" => StageSpec::ColumnSplit(2),
+                "split4" => StageSpec::ColumnSplit(4),
+                "split8" => StageSpec::ColumnSplit(8),
+                "f32" => StageSpec::ConvertF64F32,
+                "bf16" => StageSpec::ConvertF64Bf16,
+                other => bail!("unknown stage name {other:?}"),
+            })
+        })
+        .collect()
+}
+
+/// Structural validation shared by every chain: length cap, sane
+/// column-split widths, and the lossy placement rule — converts are only
+/// legal as the **first** stage (they reinterpret raw f64 sections), at
+/// most one per chain, and only when the caller permits lossy coding at
+/// all (`allow_lossy`; regression fit tables only).
+pub fn validate_chain(chain: &[StageSpec], allow_lossy: bool) -> Result<()> {
+    if chain.len() > MAX_CHAIN_LEN {
+        bail!("chain of {} stages exceeds the cap of {MAX_CHAIN_LEN}", chain.len());
+    }
+    for (i, s) in chain.iter().enumerate() {
+        if let StageSpec::ColumnSplit(w) = s {
+            if !(2..=16).contains(w) {
+                bail!("column-split width {w} outside 2..=16");
+            }
+        }
+        if s.is_lossy() {
+            if !allow_lossy {
+                bail!("lossy stage {} not permitted in this chain", s.name());
+            }
+            if i != 0 {
+                bail!("lossy stage {} must be the first stage of its chain", s.name());
+            }
+        }
+    }
+    if chain.iter().filter(|s| s.is_lossy()).count() > 1 {
+        bail!("at most one lossy stage per chain");
+    }
+    Ok(())
+}
+
+/// Whether any stage of the chain is lossy.
+pub fn chain_is_lossy(chain: &[StageSpec]) -> bool {
+    chain.iter().any(|s| s.is_lossy())
+}
+
+/// The per-section stage chains of one container: empty chains mean the
+/// fixed legacy pipeline (a version-1 `RFCZ` container, byte-for-byte).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SectionChains {
+    /// Chain for the STRUCT section (packed Zaks bits).
+    pub structure: Vec<StageSpec>,
+    /// Chain for the numeric split-value tables (TABLES section).
+    pub split_tables: Vec<StageSpec>,
+    /// Chain for the regression fit-value table; the only chain that may
+    /// open with a lossy convert (§5 distortion-rate trade).
+    pub fit_table: Vec<StageSpec>,
+}
+
+impl SectionChains {
+    /// Whether every chain is empty (the fixed legacy pipeline).
+    pub fn is_default(&self) -> bool {
+        self.structure.is_empty() && self.split_tables.is_empty() && self.fit_table.is_empty()
+    }
+
+    /// Whether any chain contains a lossy stage.
+    pub fn is_lossy(&self) -> bool {
+        chain_is_lossy(&self.fit_table)
+            || chain_is_lossy(&self.structure)
+            || chain_is_lossy(&self.split_tables)
+    }
+
+    /// Validate all three chains. Lossy stages are only legal in the fit
+    /// chain and only for regression forests (classification fits are
+    /// class ids — "rounding" them is meaningless, not a §5 trade).
+    pub fn validate(&self, classification: bool) -> Result<()> {
+        validate_chain(&self.structure, false).context("structure chain")?;
+        validate_chain(&self.split_tables, false).context("split-tables chain")?;
+        validate_chain(&self.fit_table, !classification).context("fit-table chain")?;
+        Ok(())
+    }
+
+    /// Serialize the three chains (the version-2 header extension).
+    pub fn write(&self, w: &mut BitWriter) {
+        write_chain(&self.structure, w);
+        write_chain(&self.split_tables, w);
+        write_chain(&self.fit_table, w);
+    }
+
+    /// Deserialize the three chains.
+    pub fn read(r: &mut BitReader) -> Result<Self> {
+        Ok(SectionChains {
+            structure: read_chain(r).context("structure chain")?,
+            split_tables: read_chain(r).context("split-tables chain")?,
+            fit_table: read_chain(r).context("fit-table chain")?,
+        })
+    }
+}
+
+// ------------------------------------------------------------ chain running
+
+/// Run a chain forwards over `input` and serialize the resulting buffer
+/// list (varint buffer count, varint lengths, byte-aligned payloads).
+pub fn encode_chain(chain: &[StageSpec], input: BufferList) -> Result<Vec<u8>> {
+    let mut bufs = input;
+    for s in chain {
+        bufs = s
+            .build()
+            .encode(&bufs)
+            .with_context(|| format!("stage {} encode", s.name()))?;
+    }
+    let mut w = BitWriter::new();
+    w.write_varint(bufs.len() as u64);
+    for b in bufs.iter() {
+        w.write_varint(b.len() as u64);
+    }
+    w.align_byte();
+    for b in bufs.iter() {
+        w.write_bytes(b);
+    }
+    Ok(w.into_bytes())
+}
+
+/// Parse a serialized buffer list and run the chain backwards over it.
+pub fn decode_chain(chain: &[StageSpec], bytes: &[u8]) -> Result<BufferList> {
+    let mut r = BitReader::new(bytes);
+    let n_raw = r.read_varint().context("buffer count")?;
+    if n_raw > (1 << 20) {
+        bail!("implausible buffer count {n_raw}");
+    }
+    let n = n_raw as usize;
+    let mut lens = Vec::with_capacity(n);
+    let mut total = 0u64;
+    for _ in 0..n {
+        let l = r.read_varint().context("buffer length")?;
+        total = total.checked_add(l).context("buffer length overflow")?;
+        if total > (1 << 33) {
+            bail!("implausible buffer bytes {total}");
+        }
+        lens.push(usize::try_from(l).context("buffer length")?);
+    }
+    r.align_byte();
+    let mut bufs = Vec::with_capacity(n);
+    for l in lens {
+        // capacity capped: a corrupt length claim must error on read, not
+        // force a huge allocation first
+        let mut b = Vec::with_capacity(l.min(1 << 20));
+        for _ in 0..l {
+            b.push(r.read_byte().context("buffer payload")?);
+        }
+        bufs.push(b);
+    }
+    let mut bufs = BufferList::from_bufs(bufs);
+    for s in chain.iter().rev() {
+        bufs = s
+            .build()
+            .decode(&bufs)
+            .with_context(|| format!("stage {} decode", s.name()))?;
+    }
+    Ok(bufs)
+}
+
+/// Encode an f64 array (little-endian bytes) through a chain.
+pub fn encode_f64_chain(chain: &[StageSpec], vals: &[f64]) -> Result<Vec<u8>> {
+    let mut bytes = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    encode_chain(chain, BufferList::from_single(bytes))
+}
+
+/// Decode a chain back to an f64 array. Lossy converts widen on decode,
+/// so every fit/split chain ends in the native f64 layout.
+pub fn decode_f64_chain(chain: &[StageSpec], bytes: &[u8]) -> Result<Vec<f64>> {
+    let buf = decode_chain(chain, bytes)?.into_single()?;
+    if buf.len() % 8 != 0 {
+        bail!("decoded f64 section holds {} bytes (not a multiple of 8)", buf.len());
+    }
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+// ------------------------------------------------------------------- stages
+
+/// Apply `f` buffer-by-buffer (the shape most stages take).
+fn per_buffer(
+    input: &BufferList,
+    mut f: impl FnMut(&[u8]) -> Result<Vec<u8>>,
+) -> Result<BufferList> {
+    let mut out = Vec::with_capacity(input.len());
+    for b in input.iter() {
+        out.push(f(b)?);
+    }
+    Ok(BufferList::from_bufs(out))
+}
+
+/// LZSS over each buffer ([`StageSpec::Lzss`]).
+pub struct LzssStage;
+
+impl Stage for LzssStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::Lzss
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| Ok(lz::compress_to_bytes(b)))
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| lz::decompress_from_bytes(b))
+    }
+}
+
+/// Order-0 byte-level Huffman ([`StageSpec::Huffman`]): each buffer is
+/// self-framed as `varint len ++ dict ++ codes` (no frame at all for an
+/// empty buffer).
+pub struct HuffmanStage;
+
+impl Stage for HuffmanStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::Huffman
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let mut w = BitWriter::new();
+            w.write_varint(b.len() as u64);
+            if !b.is_empty() {
+                let mut weights = [0f64; 256];
+                for &byte in b {
+                    weights[byte as usize] += 1.0;
+                }
+                let code = HuffmanCode::from_weights(&weights)?;
+                code.write_dict(&mut w);
+                for &byte in b {
+                    code.encode(byte as u32, &mut w)?;
+                }
+            }
+            Ok(w.into_bytes())
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let mut r = BitReader::new(b);
+            let n = r.read_varint().context("huffman stage len")?;
+            if n > (1 << 28) {
+                bail!("implausible huffman stage length {n}");
+            }
+            if n == 0 {
+                return Ok(Vec::new());
+            }
+            let code = HuffmanCode::read_dict(&mut r)?;
+            let dec = code.decoder();
+            let mut out = Vec::with_capacity((n as usize).min(1 << 20));
+            for _ in 0..n {
+                let sym = dec.decode(&mut r)?;
+                if sym > 255 {
+                    bail!("huffman stage symbol {sym} out of byte range");
+                }
+                out.push(sym as u8);
+            }
+            Ok(out)
+        })
+    }
+}
+
+/// Order-0 byte-level arithmetic coding ([`StageSpec::Arith`]): each
+/// buffer is self-framed as `varint len ++ freq model ++ code bits`.
+pub struct ArithStage;
+
+impl Stage for ArithStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::Arith
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let mut w = BitWriter::new();
+            w.write_varint(b.len() as u64);
+            if !b.is_empty() {
+                let mut freqs = [0u64; 256];
+                for &byte in b {
+                    freqs[byte as usize] += 1;
+                }
+                let model = FreqModel::from_freqs(&freqs)?;
+                model.write(&mut w);
+                let syms: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+                arith::encode_sequence(&model, &syms, &mut w)?;
+            }
+            Ok(w.into_bytes())
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let mut r = BitReader::new(b);
+            let n = r.read_varint().context("arith stage len")?;
+            if n > (1 << 28) {
+                bail!("implausible arith stage length {n}");
+            }
+            if n == 0 {
+                return Ok(Vec::new());
+            }
+            let model = FreqModel::read(&mut r)?;
+            let syms = arith::decode_sequence(&model, &mut r, n as usize)?;
+            syms.into_iter()
+                .map(|s| {
+                    if s > 255 {
+                        bail!("arith stage symbol {s} out of byte range");
+                    }
+                    Ok(s as u8)
+                })
+                .collect()
+        })
+    }
+}
+
+/// Split a buffer into its full little-endian u64 words plus a raw tail
+/// (< 8 bytes) that transform stages pass through untouched.
+fn le_words(b: &[u8]) -> (Vec<u64>, &[u8]) {
+    let n = b.len() / 8;
+    let words = b[..n * 8]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    (words, &b[n * 8..])
+}
+
+fn words_to_bytes(words: &[u64], tail: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(words.len() * 8 + tail.len());
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.extend_from_slice(tail);
+    out
+}
+
+/// Wrapping delta over LE 64-bit words ([`StageSpec::DeltaU64`]): split
+/// tables and fit tables are sorted f64 arrays, so consecutive bit
+/// patterns share high bytes and the deltas compress far better. Exactly
+/// invertible on every bit pattern (wrapping arithmetic, no float
+/// interpretation).
+pub struct DeltaStage;
+
+impl Stage for DeltaStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::DeltaU64
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let (words, tail) = le_words(b);
+            let mut prev = 0u64;
+            let deltas: Vec<u64> = words
+                .iter()
+                .map(|&w| {
+                    let d = w.wrapping_sub(prev);
+                    prev = w;
+                    d
+                })
+                .collect();
+            Ok(words_to_bytes(&deltas, tail))
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let (deltas, tail) = le_words(b);
+            let mut prev = 0u64;
+            let words: Vec<u64> = deltas
+                .iter()
+                .map(|&d| {
+                    prev = prev.wrapping_add(d);
+                    prev
+                })
+                .collect();
+            Ok(words_to_bytes(&words, tail))
+        })
+    }
+}
+
+/// XOR-diff over LE 64-bit words ([`StageSpec::XorU64`]): like
+/// [`DeltaStage`] but XOR instead of subtraction — zeroes exactly the
+/// bits that repeat between neighbours (the FPC/Gorilla trick for
+/// slowly-varying floats). Self-inverse per word pair, exactly invertible.
+pub struct XorStage;
+
+impl Stage for XorStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::XorU64
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let (words, tail) = le_words(b);
+            let mut prev = 0u64;
+            let diffs: Vec<u64> = words
+                .iter()
+                .map(|&w| {
+                    let d = w ^ prev;
+                    prev = w;
+                    d
+                })
+                .collect();
+            Ok(words_to_bytes(&diffs, tail))
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            let (diffs, tail) = le_words(b);
+            let mut prev = 0u64;
+            let words: Vec<u64> = diffs
+                .iter()
+                .map(|&d| {
+                    prev ^= d;
+                    prev
+                })
+                .collect();
+            Ok(words_to_bytes(&words, tail))
+        })
+    }
+}
+
+/// Byte-plane transpose ([`StageSpec::ColumnSplit`]): each input buffer
+/// of `w`-byte records becomes `w` plane buffers (plane `j` holds byte
+/// `j` of every record). A `len % w` tail is appended to the **last**
+/// plane, so any buffer length round-trips. Mantissa bytes land in their
+/// own planes — near-uniform high bytes separate from low-entropy
+/// sign/exponent bytes, which is what makes a following entropy stage
+/// effective (the "mantissa-split" of the module title).
+pub struct ColumnSplitStage {
+    /// Record width in bytes (2..=16; 8 for f64 sections).
+    pub width: u8,
+}
+
+impl Stage for ColumnSplitStage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::ColumnSplit(self.width)
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        let w = self.width as usize;
+        if w == 0 {
+            bail!("column-split width 0");
+        }
+        let mut out = Vec::with_capacity(input.len() * w);
+        for b in input.iter() {
+            let n = b.len() / w;
+            let tail = &b[n * w..];
+            for j in 0..w {
+                let mut plane = Vec::with_capacity(n + if j == w - 1 { tail.len() } else { 0 });
+                for i in 0..n {
+                    plane.push(b[i * w + j]);
+                }
+                if j == w - 1 {
+                    plane.extend_from_slice(tail);
+                }
+                out.push(plane);
+            }
+        }
+        Ok(BufferList::from_bufs(out))
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        let w = self.width as usize;
+        if w == 0 {
+            bail!("column-split width 0");
+        }
+        if input.len() % w != 0 {
+            bail!("column-split decode: {} planes not a multiple of width {w}", input.len());
+        }
+        let planes: Vec<&Vec<u8>> = input.iter().collect();
+        let mut out = Vec::with_capacity(input.len() / w);
+        for group in planes.chunks_exact(w) {
+            let n = group[0].len();
+            for (j, p) in group.iter().enumerate().take(w - 1) {
+                if p.len() != n {
+                    bail!("column-split decode: plane {j} holds {} bytes, expected {n}", p.len());
+                }
+            }
+            let last = group[w - 1];
+            if last.len() < n {
+                bail!("column-split decode: last plane short ({} < {n})", last.len());
+            }
+            let tail = &last[n..];
+            if tail.len() >= w {
+                bail!("column-split decode: tail of {} bytes exceeds width {w}", tail.len());
+            }
+            let mut buf = Vec::with_capacity(n * w + tail.len());
+            for i in 0..n {
+                for p in group.iter() {
+                    buf.push(p[i]);
+                }
+            }
+            buf.extend_from_slice(tail);
+            out.push(buf);
+        }
+        Ok(BufferList::from_bufs(out))
+    }
+}
+
+/// Lossy f64 → f32 ([`StageSpec::ConvertF64F32`]): halves the section at
+/// ≤ 2⁻²⁴ relative error per value. Encoding errors out (rather than
+/// silently saturating) when a finite input overflows the f32 range;
+/// values below the f32 subnormal grid flush toward zero, which the
+/// distortion bound's absolute term accounts for.
+pub struct ConvertF32Stage;
+
+impl Stage for ConvertF32Stage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::ConvertF64F32
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            if b.len() % 8 != 0 {
+                bail!("f64→f32 convert on {} bytes (not a multiple of 8)", b.len());
+            }
+            let mut out = Vec::with_capacity(b.len() / 2);
+            for c in b.chunks_exact(8) {
+                let v = f64::from_le_bytes(c.try_into().unwrap());
+                let v32 = v as f32;
+                if v.is_finite() && v32.is_infinite() {
+                    bail!("value {v} overflows the f32 range");
+                }
+                out.extend_from_slice(&v32.to_le_bytes());
+            }
+            Ok(out)
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            if b.len() % 4 != 0 {
+                bail!("f32 section holds {} bytes (not a multiple of 4)", b.len());
+            }
+            let mut out = Vec::with_capacity(b.len() * 2);
+            for c in b.chunks_exact(4) {
+                let v = f32::from_le_bytes(c.try_into().unwrap()) as f64;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Ok(out)
+        })
+    }
+}
+
+/// Round an f32 bit pattern to bfloat16 (round-to-nearest-even; NaN
+/// payloads are quieted so they stay NaN after truncation).
+fn f32_bits_to_bf16(b: u32) -> u16 {
+    if f32::from_bits(b).is_nan() {
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    let round = ((b >> 16) & 1) + 0x7FFF;
+    ((b.wrapping_add(round)) >> 16) as u16
+}
+
+/// Lossy f64 → bfloat16 ([`StageSpec::ConvertF64Bf16`]): quarters the
+/// section at ≤ 2⁻⁸ relative error per value — the aggressive end of the
+/// §5 distortion-rate curve. Same overflow/underflow policy as
+/// [`ConvertF32Stage`].
+pub struct ConvertBf16Stage;
+
+impl Stage for ConvertBf16Stage {
+    fn spec(&self) -> StageSpec {
+        StageSpec::ConvertF64Bf16
+    }
+
+    fn encode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            if b.len() % 8 != 0 {
+                bail!("f64→bf16 convert on {} bytes (not a multiple of 8)", b.len());
+            }
+            let mut out = Vec::with_capacity(b.len() / 4);
+            for c in b.chunks_exact(8) {
+                let v = f64::from_le_bytes(c.try_into().unwrap());
+                let h = f32_bits_to_bf16((v as f32).to_bits());
+                if v.is_finite() && (h & 0x7FFF) >= 0x7F80 {
+                    bail!("value {v} overflows the bfloat16 range");
+                }
+                out.extend_from_slice(&h.to_le_bytes());
+            }
+            Ok(out)
+        })
+    }
+
+    fn decode(&self, input: &BufferList) -> Result<BufferList> {
+        per_buffer(input, |b| {
+            if b.len() % 2 != 0 {
+                bail!("bf16 section holds {} bytes (not a multiple of 2)", b.len());
+            }
+            let mut out = Vec::with_capacity(b.len() * 4);
+            for c in b.chunks_exact(2) {
+                let h = u16::from_le_bytes(c.try_into().unwrap());
+                let v = f32::from_bits((h as u32) << 16) as f64;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Ok(out)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specials() -> Vec<f64> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest positive subnormal
+            -5e-324,
+            1e300,
+            -1e300,
+            std::f64::consts::PI,
+        ]
+    }
+
+    fn bytes_of(vals: &[f64]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn transform_stages_roundtrip_special_floats_bit_exactly() {
+        let data = bytes_of(&specials());
+        for spec in [
+            StageSpec::DeltaU64,
+            StageSpec::XorU64,
+            StageSpec::ColumnSplit(8),
+            StageSpec::ColumnSplit(4),
+            StageSpec::Lzss,
+            StageSpec::Huffman,
+            StageSpec::Arith,
+        ] {
+            let st = spec.build();
+            let enc = st.encode(&BufferList::from_single(data.clone())).unwrap();
+            let dec = st.decode(&enc).unwrap();
+            assert_eq!(
+                dec.clone().into_single().unwrap(),
+                data,
+                "stage {} must be bit-exact",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn transform_stages_tolerate_unaligned_tails() {
+        // 13 bytes: one u64 word + 5 tail bytes for delta/xor; 1 record +
+        // 5 tail for split8
+        let data: Vec<u8> = (0u8..13).collect();
+        for spec in [StageSpec::DeltaU64, StageSpec::XorU64, StageSpec::ColumnSplit(8)] {
+            let st = spec.build();
+            let enc = st.encode(&BufferList::from_single(data.clone())).unwrap();
+            let dec = st.decode(&enc).unwrap().into_single().unwrap();
+            assert_eq!(dec, data, "stage {} tail handling", spec.name());
+        }
+    }
+
+    #[test]
+    fn entropy_stages_roundtrip_empty_and_uniform_buffers() {
+        for spec in [StageSpec::Lzss, StageSpec::Huffman, StageSpec::Arith] {
+            let st = spec.build();
+            for data in [vec![], vec![7u8; 100], (0u8..=255).collect::<Vec<u8>>()] {
+                let enc = st.encode(&BufferList::from_single(data.clone())).unwrap();
+                let dec = st.decode(&enc).unwrap().into_single().unwrap();
+                assert_eq!(dec, data, "stage {}", spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn column_split_fans_out_and_merges_multiple_buffers() {
+        let a: Vec<u8> = (0..32).collect();
+        let b: Vec<u8> = (100..117).collect(); // 17 bytes: 2 records + 1 tail
+        let st = ColumnSplitStage { width: 8 };
+        let input = BufferList::from_bufs(vec![a.clone(), b.clone()]);
+        let enc = st.encode(&input).unwrap();
+        assert_eq!(enc.len(), 16, "two buffers × width 8 planes");
+        let dec = st.decode(&enc).unwrap();
+        assert_eq!(dec, input);
+    }
+
+    #[test]
+    fn convert_f32_widens_back_and_preserves_signed_zero_and_nan() {
+        let vals = vec![0.0, -0.0, 1.0, -2.5, f64::NAN, f64::INFINITY, 1e-310];
+        let st = ConvertF32Stage;
+        let enc = st.encode(&BufferList::from_single(bytes_of(&vals))).unwrap();
+        let out = st.decode(&enc).unwrap().into_single().unwrap();
+        let decoded: Vec<f64> = out
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(decoded[0].to_bits(), 0.0f64.to_bits());
+        assert_eq!(decoded[1].to_bits(), (-0.0f64).to_bits(), "signed zero survives");
+        assert_eq!(decoded[2], 1.0);
+        assert_eq!(decoded[3], -2.5);
+        assert!(decoded[4].is_nan(), "NaN stays NaN");
+        assert_eq!(decoded[5], f64::INFINITY);
+        // deep subnormal flushes to (signed) zero — within the bound's
+        // absolute term
+        assert_eq!(decoded[6], 0.0);
+    }
+
+    #[test]
+    fn convert_overflow_is_a_typed_error_not_saturation() {
+        // finite in f64 and f32, but rounds past bf16 max (~3.39e38)
+        let barely = vec![3.4e38];
+        assert!(ConvertBf16Stage.encode(&BufferList::from_single(bytes_of(&barely))).is_err());
+        // finite in f64, above f32 max (~3.40e38)
+        let big = vec![3.5e38];
+        assert!(ConvertF32Stage.encode(&BufferList::from_single(bytes_of(&big))).is_err());
+        assert!(ConvertBf16Stage.encode(&BufferList::from_single(bytes_of(&big))).is_err());
+        // infinities pass through both
+        let inf = vec![f64::INFINITY, f64::NEG_INFINITY];
+        assert!(ConvertF32Stage.encode(&BufferList::from_single(bytes_of(&inf))).is_ok());
+        assert!(ConvertBf16Stage.encode(&BufferList::from_single(bytes_of(&inf))).is_ok());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1 + 2⁻⁸ sits exactly between 1 and 1 + 2⁻⁷: ties to even (1.0)
+        assert_eq!(f32_bits_to_bf16(0x3F80_8000), 0x3F80);
+        // 1 + 3·2⁻⁸ sits between 1 + 2⁻⁷ and 1 + 2⁻⁶: ties to even (2⁻⁶ side)
+        assert_eq!(f32_bits_to_bf16(0x3F81_8000), 0x3F82);
+        // below the tie: round down
+        assert_eq!(f32_bits_to_bf16(0x3F80_7FFF), 0x3F80);
+        // above the tie: round up
+        assert_eq!(f32_bits_to_bf16(0x3F80_8001), 0x3F81);
+        // NaN is quieted, stays NaN
+        let h = f32_bits_to_bf16(f32::NAN.to_bits());
+        assert!(f32::from_bits((h as u32) << 16).is_nan());
+    }
+
+    #[test]
+    fn chain_encode_decode_roundtrips_multi_stage() {
+        let vals: Vec<f64> = (0..321).map(|i| (i as f64).sqrt() * 3.25).collect();
+        for chain in [
+            vec![],
+            vec![StageSpec::Lzss],
+            vec![StageSpec::DeltaU64, StageSpec::Lzss],
+            vec![StageSpec::XorU64, StageSpec::ColumnSplit(8), StageSpec::Huffman],
+            vec![StageSpec::ColumnSplit(8), StageSpec::Arith],
+        ] {
+            let enc = encode_f64_chain(&chain, &vals).unwrap();
+            let dec = decode_f64_chain(&chain, &enc).unwrap();
+            assert_eq!(
+                dec.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "chain {} must round-trip bit-exactly",
+                chain_label(&chain)
+            );
+        }
+    }
+
+    #[test]
+    fn lossy_chain_decodes_to_converted_values() {
+        let vals = vec![1.1, -2.7, 0.0, 1e30];
+        let chain = vec![StageSpec::ConvertF64F32, StageSpec::Lzss];
+        let enc = encode_f64_chain(&chain, &vals).unwrap();
+        let dec = decode_f64_chain(&chain, &enc).unwrap();
+        for (d, v) in dec.iter().zip(&vals) {
+            assert_eq!(*d, *v as f32 as f64, "decode = widened f32 rounding");
+        }
+    }
+
+    #[test]
+    fn chain_wire_format_roundtrips() {
+        let chains = SectionChains {
+            structure: vec![StageSpec::Huffman],
+            split_tables: vec![StageSpec::DeltaU64, StageSpec::Lzss],
+            fit_table: vec![StageSpec::ConvertF64Bf16, StageSpec::ColumnSplit(2)],
+        };
+        let mut w = BitWriter::new();
+        chains.write(&mut w);
+        let bytes = w.into_bytes();
+        let got = SectionChains::read(&mut BitReader::new(&bytes)).unwrap();
+        assert_eq!(got, chains);
+    }
+
+    #[test]
+    fn validation_enforces_lossy_placement() {
+        // lossy only at position 0
+        assert!(validate_chain(&[StageSpec::Lzss, StageSpec::ConvertF64F32], true).is_err());
+        assert!(validate_chain(&[StageSpec::ConvertF64F32, StageSpec::Lzss], true).is_ok());
+        // lossy refused where not permitted
+        assert!(validate_chain(&[StageSpec::ConvertF64F32], false).is_err());
+        // bad split width
+        assert!(validate_chain(&[StageSpec::ColumnSplit(0)], false).is_err());
+        assert!(validate_chain(&[StageSpec::ColumnSplit(17)], false).is_err());
+        // classification forbids lossy fit chains
+        let lossy_fit = SectionChains {
+            fit_table: vec![StageSpec::ConvertF64F32],
+            ..Default::default()
+        };
+        assert!(lossy_fit.validate(true).is_err());
+        assert!(lossy_fit.validate(false).is_ok());
+    }
+
+    #[test]
+    fn chain_parse_and_label_are_inverse() {
+        let chain = parse_chain("delta+split8+lzss").unwrap();
+        assert_eq!(
+            chain,
+            vec![StageSpec::DeltaU64, StageSpec::ColumnSplit(8), StageSpec::Lzss]
+        );
+        assert_eq!(chain_label(&chain), "delta+split8+lzss");
+        assert_eq!(parse_chain("-").unwrap(), vec![]);
+        let mixed = parse_chain("f32, lzss").unwrap();
+        assert_eq!(mixed, vec![StageSpec::ConvertF64F32, StageSpec::Lzss]);
+        assert!(parse_chain("bogus").is_err());
+    }
+
+    #[test]
+    fn corrupt_chain_payload_errors_cleanly() {
+        let vals: Vec<f64> = (0..64).map(|i| i as f64 * 0.5).collect();
+        let chain = vec![StageSpec::DeltaU64, StageSpec::Lzss];
+        let enc = encode_f64_chain(&chain, &vals).unwrap();
+        // truncations and bit flips must surface typed errors or wrong
+        // data, never panics
+        for cut in [0, 1, enc.len() / 2, enc.len().saturating_sub(1)] {
+            let _ = decode_f64_chain(&chain, &enc[..cut]);
+        }
+        let mut flipped = enc.clone();
+        if let Some(b) = flipped.last_mut() {
+            *b ^= 0xFF;
+        }
+        let _ = decode_f64_chain(&chain, &flipped);
+        // decoding with the wrong chain is an error or garbage, not a panic
+        let _ = decode_f64_chain(&[StageSpec::Lzss], &enc);
+    }
+
+    #[test]
+    fn delta_improves_sorted_table_compressibility() {
+        // a sorted split table: deltas expose the shared high bytes
+        let vals: Vec<f64> = (0..512).map(|i| 1000.0 + i as f64 * 0.25).collect();
+        let plain = encode_f64_chain(&[StageSpec::Lzss], &vals).unwrap();
+        let delta = encode_f64_chain(&[StageSpec::DeltaU64, StageSpec::Lzss], &vals).unwrap();
+        assert!(
+            delta.len() < plain.len(),
+            "delta+lzss ({}) must beat lzss ({}) on a sorted table",
+            delta.len(),
+            plain.len()
+        );
+    }
+}

@@ -23,11 +23,38 @@
 //! information (in particular, unlike the paper's observation-index coding
 //! of numeric split values, the actual values live in TABLES — a standalone
 //! decoder cannot assume access to the training data).
+//!
+//! ## Stage-chain grammar (version 2)
+//!
+//! A container whose [`CompressOptions::chains`][1] are non-empty is
+//! written with [`VERSION_CHAINED`]; its header carries the three
+//! per-section chains right after the conditioning byte:
+//!
+//! ```text
+//! chains     := chain chain chain          ; structure, split-tables, fits
+//! chain      := varint(len ≤ 8) stage*
+//! stage      := tag:u8 [width:u8]          ; width only for tag 5
+//! tag        := 0 lzss | 1 huff | 2 arith | 3 delta | 4 xor
+//!             | 5 split<width∈2..=16> | 6 f32 | 7 bf16
+//! ```
+//!
+//! A non-empty structure chain writes STRUCT with mode byte 2 followed by
+//! the chain-coded payload; a non-empty split-tables chain writes each
+//! numeric TABLES entry with kind 3 (`varint(payload len)`, byte-align,
+//! payload); a non-empty fit chain replaces the fit table's `f64pack`
+//! block the same way. Decoders reject a chain-coded section whose header
+//! chain is empty, and validate chains on parse (lossy stages only at the
+//! head of a regression fit chain). Version-1 containers carry no chain
+//! bytes and parse with all chains empty — byte-for-byte the
+//! pre-stage-pipeline format.
+//!
+//! [1]: super::pipeline::CompressOptions
 
 use crate::coding::arith::FreqModel;
 use crate::coding::bitio::{BitReader, BitWriter};
 use crate::coding::f64pack::{self, F64Codec};
 use crate::coding::huffman::HuffmanCode;
+use crate::coding::stage::{self, SectionChains};
 use crate::model::extract::{SplitAlphabet, ValueAlphabets};
 use crate::model::keys::{ContextKey, ModelConditioning, ROOT_FATHER};
 use crate::util::mmap::Mmap;
@@ -37,8 +64,15 @@ use std::sync::Arc;
 
 /// Container file magic (`RFCZ`).
 pub const MAGIC: &[u8; 4] = b"RFCZ";
-/// Container format version this build reads and writes.
+/// Legacy (chainless) container version: the fixed four-stage pipeline.
+/// Written whenever every stage chain is empty, so default-option output
+/// is byte-identical to the pre-stage-pipeline encoder.
 pub const VERSION: u8 = 1;
+/// Chained container version: the header additionally carries the three
+/// per-section stage chains (see [`crate::coding::stage`]). Written only
+/// when at least one chain is non-empty; version-1 containers parse
+/// unchanged with empty chains.
+pub const VERSION_CHAINED: u8 = 2;
 
 /// A parsed container's byte source. Payload sections alias this buffer
 /// wherever it lives:
@@ -295,6 +329,9 @@ pub struct ParsedContainer {
     pub fit_codec: FitCodec,
     /// The `(depth, father)` conditioning scheme of the tree models.
     pub conditioning: ModelConditioning,
+    /// The per-section stage chains this container was encoded with
+    /// (all empty for a version-1 legacy container).
+    pub chains: SectionChains,
     /// Decoded split/fit value alphabets (TABLES section).
     pub alphabets: ValueAlphabets,
     /// Per-feature: `Some(ranks)` when the numeric split alphabet is
@@ -454,41 +491,19 @@ impl ParsedContainer {
 // ---------------------------------------------------------------- encoding
 
 /// Everything the encoder assembled, ready for serialization.
-pub struct ContainerBuilder {
-    /// Whether the forest classifies (vs regresses).
-    pub classification: bool,
-    /// Number of classes (classification only).
-    pub classes: u32,
-    /// Number of trees in the forest.
+///
+/// The side information (alphabets, cluster maps, codebooks, chains) is
+/// **borrowed** from the frozen [`CodecPlan`](super::pipeline::CodecPlan):
+/// a cohort encode ([`crate::pack::compress_cohort`]) serializes every
+/// member straight from the one shared plan instead of cloning the maps
+/// and dictionaries per member. Only the per-member payloads are owned.
+pub struct ContainerBuilder<'a> {
+    /// The frozen codec plan: target kind, feature metadata, alphabets,
+    /// cluster maps, codebooks, and the per-section stage chains.
+    pub plan: &'a super::pipeline::CodecPlan,
+    /// Number of trees in this member.
     pub n_trees: usize,
-    /// Per-feature metadata for the header.
-    pub features: Vec<FeatureMeta>,
-    /// How fit values are coded.
-    pub fit_codec: FitCodec,
-    /// The `(depth, father)` conditioning scheme of the tree models.
-    pub conditioning: ModelConditioning,
-    /// Split/fit value alphabets (serialized into TABLES).
-    pub alphabets: ValueAlphabets,
-    /// `Some(ranks)` per feature ⇒ emit the numeric split alphabet as
-    /// dataset ranks (sorted, delta-gamma coded) instead of f64 values.
-    pub indexed_splits: Vec<Option<Vec<u64>>>,
-    /// Context-key → cluster map for variable names.
-    pub vn_map: BTreeMap<ContextKey, u32>,
-    /// Per-feature context-key → cluster maps for split values.
-    pub split_maps: Vec<BTreeMap<ContextKey, u32>>,
-    /// Context-key → cluster map for fits.
-    pub fit_map: BTreeMap<ContextKey, u32>,
-    /// Per-cluster variable-name codebooks.
-    pub vn_dicts: Vec<HuffmanCode>,
-    /// Per-feature, per-cluster split-value codebooks.
-    pub split_dicts: Vec<Vec<HuffmanCode>>,
-    /// Per-cluster fit codebooks.
-    pub fit_dicts: Vec<HuffmanCode>,
-    /// Per-cluster arithmetic-coder fit models.
-    pub fit_models: Vec<FreqModel>,
-    /// Sign/exponent codec for raw-64 fit streams.
-    pub fit_raw_codec: Option<F64Codec>,
-    /// LZ-compressed packed Zaks stream (already encoded)
+    /// STRUCT payload (mode byte + encoded Zaks stream), already encoded.
     pub struct_bytes: Vec<u8>,
     /// per-tree payloads, each byte-aligned
     pub vars_trees: Vec<Vec<u8>>,
@@ -609,9 +624,14 @@ fn read_payload_spans(
     Ok((ranges, (start, end)))
 }
 
-impl ContainerBuilder {
+impl ContainerBuilder<'_> {
     /// Serialize to the final container bytes + the section size breakdown.
-    pub fn serialize(&self) -> (Vec<u8>, SectionSizes) {
+    ///
+    /// Fails only when a lossy convert stage overflows its narrower target
+    /// format; with empty chains (the default) serialization is infallible
+    /// and byte-identical to the pre-stage-pipeline encoder.
+    pub fn serialize(&self) -> Result<(Vec<u8>, SectionSizes)> {
+        let p = self.plan;
         let mut w = BitWriter::new();
         let mut sizes = SectionSizes::default();
 
@@ -619,12 +639,15 @@ impl ContainerBuilder {
         for &b in MAGIC {
             w.write_byte(b);
         }
-        w.write_bits(VERSION as u64, 8);
-        w.write_bits(self.classification as u64, 8);
-        w.write_varint(self.classes as u64);
+        // chainless plans keep emitting version 1 so the default encoder's
+        // output stays byte-for-byte what the fixed pipeline produced
+        let version = if p.chains.is_default() { VERSION } else { VERSION_CHAINED };
+        w.write_bits(version as u64, 8);
+        w.write_bits(p.classification as u64, 8);
+        w.write_varint(p.classes as u64);
         w.write_varint(self.n_trees as u64);
-        w.write_varint(self.features.len() as u64);
-        for f in &self.features {
+        w.write_varint(p.features.len() as u64);
+        for f in &p.features {
             match f.levels {
                 None => w.write_bits(0, 8),
                 Some(l) => {
@@ -638,28 +661,31 @@ impl ContainerBuilder {
             }
         }
         w.write_bits(
-            match self.fit_codec {
+            match p.fit_codec {
                 FitCodec::Huffman => 0,
                 FitCodec::Arith => 1,
                 FitCodec::Raw64 => 2,
             },
             8,
         );
-        write_conditioning(&mut w, self.conditioning);
+        write_conditioning(&mut w, p.conditioning);
+        if version == VERSION_CHAINED {
+            p.chains.write(&mut w);
+        }
         w.align_byte();
         sizes.header = w.bit_len() / 8;
 
         // ---- TABLES ----
         let mark = w.bit_len();
-        for (f, a) in self.alphabets.splits.iter().enumerate() {
+        for (f, a) in p.alphabets.splits.iter().enumerate() {
             match a {
                 SplitAlphabet::Numeric(_)
-                    if self.indexed_splits.get(f).is_some_and(|x| x.is_some()) =>
+                    if p.indexed_splits.get(f).is_some_and(|x| x.is_some()) =>
                 {
                     // dataset-indexed (paper mode): sorted ranks of the used
                     // thresholds within the feature column's unique values;
                     // delta-gamma coding makes this a few bits per entry
-                    let ranks = self.indexed_splits[f].as_ref().unwrap();
+                    let ranks = p.indexed_splits[f].as_ref().unwrap();
                     w.write_bits(2, 8);
                     w.write_varint(ranks.len() as u64);
                     let mut prev = 0u64;
@@ -672,6 +698,15 @@ impl ContainerBuilder {
                         }
                         prev = rank;
                     }
+                }
+                SplitAlphabet::Numeric(vals) if !p.chains.split_tables.is_empty() => {
+                    // chain-coded numeric split table (kind 3)
+                    w.write_bits(3, 8);
+                    let payload = stage::encode_f64_chain(&p.chains.split_tables, vals)
+                        .with_context(|| format!("split table {f} chain"))?;
+                    w.write_varint(payload.len() as u64);
+                    w.align_byte();
+                    w.write_bytes(&payload);
                 }
                 SplitAlphabet::Numeric(vals) => {
                     w.write_bits(0, 8);
@@ -690,43 +725,57 @@ impl ContainerBuilder {
         sizes.split_value_tables = (w.bit_len() - mark) / 8;
 
         let mark = w.bit_len();
-        f64pack::write_block(&self.alphabets.fits, &mut w).expect("fit table");
+        // Raw64 fits live inline in the FITS payload; the table is written
+        // empty (write_block(&[]) is what the owned-builder encoder emitted
+        // after clearing the clone's fits, so the bytes are unchanged)
+        let fit_vals: &[f64] =
+            if p.fit_codec == FitCodec::Raw64 { &[] } else { &p.alphabets.fits };
+        if p.chains.fit_table.is_empty() {
+            f64pack::write_block(fit_vals, &mut w).expect("fit table");
+        } else {
+            // chain-coded fit value table (possibly lossy, regression only)
+            let payload = stage::encode_f64_chain(&p.chains.fit_table, fit_vals)
+                .context("fit table chain")?;
+            w.write_varint(payload.len() as u64);
+            w.align_byte();
+            w.write_bytes(&payload);
+        }
         w.align_byte();
         sizes.fit_value_table = (w.bit_len() - mark) / 8;
 
         // ---- CLUSMAP ----
         let mark = w.bit_len();
-        write_map(&mut w, &self.vn_map);
-        w.write_varint(self.split_maps.len() as u64);
-        for m in &self.split_maps {
+        write_map(&mut w, &p.vn_map);
+        w.write_varint(p.split_maps.len() as u64);
+        for m in &p.split_maps {
             write_map(&mut w, m);
         }
-        write_map(&mut w, &self.fit_map);
+        write_map(&mut w, &p.fit_map);
         w.align_byte();
         sizes.cluster_maps = (w.bit_len() - mark) / 8;
 
         // ---- DICTS ----
         let mark = w.bit_len();
-        w.write_varint(self.vn_dicts.len() as u64);
-        for d in &self.vn_dicts {
+        w.write_varint(p.vn_dicts.len() as u64);
+        for d in &p.vn_dicts {
             d.write_dict(&mut w);
         }
-        w.write_varint(self.split_dicts.len() as u64);
-        for per_feature in &self.split_dicts {
+        w.write_varint(p.split_dicts.len() as u64);
+        for per_feature in &p.split_dicts {
             w.write_varint(per_feature.len() as u64);
             for d in per_feature {
                 d.write_dict(&mut w);
             }
         }
-        w.write_varint(self.fit_dicts.len() as u64);
-        for d in &self.fit_dicts {
+        w.write_varint(p.fit_dicts.len() as u64);
+        for d in &p.fit_dicts {
             d.write_dict(&mut w);
         }
-        w.write_varint(self.fit_models.len() as u64);
-        for m in &self.fit_models {
+        w.write_varint(p.fit_models.len() as u64);
+        for m in &p.fit_models {
             m.write(&mut w);
         }
-        match &self.fit_raw_codec {
+        match &p.fit_raw_codec {
             Some(codec) => {
                 w.write_bit(true);
                 codec.write_dict(&mut w);
@@ -758,7 +807,7 @@ impl ContainerBuilder {
         write_payload_section(&mut w, &self.fits_trees);
         sizes.fits = (w.bit_len() - mark) / 8;
 
-        (w.into_bytes(), sizes)
+        Ok((w.into_bytes(), sizes))
     }
 }
 
@@ -802,6 +851,7 @@ struct ParsedHeader {
     features: Vec<FeatureMeta>,
     fit_codec: FitCodec,
     conditioning: ModelConditioning,
+    chains: SectionChains,
     header_bytes: u64,
 }
 
@@ -848,7 +898,7 @@ fn read_header(r: &mut BitReader) -> Result<ParsedHeader> {
         bail!("not an RFCZ container (bad magic)");
     }
     let version = r.read_bits(8).context("version")? as u8;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_CHAINED {
         bail!("unsupported container version {version}");
     }
     let classification = r.read_bits(8).context("kind")? != 0;
@@ -892,6 +942,15 @@ fn read_header(r: &mut BitReader) -> Result<ParsedHeader> {
         v => bail!("unknown fit codec {v}"),
     };
     let conditioning = read_conditioning(r)?;
+    let chains = if version == VERSION_CHAINED {
+        let c = SectionChains::read(r).context("container chains")?;
+        // validated on read so a corrupt header (e.g. zero-width column
+        // split, misplaced lossy stage) fails here, not mid-decode
+        c.validate(classification).context("container chains")?;
+        c
+    } else {
+        SectionChains::default()
+    };
     r.align_byte();
     Ok(ParsedHeader {
         classification,
@@ -900,6 +959,7 @@ fn read_header(r: &mut BitReader) -> Result<ParsedHeader> {
         features,
         fit_codec,
         conditioning,
+        chains,
         header_bytes: r.bit_pos() / 8,
     })
 }
@@ -942,6 +1002,27 @@ fn read_side_info(r: &mut BitReader, h: &ParsedHeader) -> Result<ParsedSideInfo>
                 indexed_splits[f] = Some(ranks);
                 splits.push(SplitAlphabet::Numeric(Vec::new()));
             }
+            3 => {
+                if h.features[f].levels.is_some() {
+                    bail!("numeric table for categorical feature {f}");
+                }
+                if h.chains.split_tables.is_empty() {
+                    bail!("chain-coded split table {f} in a chainless container");
+                }
+                let len_raw = r.read_varint().context("chained table len")?;
+                if len_raw > (1u64 << 33) {
+                    bail!("implausible chained table size {len_raw}");
+                }
+                let len = cast_usize(len_raw, "chained table size")?;
+                r.align_byte();
+                let mut payload = Vec::with_capacity(len.min(1 << 20));
+                for _ in 0..len {
+                    payload.push(r.read_byte().context("chained table bytes")?);
+                }
+                let vals = stage::decode_f64_chain(&h.chains.split_tables, &payload)
+                    .with_context(|| format!("split table {f} chain"))?;
+                splits.push(SplitAlphabet::Numeric(vals));
+            }
             1 => {
                 if h.features[f].levels.is_none() {
                     bail!("categorical table for numeric feature {f}");
@@ -964,7 +1045,21 @@ fn read_side_info(r: &mut BitReader, h: &ParsedHeader) -> Result<ParsedSideInfo>
     let split_value_tables = (r.bit_pos() - mark) / 8;
 
     let mark = r.bit_pos();
-    let fits = f64pack::read_block(r).context("fit table")?;
+    let fits = if h.chains.fit_table.is_empty() {
+        f64pack::read_block(r).context("fit table")?
+    } else {
+        let len_raw = r.read_varint().context("chained fit table len")?;
+        if len_raw > (1u64 << 33) {
+            bail!("implausible chained fit table size {len_raw}");
+        }
+        let len = cast_usize(len_raw, "chained fit table size")?;
+        r.align_byte();
+        let mut payload = Vec::with_capacity(len.min(1 << 20));
+        for _ in 0..len {
+            payload.push(r.read_byte().context("chained fit table bytes")?);
+        }
+        stage::decode_f64_chain(&h.chains.fit_table, &payload).context("fit table chain")?
+    };
     r.align_byte();
     let fit_value_table = (r.bit_pos() - mark) / 8;
     let alphabets = ValueAlphabets { splits, fits };
@@ -1043,7 +1138,8 @@ fn read_side_info(r: &mut BitReader, h: &ParsedHeader) -> Result<ParsedSideInfo>
     })
 }
 
-fn read_tail(r: &mut BitReader, bytes: &[u8], n_trees: usize) -> Result<ParsedTail> {
+fn read_tail(r: &mut BitReader, bytes: &[u8], h: &ParsedHeader) -> Result<ParsedTail> {
+    let n_trees = h.n_trees;
     // ---- STRUCT ----
     let mark = r.bit_pos();
     let sb_len_raw = r.read_varint().context("struct len")?;
@@ -1061,11 +1157,13 @@ fn read_tail(r: &mut BitReader, bytes: &[u8], n_trees: usize) -> Result<ParsedTa
     r.seek_bits(sb_end as u64 * 8);
     let structure = (r.bit_pos() - mark) / 8;
 
-    // decode structure: 1-byte mode prefix (0 = LZSS, 1 = raw packed)
+    // decode structure: 1-byte mode prefix (0 = LZSS, 1 = raw packed,
+    // 2 = stage-chain coded per the header's structure chain)
     if struct_bytes.is_empty() {
         bail!("empty structure section");
     }
     let lz_owned;
+    let chain_owned;
     let packed: &[u8] = match struct_bytes[0] {
         0 => {
             lz_owned = crate::coding::lz::decompress_from_bytes(&struct_bytes[1..])
@@ -1073,6 +1171,16 @@ fn read_tail(r: &mut BitReader, bytes: &[u8], n_trees: usize) -> Result<ParsedTa
             &lz_owned
         }
         1 => &struct_bytes[1..],
+        2 => {
+            if h.chains.structure.is_empty() {
+                bail!("chain-coded structure in a chainless container");
+            }
+            chain_owned = stage::decode_chain(&h.chains.structure, &struct_bytes[1..])
+                .context("structure chain")?
+                .into_single()
+                .context("structure chain")?;
+            &chain_owned
+        }
         v => bail!("unknown structure mode {v}"),
     };
     // the packed stream carries total bit count as a varint prefix
@@ -1145,7 +1253,7 @@ fn parse_with_shared(buf: SharedBytes, shared: Option<&[u8]>) -> Result<ParsedCo
                 side
             }
         };
-        let tail = read_tail(&mut r, bytes, h.n_trees)?;
+        let tail = read_tail(&mut r, bytes, &h)?;
         (h, side, tail)
     };
 
@@ -1167,6 +1275,7 @@ fn parse_with_shared(buf: SharedBytes, shared: Option<&[u8]>) -> Result<ParsedCo
         features: h.features,
         fit_codec: h.fit_codec,
         conditioning: h.conditioning,
+        chains: h.chains,
         alphabets: side.alphabets,
         indexed_splits: side.indexed_splits,
         vn_map: side.vn_map,
@@ -1413,6 +1522,24 @@ mod tests {
         let mut long = blob.clone();
         long.push(0);
         assert!(parse_packed(member, &long).is_err(), "trailing blob bytes must error");
+    }
+
+    #[test]
+    fn legacy_v1_containers_parse_unchanged() {
+        // default options emit a chainless version-1 container — the exact
+        // wire format of the pre-stage-pipeline encoder — and the parse
+        // reports empty chains and decodes to the identical forest
+        use crate::compress::pipeline::{CompressOptions, CompressedForest};
+        use crate::data::synthetic;
+        use crate::forest::{Forest, ForestParams};
+        let ds = synthetic::iris(55);
+        let f = Forest::train(&ds, &ForestParams::classification(4), 7);
+        let cf = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        assert_eq!(cf.bytes[4], VERSION, "chainless containers must stay version 1");
+        let pc = parse_arc(cf.bytes.clone()).unwrap();
+        assert!(pc.chains.is_default(), "v1 parses with empty chains");
+        let g = crate::compress::pipeline::decompress_container(&pc).unwrap();
+        assert!(g.identical(&f));
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::coding::bitio::{BitReader, BitWriter};
 use crate::coding::entropy::DictCost;
 use crate::coding::f64pack::F64Codec;
 use crate::coding::huffman::{HuffmanCode, HuffmanDecoder};
+use crate::coding::stage::{self, SectionChains};
 use crate::data::{Column, Dataset};
 use crate::forest::{Fit, Forest, Node, Split, Tree};
 use crate::model::extract::{CountTable, ForestModels, SplitAlphabet, ValueAlphabets};
@@ -57,6 +58,13 @@ pub struct CompressOptions {
     /// container shrinks by the whole value-table cost — this is how the
     /// paper's Table 1/2 account sizes. Default off (self-contained).
     pub dataset_indexed_splits: bool,
+    /// Per-section transform-stage chains ([`crate::coding::stage`]).
+    /// Empty chains (the default) reproduce the fixed four-stage pipeline
+    /// byte-for-byte as a version-1 container; non-empty chains are
+    /// recorded in a version-2 header. A lossy convert stage is only legal
+    /// at the head of the fit chain on regression forests (§5); use
+    /// `repro sweep-stages` to search chains per dataset.
+    pub chains: SectionChains,
 }
 
 impl Default for CompressOptions {
@@ -68,6 +76,7 @@ impl Default for CompressOptions {
             conditioning: ModelConditioning::DepthFather,
             fit_alpha_bits: 64,
             dataset_indexed_splits: false,
+            chains: SectionChains::default(),
         }
     }
 }
@@ -175,6 +184,7 @@ pub struct CodecPlan {
     pub(crate) fit_dicts: Vec<HuffmanCode>,
     pub(crate) fit_models: Vec<FreqModel>,
     pub(crate) fit_raw_codec: Option<F64Codec>,
+    pub(crate) chains: SectionChains,
     pub(crate) cluster_ks: Vec<(String, usize)>,
 }
 
@@ -201,6 +211,9 @@ pub(crate) fn build_codec_plan(
         bail!("cannot compress an empty forest");
     }
     ds.validate()?;
+    opts.chains
+        .validate(forest.classification)
+        .context("compression options stage chains")?;
     let d = ds.num_features();
 
     // ---- stage 2: models ----
@@ -372,6 +385,7 @@ pub(crate) fn build_codec_plan(
         fit_dicts,
         fit_models: fit_models_arith,
         fit_raw_codec,
+        chains: opts.chains.clone(),
         cluster_ks,
     })
 }
@@ -404,19 +418,29 @@ pub(crate) fn encode_with_plan(
     // ---- stage 1: structure ----
     let (zaks_bits, _lens) = zaks::concat_forest_zaks(&forest.trees);
     let packed = container::pack_bits(&zaks_bits);
-    // LZ helps when trees resemble each other (shallow forests, small
-    // data); deep unpruned forests have near-i.i.d. structure bits and
-    // LZ's flags only add overhead — keep whichever is smaller (the
-    // container records the choice).
-    let lz = crate::coding::lz::compress_to_bytes(&packed);
-    let struct_bytes = if lz.len() < packed.len() {
-        let mut v = vec![0u8]; // mode 0 = LZSS
-        v.extend(lz);
+    let struct_bytes = if !plan.chains.structure.is_empty() {
+        // mode 2 = stage-chain coded; the header records the chain
+        let mut v = vec![2u8];
+        v.extend(
+            stage::encode_chain(&plan.chains.structure, stage::BufferList::from_single(packed))
+                .context("structure chain")?,
+        );
         v
     } else {
-        let mut v = vec![1u8]; // mode 1 = raw packed
-        v.extend(packed);
-        v
+        // LZ helps when trees resemble each other (shallow forests, small
+        // data); deep unpruned forests have near-i.i.d. structure bits and
+        // LZ's flags only add overhead — keep whichever is smaller (the
+        // container records the choice).
+        let lz = crate::coding::lz::compress_to_bytes(&packed);
+        if lz.len() < packed.len() {
+            let mut v = vec![0u8]; // mode 0 = LZSS
+            v.extend(lz);
+            v
+        } else {
+            let mut v = vec![1u8]; // mode 1 = raw packed
+            v.extend(packed);
+            v
+        }
     };
 
     // ---- stage 4: per-tree encoding ----
@@ -542,35 +566,18 @@ pub(crate) fn encode_with_plan(
     }
 
     // ---- assemble ----
-    let mut alphabets = plan.alphabets.clone();
-    if plan.fit_codec == FitCodec::Raw64 {
-        // raw mode stores fits inline; drop the (otherwise dominant)
-        // value table
-        alphabets.fits.clear();
-    }
+    // the builder borrows the frozen plan: no per-member clone of the
+    // alphabets, cluster maps, or codebooks (a cohort serializes every
+    // member straight from the one shared plan)
     let builder = ContainerBuilder {
-        classification: forest.classification,
-        classes: forest.classes,
+        plan,
         n_trees: forest.trees.len(),
-        features: plan.features.clone(),
-        fit_codec: plan.fit_codec,
-        conditioning: plan.conditioning,
-        alphabets,
-        indexed_splits: plan.indexed_splits.clone(),
-        vn_map: plan.vn_map.clone(),
-        split_maps: plan.split_maps.clone(),
-        fit_map: plan.fit_map.clone(),
-        vn_dicts: plan.vn_dicts.clone(),
-        split_dicts: plan.split_dicts.clone(),
-        fit_dicts: plan.fit_dicts.clone(),
-        fit_models: plan.fit_models.clone(),
-        fit_raw_codec: plan.fit_raw_codec.clone(),
         struct_bytes,
         vars_trees,
         splits_trees,
         fits_trees,
     };
-    let (bytes, sizes) = builder.serialize();
+    let (bytes, sizes) = builder.serialize()?;
     Ok(CompressedForest { bytes: bytes.into(), sizes, cluster_ks: plan.cluster_ks.clone() })
 }
 
@@ -958,6 +965,88 @@ mod tests {
                 crate::compress::predict::PredictOne::Class(expect)
             );
         }
+    }
+
+    #[test]
+    fn chained_container_roundtrips_and_bumps_version() {
+        use crate::coding::stage::parse_chain;
+        let ds = synthetic::iris(30);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 31);
+        let chains = SectionChains {
+            structure: parse_chain("lzss").unwrap(),
+            split_tables: parse_chain("delta+lzss").unwrap(),
+            fit_table: parse_chain("xor+huff").unwrap(),
+        };
+        let opts = CompressOptions { chains: chains.clone(), ..Default::default() };
+        let cf = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        assert_eq!(cf.bytes[4], container::VERSION_CHAINED, "chained ⇒ version 2");
+        let pc = cf.parse().unwrap();
+        assert_eq!(pc.chains, chains, "header records the chains");
+        assert!(cf.decompress().unwrap().identical(&f), "lossless chains stay bit-exact");
+    }
+
+    #[test]
+    fn default_chains_reproduce_the_legacy_encoder_bytes() {
+        // the differential oracle's cheap half: explicitly-empty chains and
+        // the default options are the same plan, so the bytes agree and the
+        // container stays version 1 (the pre-refactor wire format)
+        let ds = synthetic::wages(34);
+        let f = Forest::train(&ds, &ForestParams::classification(5), 35);
+        let a = CompressedForest::compress(&f, &ds, &CompressOptions::default()).unwrap();
+        let opts =
+            CompressOptions { chains: SectionChains::default(), ..Default::default() };
+        let b = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.bytes[4], container::VERSION);
+    }
+
+    #[test]
+    fn lossy_fit_chain_stays_within_theory_bound() {
+        use crate::coding::stage::parse_chain;
+        let ds = synthetic::airfoil_regression(32);
+        let f = Forest::train(&ds, &ForestParams::regression(5), 33);
+        let chains = SectionChains {
+            fit_table: parse_chain("bf16+lzss").unwrap(),
+            ..Default::default()
+        };
+        let opts = CompressOptions { chains: chains.clone(), ..Default::default() };
+        let cf = CompressedForest::compress(&f, &ds, &opts).unwrap();
+        assert_eq!(cf.bytes[4], container::VERSION_CHAINED);
+        let g = cf.decompress().unwrap();
+        let fits_of = |fo: &Forest| -> Vec<f64> {
+            fo.trees
+                .iter()
+                .flat_map(|t| t.nodes.iter())
+                .map(|n| match n.fit {
+                    Fit::Regression(v) => v,
+                    Fit::Class(_) => unreachable!("regression forest"),
+                })
+                .collect()
+        };
+        let (orig, dec) = (fits_of(&f), fits_of(&g));
+        assert_eq!(orig.len(), dec.len());
+        let vmax = orig.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let bound = crate::lossy::theory::chain_mse_bound(&chains.fit_table, vmax).unwrap();
+        for (a, b) in orig.iter().zip(&dec) {
+            let se = (a - b) * (a - b);
+            assert!(se <= bound, "fit {a} decoded as {b}: {se} > bound {bound}");
+        }
+        // structure and splits are untouched by a fit-table chain
+        assert_eq!(f.total_nodes(), g.total_nodes());
+    }
+
+    #[test]
+    fn lossy_chain_on_classification_is_rejected() {
+        use crate::coding::stage::parse_chain;
+        let ds = synthetic::iris(36);
+        let f = Forest::train(&ds, &ForestParams::classification(3), 37);
+        let chains = SectionChains {
+            fit_table: parse_chain("f32").unwrap(),
+            ..Default::default()
+        };
+        let opts = CompressOptions { chains, ..Default::default() };
+        let err = CompressedForest::compress(&f, &ds, &opts).unwrap_err().to_string();
+        assert!(err.contains("chain"), "typed chain-validation error, got: {err}");
     }
 
     #[test]

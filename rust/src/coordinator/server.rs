@@ -16,7 +16,8 @@
 //! client ──► │ parse line → verb                            │ written directly,
 //!            │   PREDICT …      rendezvous with the batcher │ in order, blocking
 //!            │   PIPE id …      admit (cap) + dispatch      │ ──► client
-//!            │   LIST/STATS/…   answer inline               │ (backpressure)
+//!            │   LIST/STATS/…   answer inline (bare only —  │ (backpressure)
+//!            │   `PIPE id LIST/STATS` goes via the outbox)  │
 //!            └──────────────────────────┬───────────────────┘
 //!                         tagged jobs   │
 //!            ┌── per-model batchers ────▼──────────────────┐
@@ -37,7 +38,12 @@
 //! a slow model (cold spill reload, first pack load) no longer stalls every
 //! other request the client has in flight. Bare `PREDICT` keeps the
 //! original in-order semantics — the reader waits for the reply before it
-//! reads the next line. A bounded in-flight cap per connection
+//! reads the next line. `PIPE <id> LIST` / `PIPE <id> STATS` ride the same
+//! admission/outbox path: the reply (`OK <id> …`) is answered by the writer
+//! thread like any other pipelined reply, counts against the in-flight cap,
+//! and never jumps ahead of the socket's reply stream the way a
+//! reader-inline answer would under writer backpressure. A bounded
+//! in-flight cap per connection
 //! ([`ServerConfig::inflight_cap`]) answers `ERR busy id=<n>` past the cap;
 //! overdue requests answer `ERR timeout id=<n>` after
 //! [`ServerConfig::request_timeout`] and the connection stays open.
@@ -742,9 +748,32 @@ fn pipe_dispatch(
     out_tx: &Sender<String>,
 ) -> Option<String> {
     let mut parts = rest.trim().splitn(3, ' ');
-    match parts.next().unwrap_or("") {
+    let verb = parts.next().unwrap_or("");
+    match verb {
         "PREDICT" => {}
-        other => return Some(format!("ERR PIPE supports only PREDICT, got {other:?} id={id}")),
+        // LIST/STATS are store reads with no batcher leg: admit them like
+        // any pipelined request (cap, duplicate ids, the `inflight` gauge),
+        // answer immediately, and route the reply through the outbox so it
+        // joins the writer thread's reply stream instead of the reader
+        // jumping the queue with a direct socket write
+        "LIST" | "STATS" => {
+            let generation = match tracker.admit(id) {
+                Admit::Busy => return Some(format!("ERR busy id={id}")),
+                Admit::Duplicate => return Some(format!("ERR duplicate id id={id}")),
+                Admit::Ok(generation) => generation,
+            };
+            let payload = match verb {
+                "LIST" => store.names().join(" "),
+                _ => stats_payload(&store.stats()),
+            };
+            tracker.finish_and_send(id, generation, out_tx, format!("OK {id} {payload}"));
+            return None;
+        }
+        other => {
+            return Some(format!(
+                "ERR PIPE supports only PREDICT, LIST, and STATS, got {other:?} id={id}"
+            ))
+        }
     }
     let Some(model) = parts.next() else {
         return Some(format!("ERR PREDICT needs a model name id={id}"));
@@ -783,13 +812,20 @@ fn pipe_dispatch(
     None
 }
 
-/// Render the `STATS` reply. `StoreStats::mean_latency_us` guards the
-/// empty window (zero recorded requests reports `mean_us=0`, no division).
-/// Every counter named here must be documented in `rust/PROTOCOL.md` — the
-/// `protocol_doc_covers_every_counter` test enforces it.
+/// Render the serial `STATS` reply (`OK ` + [`stats_payload`]).
 fn stats_line(s: &StoreStats) -> String {
+    format!("OK {}", stats_payload(s))
+}
+
+/// The `STATS` counter list — shared by the serial reply (`OK <counters>`)
+/// and the pipelined one (`OK <id> <counters>`).
+/// `StoreStats::mean_latency_us` guards the empty window (zero recorded
+/// requests reports `mean_us=0`, no division). Every counter named here
+/// must be documented in `rust/PROTOCOL.md` — the
+/// `protocol_doc_covers_every_counter` test enforces it.
+fn stats_payload(s: &StoreStats) -> String {
     format!(
-        "OK requests={} batches={} mean_us={} max_us={} evictions={} \
+        "requests={} batches={} mean_us={} max_us={} evictions={} \
          spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
          pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={}",
         s.requests,
@@ -1079,6 +1115,46 @@ mod tests {
         assert!(!tracker.drained());
         tracker.close();
         assert!(tracker.drained());
+    }
+
+    #[test]
+    fn pipelined_list_and_stats_answer_through_the_outbox() {
+        let store = Arc::new(ModelStore::new());
+        let batchers = Arc::new(Batchers::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let tracker = Arc::new(PipeTracker::new(store.clone(), &ServerConfig::default()));
+        let (tx, rx) = channel::<String>();
+        // PIPE LIST: admitted (None = no direct reply), answered via outbox
+        assert!(pipe_dispatch(4, "LIST", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        let line = rx.try_recv().expect("LIST reply reaches the outbox");
+        assert!(line.starts_with("OK 4"), "{line}");
+        assert_eq!(parse_pipe_reply(&line).unwrap().id(), Some(4));
+        // PIPE STATS: the counters follow the id, same keys as serial STATS
+        assert!(pipe_dispatch(5, "STATS", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        let line = rx.try_recv().expect("STATS reply reaches the outbox");
+        assert!(line.starts_with("OK 5 requests="), "{line}");
+        // both retired on the spot: the in-flight gauge is balanced and the
+        // ids are immediately reusable
+        assert_eq!(store.stats().inflight, 0);
+        assert!(pipe_dispatch(4, "STATS", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        assert!(rx.try_recv().is_ok());
+        // a duplicate in-flight id is still refused before dispatch
+        let g = match tracker.admit(9) {
+            Admit::Ok(g) => g,
+            _ => panic!("admit 9"),
+        };
+        assert_eq!(
+            pipe_dispatch(9, "LIST", &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
+            Some("ERR duplicate id id=9")
+        );
+        assert!(tracker.finish_and_send(9, g, &tx, "OK 9 done".into()));
+        let _ = rx.try_recv();
+        // BYTES (and anything else) stays serial-only
+        let err =
+            pipe_dispatch(6, "BYTES resident", &store, &batchers, &shutdown, &tracker, &tx)
+                .expect("BYTES is not pipelinable");
+        assert!(err.contains("id=6"), "{err}");
+        assert!(err.contains("LIST"), "the error names the supported verbs: {err}");
     }
 
     #[test]

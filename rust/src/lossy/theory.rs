@@ -53,6 +53,46 @@ pub fn compression_gain(a: usize, a0: usize, bits: u32) -> (f64, f64) {
     (bits as f64 / 64.0, a0 as f64 / a as f64)
 }
 
+/// Per-value MSE bound for a round-to-nearest float-narrowing convert
+/// stage ([`crate::coding::stage::StageSpec::ConvertF64F32`] /
+/// [`ConvertF64Bf16`][crate::coding::stage::StageSpec::ConvertF64Bf16]):
+///
+/// ```text
+/// (vmax · 2^{−(m+1)})² + (2^{min_subnormal_log2} / 2)²
+/// ```
+///
+/// The first term is the half-ULP relative rounding error over the normal
+/// range (`m` target mantissa bits, `vmax` the largest magnitude in the
+/// section); the second is the absolute error floor from the target's
+/// subnormal grid — values below it flush toward zero, so the bound holds
+/// on subnormal-heavy inputs too.
+pub fn convert_mse_bound(vmax: f64, mantissa_bits: u32, min_subnormal_log2: i32) -> f64 {
+    let rel = vmax * 2f64.powi(-(mantissa_bits as i32 + 1));
+    let sub = 2f64.powi(min_subnormal_log2) / 2.0;
+    rel * rel + sub * sub
+}
+
+/// The [`convert_mse_bound`] parameters of a lossy stage (`None` for
+/// lossless stages): f32 keeps 23 mantissa bits with subnormals down to
+/// 2⁻¹⁴⁹; bfloat16 keeps 7 with subnormals down to 2⁻¹³³.
+pub fn stage_mse_bound(spec: &crate::coding::stage::StageSpec, vmax: f64) -> Option<f64> {
+    use crate::coding::stage::StageSpec;
+    match spec {
+        StageSpec::ConvertF64F32 => Some(convert_mse_bound(vmax, 23, -149)),
+        StageSpec::ConvertF64Bf16 => Some(convert_mse_bound(vmax, 7, -133)),
+        _ => None,
+    }
+}
+
+/// MSE bound for a whole chain: the worst lossy stage's bound, or `None`
+/// for a fully lossless chain (zero distortion).
+pub fn chain_mse_bound(chain: &[crate::coding::stage::StageSpec], vmax: f64) -> Option<f64> {
+    chain
+        .iter()
+        .filter_map(|s| stage_mse_bound(s, vmax))
+        .max_by(|a, b| a.partial_cmp(b).unwrap())
+}
+
 /// Estimate the single-tree prediction-error variance σ² from a forest's
 /// per-tree test predictions: the variance across trees of their mean error
 /// against the full-forest prediction (the paper's `e_t` construction).
@@ -105,6 +145,48 @@ mod tests {
         let (fit_gain, ens_gain) = compression_gain(1000, 250, 7);
         assert!((fit_gain - 7.0 / 64.0).abs() < 1e-12);
         assert!((ens_gain - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convert_bound_holds_on_actual_conversions() {
+        use crate::coding::stage::{BufferList, Stage, StageSpec};
+        // a spread of magnitudes including subnormal-range values
+        let vals: Vec<f64> = (0..4000)
+            .map(|i| {
+                let x = (i as f64 - 2000.0) / 37.0;
+                x * (1.5f64).powf(x.rem_euclid(20.0)) * 1e-3
+            })
+            .collect();
+        let vmax = vals.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for spec in [StageSpec::ConvertF64F32, StageSpec::ConvertF64Bf16] {
+            let st = spec.build();
+            let enc = st.encode(&BufferList::from_single(bytes.clone())).unwrap();
+            let dec = st.decode(&enc).unwrap().into_single().unwrap();
+            let mse: f64 = dec
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .zip(&vals)
+                .map(|(d, v)| (d - v) * (d - v))
+                .sum::<f64>()
+                / vals.len() as f64;
+            let bound = stage_mse_bound(&spec, vmax).unwrap();
+            assert!(mse <= bound, "{spec:?}: measured MSE {mse} exceeds bound {bound}");
+        }
+    }
+
+    #[test]
+    fn chain_bound_picks_the_worst_stage() {
+        use crate::coding::stage::StageSpec;
+        let chain = [StageSpec::ConvertF64Bf16, StageSpec::Lzss];
+        let b = chain_mse_bound(&chain, 10.0).unwrap();
+        assert_eq!(b, convert_mse_bound(10.0, 7, -133));
+        assert!(chain_mse_bound(&[StageSpec::Lzss], 10.0).is_none());
+        // bf16 bound dominates f32 at equal vmax
+        assert!(convert_mse_bound(1.0, 7, -133) > convert_mse_bound(1.0, 23, -149));
     }
 
     #[test]

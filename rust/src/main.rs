@@ -5,8 +5,11 @@
 //! ```text
 //! repro compress   --dataset <key> [--trees N] [--seed S] [--out FILE]
 //!                  [--k-max K] [--fit-alpha-bits 64] [--native]
+//!                  [--struct-chain C] [--split-chain C] [--fit-chain C]
 //! repro verify     --in FILE --dataset <key> [--trees N] [--seed S]
 //! repro lossy      --dataset <key> [--trees N] [--bits B] [--keep N0]
+//! repro sweep-stages --dataset <key> [--trees N] [--quick]
+//!                  [--out BENCH_stages.json] [--tolerance 0.4]
 //! repro serve      --port P [--dataset <key>[,<key>...]] [--pack FILE,...]
 //!                  [--trees N] [--inflight-cap N] [--request-timeout-ms MS]
 //! repro pack       build|list|extract               # RFPK model packs
@@ -40,6 +43,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "pack" => cmd_pack(&args),
         "suite" => cmd_suite(&args),
+        "sweep-stages" => cmd_sweep_stages(&args),
         "bench-gate" => cmd_bench_gate(&args),
         "datasets" => {
             for e in table2_suite() {
@@ -61,8 +65,12 @@ fn main() {
 
 const HELP: &str = "repro — lossless (and lossy) random-forest compression
   compress   --dataset KEY [--trees N] [--seed S] [--out FILE] [--native]
+             [--struct-chain C] [--split-chain C] [--fit-chain C]
+             (C is a stage chain like delta+lzss; see README)
   verify     --in FILE --dataset KEY [--trees N] [--seed S]
   lossy      --dataset KEY [--trees N] [--bits B] [--keep N0]
+  sweep-stages --dataset KEY [--trees N] [--seed S] [--quick]
+             [--out BENCH_stages.json] [--tolerance 0.4]
   serve      --port P [--dataset KEY[,KEY...]] [--pack FILE[,FILE...]]
              [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
@@ -109,6 +117,20 @@ fn dataset_by_key(key: &str, seed: u64) -> Option<Dataset> {
         })
 }
 
+/// Parse one `--<key> <chain>` stage-chain flag (`-`/absent → empty chain).
+fn chain_arg(args: &Args, key: &str) -> Vec<rf_compress::coding::stage::StageSpec> {
+    match args.get(key) {
+        None => Vec::new(),
+        Some(s) => match rf_compress::coding::stage::parse_chain(s) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--{key} {s:?}: {e:#}");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
 fn opts_from(args: &Args) -> CompressOptions {
     CompressOptions {
         k_max: args.get_or("k-max", 10usize),
@@ -117,6 +139,11 @@ fn opts_from(args: &Args) -> CompressOptions {
         conditioning: rf_compress::model::ModelConditioning::DepthFather,
         fit_alpha_bits: args.get_or("fit-alpha-bits", 64u32),
         dataset_indexed_splits: args.flag("paper-accounting"),
+        chains: rf_compress::coding::stage::SectionChains {
+            structure: chain_arg(args, "struct-chain"),
+            split_tables: chain_arg(args, "split-chain"),
+            fit_table: chain_arg(args, "fit-chain"),
+        },
     }
 }
 
@@ -639,6 +666,190 @@ fn cmd_pack(args: &Args) -> i32 {
             eprintln!("unknown pack subcommand {other:?} (build | list | extract)");
             2
         }
+    }
+}
+
+/// Per-dataset stage-chain ablation (`repro sweep-stages`): compress the
+/// same forest under candidate per-section chains, verify every round trip
+/// (bit-exact for lossless chains; within the §7 convert bound for lossy
+/// fit chains), time decode, and write the machine-readable
+/// `BENCH_stages.json`. Doubles as the CI gate: the chainless encoding must
+/// stay byte-identical to the fixed four-stage pipeline (the differential
+/// oracle) and its decode throughput within `--tolerance` across runs.
+fn cmd_sweep_stages(args: &Args) -> i32 {
+    use rf_compress::coding::stage::{parse_chain, SectionChains};
+    use rf_compress::forest::Fit;
+    use rf_compress::lossy::theory::chain_mse_bound;
+    use rf_compress::util::bench::{time_it, Table};
+
+    let Some(ds) = load_dataset(args) else { return 2 };
+    let quick = args.flag("quick");
+    let trees = args.get_or("trees", if quick { 8usize } else { 50 });
+    let seed = args.get_or("seed", 7u64);
+    let tolerance: f64 = args.get_or("tolerance", 0.4f64);
+    let budget = if quick { 0.05 } else { 0.4 };
+    let out = args.get("out").unwrap_or("BENCH_stages.json").to_string();
+    let regression = !ds.target.is_classification();
+    let dataset_key = args.get("dataset").unwrap_or("csv").to_string();
+
+    let coord = coordinator(args);
+    let forest = coord.train(&ds, trees, seed);
+    let nodes = forest.total_nodes() as f64;
+    let base_opts = CompressOptions { chains: SectionChains::default(), ..opts_from(args) };
+
+    // the fixed-pipeline baseline: a chainless version-1 container
+    let baseline = match CompressedForest::compress(&forest, &ds, &base_opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("sweep-stages: baseline compression failed: {e:#}");
+            return 1;
+        }
+    };
+    let base_bytes = baseline.total_bytes();
+    let base_t = time_it(budget, 3, || {
+        std::hint::black_box(baseline.decompress().unwrap());
+    });
+    let base_per_s = base_t.per_sec(nodes);
+    println!(
+        "baseline (no chains): {} trees, {}, decode {:.0} nodes/s",
+        forest.num_trees(),
+        human_bytes(base_bytes),
+        base_per_s
+    );
+
+    // candidate chains per section, swept one section at a time (ablation):
+    // lossy converts are only legal on regression fit tables
+    let struct_cands: &[&str] =
+        if quick { &["lzss"] } else { &["lzss", "huff", "xor+lzss"] };
+    let split_cands: &[&str] =
+        if quick { &["delta+lzss"] } else { &["delta+lzss", "xor+huff", "split8+lzss"] };
+    let fit_cands: &[&str] = match (regression, quick) {
+        (true, true) => &["bf16+lzss"],
+        (true, false) => &["delta+lzss", "split8+huff", "f32+lzss", "bf16+lzss"],
+        (false, true) => &["delta+lzss"],
+        (false, false) => &["delta+lzss", "split8+huff"],
+    };
+    let mut cases: Vec<(&str, String, SectionChains)> = Vec::new();
+    for c in struct_cands {
+        let structure = parse_chain(c).expect("candidate chain parses");
+        cases.push(("struct", c.to_string(), SectionChains { structure, ..Default::default() }));
+    }
+    for c in split_cands {
+        let split_tables = parse_chain(c).expect("candidate chain parses");
+        cases.push(("split", c.to_string(), SectionChains { split_tables, ..Default::default() }));
+    }
+    for c in fit_cands {
+        let fit_table = parse_chain(c).expect("candidate chain parses");
+        cases.push(("fit", c.to_string(), SectionChains { fit_table, ..Default::default() }));
+    }
+
+    let fits_of = |fo: &rf_compress::forest::Forest| -> Vec<f64> {
+        fo.trees
+            .iter()
+            .flat_map(|t| t.nodes.iter())
+            .map(|n| match n.fit {
+                Fit::Regression(v) => v,
+                Fit::Class(c) => c as f64,
+            })
+            .collect()
+    };
+
+    let mut table = Table::new(&["section", "chain", "bytes", "vs base", "nodes/s", "kind"]);
+    let mut entries: Vec<String> = Vec::new();
+    let mut failures = 0usize;
+    for (section, label, chains) in &cases {
+        let lossy_chain = chains.is_lossy();
+        let opts = CompressOptions { chains: chains.clone(), ..base_opts.clone() };
+        let cf = match CompressedForest::compress(&forest, &ds, &opts) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("sweep-stages {section} {label}: {e:#}");
+                failures += 1;
+                continue;
+            }
+        };
+        let verified = match cf.decompress() {
+            Err(e) => {
+                eprintln!("sweep-stages {section} {label}: decode failed: {e:#}");
+                false
+            }
+            Ok(g) if lossy_chain => {
+                // a lossy fit chain rounds the fit table; everything else —
+                // structure, splits, node counts — stays exact, and every
+                // fit lands within the §7 convert-stage MSE bound
+                let (orig, dec) = (fits_of(&forest), fits_of(&g));
+                let vmax = orig.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+                let bound = chain_mse_bound(&chains.fit_table, vmax).unwrap_or(0.0);
+                g.total_nodes() == forest.total_nodes()
+                    && orig.len() == dec.len()
+                    && orig.iter().zip(&dec).all(|(a, b)| (a - b) * (a - b) <= bound)
+            }
+            Ok(g) => g.identical(&forest),
+        };
+        if !verified {
+            eprintln!("sweep-stages {section} {label}: VERIFICATION FAILED");
+            failures += 1;
+        }
+        let t = time_it(budget, 3, || {
+            std::hint::black_box(cf.decompress().unwrap());
+        });
+        let per_s = t.per_sec(nodes);
+        table.row(&[
+            section.to_string(),
+            label.clone(),
+            cf.total_bytes().to_string(),
+            format!("{:+.1}%", (cf.total_bytes() as f64 / base_bytes as f64 - 1.0) * 100.0),
+            format!("{per_s:.0}"),
+            if lossy_chain { "lossy".into() } else { "lossless".into() },
+        ]);
+        entries.push(format!(
+            "{{\"section\": \"{section}\", \"chain\": \"{label}\", \"bytes\": {}, \
+             \"decode_nodes_per_s\": {per_s:.1}, \"lossy\": {lossy_chain}, \
+             \"verified\": {verified}}}",
+            cf.total_bytes()
+        ));
+    }
+    table.print();
+
+    // gate 1 (differential oracle): re-encoding with explicitly-empty chains
+    // must reproduce the fixed pipeline byte for byte, as a v1 container
+    let empty = CompressedForest::compress(&forest, &ds, &base_opts).unwrap();
+    let oracle_ok = empty.bytes == baseline.bytes
+        && baseline.bytes[4] == rf_compress::compress::container::VERSION;
+    // gate 2: chainless decode throughput is stable within --tolerance
+    let recheck = time_it(budget, 3, || {
+        std::hint::black_box(baseline.decompress().unwrap());
+    });
+    let decode_ok = recheck.per_sec(nodes) >= base_per_s * (1.0 - tolerance);
+    let pass = oracle_ok && decode_ok && failures == 0;
+    println!(
+        "gate: oracle {} | decode {} | chain failures {} => {}",
+        if oracle_ok { "byte-identical" } else { "MISMATCH" },
+        if decode_ok { "within tolerance" } else { "REGRESSED" },
+        failures,
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"stages\",\n  \"dataset\": \"{dataset_key}\",\n  \
+         \"trees\": {trees},\n  \"quick\": {quick},\n  \"tolerance\": {tolerance},\n  \
+         \"baseline\": {{\"bytes\": {base_bytes}, \"decode_nodes_per_s\": \
+         {base_per_s:.1}, \"version\": {}}},\n  \"entries\": [\n    {}\n  ],\n  \
+         \"gate\": {{\"oracle_bytes_identical\": {oracle_ok}, \
+         \"decode_within_tolerance\": {decode_ok}, \"chain_failures\": {failures}, \
+         \"pass\": {pass}}}\n}}\n",
+        baseline.bytes[4],
+        entries.join(",\n    ")
+    );
+    if let Err(e) = std::fs::write(&out, json) {
+        eprintln!("sweep-stages: write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
+    if pass {
+        0
+    } else {
+        1
     }
 }
 

@@ -165,6 +165,40 @@ mod tests {
     }
 
     #[test]
+    fn chained_cohort_keeps_side_info_byte_identity() {
+        // stage chains are part of the frozen plan (recorded in the header,
+        // OUTSIDE the side-info span), so the pack dedup invariant must
+        // survive a chained cohort: identical TABLES/CLUSMAP/DICTS bytes,
+        // version-2 containers, bit-exact members
+        use crate::coding::stage::{parse_chain, SectionChains};
+        let (ds, forests) = cohort(4, 2, 1400);
+        let opts = CompressOptions {
+            chains: SectionChains {
+                structure: parse_chain("lzss").unwrap(),
+                split_tables: parse_chain("delta+lzss").unwrap(),
+                fit_table: parse_chain("split8+huff").unwrap(),
+            },
+            ..Default::default()
+        };
+        let out = compress_cohort(&forests, &ds, &opts).unwrap();
+        let spans: Vec<Vec<u8>> = out
+            .iter()
+            .map(|cf| {
+                assert_eq!(cf.bytes[4], crate::compress::container::VERSION_CHAINED);
+                let pc = cf.parse().unwrap();
+                let (s, e) = pc.side_info_span();
+                cf.bytes[s..e].to_vec()
+            })
+            .collect();
+        for span in spans.iter().skip(1) {
+            assert_eq!(span, &spans[0]);
+        }
+        for (cf, f) in out.iter().zip(&forests) {
+            assert!(cf.decompress().unwrap().identical(f));
+        }
+    }
+
+    #[test]
     fn singleton_cohort_matches_plain_compression() {
         // a cohort of one builds its plan from exactly the member's trees —
         // the output must equal CompressedForest::compress byte for byte

@@ -261,6 +261,52 @@ fn shutdown_with_inflight_replies_neither_hangs_nor_panics() {
 }
 
 #[test]
+fn pipelined_list_and_stats_interleave_with_predictions() {
+    // LIST and STATS ride the PIPE path: interleaved with predictions on
+    // one connection, every id comes back exactly once, the LIST payload
+    // names the resident models, and the STATS payload carries the same
+    // counter keys as the serial reply
+    let ds = synthetic::iris(46);
+    let mut coord = Coordinator::native_only();
+    let (forest, cf, _) =
+        coord.train_and_compress(&ds, 3, 27, &CompressOptions::default()).unwrap();
+    let store = Arc::new(ModelStore::new());
+    store.insert("m", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let wire = values_to_wire(&row_values(&ds, 0));
+    client.pipe_predict(0, "m", &wire).unwrap();
+    client.send("PIPE 1 LIST").unwrap();
+    client.pipe_predict(2, "m", &wire).unwrap();
+    client.send("PIPE 3 STATS").unwrap();
+    let replies = client.collect_pipelined(4).unwrap();
+    let mut by_id: Vec<Option<String>> = vec![None; 4];
+    for r in replies {
+        let PipeReply::Ok { id, value } = r else { panic!("{r:?}") };
+        assert!(by_id[id as usize].replace(value).is_none(), "id {id} answered twice");
+    }
+    let expect = format!("{}", forest.predict_class(&ds, 0));
+    assert_eq!(by_id[0].as_deref(), Some(expect.as_str()));
+    assert_eq!(by_id[2].as_deref(), Some(expect.as_str()));
+    assert_eq!(by_id[1].as_deref(), Some("m"), "pipelined LIST names the models");
+    let stats = by_id[3].as_ref().unwrap();
+    for key in ["requests=", "inflight=", "timeouts="] {
+        assert!(stats.contains(key), "pipelined STATS carries {key}: {stats}");
+    }
+    // a pipelined id may be reused once answered, and unknown PIPE verbs
+    // answer a typed error that names the supported set
+    client.send("PIPE 1 LIST").unwrap();
+    assert_eq!(client.recv_pipelined().unwrap().id(), Some(1));
+    client.send("PIPE 7 BYTES").unwrap();
+    let r = client.recv_pipelined().unwrap();
+    let PipeReply::Err { id, message } = r else { panic!("{r:?}") };
+    assert_eq!(id, Some(7));
+    assert!(message.contains("LIST") && message.contains("STATS"), "{message}");
+    server.stop();
+}
+
+#[test]
 fn prop_pipelined_replies_are_a_permutation_of_serial() {
     use rf_compress::forest::{Forest, ForestParams};
     use rf_compress::testing::prop::{forall_cases, Gen};

@@ -160,6 +160,171 @@ fn random_dataset(g: &mut Gen) -> Dataset {
     Dataset { name: "prop".into(), features, target }
 }
 
+/// An f64 drawn heavily from the IEEE corner cases (NaN, ±∞, ±0,
+/// subnormals) plus wide-dynamic-range ordinary values.
+fn special_f64(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 9) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => 0.0,
+        5 => 5e-324,  // smallest positive subnormal
+        6 => -5e-324,
+        7 => f64::MIN_POSITIVE,
+        _ => g.f64_in(-1.0, 1.0) * 10f64.powi(g.usize_in(0, 12) as i32 - 6),
+    }
+}
+
+#[test]
+fn prop_lossless_stages_roundtrip_special_floats_bit_exactly() {
+    use rf_compress::coding::stage::{BufferList, StageSpec};
+    // every lossless stage must invert exactly on arbitrary byte inputs:
+    // f64 arrays full of NaN/−0/subnormals, plus a ragged non-multiple-of-8
+    // tail to prove the transform stages' tail tolerance
+    forall("lossless stage roundtrip", |g: &mut Gen| {
+        let pool = [
+            StageSpec::Lzss,
+            StageSpec::Huffman,
+            StageSpec::Arith,
+            StageSpec::DeltaU64,
+            StageSpec::XorU64,
+            StageSpec::ColumnSplit(g.usize_in(2, 16) as u8),
+        ];
+        let spec = pool[g.usize_in(0, pool.len() - 1)];
+        let n = g.usize_in(0, 200);
+        let mut bytes = Vec::with_capacity(n * 8 + 7);
+        for _ in 0..n {
+            bytes.extend_from_slice(&special_f64(g).to_le_bytes());
+        }
+        bytes.extend(g.bytes(g.usize_in(0, 7)));
+        let st = spec.build();
+        let enc = st
+            .encode(&BufferList::from_single(bytes.clone()))
+            .map_err(|e| format!("{}: encode: {e:#}", spec.name()))?;
+        let dec = st
+            .decode(&enc)
+            .map_err(|e| format!("{}: decode: {e:#}", spec.name()))?
+            .into_single()
+            .map_err(|e| e.to_string())?;
+        if dec != bytes {
+            return Err(format!("{}: round-trip differs", spec.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_stages_are_idempotent_and_widen_exactly() {
+    use rf_compress::coding::stage::{BufferList, StageSpec};
+    // lossy converts: decode widens back to f64; f32 semantics are exactly
+    // `v as f32`, and converting already-converted values is the identity
+    // (round-to-nearest projects onto the target grid and stays there)
+    forall("convert stage semantics", |g: &mut Gen| {
+        let n = g.usize_in(0, 120);
+        // keep magnitudes inside bf16's finite range so encode never
+        // overflows (overflow is a separate typed-error test)
+        let vals: Vec<f64> = (0..n)
+            .map(|_| {
+                let v = special_f64(g);
+                if v.is_finite() && v.abs() > 1e38 {
+                    v.signum()
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let mut bytes = Vec::with_capacity(n * 8);
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for spec in [StageSpec::ConvertF64F32, StageSpec::ConvertF64Bf16] {
+            let st = spec.build();
+            let enc = st
+                .encode(&BufferList::from_single(bytes.clone()))
+                .map_err(|e| format!("{}: encode: {e:#}", spec.name()))?;
+            let widened = st
+                .decode(&enc)
+                .map_err(|e| e.to_string())?
+                .into_single()
+                .map_err(|e| e.to_string())?;
+            let dec: Vec<f64> = widened
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            if dec.len() != vals.len() {
+                return Err(format!("{}: length changed", spec.name()));
+            }
+            for (v, d) in vals.iter().zip(&dec) {
+                if v.is_nan() {
+                    if !d.is_nan() {
+                        return Err(format!("{}: NaN decoded as {d}", spec.name()));
+                    }
+                } else if spec == StageSpec::ConvertF64F32
+                    && d.to_bits() != ((*v as f32) as f64).to_bits()
+                {
+                    return Err(format!("{}: {v} decoded as {d}", spec.name()));
+                }
+            }
+            // idempotence: re-encoding the widened values is bit-identical
+            let enc2 = st
+                .encode(&BufferList::from_single(widened))
+                .map_err(|e| format!("{}: re-encode: {e:#}", spec.name()))?;
+            if !enc.iter().eq(enc2.iter()) {
+                return Err(format!("{}: convert is not idempotent", spec.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_any_lossless_chain_keeps_containers_bit_exact() {
+    use rf_compress::coding::stage::{SectionChains, StageSpec};
+    use rf_compress::testing::prop::forall_cases;
+    // the chain-composition property: ANY composition of lossless stages,
+    // assigned independently per section, still round-trips the forest
+    // bit-exactly, and the version byte is 2 iff any chain is non-empty
+    forall_cases("lossless chain composition", 16, &mut |g: &mut Gen| {
+        let rand_chain = |g: &mut Gen| -> Vec<StageSpec> {
+            let pool = [
+                StageSpec::Lzss,
+                StageSpec::Huffman,
+                StageSpec::Arith,
+                StageSpec::DeltaU64,
+                StageSpec::XorU64,
+                StageSpec::ColumnSplit(2),
+                StageSpec::ColumnSplit(8),
+            ];
+            (0..g.usize_in(0, 3)).map(|_| pool[g.usize_in(0, pool.len() - 1)]).collect()
+        };
+        let chains = SectionChains {
+            structure: rand_chain(g),
+            split_tables: rand_chain(g),
+            fit_table: rand_chain(g),
+        };
+        let ds = random_dataset(g);
+        ds.validate().map_err(|e| e.to_string())?;
+        let params = if ds.target.is_classification() {
+            ForestParams::classification(g.usize_in(1, 4))
+        } else {
+            ForestParams::regression(g.usize_in(1, 4))
+        };
+        let forest = Forest::train(&ds, &params, g.rng().next_u64());
+        let opts = CompressOptions { chains: chains.clone(), ..Default::default() };
+        let cf = CompressedForest::compress(&forest, &ds, &opts).map_err(|e| e.to_string())?;
+        let want_version = if chains.is_default() { 1 } else { 2 };
+        if cf.bytes[4] != want_version {
+            return Err(format!("version byte {} != {want_version}", cf.bytes[4]));
+        }
+        let restored = cf.decompress().map_err(|e| format!("decompress: {e:#}"))?;
+        if !restored.identical(&forest) {
+            return Err("chained round-trip differs".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_pipeline_lossless_on_random_datasets() {
     // the central invariant: ANY forest on ANY (valid) dataset round-trips
