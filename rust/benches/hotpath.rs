@@ -18,10 +18,14 @@
 //!   archive vs per-file spill at N × ≤4 KiB models (the ROADMAP's
 //!   page-granularity-waste scenario), after a bit-identical extraction
 //!   gate over every member; emits `BENCH_pack.json`
+//! * shard router: per-request overhead vs a direct backend (p50/p99) and
+//!   a failover burst with one of three backends severed mid-volley via
+//!   the chaos proxy, gated on exactly-once resolution; emits
+//!   `BENCH_route.json`
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
 //!
 //! Run: `cargo bench --bench hotpath`
-//! (add `-- cluster|compress|predict|serve|spill|pack|codec`;
+//! (add `-- cluster|compress|predict|serve|spill|pack|route|codec`;
 //! `-- serve --quick`, `-- spill --quick`, and `-- pack --quick` are the CI
 //! smoke configurations: tiny forests / member counts, short timing
 //! budgets; `-- spill --spill-bytes B` caps the disk tier and
@@ -58,8 +62,212 @@ fn main() {
     if run("pack") {
         bench_pack(&cfg);
     }
+    if run("route") {
+        bench_route(&cfg);
+    }
     if run("codec") {
         bench_codec();
+    }
+}
+
+/// Router hot path: per-request overhead of the shard-routing coordinator
+/// vs a direct backend (p50/p99 over serial round trips), then a failover
+/// burst — a pipelined volley with one of three backends severed mid-burst
+/// (via the chaos proxy) — asserting exactly-once resolution before timing
+/// anything. Emits `BENCH_route.json`.
+fn bench_route(cfg: &rf_compress::util::bench::BenchConfig) {
+    use rf_compress::coordinator::health::HealthPolicy;
+    use rf_compress::coordinator::router::{Router, RouterConfig};
+    use rf_compress::coordinator::server::{values_to_wire, Client, PipeReply, Server};
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::coordinator::Coordinator;
+    use rf_compress::data::Column;
+    use std::time::Duration;
+
+    println!("== shard router: overhead vs direct, failover burst ==");
+    let quick = cfg.args.flag("quick");
+    let n_req = if quick { 48 } else { 200 };
+    let n_trees = if quick { cfg.trees.min(16).max(4) } else { cfg.trees.max(40) };
+    let ds = synthetic::iris(cfg.seed);
+    let mut coord = Coordinator::native_only();
+    let models = ["alpha", "beta", "gamma", "delta"];
+    let forests: Vec<CompressedForest> = models
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            coord
+                .train_and_compress(&ds, n_trees, cfg.seed + i as u64, &CompressOptions::default())
+                .unwrap()
+                .1
+        })
+        .collect();
+    // three identical backends: any of them doubles as the direct baseline
+    let backends: Vec<Server> = (0..3)
+        .map(|_| {
+            let store = Arc::new(ModelStore::new());
+            for (name, cf) in models.iter().zip(&forests) {
+                store.insert(name, cf).unwrap();
+            }
+            Server::start(store, 0).unwrap()
+        })
+        .collect();
+    let proxies: Vec<rf_compress::testing::chaos::ChaosProxy> =
+        backends.iter().map(|b| rf_compress::testing::chaos::ChaosProxy::start(b.addr()).unwrap()).collect();
+    let addrs: Vec<std::net::SocketAddr> = proxies.iter().map(|p| p.addr()).collect();
+    let router = Router::start(
+        &addrs,
+        0,
+        RouterConfig {
+            replication: 2,
+            hot_refresh: 8,
+            request_timeout: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(2),
+            health: HealthPolicy {
+                eject_after: 2,
+                eject_cooldown: Duration::from_millis(200),
+                probe_interval: Duration::from_millis(100),
+                ..HealthPolicy::default()
+            },
+            ..RouterConfig::default()
+        },
+    )
+    .unwrap();
+
+    let row0: Vec<ObsValue> = ds
+        .features
+        .iter()
+        .map(|f| match &f.column {
+            Column::Numeric(v) => ObsValue::Num(v[0]),
+            Column::Categorical { values, .. } => ObsValue::Cat(values[0]),
+        })
+        .collect();
+    let wire = values_to_wire(&row0);
+    let quantile = rf_compress::util::stats::quantile;
+
+    // correctness gate before any timing: routed == direct, bit-identical
+    let mut routed = Client::connect(router.addr()).unwrap();
+    routed.set_deadlines(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    let mut direct = Client::connect(backends[0].addr()).unwrap();
+    for model in &models {
+        let a = routed.request(&format!("PREDICT {model} {wire}")).unwrap();
+        let b = direct.request(&format!("PREDICT {model} {wire}")).unwrap();
+        assert_eq!(a, b, "routed {model} diverged from the direct backend");
+    }
+    // warm the hot set so every key routes with the full replica set
+    for _ in 0..2 {
+        for model in &models {
+            let _ = routed.request(&format!("PREDICT {model} {wire}")).unwrap();
+        }
+    }
+
+    let serial_lat = |client: &mut Client, label: &str| -> Vec<f64> {
+        let mut us = Vec::with_capacity(n_req);
+        for i in 0..n_req {
+            let model = models[i % models.len()];
+            let t0 = std::time::Instant::now();
+            let reply = client.request(&format!("PREDICT {model} {wire}")).unwrap();
+            us.push(t0.elapsed().as_secs_f64() * 1e6);
+            assert!(reply.starts_with("OK"), "{label} request {i}: {reply}");
+        }
+        us
+    };
+    let direct_us = serial_lat(&mut direct, "direct");
+    let routed_us = serial_lat(&mut routed, "routed");
+    let (direct_p50, direct_p99) = (quantile(&direct_us, 0.5), quantile(&direct_us, 0.99));
+    let (routed_p50, routed_p99) = (quantile(&routed_us, 0.5), quantile(&routed_us, 0.99));
+
+    // failover burst: pipelined volley, one backend severed a third in;
+    // every id must resolve exactly once (success or typed error)
+    let epoch = std::time::Instant::now();
+    for i in 0..n_req {
+        let model = models[i % models.len()];
+        routed.pipe_predict(i as u64, model, &wire).unwrap();
+        if i == n_req / 3 {
+            proxies[0].sever();
+        }
+    }
+    let replies = routed.collect_pipelined(n_req).unwrap();
+    let burst_secs = epoch.elapsed().as_secs_f64();
+    let mut seen = vec![false; n_req];
+    let mut failed = 0usize;
+    for r in &replies {
+        let id = r.id().expect("router replies carry ids") as usize;
+        assert!(!seen[id], "id {id} answered twice during failover");
+        seen[id] = true;
+        if let PipeReply::Err { message, .. } = r {
+            assert!(
+                message.starts_with("unavailable") || message.starts_with("upstream"),
+                "untyped failure under partition: {message:?}"
+            );
+            failed += 1;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some burst ids never resolved");
+    proxies[0].restore();
+    let stats = router.stats();
+
+    let mut t = Table::new(&["path", "p50", "p99", "p99 overhead"]);
+    t.row(&[
+        "direct backend".into(),
+        format!("{direct_p50:.0} µs"),
+        format!("{direct_p99:.0} µs"),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "via router".into(),
+        format!("{routed_p50:.0} µs"),
+        format!("{routed_p99:.0} µs"),
+        format!("{:.2}x", routed_p99 / direct_p99.max(1e-9)),
+    ]);
+    t.print();
+    println!(
+        "failover burst: {n_req} requests, 1/3 in when severed — {:.1} ms total, \
+         {failed} typed failures, retries={} failovers={} ejections={}",
+        burst_secs * 1e3,
+        stats.retries,
+        stats.failovers,
+        stats.ejections
+    );
+
+    let json = [
+        "{".to_string(),
+        "  \"bench\": \"hotpath route\",".to_string(),
+        format!("  \"trees\": {n_trees},"),
+        format!("  \"requests\": {n_req},"),
+        format!(
+            "  \"direct_us\": {{\"p50\": {direct_p50:.2}, \"p99\": {direct_p99:.2}}},"
+        ),
+        format!(
+            "  \"routed_us\": {{\"p50\": {routed_p50:.2}, \"p99\": {routed_p99:.2}}},"
+        ),
+        format!(
+            "  \"router_overhead\": {{\"p50\": {:.3}, \"p99\": {:.3}}},",
+            routed_p50 / direct_p50.max(1e-9),
+            routed_p99 / direct_p99.max(1e-9)
+        ),
+        format!(
+            "  \"failover_burst\": {{\"requests\": {n_req}, \"total_ms\": {:.2}, \
+             \"typed_failures\": {failed}, \"retries\": {}, \"failovers\": {}, \
+             \"ejections\": {}}}",
+            burst_secs * 1e3,
+            stats.retries,
+            stats.failovers,
+            stats.ejections
+        ),
+        "}".to_string(),
+    ]
+    .join("\n")
+        + "\n";
+    match std::fs::write("BENCH_route.json", &json) {
+        Ok(()) => println!("wrote BENCH_route.json"),
+        Err(e) => println!("could not write BENCH_route.json: {e}"),
+    }
+    router.stop();
+    for p in &proxies {
+        p.stop();
+    }
+    for b in &backends {
+        b.stop();
     }
 }
 

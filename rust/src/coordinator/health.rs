@@ -1,0 +1,239 @@
+//! Per-backend health state machine for the shard router.
+//!
+//! Each backend a [`router::Router`](super::router::Router) fans out to
+//! carries a [`BackendHealth`]: a three-state machine
+//! (`Up → Degraded → Ejected`) driven by the outcomes the router observes —
+//! connect failures, request timeouts, and the periodic `STATS` probe loop.
+//! Consecutive failures degrade and then eject a backend; any success while
+//! `Up`/`Degraded` resets the streak; an `Ejected` backend is only
+//! re-admitted by a success observed **after** its cooldown elapsed, so a
+//! stale in-flight reply that raced the ejection cannot flap it back in.
+//!
+//! Every transition method takes an explicit `now: Instant` instead of
+//! reading the clock, so the unit tests drive the machine through
+//! eject/cooldown/re-admit cycles deterministically, without sleeping.
+
+use std::time::{Duration, Instant};
+
+/// Where a backend sits in the `Up → Degraded → Ejected` lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally; failure streak below the degrade threshold.
+    Up,
+    /// Still routable, but its failure streak crossed
+    /// [`HealthPolicy::degrade_after`] — one eviction candidate away from
+    /// ejection. The router prefers other replicas when it can.
+    Degraded,
+    /// Out of rotation: no requests are routed here. Re-admitted by a probe
+    /// (or request) success observed after [`HealthPolicy::eject_cooldown`].
+    Ejected,
+}
+
+/// Thresholds and timers governing the state machine.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Consecutive failures before `Up` becomes `Degraded`.
+    pub degrade_after: u32,
+    /// Consecutive failures before the backend is `Ejected`.
+    pub eject_after: u32,
+    /// Minimum time a backend stays `Ejected` before a success may
+    /// re-admit it.
+    pub eject_cooldown: Duration,
+    /// Period of the router's `STATS` probe loop (not used by the machine
+    /// itself, but carried here so the router and its tests share one knob).
+    pub probe_interval: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            degrade_after: 1,
+            eject_after: 3,
+            eject_cooldown: Duration::from_millis(500),
+            probe_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+/// One backend's health: current state, failure streak, and the lifetime
+/// ejection/re-admission counters the router's `STATS` verb aggregates.
+#[derive(Debug)]
+pub struct BackendHealth {
+    policy: HealthPolicy,
+    state: HealthState,
+    consecutive_failures: u32,
+    ejected_at: Option<Instant>,
+    /// Lifetime `* → Ejected` transitions.
+    pub ejections: u64,
+    /// Lifetime `Ejected → Up` re-admissions.
+    pub readmissions: u64,
+}
+
+impl BackendHealth {
+    /// A fresh backend starts `Up` with no failure history.
+    pub fn new(policy: HealthPolicy) -> Self {
+        BackendHealth {
+            policy,
+            state: HealthState::Up,
+            consecutive_failures: 0,
+            ejected_at: None,
+            ejections: 0,
+            readmissions: 0,
+        }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Whether the router may send requests here (`Up` or `Degraded`).
+    pub fn is_available(&self) -> bool {
+        self.state != HealthState::Ejected
+    }
+
+    /// Whether an `Ejected` backend has served its cooldown and is due a
+    /// re-admission probe. Always `false` while available.
+    pub fn probe_due_at(&self, now: Instant) -> bool {
+        match (self.state, self.ejected_at) {
+            (HealthState::Ejected, Some(at)) => {
+                now.saturating_duration_since(at) >= self.policy.eject_cooldown
+            }
+            _ => false,
+        }
+    }
+
+    /// Record a successful exchange observed at `now`.
+    ///
+    /// While available this clears the failure streak (and any `Degraded`
+    /// state). While `Ejected` it re-admits the backend **only** if the
+    /// cooldown has elapsed — a success that raced the ejection (a late
+    /// reply from before the partition) leaves it ejected.
+    pub fn note_success_at(&mut self, now: Instant) {
+        match self.state {
+            HealthState::Ejected => {
+                if self.probe_due_at(now) {
+                    self.state = HealthState::Up;
+                    self.consecutive_failures = 0;
+                    self.ejected_at = None;
+                    self.readmissions += 1;
+                }
+            }
+            _ => {
+                self.state = HealthState::Up;
+                self.consecutive_failures = 0;
+            }
+        }
+    }
+
+    /// Record a failed exchange (connect failure, request timeout, probe
+    /// failure) observed at `now`. Crossing `degrade_after` degrades;
+    /// crossing `eject_after` ejects and starts the cooldown clock. A
+    /// failure against an already-`Ejected` backend restarts its cooldown
+    /// (the probe just confirmed it is still down).
+    pub fn note_failure_at(&mut self, now: Instant) {
+        if self.state == HealthState::Ejected {
+            self.ejected_at = Some(now);
+            return;
+        }
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        if self.consecutive_failures >= self.policy.eject_after {
+            self.state = HealthState::Ejected;
+            self.ejected_at = Some(now);
+            self.ejections += 1;
+        } else if self.consecutive_failures >= self.policy.degrade_after {
+            self.state = HealthState::Degraded;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy {
+            degrade_after: 1,
+            eject_after: 3,
+            eject_cooldown: Duration::from_millis(500),
+            probe_interval: Duration::from_millis(100),
+        }
+    }
+
+    #[test]
+    fn failures_degrade_then_eject() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(policy());
+        assert_eq!(h.state(), HealthState::Up);
+
+        h.note_failure_at(t0);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(h.is_available());
+
+        h.note_failure_at(t0);
+        assert_eq!(h.state(), HealthState::Degraded);
+
+        h.note_failure_at(t0);
+        assert_eq!(h.state(), HealthState::Ejected);
+        assert!(!h.is_available());
+        assert_eq!(h.ejections, 1);
+    }
+
+    #[test]
+    fn success_resets_the_streak() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(policy());
+        h.note_failure_at(t0);
+        h.note_failure_at(t0);
+        assert_eq!(h.state(), HealthState::Degraded);
+
+        h.note_success_at(t0);
+        assert_eq!(h.state(), HealthState::Up);
+
+        // the streak restarted: two more failures only degrade again
+        h.note_failure_at(t0);
+        h.note_failure_at(t0);
+        assert_eq!(h.state(), HealthState::Degraded);
+    }
+
+    #[test]
+    fn readmission_waits_for_the_cooldown() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(policy());
+        for _ in 0..3 {
+            h.note_failure_at(t0);
+        }
+        assert_eq!(h.state(), HealthState::Ejected);
+
+        // a success inside the cooldown window (a stale reply) is ignored
+        let early = t0 + Duration::from_millis(100);
+        assert!(!h.probe_due_at(early));
+        h.note_success_at(early);
+        assert_eq!(h.state(), HealthState::Ejected);
+
+        // past the cooldown the probe is due and a success re-admits
+        let late = t0 + Duration::from_millis(600);
+        assert!(h.probe_due_at(late));
+        h.note_success_at(late);
+        assert_eq!(h.state(), HealthState::Up);
+        assert_eq!(h.readmissions, 1);
+        assert_eq!(h.ejections, 1);
+    }
+
+    #[test]
+    fn probe_failure_restarts_the_cooldown() {
+        let t0 = Instant::now();
+        let mut h = BackendHealth::new(policy());
+        for _ in 0..3 {
+            h.note_failure_at(t0);
+        }
+
+        // still down at t0+600ms: the probe failure re-arms the clock, so
+        // at t0+700ms (100ms after the failed probe) no probe is due yet
+        let t1 = t0 + Duration::from_millis(600);
+        h.note_failure_at(t1);
+        assert_eq!(h.ejections, 1, "re-ejecting an ejected backend double-counts");
+        assert!(!h.probe_due_at(t1 + Duration::from_millis(100)));
+        assert!(h.probe_due_at(t1 + Duration::from_millis(500)));
+    }
+}

@@ -13,10 +13,19 @@
 //!   (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `QUIT`; specified in
 //!   `rust/PROTOCOL.md`) suitable for the end-to-end example and the
 //!   latency benches
+//! * [`router`]  — the fleet layer: a shard-routing coordinator speaking
+//!   the same protocol downstream and pipelined `PIPE` upstream, with
+//!   rendezvous hashing, hot-key replication, per-backend connection
+//!   pools, and retry/backoff onto replicas
+//! * [`health`]  — the per-backend `Up → Degraded → Ejected` state machine
+//!   the router's probe loop and request path drive
 
+pub mod health;
 pub mod pipeline;
+pub mod router;
 pub mod server;
 pub mod store;
 
 pub use pipeline::{CompressionReport, Coordinator};
+pub use router::Router;
 pub use store::ModelStore;

@@ -1,0 +1,800 @@
+//! Shard-routing coordinator: one protocol front-end fanning out to N
+//! backend model-store servers.
+//!
+//! `repro serve --route` starts a [`Router`] instead of a single-node
+//! [`Server`](super::server::Server). The router speaks the same
+//! line protocol downstream (clients cannot tell it from a backend) and
+//! pipelined `PIPE` upstream, through per-backend connection pools:
+//!
+//! ```text
+//!                         ┌── Router ───────────────────────────────┐
+//! client ── PIPE/PREDICT ─►  rendezvous-hash(model) → candidate set │
+//!                         │  try replicas in score order:           │
+//!                         │    pool conn → PIPE <uid> PREDICT …     │
+//!                         │    failure → health.note_failure,       │
+//!                         │    jittered backoff, next replica       │──► backend 0
+//!                         │  all replicas down →                    │──► backend 1
+//!                         │    ERR unavailable model=<k>            │──► backend 2
+//!                         │  probe loop: STATS every interval,      │
+//!                         │  eject / re-admit per HealthPolicy      │
+//!                         └─────────────────────────────────────────┘
+//! ```
+//!
+//! **Placement.** Every model key rendezvous-hashes (highest-random-weight)
+//! to a deterministic preference order over the backends. Cold keys route to
+//! their primary only; the top-K **hot** keys (by router-observed request
+//! count) use the top-R candidates as a replica set — reads fail over down
+//! that list. Rendezvous hashing means adding or removing a backend only
+//! remaps the keys that scored it highest; everything else stays put.
+//!
+//! **Robustness.** Each backend carries a
+//! [`BackendHealth`](super::health::BackendHealth) machine (`Up → Degraded →
+//! Ejected`) fed by connect failures, request timeouts, and a background
+//! `STATS` probe loop; ejected backends leave rotation and are re-admitted
+//! by a successful probe after the cooldown. Upstream exchanges are
+//! duplicate-id-safe: every upstream attempt uses a fresh router-global uid
+//! on an exclusively-checked-out pool connection, and a connection whose
+//! exchange failed is destroyed, never returned to the pool — a late reply
+//! can only die with its socket.
+//!
+//! Grammar, retry semantics, and the router's counter glossary are
+//! specified in `rust/PROTOCOL.md` § Routing, enforced by the
+//! `protocol_doc_covers_every_counter` drift guard.
+
+use super::health::{BackendHealth, HealthPolicy, HealthState};
+use super::server::{parse_pipe_reply, wake_accept_loop, Client, PipeReply};
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Router tuning knobs (replication, retry budget, timeouts, health).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Replica-set size for hot keys (clamped to the backend count).
+    pub replication: usize,
+    /// How many of the most-requested keys count as hot.
+    pub hot_k: usize,
+    /// Recompute the hot set every this many routed requests.
+    pub hot_refresh: u64,
+    /// Upstream attempts per request across the whole replica set.
+    pub max_tries: u32,
+    /// Connect timeout for pool and probe connections.
+    pub connect_timeout: Duration,
+    /// Read/write deadline on upstream sockets — bounds one exchange.
+    pub request_timeout: Duration,
+    /// Base of the jittered exponential backoff between failed attempts.
+    pub backoff_base: Duration,
+    /// Per-connection pipelined in-flight cap (mirrors the backend cap).
+    pub inflight_cap: usize,
+    /// Pooled idle connections kept per backend.
+    pub pool_cap: usize,
+    /// Health thresholds, cooldown, and probe interval.
+    pub health: HealthPolicy,
+    /// Seed for the backoff jitter (deterministic fault tests).
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replication: 2,
+            hot_k: 8,
+            hot_refresh: 64,
+            max_tries: 3,
+            connect_timeout: Duration::from_millis(500),
+            request_timeout: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(5),
+            inflight_cap: 256,
+            pool_cap: 8,
+            health: HealthPolicy::default(),
+            seed: 0x5EED_0007,
+        }
+    }
+}
+
+/// Snapshot of the router's serving counters (the `STATS` payload).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Requests answered via a backend (success or passed-through error).
+    pub routed: u64,
+    /// Upstream attempts beyond the first for a request.
+    pub retries: u64,
+    /// Requests ultimately answered by a non-primary replica.
+    pub failovers: u64,
+    /// Lifetime backend ejections (summed over backends).
+    pub ejections: u64,
+    /// Lifetime backend re-admissions (summed over backends).
+    pub readmissions: u64,
+    /// Requests answered `ERR unavailable` — every replica down.
+    pub unavailable: u64,
+    /// Gauge: backends currently routable (`Up` or `Degraded`).
+    pub backends_up: u64,
+}
+
+/// The router's `STATS` counter list — every key named here must be
+/// documented in `rust/PROTOCOL.md` (§ Routing); the
+/// `protocol_doc_covers_every_counter` drift guard enforces it.
+pub fn router_stats_payload(s: &RouterStats) -> String {
+    format!(
+        "routed={} retries={} failovers={} ejections={} readmissions={} \
+         unavailable={} backends_up={}",
+        s.routed, s.retries, s.failovers, s.ejections, s.readmissions, s.unavailable, s.backends_up
+    )
+}
+
+/// Jittered exponential backoff: `base × 2^attempt`, scaled by a uniform
+/// factor in `[0.5, 1.5)` drawn from `rng`. The exponent saturates at 10
+/// (×1024) so a large retry budget cannot overflow into hour-long sleeps.
+pub fn jittered_backoff(base: Duration, attempt: u32, rng: &mut Pcg64) -> Duration {
+    let micros = (base.as_micros() as u64).saturating_mul(1u64 << attempt.min(10));
+    let factor = 0.5 + rng.gen_f64();
+    Duration::from_micros((micros as f64 * factor) as u64)
+}
+
+/// Rendezvous (highest-random-weight) score of `key` on `backend`:
+/// FNV-1a over both strings, finished with a splitmix64 avalanche. Each
+/// (key, backend) pair scores independently; a key routes to the backends
+/// in descending score order.
+pub fn rendezvous_score(key: &str, backend: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes().chain([0u8]).chain(backend.bytes()) {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // splitmix64 finisher: FNV alone mixes low bits poorly
+    h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// One upstream backend: its address, idle-connection pool, and health.
+struct Backend {
+    addr: SocketAddr,
+    addr_str: String,
+    pool: Mutex<Vec<Client>>,
+    health: Mutex<BackendHealth>,
+}
+
+/// Request-count bookkeeping behind hot-key replication.
+struct HotTracker {
+    counts: HashMap<String, u64>,
+    hot: HashSet<String>,
+    since_refresh: u64,
+}
+
+/// How one routed prediction resolved.
+enum RouteOutcome {
+    /// A backend answered `OK` — the prediction value.
+    Value(String),
+    /// A backend answered a non-retryable `ERR` — passed through.
+    Upstream(String),
+    /// Every replica was down or failed: `ERR unavailable model=<k>`.
+    Unavailable,
+}
+
+struct RouterInner {
+    cfg: RouterConfig,
+    backends: Vec<Backend>,
+    shutdown: AtomicBool,
+    uid: AtomicU64,
+    routed: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    unavailable: AtomicU64,
+    rng: Mutex<Pcg64>,
+    hot: Mutex<HotTracker>,
+}
+
+/// The running routing coordinator: accept loop + probe loop + a reader
+/// thread (and per-request workers) per downstream connection.
+pub struct Router {
+    inner: Arc<RouterInner>,
+    addr: SocketAddr,
+}
+
+impl Router {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start routing across
+    /// `backends` with the given config.
+    pub fn start(backends: &[SocketAddr], port: u16, cfg: RouterConfig) -> Result<Router> {
+        if backends.is_empty() {
+            bail!("router needs at least one backend");
+        }
+        let listener = TcpListener::bind(("127.0.0.1", port)).context("binding router socket")?;
+        let addr = listener.local_addr()?;
+        let inner = Arc::new(RouterInner {
+            backends: backends
+                .iter()
+                .map(|&addr| Backend {
+                    addr,
+                    addr_str: addr.to_string(),
+                    pool: Mutex::new(Vec::new()),
+                    health: Mutex::new(BackendHealth::new(cfg.health.clone())),
+                })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+            uid: AtomicU64::new(0),
+            routed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            unavailable: AtomicU64::new(0),
+            rng: Mutex::new(Pcg64::new(cfg.seed)),
+            hot: Mutex::new(HotTracker {
+                counts: HashMap::new(),
+                hot: HashSet::new(),
+                since_refresh: 0,
+            }),
+            cfg,
+        });
+
+        {
+            // accept loop: blocking, woken by stop() exactly like Server's
+            let inner = inner.clone();
+            thread::spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if inner.shutdown.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let inner = inner.clone();
+                        thread::spawn(move || {
+                            let _ = handle_router_conn(stream, &inner);
+                        });
+                    }
+                    Err(_) => {
+                        if inner.shutdown.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            });
+        }
+        {
+            // probe loop: STATS every probe_interval against each backend
+            // that is routable or due a re-admission probe
+            let inner = inner.clone();
+            thread::spawn(move || {
+                while !inner.shutdown.load(Ordering::Relaxed) {
+                    thread::sleep(inner.cfg.health.probe_interval);
+                    if inner.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    for i in 0..inner.backends.len() {
+                        let due = {
+                            let h = inner.backends[i].health.lock().unwrap();
+                            h.is_available() || h.probe_due_at(Instant::now())
+                        };
+                        if !due {
+                            continue;
+                        }
+                        let ok = inner.probe(i);
+                        let mut h = inner.backends[i].health.lock().unwrap();
+                        if ok {
+                            h.note_success_at(Instant::now());
+                        } else {
+                            h.note_failure_at(Instant::now());
+                        }
+                    }
+                }
+            });
+        }
+        Ok(Router { inner, addr })
+    }
+
+    /// The router's bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot the router's serving counters.
+    pub fn stats(&self) -> RouterStats {
+        self.inner.stats()
+    }
+
+    /// Current health state per backend, in construction order (test hook).
+    pub fn backend_states(&self) -> Vec<HealthState> {
+        self.inner.backends.iter().map(|b| b.health.lock().unwrap().state()).collect()
+    }
+
+    /// Signal shutdown and wake the accept loop (bounded, like
+    /// [`Server::stop`](super::server::Server::stop)).
+    pub fn stop(&self) {
+        if self.inner.shutdown.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        wake_accept_loop(self.addr);
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl RouterInner {
+    fn stats(&self) -> RouterStats {
+        let (mut ejections, mut readmissions, mut up) = (0, 0, 0);
+        for b in &self.backends {
+            let h = b.health.lock().unwrap();
+            ejections += h.ejections;
+            readmissions += h.readmissions;
+            if h.is_available() {
+                up += 1;
+            }
+        }
+        RouterStats {
+            routed: self.routed.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            ejections,
+            readmissions,
+            unavailable: self.unavailable.load(Ordering::Relaxed),
+            backends_up: up,
+        }
+    }
+
+    /// Record a request against `model` and refresh the hot set every
+    /// `hot_refresh` requests: the top `hot_k` keys by lifetime count.
+    fn note_request(&self, model: &str) {
+        let mut hot = self.hot.lock().unwrap();
+        *hot.counts.entry(model.to_string()).or_insert(0) += 1;
+        hot.since_refresh += 1;
+        if hot.since_refresh >= self.cfg.hot_refresh {
+            hot.since_refresh = 0;
+            let mut by_count: Vec<(&String, &u64)> = hot.counts.iter().collect();
+            by_count.sort_by(|a, b| b.1.cmp(a.1).then_with(|| a.0.cmp(b.0)));
+            let top: HashSet<String> =
+                by_count.into_iter().take(self.cfg.hot_k).map(|(k, _)| k.clone()).collect();
+            hot.hot = top;
+        }
+    }
+
+    fn is_hot(&self, model: &str) -> bool {
+        self.hot.lock().unwrap().hot.contains(model)
+    }
+
+    /// The backends that may serve `model`, best rendezvous score first:
+    /// the top-R candidates for a hot key, the primary alone for a cold one.
+    fn candidates_for(&self, model: &str) -> Vec<usize> {
+        let mut scored: Vec<(u64, usize)> = self
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (rendezvous_score(model, &b.addr_str), i))
+            .collect();
+        scored.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        let want = if self.is_hot(model) { self.cfg.replication.max(1) } else { 1 };
+        scored.into_iter().take(want.min(self.backends.len())).map(|(_, i)| i).collect()
+    }
+
+    /// Check a pooled connection out of `backend`'s pool, or dial a fresh
+    /// one with the connect timeout and per-exchange deadlines set.
+    fn checkout(&self, bi: usize) -> Result<Client> {
+        if let Some(client) = self.backends[bi].pool.lock().unwrap().pop() {
+            return Ok(client);
+        }
+        let client = Client::connect_timeout(self.backends[bi].addr, self.cfg.connect_timeout)?;
+        client.set_deadlines(Some(self.cfg.request_timeout), Some(self.cfg.request_timeout))?;
+        Ok(client)
+    }
+
+    /// Return a connection whose exchange fully completed. A connection is
+    /// only ever checked in with **no outstanding replies**, which is what
+    /// makes pool reuse duplicate-id-safe.
+    fn checkin(&self, bi: usize, client: Client) {
+        let mut pool = self.backends[bi].pool.lock().unwrap();
+        if pool.len() < self.cfg.pool_cap {
+            pool.push(client);
+        }
+    }
+
+    /// One pipelined upstream exchange: send `line` (which carries `uid`),
+    /// read until the reply for `uid` arrives. `Err` means a transport
+    /// failure (connect/send/recv/EOF) — the connection is destroyed, the
+    /// caller notes a health failure and may fail over.
+    fn exchange_pipe(&self, bi: usize, uid: u64, line: &str) -> Result<PipeReply, String> {
+        let mut client = self.checkout(bi).map_err(|e| format!("connect: {e}"))?;
+        client.send(line).map_err(|e| format!("send: {e}"))?;
+        // exclusive checkout means the next reply is ours; tolerate a few
+        // stray lines defensively (they would indicate a protocol bug, not
+        // a routine race — stale replies die with their socket)
+        for _ in 0..4 {
+            let reply = match client.recv() {
+                Ok(r) if !r.is_empty() => r,
+                Ok(_) => return Err("eof mid-exchange".to_string()),
+                Err(e) => return Err(format!("recv: {e}")),
+            };
+            let parsed = parse_pipe_reply(&reply).map_err(|e| format!("bad reply: {e}"))?;
+            if parsed.id() == Some(uid) {
+                self.checkin(bi, client);
+                return Ok(parsed);
+            }
+        }
+        Err("no reply for this exchange's id".to_string())
+    }
+
+    /// Serial upstream exchange (`LIST`, probe `STATS`): one line out, one
+    /// line back, on a pooled connection.
+    fn exchange_serial(&self, bi: usize, line: &str) -> Result<String, String> {
+        let mut client = self.checkout(bi).map_err(|e| format!("connect: {e}"))?;
+        client.send(line).map_err(|e| format!("send: {e}"))?;
+        match client.recv() {
+            Ok(r) if !r.is_empty() => {
+                self.checkin(bi, client);
+                Ok(r)
+            }
+            Ok(_) => Err("eof mid-exchange".to_string()),
+            Err(e) => Err(format!("recv: {e}")),
+        }
+    }
+
+    /// Probe one backend: fresh dial (a pooled conn would hide a dead
+    /// listener) + `STATS` round trip under the usual deadlines.
+    fn probe(&self, bi: usize) -> bool {
+        let Ok(client) = Client::connect_timeout(self.backends[bi].addr, self.cfg.connect_timeout)
+        else {
+            return false;
+        };
+        if client
+            .set_deadlines(Some(self.cfg.request_timeout), Some(self.cfg.request_timeout))
+            .is_err()
+        {
+            return false;
+        }
+        let mut client = client;
+        client.request("STATS").map(|r| r.starts_with("OK ")).unwrap_or(false)
+    }
+
+    /// Route one prediction: walk the replica set in rendezvous order, up
+    /// to `max_tries` upstream attempts, jittered backoff after failures.
+    /// Transport failures and upstream timeouts count against the
+    /// backend's health and fail over; other upstream errors pass through.
+    fn route_predict(&self, model: &str, values: &str) -> RouteOutcome {
+        self.note_request(model);
+        let candidates = self.candidates_for(model);
+        let primary = candidates.first().copied();
+        let mut attempts: u32 = 0;
+        'rounds: for round in 0.. {
+            let mut any_available = false;
+            for &bi in &candidates {
+                if !self.backends[bi].health.lock().unwrap().is_available() {
+                    continue;
+                }
+                any_available = true;
+                if attempts >= self.cfg.max_tries {
+                    break 'rounds;
+                }
+                if attempts > 0 {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                }
+                attempts += 1;
+                let uid = self.uid.fetch_add(1, Ordering::Relaxed);
+                let line = format!("PIPE {uid} PREDICT {model} {values}");
+                match self.exchange_pipe(bi, uid, &line) {
+                    Ok(PipeReply::Ok { value, .. }) => {
+                        self.backends[bi].health.lock().unwrap().note_success_at(Instant::now());
+                        self.routed.fetch_add(1, Ordering::Relaxed);
+                        if primary != Some(bi) {
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return RouteOutcome::Value(value);
+                    }
+                    Ok(PipeReply::Err { message, .. }) => {
+                        if message == "timeout" || message.starts_with("timeout ") {
+                            // a request timeout counts against health and
+                            // fails over like a transport failure
+                            self.backends[bi]
+                                .health
+                                .lock()
+                                .unwrap()
+                                .note_failure_at(Instant::now());
+                        } else {
+                            // semantic error (schema, unknown model): the
+                            // backend is alive and retrying is pointless
+                            self.backends[bi]
+                                .health
+                                .lock()
+                                .unwrap()
+                                .note_success_at(Instant::now());
+                            self.routed.fetch_add(1, Ordering::Relaxed);
+                            if primary != Some(bi) {
+                                self.failovers.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return RouteOutcome::Upstream(message);
+                        }
+                    }
+                    Err(_transport) => {
+                        self.backends[bi].health.lock().unwrap().note_failure_at(Instant::now());
+                    }
+                }
+                if attempts < self.cfg.max_tries {
+                    let delay = {
+                        let mut rng = self.rng.lock().unwrap();
+                        jittered_backoff(self.cfg.backoff_base, attempts - 1, &mut rng)
+                    };
+                    thread::sleep(delay);
+                }
+            }
+            if !any_available || attempts >= self.cfg.max_tries || round >= self.cfg.max_tries {
+                break;
+            }
+        }
+        self.unavailable.fetch_add(1, Ordering::Relaxed);
+        RouteOutcome::Unavailable
+    }
+
+    /// The router's `LIST`: the sorted, deduplicated union of every
+    /// routable backend's model list. `ERR unavailable` when none answer.
+    fn list_reply(&self) -> String {
+        let mut names = BTreeSet::new();
+        let mut answered = false;
+        for bi in 0..self.backends.len() {
+            if !self.backends[bi].health.lock().unwrap().is_available() {
+                continue;
+            }
+            if let Ok(reply) = self.exchange_serial(bi, "LIST") {
+                if let Some(list) = reply.strip_prefix("OK") {
+                    answered = true;
+                    for name in list.split_whitespace() {
+                        names.insert(name.to_string());
+                    }
+                }
+            }
+        }
+        if !answered {
+            return "ERR unavailable".to_string();
+        }
+        let joined = names.into_iter().collect::<Vec<_>>().join(" ");
+        format!("OK {}", joined).trim_end().to_string()
+    }
+}
+
+/// Write one reply line under the connection's socket-write mutex (shared
+/// by the reader and every per-request worker).
+fn write_router_line(stream: &Mutex<TcpStream>, line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut s = stream.lock().unwrap();
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")
+}
+
+/// One downstream connection: a reader thread parsing lines; serial verbs
+/// answer inline (blocking, in order), `PIPE <id> PREDICT` admits into the
+/// connection's in-flight set and routes on a worker thread, answering out
+/// of order. On `QUIT`/EOF the reader stops and in-flight workers drain
+/// before the socket closes — every admitted id is answered exactly once.
+fn handle_router_conn(stream: TcpStream, inner: &Arc<RouterInner>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let wire = Arc::new(Mutex::new(stream.try_clone()?));
+    let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if inner.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(3, ' ');
+        let reply = match parts.next().unwrap_or("") {
+            "PREDICT" => {
+                let (Some(model), Some(values)) = (parts.next(), parts.next()) else {
+                    let _ = write_router_line(&wire, "ERR PREDICT needs a model and values");
+                    continue;
+                };
+                Some(match inner.route_predict(model, values) {
+                    RouteOutcome::Value(v) => format!("OK {v}"),
+                    RouteOutcome::Upstream(m) => format!("ERR upstream {m}"),
+                    RouteOutcome::Unavailable => format!("ERR unavailable model={model}"),
+                })
+            }
+            "PIPE" => {
+                let id: Option<u64> = parts.next().and_then(|t| t.parse().ok());
+                let Some(id) = id else {
+                    let _ = write_router_line(&wire, "ERR PIPE id must be an unsigned integer");
+                    continue;
+                };
+                let Some(body) = parts.next() else {
+                    let _ =
+                        write_router_line(&wire, &format!("ERR PIPE needs a request body id={id}"));
+                    continue;
+                };
+                handle_router_pipe(id, body, inner, &wire, &inflight)
+            }
+            "LIST" => Some(inner.list_reply()),
+            "STATS" => Some(format!("OK {}", router_stats_payload(&inner.stats()))),
+            "BYTES" => Some("ERR BYTES is not routed (ask a backend directly)".to_string()),
+            "QUIT" => break,
+            other => Some(format!("ERR unknown verb {other:?}")),
+        };
+        if let Some(r) = reply {
+            if write_router_line(&wire, &r).is_err() {
+                break;
+            }
+        }
+    }
+    // drain-then-close: every admitted id answers (route_predict is bounded
+    // by max_tries × request_timeout, so this always terminates)
+    let deadline = Instant::now()
+        + inner.cfg.request_timeout * (inner.cfg.max_tries + 1)
+        + Duration::from_secs(1);
+    while !inflight.lock().unwrap().is_empty() && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(5));
+    }
+    Ok(())
+}
+
+/// Admit and dispatch one `PIPE` body. Returns an admission-error line to
+/// write now, or `None` when the request was dispatched (or answered
+/// inline, for `LIST`/`STATS`).
+fn handle_router_pipe(
+    id: u64,
+    body: &str,
+    inner: &Arc<RouterInner>,
+    wire: &Arc<Mutex<TcpStream>>,
+    inflight: &Arc<Mutex<HashSet<u64>>>,
+) -> Option<String> {
+    let mut parts = body.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("");
+    let tail = parts.next().unwrap_or("");
+    match verb {
+        "PREDICT" => {
+            let Some((model, values)) = tail.split_once(' ') else {
+                return Some(format!("ERR PREDICT needs a model and values id={id}"));
+            };
+            {
+                // admission order matches the backend protocol: duplicate
+                // before cap, so a duplicate is never misreported as busy
+                let mut inf = inflight.lock().unwrap();
+                if inf.contains(&id) {
+                    return Some(format!("ERR duplicate id id={id}"));
+                }
+                if inf.len() >= inner.cfg.inflight_cap {
+                    return Some(format!("ERR busy id={id}"));
+                }
+                inf.insert(id);
+            }
+            let inner = inner.clone();
+            let wire = wire.clone();
+            let inflight = inflight.clone();
+            let model = model.to_string();
+            let values = values.to_string();
+            thread::spawn(move || {
+                let reply = match inner.route_predict(&model, &values) {
+                    RouteOutcome::Value(v) => format!("OK {id} {v}"),
+                    RouteOutcome::Upstream(m) => format!("ERR upstream {m} id={id}"),
+                    RouteOutcome::Unavailable => {
+                        format!("ERR unavailable model={model} id={id}")
+                    }
+                };
+                let _ = write_router_line(&wire, &reply);
+                inflight.lock().unwrap().remove(&id);
+            });
+            None
+        }
+        // LIST/STATS complete immediately: duplicate-checked, answered
+        // inline under the write mutex, never counted in flight
+        "LIST" => {
+            if inflight.lock().unwrap().contains(&id) {
+                return Some(format!("ERR duplicate id id={id}"));
+            }
+            let payload = inner.list_reply();
+            Some(match payload.strip_prefix("OK") {
+                Some(rest) => format!("OK {id}{rest}"),
+                None => format!("ERR unavailable id={id}"),
+            })
+        }
+        "STATS" => {
+            if inflight.lock().unwrap().contains(&id) {
+                return Some(format!("ERR duplicate id id={id}"));
+            }
+            Some(format!("OK {id} {}", router_stats_payload(&inner.stats())))
+        }
+        other => Some(format!("ERR unknown pipe verb {other:?} id={id}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendezvous_is_deterministic_and_spreads_keys() {
+        let backends = ["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"];
+        // determinism: same inputs, same scores
+        for b in &backends {
+            assert_eq!(rendezvous_score("tenant-42", b), rendezvous_score("tenant-42", b));
+        }
+        // spread: over many keys every backend is primary for some key
+        let mut primaries = [0usize; 3];
+        for k in 0..200 {
+            let key = format!("tenant-{k}");
+            let best = (0..3).max_by_key(|&i| rendezvous_score(&key, backends[i])).unwrap();
+            primaries[best] += 1;
+        }
+        for (i, &n) in primaries.iter().enumerate() {
+            assert!(n > 20, "backend {i} is primary for only {n}/200 keys: {primaries:?}");
+        }
+    }
+
+    #[test]
+    fn removing_a_backend_only_remaps_its_own_keys() {
+        // the rendezvous property: dropping backend 2 must not move any key
+        // whose primary was backend 0 or 1
+        let backends = ["127.0.0.1:9001", "127.0.0.1:9002", "127.0.0.1:9003"];
+        for k in 0..100 {
+            let key = format!("tenant-{k}");
+            let best3 = (0..3).max_by_key(|&i| rendezvous_score(&key, backends[i])).unwrap();
+            if best3 < 2 {
+                let best2 = (0..2).max_by_key(|&i| rendezvous_score(&key, backends[i])).unwrap();
+                assert_eq!(best3, best2, "key {key} moved although its primary survived");
+            }
+        }
+    }
+
+    #[test]
+    fn jittered_backoff_is_bounded_and_seed_deterministic() {
+        let base = Duration::from_millis(10);
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for attempt in 0..6 {
+            let d1 = jittered_backoff(base, attempt, &mut a);
+            let d2 = jittered_backoff(base, attempt, &mut b);
+            assert_eq!(d1, d2, "same seed must give the same jitter");
+            let nominal = base * 2u32.pow(attempt);
+            assert!(d1 >= nominal / 2, "attempt {attempt}: {d1:?} < half of {nominal:?}");
+            assert!(d1 < nominal * 3 / 2, "attempt {attempt}: {d1:?} ≥ 1.5 × {nominal:?}");
+        }
+        // the exponent saturates: attempt 40 must not overflow
+        let big = jittered_backoff(base, 40, &mut a);
+        assert!(big <= base * 1024 * 2, "saturated backoff escaped its cap: {big:?}");
+    }
+
+    #[test]
+    fn stats_payload_names_every_counter() {
+        let line = router_stats_payload(&RouterStats::default());
+        for key in
+            ["routed", "retries", "failovers", "ejections", "readmissions", "unavailable", "backends_up"]
+        {
+            assert!(line.contains(&format!("{key}=0")), "missing {key} in {line:?}");
+        }
+    }
+
+    #[test]
+    fn unavailable_without_any_backend_listening() {
+        // one backend address that refuses connections: the router must
+        // answer a typed unavailable error, not hang or die
+        let dead = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap()
+        };
+        let cfg = RouterConfig {
+            connect_timeout: Duration::from_millis(100),
+            request_timeout: Duration::from_millis(200),
+            backoff_base: Duration::from_millis(1),
+            max_tries: 2,
+            health: HealthPolicy {
+                probe_interval: Duration::from_millis(50),
+                ..HealthPolicy::default()
+            },
+            ..RouterConfig::default()
+        };
+        let router = Router::start(&[dead], 0, cfg).unwrap();
+        let mut client = Client::connect(router.addr()).unwrap();
+        client.set_deadlines(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
+        let reply = client.request("PREDICT nobody 1.0").unwrap();
+        assert_eq!(reply, "ERR unavailable model=nobody");
+        let stats = router.stats();
+        assert_eq!(stats.unavailable, 1);
+        router.stop();
+    }
+}

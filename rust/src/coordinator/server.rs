@@ -376,8 +376,7 @@ impl Server {
         }
         // dropping the senders makes each batcher's recv disconnect promptly
         self.batchers.map.lock().unwrap().clear();
-        // unblock accept()
-        let _ = TcpStream::connect(self.addr);
+        wake_accept_loop(self.addr);
     }
 
     /// Number of live per-model batcher queues.
@@ -389,6 +388,23 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// Nudge a blocking `accept()` loop awake with a loopback connection, with a
+/// connect **timeout** and bounded retries — never an unbounded
+/// `TcpStream::connect`. If the connect is refused the listener is already
+/// gone (its accept loop has exited or is exiting), so failing after the
+/// retries is fine; what matters is that `stop()` cannot hang on a stalled
+/// loopback handshake.
+pub(crate) fn wake_accept_loop(addr: std::net::SocketAddr) {
+    for attempt in 0..3 {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        if TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_ok() {
+            return;
+        }
     }
 }
 
@@ -917,6 +933,59 @@ impl Client {
     /// Connect to a [`Server`]'s address.
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
+        Self::from_stream(stream)
+    }
+
+    /// Connect with a bounded connect timeout instead of the OS default
+    /// (which can be minutes against a blackholed peer).
+    pub fn connect_timeout(addr: std::net::SocketAddr, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("connecting to {addr} (timeout {timeout:?})"))?;
+        Self::from_stream(stream)
+    }
+
+    /// Bounded-retry connect: up to `tries` attempts, each with `timeout`,
+    /// sleeping `backoff` between attempts. Returns the last error if every
+    /// attempt fails — never blocks longer than
+    /// `tries × timeout + (tries − 1) × backoff`.
+    pub fn connect_with_retry(
+        addr: std::net::SocketAddr,
+        timeout: Duration,
+        tries: u32,
+        backoff: Duration,
+    ) -> Result<Client> {
+        let mut last = None;
+        for attempt in 0..tries.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+            }
+            match Self::connect_timeout(addr, timeout) {
+                Ok(client) => return Ok(client),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one connect attempt ran"))
+    }
+
+    /// Set socket read/write deadlines (`None` = block forever, the
+    /// pre-hardening behavior). With a read deadline, a hung peer turns
+    /// into a `WouldBlock`/`TimedOut` error from [`Client::recv`] instead
+    /// of a forever-blocked thread.
+    pub fn set_deadlines(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()> {
+        // reader and writer are clones of one socket, so one call covers
+        // both directions; set both fds anyway in case that ever changes
+        self.writer.set_read_timeout(read).context("setting read deadline")?;
+        self.writer.set_write_timeout(write).context("setting write deadline")?;
+        self.reader.get_ref().set_read_timeout(read).context("setting read deadline")?;
+        self.reader.get_ref().set_write_timeout(write).context("setting write deadline")?;
+        Ok(())
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         stream.set_nodelay(true).ok();
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
@@ -1176,6 +1245,18 @@ mod tests {
                 "BYTES counter `{key}` is missing from rust/PROTOCOL.md"
             );
         }
+        // the router's STATS counters are part of the same wire surface:
+        // every key its payload emits must be in the Routing glossary
+        let router_line = super::super::router::router_stats_payload(
+            &super::super::router::RouterStats::default(),
+        );
+        for tok in router_line.split_whitespace() {
+            let key = tok.split('=').next().unwrap();
+            assert!(
+                doc.contains(&format!("`{key}`")),
+                "router STATS counter `{key}` is missing from rust/PROTOCOL.md"
+            );
+        }
         // and every verb is specified
         for verb in ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "QUIT"] {
             assert!(
@@ -1183,6 +1264,27 @@ mod tests {
                 "verb `{verb}` is missing from rust/PROTOCOL.md"
             );
         }
+    }
+
+    #[test]
+    fn stop_wake_is_bounded_when_the_listener_is_gone() {
+        // reserve a port, then free it: connects to it are now refused.
+        // wake_accept_loop must return promptly (bounded retries with a
+        // connect timeout), not hang the way a bare connect against a
+        // blackholed address can.
+        let addr = {
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            listener.local_addr().unwrap()
+        };
+        let started = Instant::now();
+        wake_accept_loop(addr);
+        // worst case is 3 × 200ms connect timeouts + 2 × 20ms backoffs;
+        // refused connects fail immediately, so this is generous
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "wake_accept_loop took {:?} against a refused port",
+            started.elapsed()
+        );
     }
 
     // live server tests are in rust/tests/coordinator_e2e.rs and

@@ -31,12 +31,14 @@
 //! * [`baseline`] — the paper's "standard" and "light" gzip comparators
 //! * [`runtime`] — PJRT client loading AOT-compiled JAX/Pallas artifacts
 //!   (the clustering hot path), with a native fallback
-//! * [`coordinator`] — the L3 system: parallel compression pipeline and a
-//!   model-store prediction server answering from compressed forests
+//! * [`coordinator`] — the L3 system: parallel compression pipeline, a
+//!   model-store prediction server answering from compressed forests, and
+//!   a health-checked shard router fanning one protocol out over a fleet
 //! * [`pack`]   — `RFPK` model packs: many-tenant archives with shared
 //!   cross-forest codebooks, served zero-copy as the store's third tier
 //! * [`util`]   — RNG, stats, CLI, thread pool
-//! * [`testing`] — in-tree property-testing mini-framework
+//! * [`testing`] — in-tree property-testing mini-framework and the
+//!   deterministic fault-injection proxy behind the partition tests
 //!
 //! ## Quickstart
 //!

@@ -75,6 +75,9 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
              [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
              [--inflight-cap N] [--request-timeout-ms MS]
+  serve      --route --backends H:P[,H:P...] [--port P] [--replication R]
+             [--hot-k K] [--max-tries N] [--probe-interval-ms MS]
+             [--request-timeout-ms MS] [--inflight-cap N]
   pack build   --out FILE (--inputs A.rfcz[,B.rfcz...] |
                            --dataset KEY --members N [--trees T])
                [--no-shared] [--seed S]
@@ -293,6 +296,9 @@ fn cmd_lossy(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if args.flag("route") {
+        return cmd_serve_route(args);
+    }
     let keys = args.get_list::<String>("dataset").unwrap_or_default();
     let packs = args.get_list::<String>("pack").unwrap_or_default();
     if keys.is_empty() && packs.is_empty() {
@@ -474,6 +480,102 @@ fn cmd_serve(args: &Args) -> i32 {
         "pipelining: up to {} in flight per connection, {} ms request timeout",
         server_cfg.inflight_cap,
         server_cfg.request_timeout.as_millis()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `repro serve --route`: start the shard-routing coordinator instead of a
+/// backend. The router holds no models — it rendezvous-hashes model keys
+/// across `--backends`, pools upstream connections, fails reads over across
+/// the replica set, and ejects/re-admits backends per its health probes.
+fn cmd_serve_route(args: &Args) -> i32 {
+    use rf_compress::coordinator::router::{Router, RouterConfig};
+    let backends: Vec<String> = args.get_list::<String>("backends").unwrap_or_default();
+    if backends.is_empty() {
+        eprintln!("serve --route needs --backends HOST:PORT[,HOST:PORT...]");
+        return 2;
+    }
+    let mut addrs = Vec::new();
+    for b in &backends {
+        match b.parse::<std::net::SocketAddr>() {
+            Ok(a) => addrs.push(a),
+            Err(_) => {
+                eprintln!("serve --route: bad backend address {b:?} (want HOST:PORT)");
+                return 2;
+            }
+        }
+    }
+    let port: u16 = args.get_or("port", 7878u16);
+    let base = RouterConfig::default();
+    let mut cfg = RouterConfig {
+        replication: args.get_or("replication", base.replication),
+        hot_k: args.get_or("hot-k", base.hot_k),
+        max_tries: args.get_or("max-tries", base.max_tries),
+        ..base
+    };
+    if cfg.replication == 0 || cfg.max_tries == 0 {
+        eprintln!("serve --route: --replication and --max-tries must be positive");
+        return 2;
+    }
+    if let Some(s) = args.get("probe-interval-ms") {
+        match s.parse::<u64>() {
+            Ok(ms) if ms > 0 => {
+                cfg.health.probe_interval = std::time::Duration::from_millis(ms);
+            }
+            _ => {
+                eprintln!(
+                    "serve --route: --probe-interval-ms expects a positive millisecond \
+                     count, got {s:?}"
+                );
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("request-timeout-ms") {
+        match s.parse::<u64>() {
+            Ok(ms) if ms > 0 => cfg.request_timeout = std::time::Duration::from_millis(ms),
+            _ => {
+                eprintln!(
+                    "serve --route: --request-timeout-ms expects a positive millisecond \
+                     count, got {s:?}"
+                );
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("inflight-cap") {
+        match s.parse::<usize>() {
+            Ok(n) if n > 0 => cfg.inflight_cap = n,
+            _ => {
+                eprintln!("serve --route: --inflight-cap expects a positive count, got {s:?}");
+                return 2;
+            }
+        }
+    }
+    let probe_ms = cfg.health.probe_interval.as_millis();
+    let (replication, hot_k, max_tries) = (cfg.replication, cfg.hot_k, cfg.max_tries);
+    let router = match Router::start(&addrs, port, cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("router: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "routing across {} backends on {} (replication {} for top-{} hot keys, \
+         {} tries, probes every {} ms)",
+        addrs.len(),
+        router.addr(),
+        replication,
+        hot_k,
+        max_tries,
+        probe_ms
+    );
+    println!(
+        "protocol: PREDICT | PIPE <id> PREDICT ... | LIST | STATS | QUIT \
+         (routed; see rust/PROTOCOL.md § Routing)"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

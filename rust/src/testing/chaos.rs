@@ -1,0 +1,293 @@
+//! Deterministic fault-injection harness for the router tests.
+//!
+//! [`ChaosProxy`] is a byte-level TCP proxy that sits between the router and
+//! one backend and injects faults on demand:
+//!
+//! * [`Fault::None`] — transparent forwarding (the healthy baseline);
+//! * [`Fault::Delay`] — every forwarded chunk sleeps first (latency spike);
+//! * [`Fault::Blackhole`] — bytes are accepted and silently dropped in both
+//!   directions (the peer hangs until its read deadline fires);
+//! * [`Fault::Sever`] — every live connection is shut down and new ones are
+//!   refused (a crashed backend / network partition).
+//!
+//! Faults flip at runtime via [`ChaosProxy::set_fault`]; [`ChaosProxy::sever`]
+//! additionally tears down in-flight connections immediately (a blocked
+//! `read` only notices a mode change when bytes arrive, so sever must
+//! actively shut the sockets). [`ChaosSchedule`] derives a reproducible
+//! fault sequence from a seed for soak-style tests.
+
+use crate::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// The fault a [`ChaosProxy`] currently injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward bytes transparently.
+    None,
+    /// Sleep this long before forwarding each chunk.
+    Delay(Duration),
+    /// Accept bytes but forward nothing (peers stall on their deadlines).
+    Blackhole,
+    /// Shut down live connections and refuse new ones.
+    Sever,
+}
+
+/// A controllable TCP proxy in front of one backend address.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    fault: Arc<Mutex<Fault>>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start proxying to `backend`.
+    pub fn start(backend: SocketAddr) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let fault = Arc::new(Mutex::new(Fault::None));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        {
+            let fault = fault.clone();
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(client) = stream else { continue };
+                    if *fault.lock().unwrap() == Fault::Sever {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    let Ok(upstream) = TcpStream::connect(backend) else {
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    };
+                    client.set_nodelay(true).ok();
+                    upstream.set_nodelay(true).ok();
+                    {
+                        let mut held = conns.lock().unwrap();
+                        held.push(client.try_clone().expect("clone proxied stream"));
+                        held.push(upstream.try_clone().expect("clone upstream stream"));
+                    }
+                    let (c2, u2) = (
+                        client.try_clone().expect("clone proxied stream"),
+                        upstream.try_clone().expect("clone upstream stream"),
+                    );
+                    let f1 = fault.clone();
+                    let f2 = fault.clone();
+                    thread::spawn(move || pump(client, upstream, &f1));
+                    thread::spawn(move || pump(u2, c2, &f2));
+                }
+            });
+        }
+        Ok(ChaosProxy { addr, fault, shutdown, conns })
+    }
+
+    /// The proxy's listen address — point the router's backend here.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Switch the injected fault (applies to in-flight and new connections;
+    /// use [`ChaosProxy::sever`] to also tear down blocked connections).
+    pub fn set_fault(&self, fault: Fault) {
+        *self.fault.lock().unwrap() = fault;
+    }
+
+    /// Partition the backend: refuse new connections and immediately shut
+    /// down every proxied connection, so blocked reads fail now rather than
+    /// at their deadline.
+    pub fn sever(&self) {
+        self.set_fault(Fault::Sever);
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Heal the proxy: new connections forward transparently again.
+    pub fn restore(&self) {
+        self.set_fault(Fault::None);
+    }
+
+    /// Stop the accept loop and drop every proxied connection.
+    pub fn stop(&self) {
+        if self.shutdown.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        // wake the blocking accept so the loop observes the flag
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One direction of a proxied connection: read chunks from `src`, apply the
+/// current fault, forward to `dst`. Exits on EOF, error, or sever.
+fn pump(mut src: TcpStream, mut dst: TcpStream, fault: &Mutex<Fault>) {
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match src.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        let mode = *fault.lock().unwrap();
+        match mode {
+            Fault::Sever => break,
+            Fault::Blackhole => continue,
+            Fault::Delay(d) => {
+                thread::sleep(d);
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            Fault::None => {
+                if dst.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+/// A reproducible fault timeline: `(hold_for, fault)` steps drawn from a
+/// seeded [`Pcg64`]. Two schedules built from the same seed are identical,
+/// so a chaos soak that fails can be replayed exactly.
+pub struct ChaosSchedule {
+    rng: Pcg64,
+}
+
+impl ChaosSchedule {
+    /// A schedule deterministically derived from `seed`.
+    pub fn new(seed: u64) -> Self {
+        ChaosSchedule { rng: Pcg64::new(seed) }
+    }
+
+    /// Draw the next step: how long to hold the returned fault before
+    /// drawing again. Healthy periods dominate (about half the steps), the
+    /// rest split across delay, blackhole, and sever.
+    pub fn next_step(&mut self) -> (Duration, Fault) {
+        let hold = Duration::from_millis(20 + self.rng.gen_range(80));
+        let fault = match self.rng.gen_range(8) {
+            0..=3 => Fault::None,
+            4 | 5 => Fault::Delay(Duration::from_millis(1 + self.rng.gen_range(20))),
+            6 => Fault::Blackhole,
+            _ => Fault::Sever,
+        };
+        (hold, fault)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    /// A minimal line-echo server for exercising the proxy without the
+    /// full coordinator stack.
+    fn echo_server() -> (SocketAddr, Arc<AtomicBool>) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        thread::spawn(move || {
+            for stream in listener.incoming() {
+                if flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                thread::spawn(move || {
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut writer = stream;
+                    let mut line = String::new();
+                    while let Ok(n) = reader.read_line(&mut line) {
+                        if n == 0 || writer.write_all(line.as_bytes()).is_err() {
+                            break;
+                        }
+                        line.clear();
+                    }
+                });
+            }
+        });
+        (addr, stop)
+    }
+
+    fn round_trip(addr: SocketAddr, line: &str) -> std::io::Result<String> {
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_millis(500))?;
+        stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+        let mut writer = stream.try_clone()?;
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        BufReader::new(stream).read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+
+    #[test]
+    fn transparent_then_severed_then_restored() {
+        let (backend, stop) = echo_server();
+        let proxy = ChaosProxy::start(backend).unwrap();
+
+        assert_eq!(round_trip(proxy.addr(), "ping").unwrap(), "ping");
+
+        proxy.sever();
+        // either the connect is refused/reset or the read sees EOF — in no
+        // case does a reply come back
+        assert!(round_trip(proxy.addr(), "ping").map(|r| r.is_empty()).unwrap_or(true));
+
+        proxy.restore();
+        assert_eq!(round_trip(proxy.addr(), "pong").unwrap(), "pong");
+
+        proxy.stop();
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect_timeout(&backend, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn blackhole_stalls_until_the_read_deadline() {
+        let (backend, stop) = echo_server();
+        let proxy = ChaosProxy::start(backend).unwrap();
+        proxy.set_fault(Fault::Blackhole);
+
+        let started = std::time::Instant::now();
+        let out = round_trip(proxy.addr(), "ping");
+        // the reply never arrives: the client's 500ms read deadline fires
+        // (WouldBlock/TimedOut) or the line comes back empty
+        assert!(out.map(|r| r.is_empty()).unwrap_or(true));
+        assert!(
+            started.elapsed() >= Duration::from_millis(300),
+            "blackhole answered early: {:?}",
+            started.elapsed()
+        );
+
+        proxy.stop();
+        stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect_timeout(&backend, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let mut a = ChaosSchedule::new(42);
+        let mut b = ChaosSchedule::new(42);
+        for _ in 0..32 {
+            assert_eq!(a.next_step(), b.next_step());
+        }
+    }
+}

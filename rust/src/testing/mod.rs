@@ -1,5 +1,9 @@
-//! In-tree property-testing mini-framework (no `proptest` offline).
+//! In-tree test harnesses: property-testing mini-framework (no `proptest`
+//! offline) and the deterministic fault-injection proxy the router's
+//! partition tests drive.
 
+pub mod chaos;
 pub mod prop;
 
+pub use chaos::{ChaosProxy, ChaosSchedule, Fault};
 pub use prop::{forall, Gen};

@@ -1,5 +1,5 @@
 //! Helpers shared by the integration suites (`coordinator_e2e`,
-//! `pipeline_e2e`): observation extraction, plus a re-export of the
+//! `pipeline_e2e`, `router_e2e`): observation extraction, plus a re-export of the
 //! library's wire encoder so a wire-format change cannot leave one suite
 //! silently testing a stale encoding.
 

@@ -1,0 +1,281 @@
+//! End-to-end tests of the shard-routing coordinator (`Router`): routed
+//! replies are bit-identical to a direct backend's, the routed reply stream
+//! is a permutation of the direct one under random interleavings, and the
+//! partition drill — a backend severed mid-burst is ejected within the
+//! probe interval, every in-flight id resolves exactly once, and the
+//! backend is re-admitted once it returns.
+//!
+//! Grammar and retry semantics under test: `rust/PROTOCOL.md` § Routing.
+
+mod common;
+
+use common::{row_values, values_to_wire};
+use rf_compress::compress::CompressOptions;
+use rf_compress::coordinator::health::{HealthPolicy, HealthState};
+use rf_compress::coordinator::router::{Router, RouterConfig};
+use rf_compress::coordinator::server::{Client, PipeReply, Server};
+use rf_compress::coordinator::store::ModelStore;
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::{synthetic, Dataset};
+use rf_compress::testing::chaos::ChaosProxy;
+use rf_compress::testing::prop::{forall_cases, Gen};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Train `models` forests once and stand up `n` identical backends — every
+/// backend holds every model, so replicas answer bit-identically and any
+/// backend can serve as the direct-comparison oracle.
+fn fleet(n: usize, ds: &Dataset, models: &[&str]) -> Vec<Server> {
+    let mut coord = Coordinator::native_only();
+    let forests: Vec<_> = models
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            coord
+                .train_and_compress(ds, 8, 100 + i as u64, &CompressOptions::default())
+                .unwrap()
+                .1
+        })
+        .collect();
+    (0..n)
+        .map(|_| {
+            let store = Arc::new(ModelStore::new());
+            for (name, cf) in models.iter().zip(&forests) {
+                store.insert(name, cf).unwrap();
+            }
+            Server::start(store, 0).unwrap()
+        })
+        .collect()
+}
+
+/// A router config tuned for tests: tight timeouts, fast probes, and every
+/// key hot after the first refresh (small `hot_refresh`).
+fn test_router_cfg() -> RouterConfig {
+    RouterConfig {
+        replication: 2,
+        hot_k: 32,
+        hot_refresh: 8,
+        max_tries: 3,
+        connect_timeout: Duration::from_millis(300),
+        request_timeout: Duration::from_millis(2_000),
+        backoff_base: Duration::from_millis(2),
+        health: HealthPolicy {
+            degrade_after: 1,
+            eject_after: 2,
+            eject_cooldown: Duration::from_millis(200),
+            probe_interval: Duration::from_millis(100),
+        },
+        ..RouterConfig::default()
+    }
+}
+
+#[test]
+fn routed_serial_replies_are_bit_identical_to_direct() {
+    let ds = synthetic::iris(51);
+    let models = ["alpha", "beta", "gamma"];
+    let backends = fleet(3, &ds, &models);
+    let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.addr()).collect();
+    let router = Router::start(&addrs, 0, test_router_cfg()).unwrap();
+
+    let mut routed = Client::connect(router.addr()).unwrap();
+    routed.set_deadlines(Some(Duration::from_secs(10)), Some(Duration::from_secs(10))).unwrap();
+    let mut direct = Client::connect(backends[0].addr()).unwrap();
+
+    for row in 0..12 {
+        for model in &models {
+            let wire = values_to_wire(&row_values(&ds, row));
+            let via_router = routed.request(&format!("PREDICT {model} {wire}")).unwrap();
+            let via_backend = direct.request(&format!("PREDICT {model} {wire}")).unwrap();
+            assert_eq!(via_router, via_backend, "{model} row {row} diverged through the router");
+        }
+    }
+
+    // LIST through the router is the deduped union (here: every backend
+    // holds the same set, so it equals the direct list)
+    let routed_list = routed.request("LIST").unwrap();
+    let direct_list = direct.request("LIST").unwrap();
+    assert_eq!(routed_list, direct_list);
+
+    // routed STATS is the router's own counter surface, not a backend's
+    let stats = routed.request("STATS").unwrap();
+    assert!(stats.starts_with("OK routed="), "unexpected router STATS: {stats}");
+
+    let s = router.stats();
+    assert_eq!(s.unavailable, 0, "healthy fleet answered unavailable");
+    assert_eq!(s.backends_up, 3);
+    router.stop();
+}
+
+#[test]
+fn prop_routed_replies_match_single_backend() {
+    // for random model sets and interleavings, the routed pipelined reply
+    // stream (healthy fleet) is a permutation of a single direct backend's
+    // replies — same ids, bit-identical payloads
+    forall_cases("routed_replies_match_single_backend", 6, &mut |g: &mut Gen| {
+        let numeric = g.usize_in(1, 3);
+        let categorical = g.usize_in(0, 2);
+        let classification = g.u64_in(0, 1) == 1;
+        let ds = g.dataset(40, numeric, categorical, classification);
+        let n_models = g.usize_in(1, 4);
+        let names: Vec<String> = (0..n_models).map(|i| format!("model-{i}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let backends = fleet(3, &ds, &name_refs);
+        let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.addr()).collect();
+        let router = Router::start(&addrs, 0, test_router_cfg()).unwrap();
+
+        // a random interleaving of (id, model, row)
+        let n_requests = g.usize_in(8, 40);
+        let plan: Vec<(u64, usize, usize)> = (0..n_requests)
+            .map(|id| (id as u64, g.usize_in(0, n_models - 1), g.usize_in(0, 39)))
+            .collect();
+
+        let mut routed = Client::connect(router.addr()).unwrap();
+        routed
+            .set_deadlines(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+            .map_err(|e| e.to_string())?;
+        let mut direct = Client::connect(backends[0].addr()).unwrap();
+        for &(id, m, row) in &plan {
+            let wire = values_to_wire(&row_values(&ds, row));
+            routed.pipe_predict(id, &names[m], &wire).map_err(|e| e.to_string())?;
+            direct.pipe_predict(id, &names[m], &wire).map_err(|e| e.to_string())?;
+        }
+        let mut via_router = answered_pairs(&mut routed, n_requests)?;
+        let mut via_backend = answered_pairs(&mut direct, n_requests)?;
+        via_router.sort();
+        via_backend.sort();
+        if via_router != via_backend {
+            return Err(format!(
+                "routed replies are not a permutation of the direct backend's:\n\
+                 routed:  {via_router:?}\ndirect: {via_backend:?}"
+            ));
+        }
+        router.stop();
+        Ok(())
+    });
+}
+
+/// Collect `n` pipelined replies as `(id, payload)` pairs, failing the
+/// property on any `ERR`.
+fn answered_pairs(client: &mut Client, n: usize) -> Result<Vec<(u64, String)>, String> {
+    let replies = client.collect_pipelined(n).map_err(|e| e.to_string())?;
+    replies
+        .into_iter()
+        .map(|r| match r {
+            PipeReply::Ok { id, value } => Ok((id, value)),
+            PipeReply::Err { id, message } => Err(format!("id {id:?} failed: {message}")),
+        })
+        .collect()
+}
+
+#[test]
+fn partition_midburst_ejects_resolves_every_id_and_readmits() {
+    // the acceptance drill: 3 backends (each behind a chaos proxy), R=2.
+    // Sever one backend mid-burst. Required: the backend ejects within the
+    // probe interval, every in-flight id resolves exactly once (a replica
+    // answers or a typed unavailable/upstream error arrives), no client
+    // hangs, and the severed backend is re-admitted after it returns.
+    let ds = synthetic::iris(61);
+    let models = ["alpha", "beta", "gamma", "delta"];
+    let backends = fleet(3, &ds, &models);
+    let proxies: Vec<ChaosProxy> =
+        backends.iter().map(|b| ChaosProxy::start(b.addr()).unwrap()).collect();
+    // the router only ever sees the proxies' addresses
+    let addrs: Vec<SocketAddr> = proxies.iter().map(|p| p.addr()).collect();
+    let cfg = test_router_cfg();
+    let probe_interval = cfg.health.probe_interval;
+    let eject_bound = probe_interval * (cfg.health.eject_after + 2) + Duration::from_secs(1);
+    let router = Router::start(&addrs, 0, cfg).unwrap();
+
+    let mut client = Client::connect(router.addr()).unwrap();
+    // no client hangs: a generous absolute deadline on every read
+    client.set_deadlines(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+
+    // warm-up: route every model a few times so all keys enter the hot set
+    // (hot keys carry the R=2 replica set reads fail over across)
+    for round in 0..4 {
+        for model in &models {
+            let wire = values_to_wire(&row_values(&ds, round));
+            let reply = client.request(&format!("PREDICT {model} {wire}")).unwrap();
+            assert!(reply.starts_with("OK "), "warm-up failed: {reply}");
+        }
+    }
+
+    // burst: issue a pipelined volley, severing one backend part-way in
+    const BURST: usize = 60;
+    for i in 0..BURST {
+        let model = models[i % models.len()];
+        let wire = values_to_wire(&row_values(&ds, i % 40));
+        client.pipe_predict(i as u64, model, &wire).unwrap();
+        if i == BURST / 3 {
+            proxies[0].sever();
+        }
+    }
+
+    // every in-flight id resolves exactly once: success on a replica, or a
+    // typed unavailable/upstream error — never silence, never a duplicate
+    let replies = client.collect_pipelined(BURST).unwrap();
+    let mut seen = vec![false; BURST];
+    let mut failures = 0usize;
+    for r in &replies {
+        let id = r.id().expect("router replies always carry the request id") as usize;
+        assert!(id < BURST, "unknown id {id}");
+        assert!(!seen[id], "id {id} answered twice");
+        seen[id] = true;
+        match r {
+            PipeReply::Ok { .. } => {}
+            PipeReply::Err { message, .. } => {
+                assert!(
+                    message.starts_with("unavailable") || message.starts_with("upstream"),
+                    "id {id}: untyped failure under partition: {message:?}"
+                );
+                failures += 1;
+            }
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some in-flight ids never resolved");
+    // R=2 on 3 backends: most keys keep a live replica, so the burst must
+    // not have collapsed into all-errors
+    assert!(
+        failures < BURST / 2,
+        "failover absorbed too little: {failures}/{BURST} failed"
+    );
+
+    // the severed backend leaves rotation within the probe bound
+    let ejected_at = wait_for(eject_bound, || {
+        router.backend_states()[0] == HealthState::Ejected
+    });
+    assert!(ejected_at, "backend 0 was not ejected within {eject_bound:?}");
+
+    // the healthy remainder still serves every model
+    for model in &models {
+        let wire = values_to_wire(&row_values(&ds, 3));
+        let reply = client.request(&format!("PREDICT {model} {wire}")).unwrap();
+        assert!(reply.starts_with("OK "), "degraded fleet dropped {model}: {reply}");
+    }
+
+    // heal the partition: the probe loop re-admits after the cooldown
+    proxies[0].restore();
+    let readmitted = wait_for(Duration::from_secs(5), || {
+        router.backend_states()[0] != HealthState::Ejected
+    });
+    assert!(readmitted, "backend 0 was not re-admitted after the partition healed");
+
+    let stats = router.stats();
+    assert!(stats.ejections >= 1, "ejection not counted: {stats:?}");
+    assert!(stats.readmissions >= 1, "re-admission not counted: {stats:?}");
+    assert_eq!(stats.backends_up, 3);
+    router.stop();
+}
+
+/// Poll `cond` every 10 ms until it holds or `limit` elapses.
+fn wait_for(limit: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + limit;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
