@@ -1,0 +1,293 @@
+//! Frequency-weighted admission for the model store: a TinyLFU-style
+//! sketch (4-bit count-min rows plus a doorkeeper bloom filter, with
+//! periodic halving) and the [`AdmissionPolicy`] knob that selects between
+//! plain LRU and sketch-gated admission.
+//!
+//! The problem this solves is the classic scan collapse: under pure LRU,
+//! one pass over a million cold tenants evicts the entire hot working set,
+//! because recency alone cannot tell "touched once, never again" from
+//! "touched constantly". TinyLFU (Einziger, Friedman & Manes, 2017) fixes
+//! this with an approximate frequency history: before a newly loaded model
+//! may displace the LRU victim, their estimated frequencies are compared —
+//! if the victim is hotter than the candidate, the *candidate* is demoted
+//! instead and the working set survives the scan.
+//!
+//! The sketch is deliberately compact (a few tens of KiB for the default
+//! width) and entirely in-tree: four rows of 4-bit saturating counters
+//! packed sixteen to a `u64`, a doorkeeper bloom filter that absorbs
+//! one-hit wonders before they touch the counters, and a sample-count
+//! reset that halves every counter once enough touches accumulate — the
+//! aging mechanism that keeps the history a sliding window rather than an
+//! ever-growing total.
+
+use std::fmt;
+
+/// Which admission policy a [`crate::coordinator::ModelStore`] runs under
+/// budget pressure (`repro serve --admission lru|tinylfu`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Pure recency: the least-recently-used resident model is always the
+    /// demotion victim. Simple, scan-vulnerable.
+    #[default]
+    Lru,
+    /// Frequency-weighted: a [`FrequencySketch`] estimates how often each
+    /// model is requested; a get-path load whose frequency is below the
+    /// LRU victim's is itself demoted instead of displacing the victim,
+    /// and cold first-touch loads skip the shared plan cache.
+    TinyLfu,
+}
+
+impl AdmissionPolicy {
+    /// Parse the CLI spelling (`lru` / `tinylfu`). Returns `None` for
+    /// anything else so the caller can print its own usage error.
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "lru" => Some(AdmissionPolicy::Lru),
+            "tinylfu" => Some(AdmissionPolicy::TinyLfu),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionPolicy::Lru => write!(f, "lru"),
+            AdmissionPolicy::TinyLfu => write!(f, "tinylfu"),
+        }
+    }
+}
+
+/// Number of count-min rows (independent hash functions).
+const ROWS: usize = 4;
+/// 4-bit counters saturate here.
+const COUNTER_MAX: u64 = 15;
+/// Doorkeeper bits per counter (the bloom filter is this factor wider than
+/// one counter row, keeping its false-positive rate low at sketch scale).
+const DOORKEEPER_FACTOR: usize = 8;
+
+/// Stable 64-bit hash of a model name for the sketch (FNV-1a folded through
+/// a splitmix finalizer so the low bits are well mixed).
+pub fn sketch_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    mix(h)
+}
+
+/// splitmix64 finalizer — also used to derive per-row probe positions.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// TinyLFU frequency sketch: `ROWS` rows of 4-bit saturating counters (the
+/// count-min part), a doorkeeper bloom filter in front of them, and
+/// halving-based aging once `sample_cap` touches accumulate.
+///
+/// Estimates are **approximate and one-sided**: hash collisions can only
+/// inflate a frequency, never lose one, which is the safe direction for an
+/// admission gate (a falsely-hot victim keeps its seat; a falsely-hot
+/// candidate gets admitted — either way nothing hot is dropped by mistake).
+pub struct FrequencySketch {
+    /// Counter words, `ROWS` rows of `width / 16` words each, flattened.
+    words: Vec<u64>,
+    /// Counters per row (power of two; the probe mask is `width - 1`).
+    width: usize,
+    /// Doorkeeper bloom bits, packed (bit count = `width × DOORKEEPER_FACTOR`).
+    door: Vec<u64>,
+    /// Touches since the last reset; at `sample_cap` every counter halves.
+    samples: u64,
+    /// Reset threshold (10× width, the standard TinyLFU sample size).
+    sample_cap: u64,
+}
+
+impl FrequencySketch {
+    /// Sketch with `counters` 4-bit counters per row (rounded up to a power
+    /// of two, minimum 64). The default store sketch uses [`Self::default`].
+    pub fn new(counters: usize) -> Self {
+        let width = counters.max(64).next_power_of_two();
+        FrequencySketch {
+            words: vec![0; ROWS * width / 16],
+            width,
+            door: vec![0; width * DOORKEEPER_FACTOR / 64],
+            samples: 0,
+            sample_cap: 10 * width as u64,
+        }
+    }
+
+    /// Record one touch of `h` (a [`sketch_hash`]). The first touch of a
+    /// key only sets its doorkeeper bits; repeat touches increment the
+    /// count-min rows — one-hit wonders never dirty the counters.
+    pub fn touch(&mut self, h: u64) {
+        if !self.door_check_and_set(h) {
+            // first sighting: the doorkeeper absorbed it
+        } else {
+            for row in 0..ROWS {
+                let idx = self.probe(h, row);
+                let word = &mut self.words[idx / 16];
+                let shift = (idx % 16) * 4;
+                if (*word >> shift) & 0xf < COUNTER_MAX {
+                    *word += 1 << shift;
+                }
+            }
+        }
+        self.samples += 1;
+        if self.samples >= self.sample_cap {
+            self.reset();
+        }
+    }
+
+    /// Estimated touch count of `h`: the count-min minimum plus one if the
+    /// doorkeeper has seen the key. Never under-counts a real touch within
+    /// the current sample window.
+    pub fn estimate(&self, h: u64) -> u32 {
+        let mut min = u64::MAX;
+        for row in 0..ROWS {
+            let idx = self.probe(h, row);
+            min = min.min((self.words[idx / 16] >> ((idx % 16) * 4)) & 0xf);
+        }
+        min as u32 + u32::from(self.door_check(h))
+    }
+
+    /// Flattened counter index of `h`'s probe in `row`.
+    fn probe(&self, h: u64, row: usize) -> usize {
+        let slot = mix(h ^ (row as u64).wrapping_mul(0xa076_1d64_78bd_642f)) as usize
+            & (self.width - 1);
+        row * self.width + slot
+    }
+
+    /// The two doorkeeper bit positions of `h`.
+    fn door_bits(&self, h: u64) -> (usize, usize) {
+        let bits = self.door.len() * 64;
+        let a = mix(h ^ 0x8f14) as usize % bits;
+        let b = mix(h ^ 0x51f2) as usize % bits;
+        (a, b)
+    }
+
+    /// Whether both doorkeeper bits of `h` are already set.
+    fn door_check(&self, h: u64) -> bool {
+        let (a, b) = self.door_bits(h);
+        self.door[a / 64] >> (a % 64) & 1 == 1 && self.door[b / 64] >> (b % 64) & 1 == 1
+    }
+
+    /// Doorkeeper membership test that also inserts: returns whether the
+    /// key was present *before* this call.
+    fn door_check_and_set(&mut self, h: u64) -> bool {
+        let present = self.door_check(h);
+        let (a, b) = self.door_bits(h);
+        self.door[a / 64] |= 1 << (a % 64);
+        self.door[b / 64] |= 1 << (b % 64);
+        present
+    }
+
+    /// Aging: halve every counter (one shift-and-mask per word) and clear
+    /// the doorkeeper, turning the history into a sliding window.
+    fn reset(&mut self) {
+        for w in &mut self.words {
+            // shifting the whole word right by one then masking the high
+            // bit of every nibble halves all sixteen counters at once
+            *w = (*w >> 1) & 0x7777_7777_7777_7777;
+        }
+        self.door.iter_mut().for_each(|w| *w = 0);
+        self.samples /= 2;
+    }
+}
+
+impl Default for FrequencySketch {
+    /// The store's default sketch: 16 Ki counters per row (~32 KiB of
+    /// counters + ~16 KiB of doorkeeper) — room for far more tenants than
+    /// fit any realistic resident budget.
+    fn default() -> Self {
+        FrequencySketch::new(16 * 1024)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_displays() {
+        assert_eq!(AdmissionPolicy::parse("lru"), Some(AdmissionPolicy::Lru));
+        assert_eq!(AdmissionPolicy::parse("tinylfu"), Some(AdmissionPolicy::TinyLfu));
+        assert_eq!(AdmissionPolicy::parse("arc"), None);
+        assert_eq!(AdmissionPolicy::TinyLfu.to_string(), "tinylfu");
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Lru);
+    }
+
+    #[test]
+    fn first_touch_stops_at_the_doorkeeper() {
+        let mut sk = FrequencySketch::new(256);
+        let h = sketch_hash("tenant-7");
+        assert_eq!(sk.estimate(h), 0);
+        sk.touch(h);
+        // one touch: doorkeeper only, counters untouched
+        assert_eq!(sk.estimate(h), 1);
+        sk.touch(h);
+        assert_eq!(sk.estimate(h), 2);
+    }
+
+    #[test]
+    fn hot_keys_estimate_above_cold_keys() {
+        let mut sk = FrequencySketch::new(1024);
+        let hot = sketch_hash("hot");
+        for _ in 0..12 {
+            sk.touch(hot);
+        }
+        for i in 0..200 {
+            sk.touch(sketch_hash(&format!("cold-{i}")));
+        }
+        let hot_est = sk.estimate(hot);
+        let cold_est = sk.estimate(sketch_hash("cold-42"));
+        assert!(hot_est > cold_est, "hot {hot_est} !> cold {cold_est}");
+        assert!(cold_est <= 2, "a one-touch key stays near the floor: {cold_est}");
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let mut sk = FrequencySketch::new(64);
+        let h = sketch_hash("pinned");
+        for _ in 0..100 {
+            sk.touch(h);
+        }
+        // 15 (counter cap) + 1 (doorkeeper); never wraps past the nibble
+        assert_eq!(sk.estimate(h), COUNTER_MAX as u32 + 1);
+    }
+
+    #[test]
+    fn reset_halves_counters_and_clears_the_doorkeeper() {
+        let mut sk = FrequencySketch::new(64);
+        let h = sketch_hash("aging");
+        for _ in 0..9 {
+            sk.touch(h);
+        }
+        let before = sk.estimate(h);
+        sk.reset();
+        let after = sk.estimate(h);
+        // doorkeeper contribution (+1) is gone and the counters halved
+        assert!(after <= before / 2 + 1, "reset must halve: {before} -> {after}");
+        assert!(after >= 1, "history survives a reset, halved: {after}");
+    }
+
+    #[test]
+    fn reset_fires_from_sample_cap() {
+        let mut sk = FrequencySketch::new(64);
+        let h = sketch_hash("windowed");
+        for _ in 0..20 {
+            sk.touch(h);
+        }
+        // 10×width = 640 touches trips at least one halving
+        for i in 0..700 {
+            sk.touch(sketch_hash(&format!("filler-{i}")));
+        }
+        assert!(
+            sk.estimate(h) < COUNTER_MAX as u32 + 1,
+            "an old hot key decays once the sample window rolls"
+        );
+    }
+}

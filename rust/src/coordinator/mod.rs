@@ -19,7 +19,11 @@
 //!   pools, and retry/backoff onto replicas
 //! * [`health`]  — the per-backend `Up → Degraded → Ejected` state machine
 //!   the router's probe loop and request path drive
+//! * [`admission`] — the TinyLFU frequency sketch and the
+//!   `lru`/`tinylfu` admission-policy knob the store's budget enforcement
+//!   consults (see `rust/OPERATIONS.md` for operator guidance)
 
+pub mod admission;
 pub mod health;
 pub mod pipeline;
 pub mod router;

@@ -694,6 +694,13 @@ fn handle_line(
         }
         "LIST" => Ok(Handled::Reply(format!("OK {}", store.names().join(" ")))),
         "STATS" => Ok(Handled::Reply(stats_line(&store.stats()))),
+        "PREFETCH" => {
+            let model = parts.next().context("PREFETCH needs a model name")?;
+            Ok(Handled::Reply(match prefetch_line(model, store) {
+                Ok(payload) => format!("OK {payload}"),
+                Err(e) => format!("ERR {e}"),
+            }))
+        }
         "BYTES" => Ok(Handled::Reply(format!(
             "OK resident={} plans={} spilled={} packed={}",
             store.resident_bytes(),
@@ -785,9 +792,30 @@ fn pipe_dispatch(
             tracker.finish_and_send(id, generation, out_tx, format!("OK {id} {payload}"));
             return None;
         }
+        // PREFETCH is a fast acknowledgment (the warm-up itself runs on a
+        // background thread), so like LIST/STATS it admits, answers, and
+        // retires through the outbox in one step. Argument errors are
+        // checked before admission, like PREDICT's unknown-model check.
+        "PREFETCH" => {
+            let Some(model) = parts.next() else {
+                return Some(format!("ERR PREFETCH needs a model name id={id}"));
+            };
+            let generation = match tracker.admit(id) {
+                Admit::Busy => return Some(format!("ERR busy id={id}")),
+                Admit::Duplicate => return Some(format!("ERR duplicate id id={id}")),
+                Admit::Ok(generation) => generation,
+            };
+            let line = match prefetch_line(model, store) {
+                Ok(payload) => format!("OK {id} {payload}"),
+                Err(e) => format!("ERR {e} id={id}"),
+            };
+            tracker.finish_and_send(id, generation, out_tx, line);
+            return None;
+        }
         other => {
             return Some(format!(
-                "ERR PIPE supports only PREDICT, LIST, and STATS, got {other:?} id={id}"
+                "ERR PIPE supports only PREDICT, LIST, STATS, and PREFETCH, \
+                 got {other:?} id={id}"
             ))
         }
     }
@@ -828,6 +856,29 @@ fn pipe_dispatch(
     None
 }
 
+/// Act on one `PREFETCH <model>`: a Spilled/Packed target starts a
+/// background warm-up ([`ModelStore::warm`] on a spawned thread — the reply
+/// acknowledges *initiation*, not completion); an already-Resident target
+/// is a cheap no-op that just stamps its LRU clock. Returns the reply
+/// payload (without the `OK ` prefix) or the error message, shared by the
+/// serial and pipelined arms.
+fn prefetch_line(model: &str, store: &Arc<ModelStore>) -> Result<String, String> {
+    match store.prefetch_needed(model) {
+        Ok(true) => {
+            let store = store.clone();
+            let name = model.to_string();
+            std::thread::spawn(move || {
+                // best-effort: a failed warm-up (e.g. a corrupt spill file)
+                // surfaces on the next PREDICT, which takes the same path
+                let _ = store.warm(&name);
+            });
+            Ok(format!("warming {model}"))
+        }
+        Ok(false) => Ok(format!("resident {model}")),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
 /// Render the serial `STATS` reply (`OK ` + [`stats_payload`]).
 fn stats_line(s: &StoreStats) -> String {
     format!("OK {}", stats_payload(s))
@@ -843,7 +894,8 @@ fn stats_payload(s: &StoreStats) -> String {
     format!(
         "requests={} batches={} mean_us={} max_us={} evictions={} \
          spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
-         pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={}",
+         pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={} \
+         prefetches={} admission_rejects={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
@@ -858,7 +910,9 @@ fn stats_payload(s: &StoreStats) -> String {
         s.pack_releases,
         s.inflight,
         s.rejected_busy,
-        s.timeouts
+        s.timeouts,
+        s.prefetches,
+        s.admission_rejects
     )
 }
 
@@ -1078,6 +1132,10 @@ mod tests {
                 && line.contains("timeouts=0"),
             "{line}"
         );
+        assert!(
+            line.contains("prefetches=0") && line.contains("admission_rejects=0"),
+            "{line}"
+        );
         // and a populated window reports the true per-request mean
         let s = StoreStats {
             requests: 4,
@@ -1227,6 +1285,31 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_prefetch_answers_through_the_outbox() {
+        let store = Arc::new(ModelStore::new());
+        let batchers = Arc::new(Batchers::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let tracker = Arc::new(PipeTracker::new(store.clone(), &ServerConfig::default()));
+        let (tx, rx) = channel::<String>();
+        // unknown model: admitted, answered with a typed error, retired
+        assert!(
+            pipe_dispatch(3, "PREFETCH ghost", &store, &batchers, &shutdown, &tracker, &tx)
+                .is_none()
+        );
+        let line = rx.try_recv().expect("PREFETCH reply reaches the outbox");
+        assert!(line.starts_with("ERR "), "{line}");
+        assert_eq!(parse_pipe_reply(&line).unwrap().id(), Some(3));
+        assert_eq!(store.stats().inflight, 0, "retired on the spot");
+        // a missing argument is refused before admission, id attributed
+        assert_eq!(
+            pipe_dispatch(4, "PREFETCH", &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
+            Some("ERR PREFETCH needs a model name id=4")
+        );
+        // the serial arm shares the same helper and error surface
+        assert!(prefetch_line("ghost", &store).is_err());
+    }
+
+    #[test]
     fn protocol_doc_covers_every_counter() {
         // drift guard: every counter the wire emits must appear in the
         // PROTOCOL.md glossary (STATS keys and BYTES keys alike)
@@ -1258,7 +1341,7 @@ mod tests {
             );
         }
         // and every verb is specified
-        for verb in ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "QUIT"] {
+        for verb in ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "PREFETCH", "QUIT"] {
             assert!(
                 doc.contains(&format!("`{verb}`")),
                 "verb `{verb}` is missing from rust/PROTOCOL.md"

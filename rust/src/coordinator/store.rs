@@ -45,6 +45,7 @@
 //! outright.
 
 use crate::compress::container::parse_arc;
+use crate::coordinator::admission::{sketch_hash, AdmissionPolicy, FrequencySketch};
 use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
@@ -119,6 +120,13 @@ pub struct StoreStats {
     /// Requests that outlived the configured request timeout and were
     /// answered with a typed `ERR timeout` line (serial and pipelined).
     pub timeouts: u64,
+    /// `PREFETCH` requests that initiated a background warm-up of a
+    /// Spilled/Packed model (an already-Resident target is not counted).
+    pub prefetches: u64,
+    /// Get-path loads the TinyLFU gate demoted right back out of the
+    /// resident tier because the LRU victim they would have displaced was
+    /// estimated hotter (always 0 under the `lru` policy).
+    pub admission_rejects: u64,
 }
 
 impl StoreStats {
@@ -216,6 +224,13 @@ pub struct ModelStore {
     /// shrinks this cache *before* spilling or evicting any model (a
     /// dropped plan rebuilds on the next batch).
     plans: Arc<PlanCache>,
+    /// Admission policy under budget pressure (see
+    /// [`crate::coordinator::admission`]).
+    admission: AdmissionPolicy,
+    /// TinyLFU frequency sketch, allocated only under
+    /// [`AdmissionPolicy::TinyLfu`]. Request-path lookups touch it; budget
+    /// enforcement compares candidate-vs-victim estimates through it.
+    sketch: Option<Mutex<FrequencySketch>>,
 }
 
 /// Source of per-store [`ModelStore::spill_token`] values.
@@ -266,6 +281,8 @@ impl ModelStore {
             inflight: AtomicU64::new(0),
             predict_workers: 1,
             plans: Arc::new(PlanCache::new(plan_cap)),
+            admission: AdmissionPolicy::Lru,
+            sketch: None,
         }
     }
 
@@ -299,6 +316,24 @@ impl ModelStore {
     pub fn spill_bytes(mut self, bytes: u64) -> Self {
         self.max_spill_bytes = Some(bytes);
         self
+    }
+
+    /// Builder: select the admission policy budget enforcement runs under.
+    /// [`AdmissionPolicy::TinyLfu`] allocates the frequency sketch; with an
+    /// empty sketch the gate admits everything, so behavior starts exactly
+    /// as LRU and diverges only once frequency history accumulates.
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self.sketch = match policy {
+            AdmissionPolicy::Lru => None,
+            AdmissionPolicy::TinyLfu => Some(Mutex::new(FrequencySketch::default())),
+        };
+        self
+    }
+
+    /// The configured admission policy.
+    pub fn admission_policy(&self) -> AdmissionPolicy {
+        self.admission
     }
 
     /// The RAM budget, when one was configured.
@@ -444,11 +479,26 @@ impl ModelStore {
     /// evicted outright when not; spilling past the spill budget deletes
     /// the coldest spill files (those models are gone).
     fn enforce_budget(&self, keep: &str) {
+        self.enforce_budget_gated(keep, false);
+    }
+
+    /// Budget enforcement with the admission gate optionally armed. Get-path
+    /// loads (reload, pack load) pass `gated = true`: under
+    /// [`AdmissionPolicy::TinyLfu`], before the LRU victim is demoted its
+    /// estimated frequency is compared against `keep`'s — if the victim is
+    /// strictly hotter, `keep` *itself* is demoted instead
+    /// ([`StoreStats::admission_rejects`]), so one cold scan request cannot
+    /// displace the hot working set. The comparison runs at most once per
+    /// enforcement (the caller's `Arc` still answers the request that
+    /// triggered the load — serve-then-demote, never a failed request).
+    /// Admin inserts and explicit prefetch warm-ups pass `gated = false`.
+    fn enforce_budget_gated(&self, keep: &str, gated: bool) {
         let Some(budget) = self.max_resident_bytes else { return };
         // cap the plan cache to whatever the budget leaves after the
         // compressed residents; this also evicts plans already past the cap
         self.plans
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
+        let mut keep_judged = false;
         while self.resident.load(Ordering::Relaxed) > budget {
             let Some(name) = self.lru_resident_victim(keep) else { break };
             // snapshot the victim: every destructive action below verifies
@@ -465,32 +515,68 @@ impl ModelStore {
                     _ => continue,
                 }
             };
-            if matches!(victim.origin, ModelOrigin::Packed { .. }) {
-                // pack members release back to their archive: free, no disk
-                // write, the pack keeps the bytes. A false return means a
-                // racing thread beat us to it — either way, rescan.
-                self.release(&name);
-                continue;
-            }
-            if self.spill_dir.is_some() {
-                match self.spill(&name) {
-                    Ok(true) => continue,
-                    // raced with a concurrent remove/replace/spill of the
-                    // same name — that race freed bytes; rescan
-                    Ok(false) => continue,
-                    // the disk refused the spill (full, unwritable): fall
-                    // back to dropping so the RAM budget still holds
-                    Err(_) => {}
+            if gated && !keep_judged {
+                keep_judged = true;
+                if self.reject_candidate(keep, &name) {
+                    self.stats.lock().unwrap().admission_rejects += 1;
+                    let candidate = {
+                        let models = self.shard(keep).models.read().unwrap();
+                        match models.get(keep) {
+                            Some(Tier::Resident(m)) => Some(m.clone()),
+                            _ => None,
+                        }
+                    };
+                    if let Some(c) = candidate {
+                        self.demote(keep, &c);
+                    }
+                    continue;
                 }
             }
-            if self.evict_exact(&name, &victim) {
-                self.stats.lock().unwrap().evictions += 1;
-            }
+            self.demote(&name, &victim);
         }
         // spills/evictions freed compressed bytes: let plans grow back into
         // the slack
         self.plans
             .set_max_bytes(budget.saturating_sub(self.resident.load(Ordering::Relaxed)));
+    }
+
+    /// The TinyLFU admission rule: reject `candidate` iff the chosen LRU
+    /// `victim` has a **strictly** higher estimated frequency. Ties admit
+    /// the candidate, so an empty sketch (or the `lru` policy, which has no
+    /// sketch at all) degrades to plain LRU.
+    fn reject_candidate(&self, candidate: &str, victim: &str) -> bool {
+        let Some(sketch) = &self.sketch else { return false };
+        let sk = sketch.lock().unwrap();
+        sk.estimate(sketch_hash(victim)) > sk.estimate(sketch_hash(candidate))
+    }
+
+    /// Demote one RAM-resident model (`model` is the caller's Arc-identity
+    /// snapshot) along the documented tier order: a pack member releases to
+    /// its archive, a direct model spills when the disk tier is armed
+    /// (falling back to eviction if the disk refuses), anything else is
+    /// evicted outright. Losing a race at any step just means another
+    /// thread already freed the bytes.
+    fn demote(&self, name: &str, model: &Arc<StoredModel>) {
+        if matches!(model.origin, ModelOrigin::Packed { .. }) {
+            // pack members release back to their archive: free, no disk
+            // write, the pack keeps the bytes. A false return means a
+            // racing thread beat us to it — either way, the loop rescans.
+            self.release(name);
+            return;
+        }
+        if self.spill_dir.is_some() {
+            match self.spill(name) {
+                // spilled, or raced with a concurrent remove/replace/spill
+                // of the same name — that race freed bytes either way
+                Ok(_) => return,
+                // the disk refused the spill (full, unwritable): fall
+                // back to dropping so the RAM budget still holds
+                Err(_) => {}
+            }
+        }
+        if self.evict_exact(name, model) {
+            self.stats.lock().unwrap().evictions += 1;
+        }
     }
 
     /// Drop `name` only if it is still the exact Resident model chosen as
@@ -700,8 +786,9 @@ impl ModelStore {
     /// members are fully zero-copy; shared-codebook members decode their
     /// side information from the pack blob. Parse + decoder build run
     /// outside every lock; the winner of a load race installs its model,
-    /// losers adopt it (the reload discipline).
-    fn load_packed(&self, name: &str) -> Result<Arc<StoredModel>> {
+    /// losers adopt it (the reload discipline). `gated` arms the TinyLFU
+    /// admission comparison in the budget enforcement this load triggers.
+    fn load_packed(&self, name: &str, gated: bool) -> Result<Arc<StoredModel>> {
         let (pack, member, bytes) = {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
@@ -720,9 +807,10 @@ impl ModelStore {
         let pc = pack
             .parse_member(member)
             .with_context(|| format!("loading pack member {name:?}"))?;
-        let predictor = CompressedPredictor::new(pc)?
-            .with_workers(self.predict_workers)
-            .with_plan_cache(self.plans.clone());
+        let mut predictor = CompressedPredictor::new(pc)?.with_workers(self.predict_workers);
+        if self.plan_admit(name) {
+            predictor = predictor.with_plan_cache(self.plans.clone());
+        }
         let model = Arc::new(StoredModel {
             predictor,
             compressed_bytes: bytes,
@@ -766,7 +854,7 @@ impl ModelStore {
         }
         self.stats.lock().unwrap().pack_loads += 1;
         // the load grew the RAM tier; it may need to release/spill another
-        self.enforce_budget(name);
+        self.enforce_budget_gated(name, gated);
         Ok(model)
     }
 
@@ -774,8 +862,9 @@ impl ModelStore {
     /// + decoder build runs outside every lock; the winner of a reload race
     /// installs its model, losers adopt it. On success the spill file is
     /// unlinked (on unix the mapping keeps its pages alive; the non-unix
-    /// fallback copied them).
-    fn reload(&self, name: &str) -> Result<Arc<StoredModel>> {
+    /// fallback copied them). `gated` arms the TinyLFU admission comparison
+    /// in the budget enforcement this reload triggers.
+    fn reload(&self, name: &str, gated: bool) -> Result<Arc<StoredModel>> {
         let (path, bytes) = {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
@@ -810,9 +899,10 @@ impl ModelStore {
         }
         let pc = parse_arc(map)
             .with_context(|| format!("parsing spill file {} of model {name:?}", path.display()))?;
-        let predictor = CompressedPredictor::new(pc)?
-            .with_workers(self.predict_workers)
-            .with_plan_cache(self.plans.clone());
+        let mut predictor = CompressedPredictor::new(pc)?.with_workers(self.predict_workers);
+        if self.plan_admit(name) {
+            predictor = predictor.with_plan_cache(self.plans.clone());
+        }
         let model = Arc::new(StoredModel {
             predictor,
             compressed_bytes: bytes,
@@ -850,7 +940,7 @@ impl ModelStore {
             let _ = std::fs::remove_file(&path);
             self.stats.lock().unwrap().reloads += 1;
             // the reload grew the RAM tier; it may need to spill someone else
-            self.enforce_budget(name);
+            self.enforce_budget_gated(name, gated);
         }
         Ok(model)
     }
@@ -1029,6 +1119,18 @@ impl ModelStore {
     /// through the mmap path ([`Self::reload`]); unloaded pack members are
     /// parsed out of their archive ([`Self::load_packed`]).
     fn get(&self, name: &str) -> Result<Arc<StoredModel>> {
+        self.get_gated(name, true)
+    }
+
+    /// [`Self::get`] with explicit gating: request-path lookups
+    /// (`gated = true`) feed the frequency sketch and run TinyLFU-gated
+    /// budget enforcement; warm-up lookups ([`Self::warm`]) bypass both —
+    /// an operator prefetch is an explicit residency hint, not a data point
+    /// to second-guess.
+    fn get_gated(&self, name: &str, gated: bool) -> Result<Arc<StoredModel>> {
+        if gated {
+            self.touch_sketch(name);
+        }
         let packed = {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
@@ -1042,10 +1144,65 @@ impl ModelStore {
             }
         };
         if packed {
-            self.load_packed(name)
+            self.load_packed(name, gated)
         } else {
-            self.reload(name)
+            self.reload(name, gated)
         }
+    }
+
+    /// Record one request for `name` in the frequency sketch (no-op under
+    /// the `lru` policy).
+    fn touch_sketch(&self, name: &str) {
+        if let Some(sketch) = &self.sketch {
+            sketch.lock().unwrap().touch(sketch_hash(name));
+        }
+    }
+
+    /// Plan-cache admission for a load of `name`: under TinyLFU, a cold
+    /// model (estimated frequency < 2 — i.e. never seen before the touch
+    /// that triggered this very load) builds its predictor **without** the
+    /// shared [`PlanCache`] attached, so a one-pass scan cannot churn the
+    /// hot set's decoded plans either. Its plans become cacheable on the
+    /// next (re)load, by which point the sketch has history. Always true
+    /// under `lru`.
+    fn plan_admit(&self, name: &str) -> bool {
+        match &self.sketch {
+            None => true,
+            Some(sketch) => sketch.lock().unwrap().estimate(sketch_hash(name)) >= 2,
+        }
+    }
+
+    /// Note a `PREFETCH` request and report whether a background warm-up is
+    /// worth spawning: `Ok(true)` for a Spilled/Packed model (counted in
+    /// [`StoreStats::prefetches`]), `Ok(false)` for an already-Resident one
+    /// (its LRU clock is stamped; nothing to do). The touch also feeds the
+    /// frequency sketch — a prefetch is a statement of intent. Errors only
+    /// for unknown names.
+    pub fn prefetch_needed(&self, name: &str) -> Result<bool> {
+        self.touch_sketch(name);
+        let cold = {
+            let models = self.shard(name).models.read().unwrap();
+            match models.get(name) {
+                Some(Tier::Resident(m)) => {
+                    m.last_used.store(self.tick(), Ordering::Relaxed);
+                    false
+                }
+                Some(Tier::Spilled(_) | Tier::Packed(_)) => true,
+                None => bail!("unknown model {name:?}"),
+            }
+        };
+        if cold {
+            self.stats.lock().unwrap().prefetches += 1;
+        }
+        Ok(cold)
+    }
+
+    /// Synchronously warm a model into the resident tier, bypassing the
+    /// admission gate (an explicit prefetch must not be second-guessed by
+    /// the sketch it is trying to pre-seed). The server runs this on a
+    /// background thread after acknowledging the `PREFETCH`.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.get_gated(name, false).map(|_| ())
     }
 
     /// Predict a single observation against a named model. The shard lock
@@ -1705,5 +1862,109 @@ mod tests {
         let tiny = ModelStore::with_budget(pack.member_logical_bytes(0) / 2);
         assert!(tiny.attach_pack(&pack).is_err());
         assert_eq!(tiny.len(), 0, "refusal leaves nothing half-attached");
+    }
+
+    /// Budget for exactly two models, spill tier armed, four models in:
+    /// `hot` is requested heavily, `warm2` keeps a seat, then one cold scan
+    /// request arrives. Under `tinylfu` the scan candidate is demoted right
+    /// back (the hot set survives and `admission_rejects` ticks); under
+    /// `lru` the exact same sequence spills the hot model.
+    fn scan_round(policy: AdmissionPolicy) -> (ModelStore, PathBuf) {
+        let (cf, _, ds) = iris_model(6);
+        let one = cf.total_bytes();
+        let dir = temp_spill_dir(&format!("adm-{policy}"));
+        let store = ModelStore::with_budget(2 * one + one / 2)
+            .spill_dir(dir.clone())
+            .admission(policy);
+        for name in ["hot", "cold", "warm1", "warm2"] {
+            store.insert(name, &cf).unwrap();
+        }
+        // inserts ran ungated (admin path): the two oldest spilled
+        assert_eq!(store.spilled_len(), 2);
+        assert!(store.is_spilled("hot") && store.is_spilled("cold"));
+        let vals = row_values(&ds, 0);
+        // build the hot set: "hot" reloads and accumulates frequency,
+        // then "warm2" is touched so "hot" becomes the LRU resident
+        for _ in 0..5 {
+            store.predict("hot", &vals).unwrap();
+        }
+        for _ in 0..3 {
+            store.predict("warm2", &vals).unwrap();
+        }
+        assert!(!store.is_spilled("hot"), "the hot model reloaded");
+        // the scan: one request for a model seen once ever
+        store.predict("cold", &vals).unwrap();
+        (store, dir)
+    }
+
+    #[test]
+    fn tinylfu_gate_keeps_the_hot_model_under_a_scan() {
+        let (store, dir) = scan_round(AdmissionPolicy::TinyLfu);
+        assert!(
+            !store.is_spilled("hot"),
+            "the scan must not displace the hot model under tinylfu"
+        );
+        assert!(store.is_spilled("cold"), "the rejected candidate re-spilled");
+        assert_eq!(store.stats().admission_rejects, 1);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_control_loses_the_hot_model_to_the_same_scan() {
+        let (store, dir) = scan_round(AdmissionPolicy::Lru);
+        assert!(
+            store.is_spilled("hot"),
+            "under pure LRU the scan displaces the hot model (the contrast \
+             the tinylfu test demonstrates)"
+        );
+        assert_eq!(store.stats().admission_rejects, 0, "lru never consults the gate");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn admission_gate_with_empty_sketch_degrades_to_lru() {
+        // no history at all: ties admit the candidate, so the very first
+        // gated load behaves exactly like LRU (nothing is rejected)
+        let store = ModelStore::with_budget(1).admission(AdmissionPolicy::TinyLfu);
+        assert!(!store.reject_candidate("anything", "victim"));
+        assert_eq!(store.admission_policy(), AdmissionPolicy::TinyLfu);
+        assert_eq!(ModelStore::new().admission_policy(), AdmissionPolicy::Lru);
+    }
+
+    #[test]
+    fn plan_cache_admission_needs_two_sightings() {
+        let store = ModelStore::new().admission(AdmissionPolicy::TinyLfu);
+        assert!(!store.plan_admit("m"), "a never-seen model gets no shared plans");
+        store.touch_sketch("m");
+        assert!(!store.plan_admit("m"), "first sighting is still cold");
+        store.touch_sketch("m");
+        assert!(store.plan_admit("m"), "second sighting clears the doorkeeper");
+        // the lru policy has no sketch: plans always attach
+        assert!(ModelStore::new().plan_admit("never-seen"));
+    }
+
+    #[test]
+    fn prefetch_counts_cold_targets_and_warm_makes_them_resident() {
+        let (cf, _, _) = iris_model(6);
+        let one = cf.total_bytes();
+        let dir = temp_spill_dir("prefetch");
+        let store = ModelStore::with_budget(one + one / 2).spill_dir(dir.clone());
+        store.insert("a", &cf).unwrap();
+        store.insert("b", &cf).unwrap();
+        assert!(store.is_spilled("a"), "budget for one: the older model spilled");
+        assert!(store.prefetch_needed("a").unwrap(), "a spilled model wants warming");
+        store.warm("a").unwrap();
+        assert!(!store.is_spilled("a"), "warm promoted the spilled model");
+        assert!(
+            !store.prefetch_needed("a").unwrap(),
+            "an already-resident model needs no warm-up"
+        );
+        let s = store.stats();
+        assert_eq!(s.prefetches, 1, "only the cold prefetch counted");
+        assert!(store.prefetch_needed("nope").is_err(), "unknown names error");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -41,6 +41,7 @@ fn main() {
         "verify" => cmd_verify(&args),
         "lossy" => cmd_lossy(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "pack" => cmd_pack(&args),
         "suite" => cmd_suite(&args),
         "sweep-stages" => cmd_sweep_stages(&args),
@@ -74,10 +75,21 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   serve      --port P [--dataset KEY[,KEY...]] [--pack FILE[,FILE...]]
              [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
+             [--admission lru|tinylfu]
              [--inflight-cap N] [--request-timeout-ms MS]
   serve      --route --backends H:P[,H:P...] [--port P] [--replication R]
              [--hot-k K] [--max-tries N] [--probe-interval-ms MS]
              [--request-timeout-ms MS] [--inflight-cap N]
+  loadgen    [--scenario NAME[,NAME...]|all] [--seed S] [--quick]
+             [--tenants N] [--requests N] [--rate RPS] [--zipf-s Z]
+             [--hot-set K] [--cohort C] [--admission lru|tinylfu]
+             [--compare-admission] [--serial] [--window N]
+             [--dataset KEY] [--trees N] [--max-resident-bytes B]
+             [--spill-dir DIR] [--out BENCH_loadgen.json]
+             [--trace-only] [--trace-out FILE]
+             [--addr H:P --models M[,M...] --values V1,V2,...]
+             (scenarios: steady diurnal flash_crowd scan cohort_burst;
+              see rust/OPERATIONS.md)
   pack build   --out FILE (--inputs A.rfcz[,B.rfcz...] |
                            --dataset KEY --members N [--trees T])
                [--no-shared] [--seed S]
@@ -326,6 +338,17 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut store =
         ModelStore::with_config(rf_compress::coordinator::store::DEFAULT_SHARDS, budget)
             .predict_workers(workers);
+    // admission policy under budget pressure: recency-only (lru, default)
+    // or frequency-weighted (tinylfu); see rust/OPERATIONS.md
+    if let Some(s) = args.get("admission") {
+        match rf_compress::coordinator::admission::AdmissionPolicy::parse(s) {
+            Some(p) => store = store.admission(p),
+            None => {
+                eprintln!("serve: --admission expects lru or tinylfu, got {s:?}");
+                return 2;
+            }
+        }
+    }
     // disk tier: evictions spill container bytes here and reload via mmap
     let spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
     let spill_bytes = match args.get("spill-bytes") {
@@ -455,6 +478,7 @@ fn cmd_serve(args: &Args) -> i32 {
         "plan cache: up to {} of decoded flat trees",
         human_bytes(store.plan_cache().max_bytes())
     );
+    println!("admission policy: {}", store.admission_policy());
     if let Some(dir) = store.spill_path() {
         println!(
             "spill tier: {} ({})",
@@ -580,6 +604,394 @@ fn cmd_serve_route(args: &Args) -> i32 {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `repro loadgen`: the seed-replayable adversarial workload harness.
+/// Generates a deterministic multi-tenant trace (Zipf popularity, Poisson
+/// arrivals, one of five scenario shapes) and either renders it
+/// (`--trace-only`), replays it against a live server (`--addr`), or
+/// self-hosts a budgeted spill-tier store and measures hot-set hit rates —
+/// optionally under both admission policies (`--compare-admission`) —
+/// writing per-scenario latency percentiles to `BENCH_loadgen.json`.
+fn cmd_loadgen(args: &Args) -> i32 {
+    use rf_compress::coordinator::admission::AdmissionPolicy;
+    use rf_compress::testing::loadgen::{
+        generate_trace, render_trace, run_trace, LoadgenConfig, RunOptions, Scenario,
+    };
+
+    let spec = args.get("scenario").unwrap_or("steady").to_string();
+    let mut scenarios = Vec::new();
+    if spec == "all" {
+        scenarios.extend(Scenario::ALL);
+    } else {
+        for s in spec.split(',') {
+            match Scenario::parse(s) {
+                Some(sc) => scenarios.push(sc),
+                None => {
+                    eprintln!(
+                        "loadgen: unknown scenario {s:?} (want steady, diurnal, \
+                         flash_crowd, scan, cohort_burst, or all)"
+                    );
+                    return 2;
+                }
+            }
+        }
+    }
+    let quick = args.flag("quick");
+    let cfg_for = |sc: Scenario| -> LoadgenConfig {
+        let base = if quick { LoadgenConfig::quick(sc) } else { LoadgenConfig::new(sc) };
+        LoadgenConfig {
+            seed: args.get_or("seed", base.seed),
+            tenants: args.get_or("tenants", base.tenants),
+            requests: args.get_or("requests", base.requests),
+            rate: args.get_or("rate", base.rate),
+            zipf_s: args.get_or("zipf-s", base.zipf_s),
+            hot_set: args.get_or("hot-set", base.hot_set),
+            cohort: args.get_or("cohort", base.cohort),
+            ..base
+        }
+    };
+
+    // trace-only: render the deterministic trace and exit — the replay
+    // artifact CI byte-compares across two invocations
+    if args.flag("trace-only") {
+        let mut text = String::new();
+        for sc in &scenarios {
+            let cfg = cfg_for(*sc);
+            text.push_str(&render_trace(&cfg, &generate_trace(&cfg)));
+        }
+        return match args.get("trace-out") {
+            Some(path) => match std::fs::write(path, &text) {
+                Ok(()) => {
+                    println!("wrote {path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("loadgen: write {path}: {e}");
+                    1
+                }
+            },
+            None => {
+                print!("{text}");
+                0
+            }
+        };
+    }
+
+    let opts_base = RunOptions {
+        pipe: !args.flag("serial"),
+        window: args.get_or("window", 128usize),
+        ..RunOptions::default()
+    };
+    let out = args.get("out").unwrap_or("BENCH_loadgen.json").to_string();
+    let compare = args.flag("compare-admission");
+    let mut entries: Vec<String> = Vec::new();
+    let mut gate_ok = true;
+
+    if let Some(addr) = args.get("addr") {
+        // external mode: replay against an already-running server
+        let addr: std::net::SocketAddr = match addr.parse() {
+            Ok(a) => a,
+            Err(_) => {
+                eprintln!("loadgen: bad --addr {addr:?} (want HOST:PORT)");
+                return 2;
+            }
+        };
+        if compare {
+            eprintln!("loadgen: --compare-admission needs a self-hosted store (drop --addr)");
+            return 2;
+        }
+        let Some(values) = args.get("values") else {
+            eprintln!(
+                "loadgen: --addr mode needs --values V1,V2,... (a PREDICT payload \
+                 the serving models accept)"
+            );
+            return 2;
+        };
+        let models = match args.get_list::<String>("models") {
+            Some(m) if !m.is_empty() => m,
+            _ => {
+                eprintln!(
+                    "loadgen: --addr mode needs --models NAME[,NAME...] \
+                     (tenant t maps to models[t % len])"
+                );
+                return 2;
+            }
+        };
+        let opts = RunOptions { values: values.to_string(), ..opts_base };
+        for sc in &scenarios {
+            let cfg = cfg_for(*sc);
+            let trace = generate_trace(&cfg);
+            match run_trace(addr, &models, &trace, &opts) {
+                Ok(report) => {
+                    print_loadgen_line(sc.name(), "external", &report, None);
+                    entries.push(loadgen_entry_json(&cfg, "external", &report, None));
+                }
+                Err(e) => {
+                    eprintln!("loadgen {}: {e:#}", sc.name());
+                    return 1;
+                }
+            }
+        }
+    } else {
+        // self-serve mode: train one small forest, host it under every
+        // tenant name in a budgeted spill-tier store, and measure
+        let policies: Vec<AdmissionPolicy> = if compare {
+            vec![AdmissionPolicy::Lru, AdmissionPolicy::TinyLfu]
+        } else {
+            let p = args.get("admission").unwrap_or("lru");
+            match AdmissionPolicy::parse(p) {
+                Some(p) => vec![p],
+                None => {
+                    eprintln!("loadgen: --admission expects lru or tinylfu, got {p:?}");
+                    return 2;
+                }
+            }
+        };
+        let key = args.get("dataset").unwrap_or("iris");
+        let Some(ds) = dataset_by_key(key, args.get_or("data-seed", 1234u64)) else {
+            eprintln!("loadgen: unknown dataset {key:?} (try `repro datasets`)");
+            return 2;
+        };
+        let trees = args.get_or("trees", 5usize);
+        let mut coord = coordinator(args);
+        let cf = match coord.train_and_compress(&ds, trees, args.get_or("seed", 7u64), &opts_from(args))
+        {
+            Ok((_, cf, _)) => cf,
+            Err(e) => {
+                eprintln!("loadgen: training the tenant model failed: {e:#}");
+                return 1;
+            }
+        };
+        for sc in &scenarios {
+            let cfg = cfg_for(*sc);
+            let trace = generate_trace(&cfg);
+            let mut rates: Vec<(AdmissionPolicy, f64)> = Vec::new();
+            for policy in &policies {
+                match loadgen_self_run(args, &cfg, &trace, *policy, &cf, &ds, &opts_base) {
+                    Ok((report, m)) => {
+                        print_loadgen_line(
+                            cfg.scenario.name(),
+                            &policy.to_string(),
+                            &report,
+                            Some(&m),
+                        );
+                        entries.push(loadgen_entry_json(
+                            &cfg,
+                            &policy.to_string(),
+                            &report,
+                            Some(&m),
+                        ));
+                        rates.push((*policy, m.hot_hit_rate));
+                    }
+                    Err(e) => {
+                        eprintln!("loadgen {} [{policy}]: {e:#}", cfg.scenario.name());
+                        return 1;
+                    }
+                }
+            }
+            if compare {
+                // the scan-resistance gate: frequency-weighted admission
+                // must retain at least the hot-set hit rate recency alone
+                // manages (small epsilon absorbs run-to-run load races)
+                let rate_of = |p: AdmissionPolicy| {
+                    rates.iter().find(|(q, _)| *q == p).map(|(_, r)| *r).unwrap_or(0.0)
+                };
+                let (lru, tiny) = (rate_of(AdmissionPolicy::Lru), rate_of(AdmissionPolicy::TinyLfu));
+                let ok = tiny + 0.02 >= lru;
+                println!(
+                    "gate {}: tinylfu hot-hit {:.1}% vs lru {:.1}% => {}",
+                    cfg.scenario.name(),
+                    tiny * 100.0,
+                    lru * 100.0,
+                    if ok { "PASS" } else { "FAIL" }
+                );
+                gate_ok &= ok;
+            }
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"loadgen\",\n  \"quick\": {quick},\n  \
+         \"compare_admission\": {compare},\n  \"gate\": {{\"pass\": {gate_ok}}},\n  \
+         \"entries\": [\n    {}\n  ]\n}}\n",
+        entries.join(",\n    ")
+    );
+    if let Err(e) = std::fs::write(&out, json) {
+        eprintln!("loadgen: write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
+    if gate_ok {
+        0
+    } else {
+        1
+    }
+}
+
+/// Store-side measurements of one self-served loadgen run (all counter
+/// deltas across the measurement window).
+struct LoadgenMeasure {
+    hot_requests: u64,
+    cold_requests: u64,
+    promotions: u64,
+    admission_rejects: u64,
+    hot_hit_rate: f64,
+}
+
+/// Host a fresh budgeted store for one (scenario, policy) run and execute
+/// the trace against it, returning the latency report and the hot-set
+/// retention measured from the store's own counters (not timing).
+fn loadgen_self_run(
+    args: &Args,
+    cfg: &rf_compress::testing::loadgen::LoadgenConfig,
+    trace: &[rf_compress::testing::loadgen::Request],
+    policy: rf_compress::coordinator::admission::AdmissionPolicy,
+    cf: &CompressedForest,
+    ds: &Dataset,
+    opts_base: &rf_compress::testing::loadgen::RunOptions,
+) -> anyhow::Result<(rf_compress::testing::loadgen::RunReport, LoadgenMeasure)> {
+    use rf_compress::coordinator::server::{values_to_wire, Client};
+    use rf_compress::coordinator::store::ObsValue;
+    use rf_compress::data::Column;
+    use rf_compress::testing::loadgen::{hot_hit_rate, hot_tenants, run_trace, RunOptions};
+
+    let one = cf.total_bytes();
+    // default budget: the hot set fits with a little slack, the long tail
+    // does not — exactly the regime admission policy decides
+    let budget = match args.get("max-resident-bytes") {
+        Some(s) => s.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--max-resident-bytes expects a byte count, got {s:?}")
+        })?,
+        None => one * (cfg.hot_set as u64 + 2),
+    };
+    let (dir, cleanup) = match args.get("spill-dir") {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => (
+            std::env::temp_dir()
+                .join(format!("rfc-loadgen-{policy}-{}", std::process::id())),
+            true,
+        ),
+    };
+    let store = Arc::new(
+        ModelStore::with_config(rf_compress::coordinator::store::DEFAULT_SHARDS, Some(budget))
+            .admission(policy)
+            .spill_dir(dir.clone()),
+    );
+    for t in 0..cfg.tenants {
+        store.insert(&format!("t{t}"), cf)?;
+    }
+    let server = Server::start_with(store.clone(), 0, ServerConfig::default())?;
+    let addr = server.addr();
+    let values = values_to_wire(
+        &ds.features
+            .iter()
+            .map(|f| match &f.column {
+                Column::Numeric(v) => ObsValue::Num(v[0]),
+                Column::Categorical { values, .. } => ObsValue::Cat(values[0]),
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // warm the hot set before the measurement window: "hot" means resident
+    // and (under tinylfu) frequency-known
+    let hot = hot_tenants(cfg);
+    let mut client = Client::connect(addr)?;
+    for _ in 0..3 {
+        for t in &hot {
+            client.request(&format!("PREDICT t{t} {values}"))?;
+        }
+    }
+    let before = store.stats();
+
+    let opts = RunOptions { values, ..opts_base.clone() };
+    let report = run_trace(addr, &loadgen_model_names(cfg.tenants), trace, &opts)?;
+
+    let after = store.stats();
+    let promotions =
+        (after.reloads - before.reloads) + (after.pack_loads - before.pack_loads);
+    let (hot_requests, cold_requests) =
+        rf_compress::testing::loadgen::split_hot_cold(trace, &hot);
+    let m = LoadgenMeasure {
+        hot_requests,
+        cold_requests,
+        promotions,
+        admission_rejects: after.admission_rejects - before.admission_rejects,
+        hot_hit_rate: hot_hit_rate(hot_requests, cold_requests, promotions),
+    };
+    let _ = client.send("QUIT");
+    if cleanup {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok((report, m))
+}
+
+/// Tenant index → model name mapping the self-serve harness inserts under.
+fn loadgen_model_names(tenants: usize) -> Vec<String> {
+    (0..tenants).map(|t| format!("t{t}")).collect()
+}
+
+fn print_loadgen_line(
+    scenario: &str,
+    policy: &str,
+    r: &rf_compress::testing::loadgen::RunReport,
+    m: Option<&LoadgenMeasure>,
+) {
+    println!(
+        "{scenario} [{policy}]: {}/{} ok ({} err), p50 {} µs p95 {} p99 {} max {} \
+         in {:.2}s{}",
+        r.ok,
+        r.sent,
+        r.errors,
+        r.p50_us,
+        r.p95_us,
+        r.p99_us,
+        r.max_us,
+        r.elapsed_s,
+        match m {
+            Some(m) => format!(
+                ", hot-hit {:.1}% ({} rejects)",
+                m.hot_hit_rate * 100.0,
+                m.admission_rejects
+            ),
+            None => String::new(),
+        }
+    );
+}
+
+fn loadgen_entry_json(
+    cfg: &rf_compress::testing::loadgen::LoadgenConfig,
+    policy: &str,
+    r: &rf_compress::testing::loadgen::RunReport,
+    m: Option<&LoadgenMeasure>,
+) -> String {
+    let mut s = format!(
+        "{{\"scenario\": \"{}\", \"policy\": \"{policy}\", \"seed\": {}, \
+         \"tenants\": {}, \"requests\": {}, \"sent\": {}, \"ok\": {}, \
+         \"errors\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
+         \"max_us\": {}, \"elapsed_s\": {:.3}",
+        cfg.scenario.name(),
+        cfg.seed,
+        cfg.tenants,
+        cfg.requests,
+        r.sent,
+        r.ok,
+        r.errors,
+        r.p50_us,
+        r.p95_us,
+        r.p99_us,
+        r.max_us,
+        r.elapsed_s
+    );
+    if let Some(m) = m {
+        s.push_str(&format!(
+            ", \"hot_requests\": {}, \"cold_requests\": {}, \"promotions\": {}, \
+             \"admission_rejects\": {}, \"hot_hit_rate\": {:.4}",
+            m.hot_requests, m.cold_requests, m.promotions, m.admission_rejects, m.hot_hit_rate
+        ));
+    }
+    s.push('}');
+    s
 }
 
 /// RFPK model packs: `pack build` (from container files, or a synthetic
@@ -1053,4 +1465,63 @@ fn print_report(r: &rf_compress::coordinator::CompressionReport) {
         "  times: train {:.2}s, compress {:.2}s (engine {}, {} xla / {} native steps)",
         r.train_s, r.compress_s, r.engine, r.xla_steps, r.native_steps
     );
+}
+
+#[cfg(test)]
+mod tests {
+    /// Drift guard for the operator guide: every CLI flag the built-in help
+    /// documents for `serve` and `loadgen` must appear backticked in
+    /// `rust/OPERATIONS.md`, and the guide must name every `BENCH_*.json`
+    /// artifact the tooling writes. Adding a flag without documenting it
+    /// fails here, not in a code review.
+    #[test]
+    fn operations_guide_covers_every_serve_and_loadgen_flag() {
+        let ops = include_str!("../OPERATIONS.md");
+        let mut current = String::new();
+        let mut missing: Vec<String> = Vec::new();
+        for line in super::HELP.lines() {
+            let trimmed = line.trim_start();
+            // command lines sit at exactly two spaces of indent; deeper
+            // lines continue the current command's flag list
+            if line.len() - trimmed.len() == 2 {
+                current = trimmed.split_whitespace().next().unwrap_or("").to_string();
+            }
+            if current != "serve" && current != "loadgen" {
+                continue;
+            }
+            for tok in trimmed.split_whitespace() {
+                let tok = tok.trim_matches(|c| matches!(c, '[' | ']' | '(' | ')'));
+                if tok.starts_with("--") && !ops.contains(&format!("`{tok}`")) {
+                    missing.push(format!("{current}: {tok}"));
+                }
+            }
+        }
+        assert!(
+            missing.is_empty(),
+            "rust/OPERATIONS.md does not document: {missing:?}"
+        );
+        for bench in [
+            "BENCH_serve.json",
+            "BENCH_spill.json",
+            "BENCH_pack.json",
+            "BENCH_stages.json",
+            "BENCH_route.json",
+            "BENCH_loadgen.json",
+        ] {
+            assert!(ops.contains(bench), "rust/OPERATIONS.md must explain {bench}");
+        }
+    }
+
+    /// The help text itself names every loadgen scenario (the glossary the
+    /// guide and protocol doc key off).
+    #[test]
+    fn help_names_every_loadgen_scenario() {
+        for sc in rf_compress::testing::loadgen::Scenario::ALL {
+            assert!(
+                super::HELP.contains(sc.name()),
+                "HELP must mention scenario {:?}",
+                sc.name()
+            );
+        }
+    }
 }

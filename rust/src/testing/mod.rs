@@ -1,8 +1,10 @@
 //! In-tree test harnesses: property-testing mini-framework (no `proptest`
-//! offline) and the deterministic fault-injection proxy the router's
-//! partition tests drive.
+//! offline), the deterministic fault-injection proxy the router's
+//! partition tests drive, and the seed-replayable multi-tenant workload
+//! generator behind `repro loadgen`.
 
 pub mod chaos;
+pub mod loadgen;
 pub mod prop;
 
 pub use chaos::{ChaosProxy, ChaosSchedule, Fault};

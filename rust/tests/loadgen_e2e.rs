@@ -1,0 +1,198 @@
+//! End-to-end tests of the adversarial workload harness against a live
+//! server: the loadgen wire run itself, the scan-resistance comparison
+//! between the `lru` and `tinylfu` admission policies (measured from the
+//! store's own counters, never from timing), and the `PREFETCH` verb.
+//!
+//! The wire protocol is specified in `rust/PROTOCOL.md`; the operator's
+//! view of these knobs lives in `rust/OPERATIONS.md`.
+
+mod common;
+
+use common::{row_values, values_to_wire};
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::coordinator::admission::AdmissionPolicy;
+use rf_compress::coordinator::server::{Client, Server, ServerConfig};
+use rf_compress::coordinator::store::{ModelStore, DEFAULT_SHARDS};
+use rf_compress::coordinator::Coordinator;
+use rf_compress::data::synthetic;
+use rf_compress::testing::loadgen::{
+    generate_trace, hot_hit_rate, hot_tenants, run_trace, split_hot_cold, LoadgenConfig,
+    RunOptions, Scenario,
+};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tenant_model(seed: u64) -> (rf_compress::data::Dataset, CompressedForest) {
+    let ds = synthetic::iris(17);
+    let (_, cf, _) = Coordinator::native_only()
+        .train_and_compress(&ds, 3, seed, &CompressOptions::default())
+        .unwrap();
+    (ds, cf)
+}
+
+/// Unique spill directory per test run (suites run in parallel).
+fn temp_spill_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rfc-loadgen-e2e-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn loadgen_wire_run_answers_every_request() {
+    let (ds, cf) = tenant_model(5);
+    let store = Arc::new(ModelStore::new());
+    let models: Vec<String> = (0..4).map(|t| format!("t{t}")).collect();
+    for m in &models {
+        store.insert(m, &cf).unwrap();
+    }
+    let server = Server::start(store, 0).unwrap();
+    let cfg = LoadgenConfig {
+        tenants: 4,
+        requests: 300,
+        rate: 20_000.0,
+        ..LoadgenConfig::quick(Scenario::Steady)
+    };
+    let trace = generate_trace(&cfg);
+    let values = values_to_wire(&row_values(&ds, 0));
+
+    // pipelined: every request answered OK, none lost, none errored
+    let opts = RunOptions { values: values.clone(), window: 32, ..RunOptions::default() };
+    let r = run_trace(server.addr(), &models, &trace, &opts).unwrap();
+    assert_eq!(r.sent, trace.len() as u64);
+    assert_eq!(r.ok, r.sent, "every pipelined request must be answered: {r:?}");
+    assert_eq!(r.errors, 0, "{r:?}");
+    assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us && r.p99_us <= r.max_us);
+
+    // serial lockstep over a shorter trace agrees
+    let short = LoadgenConfig { requests: 40, ..cfg.clone() };
+    let strace = generate_trace(&short);
+    let sopts = RunOptions { pipe: false, values, ..RunOptions::default() };
+    let s = run_trace(server.addr(), &models, &strace, &sopts).unwrap();
+    assert_eq!(s.ok, strace.len() as u64, "{s:?}");
+    assert_eq!(s.errors, 0);
+}
+
+/// One (policy, scan-trace) measurement: hot-set hit rate and the
+/// admission-reject counter delta, from a self-hosted budgeted store.
+fn scan_run(policy: AdmissionPolicy) -> (f64, u64) {
+    let (ds, cf) = tenant_model(9);
+    let cfg = LoadgenConfig {
+        seed: 11,
+        tenants: 12,
+        requests: 240,
+        rate: 5000.0,
+        hot_set: 3,
+        ..LoadgenConfig::quick(Scenario::Scan)
+    };
+    // budget: the hot set plus slack fits, the tail does not
+    let budget = cf.total_bytes() * (cfg.hot_set as u64 + 2);
+    let dir = temp_spill_dir(&format!("scan-{policy}"));
+    let store = Arc::new(
+        ModelStore::with_config(DEFAULT_SHARDS, Some(budget))
+            .admission(policy)
+            .spill_dir(dir.clone()),
+    );
+    let models: Vec<String> = (0..cfg.tenants).map(|t| format!("t{t}")).collect();
+    for m in &models {
+        store.insert(m, &cf).unwrap();
+    }
+    let server = Server::start_with(store.clone(), 0, ServerConfig::default()).unwrap();
+    let values = values_to_wire(&row_values(&ds, 0));
+
+    // warm the hot set: resident + (under tinylfu) frequency-known
+    let hot = hot_tenants(&cfg);
+    let mut client = Client::connect(server.addr()).unwrap();
+    for _ in 0..3 {
+        for t in &hot {
+            let reply = client.request(&format!("PREDICT t{t} {values}")).unwrap();
+            assert!(reply.starts_with("OK"), "{reply}");
+        }
+    }
+
+    let before = store.stats();
+    let trace = generate_trace(&cfg);
+    let opts = RunOptions { values, window: 32, ..RunOptions::default() };
+    let r = run_trace(server.addr(), &models, &trace, &opts).unwrap();
+    assert_eq!(r.ok, trace.len() as u64, "[{policy}] every request answered: {r:?}");
+    let after = store.stats();
+
+    let promotions =
+        (after.reloads - before.reloads) + (after.pack_loads - before.pack_loads);
+    let (h, c) = split_hot_cold(&trace, &hot);
+    let rate = hot_hit_rate(h, c, promotions);
+    let _ = std::fs::remove_dir_all(&dir);
+    (rate, after.admission_rejects - before.admission_rejects)
+}
+
+#[test]
+fn tinylfu_retains_the_hot_set_a_scan_erodes_under_lru() {
+    let (lru_rate, lru_rejects) = scan_run(AdmissionPolicy::Lru);
+    let (tiny_rate, tiny_rejects) = scan_run(AdmissionPolicy::TinyLfu);
+    // the gate never fires under lru, and must have fired under tinylfu
+    // (the sweep's cold loads were turned back at least once)
+    assert_eq!(lru_rejects, 0, "lru must never consult the sketch");
+    assert!(tiny_rejects > 0, "the sweep must trip the tinylfu gate");
+    // the acceptance bar: frequency-weighted admission keeps at least the
+    // hot-set hit rate recency alone manages under the same scan
+    assert!(
+        tiny_rate >= lru_rate,
+        "tinylfu hot-hit {tiny_rate:.3} must be >= lru {lru_rate:.3}"
+    );
+    assert!(
+        tiny_rate > 0.95,
+        "with the sweep turned back, the hot set stays resident: {tiny_rate:.3}"
+    );
+}
+
+#[test]
+fn prefetch_warms_a_spilled_model_over_the_wire() {
+    let (ds, cf) = tenant_model(23);
+    let one = cf.total_bytes();
+    let dir = temp_spill_dir("prefetch");
+    let store = Arc::new(
+        ModelStore::with_config(DEFAULT_SHARDS, Some(one + one / 2)).spill_dir(dir.clone()),
+    );
+    store.insert("alpha", &cf).unwrap();
+    store.insert("beta", &cf).unwrap(); // displaces alpha to the spill tier
+    assert!(store.is_spilled("alpha"), "alpha must start spilled");
+    let server = Server::start_with(store.clone(), 0, ServerConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    assert_eq!(store.stats().prefetches, 0);
+    let reply = client.request("PREFETCH alpha").unwrap();
+    assert_eq!(reply, "OK warming alpha");
+
+    // the warm-up runs in the background; wait for its reload to land
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while store.stats().reloads == 0 {
+        assert!(Instant::now() < deadline, "prefetch warm-up never reloaded alpha");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // a predict now serves the warmed model; PREDICT itself never counts
+    // as a prefetch
+    let values = values_to_wire(&row_values(&ds, 0));
+    let reply = client.request(&format!("PREDICT alpha {values}")).unwrap();
+    assert!(reply.starts_with("OK"), "{reply}");
+    assert_eq!(store.stats().prefetches, 1, "only the cold PREFETCH counts");
+
+    // an already-resident target acknowledges without counting
+    let reply = client.request("PREFETCH alpha").unwrap();
+    assert_eq!(reply, "OK resident alpha");
+    assert_eq!(store.stats().prefetches, 1);
+
+    // the pipelined form answers through the outbox with its id
+    client.send("PIPE 9 PREFETCH alpha").unwrap();
+    assert_eq!(client.recv().unwrap(), "OK 9 resident alpha");
+
+    // unknown targets are a typed error, serial and pipelined
+    let reply = client.request("PREFETCH ghost").unwrap();
+    assert!(reply.starts_with("ERR"), "{reply}");
+    client.send("PIPE 10 PREFETCH ghost").unwrap();
+    let reply = client.recv().unwrap();
+    assert!(reply.starts_with("ERR") && reply.ends_with("id=10"), "{reply}");
+
+    let _ = client.send("QUIT");
+    drop(server);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}

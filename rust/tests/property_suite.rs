@@ -802,3 +802,46 @@ fn prop_pack_round_trip_is_bit_identical() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_loadgen_replay_is_deterministic() {
+    use rf_compress::testing::loadgen::{
+        generate_trace, hot_tenants, render_trace, LoadgenConfig, Scenario,
+    };
+    forall("loadgen replay determinism", |g: &mut Gen| {
+        let scenario = Scenario::ALL[g.usize_in(0, Scenario::ALL.len() - 1)];
+        let tenants = g.usize_in(1, 64);
+        let cfg = LoadgenConfig {
+            seed: g.u64_in(0, u64::MAX / 2),
+            tenants,
+            requests: g.usize_in(0, 400),
+            rate: g.f64_in(100.0, 50_000.0),
+            zipf_s: g.f64_in(0.5, 2.0),
+            hot_set: g.usize_in(1, tenants),
+            cohort: g.usize_in(1, tenants),
+            ..LoadgenConfig::quick(scenario)
+        };
+        // the replay contract: equal configs render byte-identical traces
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        if render_trace(&cfg, &a) != render_trace(&cfg, &b) {
+            return Err(format!("{scenario:?}: same config rendered two different traces"));
+        }
+        // well-formedness: monotone schedule, tenants in range
+        let mut last = 0u64;
+        for r in &a {
+            if r.at_us < last {
+                return Err(format!("{scenario:?}: schedule went backwards"));
+            }
+            if r.tenant as usize >= cfg.tenants {
+                return Err(format!("{scenario:?}: tenant {} out of range", r.tenant));
+            }
+            last = r.at_us;
+        }
+        // the hot set is a stable function of the config too
+        if hot_tenants(&cfg) != hot_tenants(&cfg) {
+            return Err("hot set must be deterministic".into());
+        }
+        Ok(())
+    });
+}
