@@ -23,13 +23,17 @@
 //!   the chaos proxy, gated on exactly-once resolution; emits
 //!   `BENCH_route.json`
 //! * codec microbenches: Huffman encode/decode, arith, LZSS
+//! * observability overhead: the traced store path (phase spans feeding
+//!   the `METRICS`/`SLOW` surface) vs the untraced fast path on a warm
+//!   flat-plan batch, gated at ≤ 5% throughput overhead; emits
+//!   `BENCH_obs.json`
 //!
 //! Run: `cargo bench --bench hotpath`
-//! (add `-- cluster|compress|predict|serve|spill|pack|route|codec`;
-//! `-- serve --quick`, `-- spill --quick`, and `-- pack --quick` are the CI
-//! smoke configurations: tiny forests / member counts, short timing
-//! budgets; `-- spill --spill-bytes B` caps the disk tier and
-//! `-- pack --members N` sets the cohort size)
+//! (add `-- cluster|compress|predict|serve|spill|pack|route|codec|obs`;
+//! `-- serve --quick`, `-- spill --quick`, `-- pack --quick`, and
+//! `-- obs --quick` are the CI smoke configurations: tiny forests / member
+//! counts, short timing budgets; `-- spill --spill-bytes B` caps the disk
+//! tier and `-- pack --members N` sets the cohort size)
 
 use rf_compress::cluster::kmeans::{LloydEngine, NativeEngine};
 use rf_compress::compress::{CompressOptions, CompressedForest, CompressedPredictor, PlanCache};
@@ -68,6 +72,125 @@ fn main() {
     if run("codec") {
         bench_codec();
     }
+    if run("obs") {
+        bench_obs(&cfg);
+    }
+}
+
+/// Observability overhead: the traced store path
+/// (`predict_batch_traced`, which times tier probes and execute windows
+/// and feeds the request histogram) vs the untraced `predict_batch` fast
+/// path, on a warm flat-plan batch — plus the traced path with recording
+/// disabled (`Obs::set_enabled(false)`, the hub-off leg). Gates the traced
+/// path at ≥ 95% of untraced throughput and emits `BENCH_obs.json`.
+fn bench_obs(cfg: &rf_compress::util::bench::BenchConfig) {
+    use rf_compress::coordinator::store::{ModelStore, ObsValue};
+    use rf_compress::obs::BatchTrace;
+
+    println!("== observability overhead: traced vs untraced warm path ==");
+    let quick = cfg.args.flag("quick");
+    let budget = if quick { 0.05 } else { 0.5 };
+    let ds = synthetic::airfoil_classification(1234);
+    let n_trees = if quick { cfg.trees.min(16).max(4) } else { cfg.trees.max(50) };
+    let forest = Forest::train(&ds, &ForestParams::classification(n_trees), cfg.seed);
+    let cf = CompressedForest::compress(&forest, &ds, &CompressOptions::default()).unwrap();
+    let store = ModelStore::new().slow_threshold_us(0).trace_ring(64);
+    store.insert("m", &cf).unwrap();
+    let rows: Vec<Vec<ObsValue>> = (0..ds.num_rows().min(64))
+        .map(|r| {
+            ds.features
+                .iter()
+                .map(|f| match &f.column {
+                    rf_compress::data::Column::Numeric(v) => ObsValue::Num(v[r]),
+                    rf_compress::data::Column::Categorical { values, .. } => {
+                        ObsValue::Cat(values[r])
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let n_rows = rows.len();
+
+    // correctness gate: traced and untraced paths answer identically
+    let plain_out = store.predict_batch("m", &rows).unwrap(); // also warms the plan cache
+    let mut gate_trace = BatchTrace::default();
+    assert_eq!(
+        store.predict_batch_traced("m", &rows, &mut gate_trace).unwrap(),
+        plain_out,
+        "traced path diverges from the fast path"
+    );
+    assert!(gate_trace.execute_us > 0 || n_rows == 0, "the trace must time the execute window");
+
+    // two interleaved passes per leg; keep each leg's best median so one
+    // scheduler hiccup cannot fail the overhead gate
+    let mut t_plain_best = f64::MAX;
+    let mut t_traced_best = f64::MAX;
+    let mut t_off_best = f64::MAX;
+    for _ in 0..2 {
+        let t_plain = time_it(budget, 3, || {
+            store.predict_batch("m", &rows).unwrap();
+        });
+        let t_traced = time_it(budget, 3, || {
+            let mut trace = BatchTrace::default();
+            store.predict_batch_traced("m", &rows, &mut trace).unwrap();
+        });
+        store.obs().set_enabled(false);
+        let t_off = time_it(budget, 3, || {
+            let mut trace = BatchTrace::default();
+            store.predict_batch_traced("m", &rows, &mut trace).unwrap();
+        });
+        store.obs().set_enabled(true);
+        t_plain_best = t_plain_best.min(t_plain.median);
+        t_traced_best = t_traced_best.min(t_traced.median);
+        t_off_best = t_off_best.min(t_off.median);
+    }
+    let rps = |median: f64| n_rows as f64 / median.max(1e-12);
+    let overhead = t_traced_best / t_plain_best.max(1e-12) - 1.0;
+    let mut t = Table::new(&["store path", "batch median", "rows/s", "vs untraced"]);
+    t.row(&[
+        "untraced predict_batch".into(),
+        format!("{:.1} µs", t_plain_best * 1e6),
+        format!("{:.0}", rps(t_plain_best)),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "traced, recording on".into(),
+        format!("{:.1} µs", t_traced_best * 1e6),
+        format!("{:.0}", rps(t_traced_best)),
+        format!("{:.2}x", t_plain_best / t_traced_best),
+    ]);
+    t.row(&[
+        "traced, recording off".into(),
+        format!("{:.1} µs", t_off_best * 1e6),
+        format!("{:.0}", rps(t_off_best)),
+        format!("{:.2}x", t_plain_best / t_off_best),
+    ]);
+    t.print();
+    println!("tracing overhead on the warm path: {:.1}%", overhead * 100.0);
+    assert!(
+        overhead <= 0.05,
+        "tracing costs {:.1}% of warm-path throughput (gate: 5%)",
+        overhead * 100.0
+    );
+
+    let json = [
+        "{".to_string(),
+        "  \"bench\": \"hotpath obs\",".to_string(),
+        format!("  \"trees\": {n_trees},"),
+        format!("  \"batch_rows\": {n_rows},"),
+        format!("  \"untraced_rows_per_s\": {:.0},", rps(t_plain_best)),
+        format!("  \"traced_rows_per_s\": {:.0},", rps(t_traced_best)),
+        format!("  \"recording_off_rows_per_s\": {:.0},", rps(t_off_best)),
+        format!("  \"overhead_pct\": {:.2}", overhead * 100.0),
+        "}".to_string(),
+    ]
+    .join("\n")
+        + "\n";
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+    println!();
 }
 
 /// Router hot path: per-request overhead of the shard-routing coordinator

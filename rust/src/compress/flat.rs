@@ -368,6 +368,9 @@ pub struct PlanCache {
     max_bytes: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Cumulative µs spent inside miss-path plan builds (the traced
+    /// predict path reads before/after deltas of this).
+    build_us: AtomicU64,
     evictions: AtomicU64,
     inner: Mutex<PlanCacheInner>,
 }
@@ -379,6 +382,7 @@ impl PlanCache {
             max_bytes: AtomicU64::new(max_bytes),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            build_us: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             inner: Mutex::new(PlanCacheInner {
                 plans: HashMap::new(),
@@ -387,6 +391,19 @@ impl PlanCache {
                 retired: std::collections::HashSet::new(),
             }),
         }
+    }
+
+    /// Current `(hits, misses)` totals — two relaxed atomic loads, cheap
+    /// enough for per-call before/after deltas (the traced predict path
+    /// attributes plan-cache traffic to request spans this way).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative µs spent building plans on cache misses (same
+    /// delta-friendly contract as [`Self::counts`]).
+    pub fn build_us(&self) -> u64 {
+        self.build_us.load(Ordering::Relaxed)
     }
 
     /// Fetch the plan for `(model, tree)`, building (and caching, budget
@@ -409,7 +426,10 @@ impl PlanCache {
         }
         // decode outside the lock: a slow miss must not serialize every
         // other model's lookups behind it
+        let t_build = std::time::Instant::now();
         let plan = Arc::new(build()?);
+        self.build_us
+            .fetch_add(t_build.elapsed().as_micros() as u64, Ordering::Relaxed);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let bytes = plan.heap_bytes() + std::mem::size_of::<FlatTree>() as u64;
         if bytes > self.max_bytes.load(Ordering::Relaxed) {

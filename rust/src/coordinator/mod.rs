@@ -10,9 +10,9 @@
 //!   paper's subscriber-device scenario)
 //! * [`server`]  — a TCP front-end over the store with per-model
 //!   micro-batching and per-connection pipelining: a line protocol
-//!   (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `QUIT`; specified in
-//!   `rust/PROTOCOL.md`) suitable for the end-to-end example and the
-//!   latency benches
+//!   (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `METRICS`, `SLOW`,
+//!   `QUIT`; specified in `rust/PROTOCOL.md`) suitable for the
+//!   end-to-end example and the latency benches
 //! * [`router`]  — the fleet layer: a shard-routing coordinator speaking
 //!   the same protocol downstream and pipelined `PIPE` upstream, with
 //!   rendezvous hashing, hot-key replication, per-backend connection

@@ -42,7 +42,8 @@
 //! `protocol_doc_covers_every_counter` drift guard.
 
 use super::health::{BackendHealth, HealthPolicy, HealthState};
-use super::server::{parse_pipe_reply, wake_accept_loop, Client, PipeReply};
+use super::server::{block_reply, parse_pipe_reply, wake_accept_loop, Client, PipeReply};
+use crate::obs::{Obs, Phase, Span};
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
@@ -78,6 +79,11 @@ pub struct RouterConfig {
     pub health: HealthPolicy,
     /// Seed for the backoff jitter (deterministic fault tests).
     pub seed: u64,
+    /// Routed requests at or above this wall time (µs) retain their trace
+    /// in the router's `SLOW` ring (0 retains everything).
+    pub slow_threshold_us: u64,
+    /// Capacity of the router's slow-request ring.
+    pub trace_ring: usize,
 }
 
 impl Default for RouterConfig {
@@ -94,6 +100,8 @@ impl Default for RouterConfig {
             pool_cap: 8,
             health: HealthPolicy::default(),
             seed: 0x5EED_0007,
+            slow_threshold_us: crate::obs::DEFAULT_SLOW_THRESHOLD_US,
+            trace_ring: crate::obs::DEFAULT_TRACE_RING,
         }
     }
 }
@@ -189,6 +197,9 @@ struct RouterInner {
     unavailable: AtomicU64,
     rng: Mutex<Pcg64>,
     hot: Mutex<HotTracker>,
+    /// Router-role observability: `route_latency_us` histogram, routing
+    /// counters mirrored at `METRICS` time, and the slow-route ring.
+    obs: Obs,
 }
 
 /// The running routing coordinator: accept loop + probe loop + a reader
@@ -229,6 +240,7 @@ impl Router {
                 hot: HashSet::new(),
                 since_refresh: 0,
             }),
+            obs: Obs::for_router(cfg.slow_threshold_us, cfg.trace_ring),
             cfg,
         });
 
@@ -295,6 +307,12 @@ impl Router {
     /// Snapshot the router's serving counters.
     pub fn stats(&self) -> RouterStats {
         self.inner.stats()
+    }
+
+    /// The router's observability hub (metrics registry, `route_latency_us`
+    /// histogram, slow-route ring) — what `METRICS`/`SLOW` expose.
+    pub fn obs(&self) -> &Obs {
+        &self.inner.obs
     }
 
     /// Current health state per backend, in construction order (test hook).
@@ -452,12 +470,28 @@ impl RouterInner {
         client.request("STATS").map(|r| r.starts_with("OK ")).unwrap_or(false)
     }
 
+    /// Stamp a routed request's span (attempt legs, answering backend),
+    /// finish it, and feed the router's [`Obs`] hub — the
+    /// `route_latency_us` histogram and, past the threshold, the `SLOW`
+    /// ring.
+    fn observe_route(&self, mut span: Span, attempts: u32, backend: Option<&str>) {
+        span.attempts = attempts;
+        span.backend = backend.map(str::to_string);
+        span.finish();
+        self.obs.record_latency(span.wall_us(), 1);
+        self.obs.observe(&span);
+    }
+
     /// Route one prediction: walk the replica set in rendezvous order, up
     /// to `max_tries` upstream attempts, jittered backoff after failures.
     /// Transport failures and upstream timeouts count against the
     /// backend's health and fail over; other upstream errors pass through.
+    /// Every routed request leaves a trace span: upstream exchange time is
+    /// charged to the execute phase (accumulating across failover legs),
+    /// and the span records the attempt count and answering backend.
     fn route_predict(&self, model: &str, values: &str) -> RouteOutcome {
         self.note_request(model);
+        let mut span = Span::begin(model);
         let candidates = self.candidates_for(model);
         let primary = candidates.first().copied();
         let mut attempts: u32 = 0;
@@ -477,13 +511,17 @@ impl RouterInner {
                 attempts += 1;
                 let uid = self.uid.fetch_add(1, Ordering::Relaxed);
                 let line = format!("PIPE {uid} PREDICT {model} {values}");
-                match self.exchange_pipe(bi, uid, &line) {
+                let t_x = Instant::now();
+                let exchanged = self.exchange_pipe(bi, uid, &line);
+                span.add(Phase::Execute, t_x.elapsed().as_micros() as u64);
+                match exchanged {
                     Ok(PipeReply::Ok { value, .. }) => {
                         self.backends[bi].health.lock().unwrap().note_success_at(Instant::now());
                         self.routed.fetch_add(1, Ordering::Relaxed);
                         if primary != Some(bi) {
                             self.failovers.fetch_add(1, Ordering::Relaxed);
                         }
+                        self.observe_route(span, attempts, Some(&self.backends[bi].addr_str));
                         return RouteOutcome::Value(value);
                     }
                     Ok(PipeReply::Err { message, .. }) => {
@@ -507,6 +545,7 @@ impl RouterInner {
                             if primary != Some(bi) {
                                 self.failovers.fetch_add(1, Ordering::Relaxed);
                             }
+                            self.observe_route(span, attempts, Some(&self.backends[bi].addr_str));
                             return RouteOutcome::Upstream(message);
                         }
                     }
@@ -527,6 +566,7 @@ impl RouterInner {
             }
         }
         self.unavailable.fetch_add(1, Ordering::Relaxed);
+        self.observe_route(span, attempts, None);
         RouteOutcome::Unavailable
     }
 
@@ -554,6 +594,23 @@ impl RouterInner {
         let joined = names.into_iter().collect::<Vec<_>>().join(" ");
         format!("OK {}", joined).trim_end().to_string()
     }
+}
+
+/// Render the router's `METRICS` exposition: mirror the point-in-time
+/// [`RouterStats`] snapshot into the registry's named counters/gauges,
+/// then expose everything (mirrors, the route phase totals, the
+/// `route_latency_us` histogram) sorted by metric name.
+fn router_metrics_lines(inner: &RouterInner) -> Vec<String> {
+    let s = inner.stats();
+    let reg = inner.obs.registry();
+    reg.set("routed", s.routed);
+    reg.set("retries", s.retries);
+    reg.set("failovers", s.failovers);
+    reg.set("ejections", s.ejections);
+    reg.set("readmissions", s.readmissions);
+    reg.set("unavailable", s.unavailable);
+    reg.set("backends_up", s.backends_up);
+    inner.obs.expose()
 }
 
 /// Write one reply line under the connection's socket-write mutex (shared
@@ -612,6 +669,17 @@ fn handle_router_conn(stream: TcpStream, inner: &Arc<RouterInner>) -> Result<()>
             }
             "LIST" => Some(inner.list_reply()),
             "STATS" => Some(format!("OK {}", router_stats_payload(&inner.stats()))),
+            // METRICS/SLOW answer from the router's own hub — routing
+            // latency and failover legs are exactly what a single backend
+            // cannot see. Multi-line blocks write as one string under the
+            // socket mutex, so concurrent pipelined replies cannot
+            // interleave mid-block.
+            "METRICS" => Some(block_reply(None, &router_metrics_lines(inner))),
+            "SLOW" => match parts.next().map(|t| t.trim().parse::<usize>()) {
+                None => Some(block_reply(None, &inner.obs.ring().dump(usize::MAX))),
+                Some(Ok(n)) => Some(block_reply(None, &inner.obs.ring().dump(n))),
+                Some(Err(_)) => Some("ERR SLOW count must be an unsigned integer".to_string()),
+            },
             "BYTES" => Some("ERR BYTES is not routed (ask a backend directly)".to_string()),
             "QUIT" => break,
             other => Some(format!("ERR unknown verb {other:?}")),
@@ -698,6 +766,29 @@ fn handle_router_pipe(
                 return Some(format!("ERR duplicate id id={id}"));
             }
             Some(format!("OK {id} {}", router_stats_payload(&inner.stats())))
+        }
+        // METRICS/SLOW answer inline like LIST/STATS; the block travels as
+        // one write so it stays contiguous among out-of-order replies
+        "METRICS" => {
+            if inflight.lock().unwrap().contains(&id) {
+                return Some(format!("ERR duplicate id id={id}"));
+            }
+            Some(block_reply(Some(id), &router_metrics_lines(inner)))
+        }
+        "SLOW" => {
+            let n = match tail.trim() {
+                "" => usize::MAX,
+                tok => match tok.parse::<usize>() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Some(format!("ERR SLOW count must be an unsigned integer id={id}"))
+                    }
+                },
+            };
+            if inflight.lock().unwrap().contains(&id) {
+                return Some(format!("ERR duplicate id id={id}"));
+            }
+            Some(block_reply(Some(id), &inner.obs.ring().dump(n)))
         }
         other => Some(format!("ERR unknown pipe verb {other:?} id={id}")),
     }
@@ -786,6 +877,7 @@ mod tests {
                 probe_interval: Duration::from_millis(50),
                 ..HealthPolicy::default()
             },
+            slow_threshold_us: 0, // retain every trace
             ..RouterConfig::default()
         };
         let router = Router::start(&[dead], 0, cfg).unwrap();
@@ -795,6 +887,20 @@ mod tests {
         assert_eq!(reply, "ERR unavailable model=nobody");
         let stats = router.stats();
         assert_eq!(stats.unavailable, 1);
+        // the failed route still left a trace: no backend answered, so the
+        // span records the legs attempted and no backend= annotation
+        let traces = router.obs().ring().dump(10);
+        assert_eq!(traces.len(), 1, "{traces:?}");
+        assert!(traces[0].contains("model=nobody"), "{}", traces[0]);
+        assert!(!traces[0].contains(" backend="), "{}", traces[0]);
+        // SLOW over the wire frames the same ring as a block reply
+        let block = client.request_block("SLOW 5").unwrap();
+        assert_eq!(block.len(), 1, "{block:?}");
+        assert!(block[0].contains("model=nobody"), "{}", block[0]);
+        // METRICS names the routing counters and the latency histogram
+        let metrics = client.request_block("METRICS").unwrap().join("\n");
+        assert!(metrics.contains("unavailable 1"), "{metrics}");
+        assert!(metrics.contains("route_latency_us_count 1"), "{metrics}");
         router.stop();
     }
 }

@@ -3,11 +3,23 @@
 //!
 //! **Wire protocol:** see [`PROTOCOL.md`](../../PROTOCOL.md) (in the
 //! `rust/` crate root) for the complete specification — every verb
-//! (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `QUIT`), the reply and
-//! error-line grammar, ordering guarantees, timeout/backpressure behavior,
-//! and the glossary of every `STATS`/`BYTES` counter. A unit test in this
-//! module (`protocol_doc_covers_every_counter`) keeps that document and the
-//! `STATS` renderer from drifting apart.
+//! (`PREDICT`, `PIPE`, `LIST`, `STATS`, `BYTES`, `PREFETCH`, `METRICS`,
+//! `SLOW`, `QUIT`), the reply and error-line grammar, ordering guarantees,
+//! timeout/backpressure behavior, and the glossary of every
+//! `STATS`/`BYTES`/`METRICS` counter. A unit test in this module
+//! (`protocol_doc_covers_every_counter`) keeps that document, the `STATS`
+//! renderer, and the metrics registry from drifting apart.
+//!
+//! Observability: every request carries a [`Span`] from parse to reply.
+//! The batcher charges batch wait, the traced store call attributes
+//! reload/pack-load/plan/execute time, and the finished span feeds the
+//! store's [`crate::obs::Obs`] hub — phase counters, the
+//! `request_latency_us` histogram behind `STATS`' `p50_us`/`p99_us`, and
+//! the slow-request ring that `SLOW [n]` dumps. `METRICS` (serial or
+//! `PIPE`d) renders the Prometheus-style exposition as a multi-line block
+//! reply: a `OK lines=<n>` header followed by `n` payload lines, written
+//! contiguously under the socket mutex so pipelined replies never
+//! interleave mid-block.
 //!
 //! Connection anatomy (one TCP connection):
 //!
@@ -62,6 +74,7 @@
 
 use super::store::{ModelStore, ObsValue, StoreStats};
 use crate::compress::predict::PredictOne;
+use crate::obs::{BatchTrace, Phase, Span};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -142,6 +155,10 @@ impl Drop for PipeTicket {
 struct Job {
     values: Vec<ObsValue>,
     reply: JobReply,
+    /// The request's trace span: parse (and pipelined admission) already
+    /// charged; the batcher charges batch wait, absorbs the store call's
+    /// phase trace, and observes the span after delivery.
+    span: Span,
 }
 
 /// Per-connection registry of in-flight pipelined requests: admission
@@ -434,6 +451,15 @@ fn batcher_for(
     tx
 }
 
+/// Charge the interval from span start to batch drain — minus the
+/// already-attributed parse/admit phases — as batch wait, so phases stay
+/// non-overlapping.
+fn charge_batch_wait(span: &mut Span, drained: Instant) {
+    let waited = drained.duration_since(span.started()).as_micros() as u64;
+    let pre = span.phase_us(Phase::Parse) + span.phase_us(Phase::Admit);
+    span.add(Phase::BatchWait, waited.saturating_sub(pre));
+}
+
 /// Route a finished prediction to wherever its request came from: the
 /// serial rendezvous channel, or (pipelined) the connection outbox — unless
 /// the id already timed out, in which case the late reply is dropped so one
@@ -500,20 +526,43 @@ fn run_batcher(
             }
         }
         let rows: Vec<Vec<ObsValue>> = jobs.iter().map(|j| j.values.clone()).collect();
-        match store.predict_batch(name, &rows) {
+        let drained = std::time::Instant::now();
+        let obs = store.obs().clone();
+        let mut trace = BatchTrace::default();
+        let result = if obs.enabled() {
+            store.predict_batch_traced(name, &rows, &mut trace)
+        } else {
+            store.predict_batch(name, &rows)
+        };
+        match result {
             Ok(outs) => {
                 for (job, out) in jobs.into_iter().zip(outs) {
-                    deliver(job.reply, Ok(out));
+                    let Job { reply, mut span, .. } = job;
+                    charge_batch_wait(&mut span, drained);
+                    span.absorb(&trace);
+                    let t_w = std::time::Instant::now();
+                    deliver(reply, Ok(out));
+                    span.add(Phase::Write, t_w.elapsed().as_micros() as u64);
+                    span.finish();
+                    obs.observe(&span);
                 }
             }
             Err(e) => {
                 // batch-level failure (e.g. one bad row): answer each
                 // individually so good rows still succeed
                 for job in jobs {
+                    let Job { values, reply, mut span } = job;
+                    charge_batch_wait(&mut span, drained);
+                    let mut solo = BatchTrace::default();
                     let out = store
-                        .predict(name, &job.values)
+                        .predict_traced(name, &values, &mut solo)
                         .map_err(|e| e.to_string());
-                    deliver(job.reply, out);
+                    span.absorb(&solo);
+                    let t_w = std::time::Instant::now();
+                    deliver(reply, out);
+                    span.add(Phase::Write, t_w.elapsed().as_micros() as u64);
+                    span.finish();
+                    obs.observe(&span);
                 }
                 let _ = e; // recorded via per-row errors
             }
@@ -665,12 +714,15 @@ fn handle_line(
     tracker: &Arc<PipeTracker>,
     out_tx: &Sender<String>,
 ) -> Result<Handled> {
+    let t0 = Instant::now();
     let mut parts = line.trim().splitn(3, ' ');
     match parts.next().unwrap_or("") {
         "PREDICT" => {
             let model = parts.next().context("PREDICT needs a model name")?;
             let values = parse_values(parts.next().context("PREDICT needs values")?)?;
-            let reply = serial_predict(model, values, store, batchers, shutdown, tracker);
+            let mut span = Span::begin_at(t0, model);
+            span.add(Phase::Parse, t0.elapsed().as_micros() as u64);
+            let reply = serial_predict(model, values, span, store, batchers, shutdown, tracker);
             Ok(Handled::Reply(reply))
         }
         "PIPE" => {
@@ -687,13 +739,25 @@ fn handle_line(
             };
             // an admission error answers now, directly; a dispatched job
             // answers later through the outbox
-            match pipe_dispatch(id, rest, store, batchers, shutdown, tracker, out_tx) {
+            match pipe_dispatch(id, rest, t0, store, batchers, shutdown, tracker, out_tx) {
                 Some(err) => Ok(Handled::Reply(err)),
                 None => Ok(Handled::Dispatched),
             }
         }
         "LIST" => Ok(Handled::Reply(format!("OK {}", store.names().join(" ")))),
         "STATS" => Ok(Handled::Reply(stats_line(&store.stats()))),
+        "METRICS" => Ok(Handled::Reply(block_reply(None, &metrics_lines(store)))),
+        "SLOW" => {
+            let n = match parts.next() {
+                None => usize::MAX,
+                Some(tok) => tok
+                    .trim()
+                    .parse()
+                    .ok()
+                    .context("SLOW count must be an unsigned integer")?,
+            };
+            Ok(Handled::Reply(block_reply(None, &store.obs().ring().dump(n))))
+        }
         "PREFETCH" => {
             let model = parts.next().context("PREFETCH needs a model name")?;
             Ok(Handled::Reply(match prefetch_line(model, store) {
@@ -719,6 +783,7 @@ fn handle_line(
 fn serial_predict(
     model: &str,
     values: Vec<ObsValue>,
+    span: Span,
     store: &Arc<ModelStore>,
     batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
@@ -731,10 +796,19 @@ fn serial_predict(
     }
     let (rtx, rrx) = channel();
     let q = batcher_for(model, store, batchers, shutdown);
-    let out = match q.send(Job { values: values.clone(), reply: JobReply::Sync(rtx) }) {
+    let out = match q.send(Job { values: values.clone(), reply: JobReply::Sync(rtx), span }) {
         // batcher already retired (model evicted or re-inserted in the
-        // same instant): answer directly from the store
-        Err(_) => store.predict(model, &values).map_err(|e| e.to_string()),
+        // same instant): answer directly from the store — the failed send
+        // hands the job (and its span) back for direct observation
+        Err(std::sync::mpsc::SendError(job)) => {
+            let mut span = job.span;
+            let mut trace = BatchTrace::default();
+            let out = store.predict_traced(model, &values, &mut trace).map_err(|e| e.to_string());
+            span.absorb(&trace);
+            span.finish();
+            store.obs().observe(&span);
+            out
+        }
         Ok(()) => match rrx.recv_timeout(tracker.timeout) {
             Ok(out) => out,
             // the batcher retired with our job still queued; its queue (and
@@ -764,6 +838,7 @@ fn serial_predict(
 fn pipe_dispatch(
     id: u64,
     rest: &str,
+    t0: Instant,
     store: &Arc<ModelStore>,
     batchers: &Arc<Batchers>,
     shutdown: &Arc<AtomicBool>,
@@ -774,22 +849,37 @@ fn pipe_dispatch(
     let verb = parts.next().unwrap_or("");
     match verb {
         "PREDICT" => {}
-        // LIST/STATS are store reads with no batcher leg: admit them like
-        // any pipelined request (cap, duplicate ids, the `inflight` gauge),
-        // answer immediately, and route the reply through the outbox so it
-        // joins the writer thread's reply stream instead of the reader
-        // jumping the queue with a direct socket write
-        "LIST" | "STATS" => {
+        // LIST/STATS/METRICS/SLOW are store reads with no batcher leg:
+        // admit them like any pipelined request (cap, duplicate ids, the
+        // `inflight` gauge), answer immediately, and route the reply
+        // through the outbox so it joins the writer thread's reply stream
+        // instead of the reader jumping the queue with a direct socket
+        // write. Multi-line replies (METRICS/SLOW) travel as one outbox
+        // string, so the block stays contiguous in the stream.
+        "LIST" | "STATS" | "METRICS" | "SLOW" => {
+            // argument errors are checked before admission, like PREDICT's
+            // unknown-model check
+            let slow_n = match (verb, parts.next()) {
+                ("SLOW", Some(tok)) => match tok.trim().parse::<usize>() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Some(format!("ERR SLOW count must be an unsigned integer id={id}"))
+                    }
+                },
+                _ => usize::MAX,
+            };
             let generation = match tracker.admit(id) {
                 Admit::Busy => return Some(format!("ERR busy id={id}")),
                 Admit::Duplicate => return Some(format!("ERR duplicate id id={id}")),
                 Admit::Ok(generation) => generation,
             };
-            let payload = match verb {
-                "LIST" => store.names().join(" "),
-                _ => stats_payload(&store.stats()),
+            let line = match verb {
+                "LIST" => format!("OK {id} {}", store.names().join(" ")),
+                "STATS" => format!("OK {id} {}", stats_payload(&store.stats())),
+                "METRICS" => block_reply(Some(id), &metrics_lines(store)),
+                _ => block_reply(Some(id), &store.obs().ring().dump(slow_n)),
             };
-            tracker.finish_and_send(id, generation, out_tx, format!("OK {id} {payload}"));
+            tracker.finish_and_send(id, generation, out_tx, line);
             return None;
         }
         // PREFETCH is a fast acknowledgment (the warm-up itself runs on a
@@ -814,7 +904,7 @@ fn pipe_dispatch(
         }
         other => {
             return Some(format!(
-                "ERR PIPE supports only PREDICT, LIST, STATS, and PREFETCH, \
+                "ERR PIPE supports only PREDICT, LIST, STATS, PREFETCH, METRICS, and SLOW, \
                  got {other:?} id={id}"
             ))
         }
@@ -830,11 +920,15 @@ fn pipe_dispatch(
     if !store.contains(model) {
         return Some(format!("ERR unknown model {model:?} id={id}"));
     }
+    let mut span = Span::begin_at(t0, model);
+    span.add(Phase::Parse, t0.elapsed().as_micros() as u64);
+    let t_admit = Instant::now();
     let generation = match tracker.admit(id) {
         Admit::Busy => return Some(format!("ERR busy id={id}")),
         Admit::Duplicate => return Some(format!("ERR duplicate id id={id}")),
         Admit::Ok(generation) => generation,
     };
+    span.add(Phase::Admit, t_admit.elapsed().as_micros() as u64);
     let reply = JobReply::Pipe(PipeTicket {
         id,
         generation,
@@ -842,15 +936,22 @@ fn pipe_dispatch(
         tracker: tracker.clone(),
     });
     let q = batcher_for(model, store, batchers, shutdown);
-    match q.send(Job { values, reply }) {
+    match q.send(Job { values, reply, span }) {
         Ok(()) => {}
         // batcher already retired (model evicted or re-inserted in the same
         // instant): answer directly from the store — the failed send hands
         // the job back, so no up-front clone is needed — through the
         // tracker so the in-flight accounting stays balanced
         Err(std::sync::mpsc::SendError(job)) => {
-            let out = store.predict(model, &job.values).map_err(|e| e.to_string());
-            deliver(job.reply, out);
+            let Job { values, reply, mut span } = job;
+            let mut trace = BatchTrace::default();
+            let out = store.predict_traced(model, &values, &mut trace).map_err(|e| e.to_string());
+            span.absorb(&trace);
+            let t_w = Instant::now();
+            deliver(reply, out);
+            span.add(Phase::Write, t_w.elapsed().as_micros() as u64);
+            span.finish();
+            store.obs().observe(&span);
         }
     }
     None
@@ -884,6 +985,49 @@ fn stats_line(s: &StoreStats) -> String {
     format!("OK {}", stats_payload(s))
 }
 
+/// Frame a multi-line reply (`METRICS`, `SLOW`) as one wire string:
+/// `OK lines=<n>` (or `OK <id> lines=<n>` pipelined) followed by the
+/// payload lines. Sending the whole block as a single write keeps it
+/// contiguous in the reply stream — serial writes hold the socket mutex,
+/// pipelined blocks travel as one outbox message.
+pub(crate) fn block_reply(id: Option<u64>, lines: &[String]) -> String {
+    let header = match id {
+        Some(id) => format!("OK {id} lines={}", lines.len()),
+        None => format!("OK lines={}", lines.len()),
+    };
+    if lines.is_empty() {
+        header
+    } else {
+        format!("{header}\n{}", lines.join("\n"))
+    }
+}
+
+/// Render the `METRICS` exposition: mirror the point-in-time
+/// [`StoreStats`] snapshot into the registry's named counters/gauges, then
+/// expose everything (mirrors, phase totals, latency histogram) sorted by
+/// metric name.
+fn metrics_lines(store: &Arc<ModelStore>) -> Vec<String> {
+    let s = store.stats();
+    let obs = store.obs();
+    let reg = obs.registry();
+    reg.set("requests", s.requests);
+    reg.set("batches", s.batches);
+    reg.set("evictions", s.evictions);
+    reg.set("spills", s.spills);
+    reg.set("reloads", s.reloads);
+    reg.set("spill_bytes", s.spill_bytes);
+    reg.set("plan_hits", s.plan_hits);
+    reg.set("plan_misses", s.plan_misses);
+    reg.set("pack_loads", s.pack_loads);
+    reg.set("pack_releases", s.pack_releases);
+    reg.set("inflight", s.inflight);
+    reg.set("rejected_busy", s.rejected_busy);
+    reg.set("timeouts", s.timeouts);
+    reg.set("prefetches", s.prefetches);
+    reg.set("admission_rejects", s.admission_rejects);
+    obs.expose()
+}
+
 /// The `STATS` counter list — shared by the serial reply (`OK <counters>`)
 /// and the pipelined one (`OK <id> <counters>`).
 /// `StoreStats::mean_latency_us` guards the empty window (zero recorded
@@ -892,13 +1036,15 @@ fn stats_line(s: &StoreStats) -> String {
 /// `protocol_doc_covers_every_counter` test enforces it.
 fn stats_payload(s: &StoreStats) -> String {
     format!(
-        "requests={} batches={} mean_us={} max_us={} evictions={} \
+        "requests={} batches={} mean_us={} p50_us={} p99_us={} max_us={} evictions={} \
          spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
          pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={} \
          prefetches={} admission_rejects={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
+        s.p50_latency_us,
+        s.p99_latency_us,
         s.max_latency_us,
         s.evictions,
         s.spills,
@@ -1080,6 +1226,29 @@ impl Client {
     pub fn collect_pipelined(&mut self, n: usize) -> Result<Vec<PipeReply>> {
         (0..n).map(|_| self.recv_pipelined()).collect()
     }
+
+    /// Round trip for a multi-line verb (`METRICS`, `SLOW [n]`): send the
+    /// request and read the framed block.
+    pub fn request_block(&mut self, line: &str) -> Result<Vec<String>> {
+        self.send(line)?;
+        self.recv_block()
+    }
+
+    /// Read one `OK [id] lines=<n>` header plus its `n` payload lines.
+    pub fn recv_block(&mut self) -> Result<Vec<String>> {
+        let header = self.recv()?;
+        if !header.starts_with("OK ") {
+            bail!("expected a block header, got {header:?}");
+        }
+        let n: usize = header
+            .split_whitespace()
+            .find_map(|t| t.strip_prefix("lines="))
+            .with_context(|| format!("block header carries no lines= token: {header:?}"))?
+            .parse()
+            .ok()
+            .with_context(|| format!("unparseable lines= count in {header:?}"))?;
+        (0..n).map(|_| self.recv()).collect()
+    }
 }
 
 /// Decode one pipelined reply line (see [`PipeReply`] for the grammar).
@@ -1117,6 +1286,7 @@ mod tests {
         let line = stats_line(&StoreStats::default());
         assert!(line.starts_with("OK requests=0"), "{line}");
         assert!(line.contains("mean_us=0"), "{line}");
+        assert!(line.contains("p50_us=0") && line.contains("p99_us=0"), "{line}");
         assert!(line.contains("plan_hits=0") && line.contains("plan_misses=0"), "{line}");
         assert!(
             line.contains("spills=0") && line.contains("reloads=0")
@@ -1252,18 +1422,18 @@ mod tests {
         let tracker = Arc::new(PipeTracker::new(store.clone(), &ServerConfig::default()));
         let (tx, rx) = channel::<String>();
         // PIPE LIST: admitted (None = no direct reply), answered via outbox
-        assert!(pipe_dispatch(4, "LIST", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        assert!(pipe_dispatch(4, "LIST", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx).is_none());
         let line = rx.try_recv().expect("LIST reply reaches the outbox");
         assert!(line.starts_with("OK 4"), "{line}");
         assert_eq!(parse_pipe_reply(&line).unwrap().id(), Some(4));
         // PIPE STATS: the counters follow the id, same keys as serial STATS
-        assert!(pipe_dispatch(5, "STATS", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        assert!(pipe_dispatch(5, "STATS", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx).is_none());
         let line = rx.try_recv().expect("STATS reply reaches the outbox");
         assert!(line.starts_with("OK 5 requests="), "{line}");
         // both retired on the spot: the in-flight gauge is balanced and the
         // ids are immediately reusable
         assert_eq!(store.stats().inflight, 0);
-        assert!(pipe_dispatch(4, "STATS", &store, &batchers, &shutdown, &tracker, &tx).is_none());
+        assert!(pipe_dispatch(4, "STATS", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx).is_none());
         assert!(rx.try_recv().is_ok());
         // a duplicate in-flight id is still refused before dispatch
         let g = match tracker.admit(9) {
@@ -1271,14 +1441,14 @@ mod tests {
             _ => panic!("admit 9"),
         };
         assert_eq!(
-            pipe_dispatch(9, "LIST", &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
+            pipe_dispatch(9, "LIST", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
             Some("ERR duplicate id id=9")
         );
         assert!(tracker.finish_and_send(9, g, &tx, "OK 9 done".into()));
         let _ = rx.try_recv();
         // BYTES (and anything else) stays serial-only
         let err =
-            pipe_dispatch(6, "BYTES resident", &store, &batchers, &shutdown, &tracker, &tx)
+            pipe_dispatch(6, "BYTES resident", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx)
                 .expect("BYTES is not pipelinable");
         assert!(err.contains("id=6"), "{err}");
         assert!(err.contains("LIST"), "the error names the supported verbs: {err}");
@@ -1293,7 +1463,7 @@ mod tests {
         let (tx, rx) = channel::<String>();
         // unknown model: admitted, answered with a typed error, retired
         assert!(
-            pipe_dispatch(3, "PREFETCH ghost", &store, &batchers, &shutdown, &tracker, &tx)
+            pipe_dispatch(3, "PREFETCH ghost", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx)
                 .is_none()
         );
         let line = rx.try_recv().expect("PREFETCH reply reaches the outbox");
@@ -1302,7 +1472,7 @@ mod tests {
         assert_eq!(store.stats().inflight, 0, "retired on the spot");
         // a missing argument is refused before admission, id attributed
         assert_eq!(
-            pipe_dispatch(4, "PREFETCH", &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
+            pipe_dispatch(4, "PREFETCH", Instant::now(), &store, &batchers, &shutdown, &tracker, &tx).as_deref(),
             Some("ERR PREFETCH needs a model name id=4")
         );
         // the serial arm shares the same helper and error surface
@@ -1340,13 +1510,42 @@ mod tests {
                 "router STATS counter `{key}` is missing from rust/PROTOCOL.md"
             );
         }
+        // every metric the METRICS exposition can emit must be in the
+        // glossary too — both roles' registries (store and router)
+        for name in crate::obs::Obs::for_store(1, 1)
+            .registry()
+            .names()
+            .into_iter()
+            .chain(crate::obs::Obs::for_router(1, 1).registry().names())
+        {
+            assert!(
+                doc.contains(&format!("`{name}`")),
+                "METRICS metric `{name}` is missing from rust/PROTOCOL.md"
+            );
+        }
         // and every verb is specified
-        for verb in ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "PREFETCH", "QUIT"] {
+        for verb in
+            ["PREDICT", "PIPE", "LIST", "STATS", "BYTES", "PREFETCH", "METRICS", "SLOW", "QUIT"]
+        {
             assert!(
                 doc.contains(&format!("`{verb}`")),
                 "verb `{verb}` is missing from rust/PROTOCOL.md"
             );
         }
+    }
+
+    #[test]
+    fn block_reply_frames_header_and_lines() {
+        assert_eq!(block_reply(None, &[]), "OK lines=0");
+        assert_eq!(block_reply(Some(7), &[]), "OK 7 lines=0");
+        let lines = vec!["a 1".to_string(), "b 2".to_string()];
+        assert_eq!(block_reply(None, &lines), "OK lines=2\na 1\nb 2");
+        assert_eq!(block_reply(Some(3), &lines), "OK 3 lines=2\na 1\nb 2");
+        // the pipelined shape still parses as a pipe reply (id first)
+        assert_eq!(
+            parse_pipe_reply(block_reply(Some(3), &[]).as_str()).unwrap().id(),
+            Some(3)
+        );
     }
 
     #[test]

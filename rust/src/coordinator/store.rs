@@ -50,6 +50,7 @@ use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
+use crate::obs::{BatchTrace, Obs};
 use crate::pack::PackArchive;
 use crate::util::mmap::Mmap;
 use anyhow::{bail, Context, Result};
@@ -127,6 +128,13 @@ pub struct StoreStats {
     /// resident tier because the LRU victim they would have displaced was
     /// estimated hotter (always 0 under the `lru` policy).
     pub admission_rejects: u64,
+    /// Median per-request latency in µs, read from the store's live
+    /// request histogram at snapshot time (bucket upper edge, ≤ 12.5%
+    /// relative error; 0 until the first request).
+    pub p50_latency_us: u64,
+    /// 99th-percentile per-request latency in µs (same source and
+    /// precision as [`StoreStats::p50_latency_us`]).
+    pub p99_latency_us: u64,
 }
 
 impl StoreStats {
@@ -231,6 +239,9 @@ pub struct ModelStore {
     /// [`AdmissionPolicy::TinyLfu`]. Request-path lookups touch it; budget
     /// enforcement compares candidate-vs-victim estimates through it.
     sketch: Option<Mutex<FrequencySketch>>,
+    /// Observability hub: request-latency histogram, mirrored counters,
+    /// and the slow-request ring. The server reads it for `METRICS`/`SLOW`.
+    obs: Arc<Obs>,
 }
 
 /// Source of per-store [`ModelStore::spill_token`] values.
@@ -283,7 +294,31 @@ impl ModelStore {
             plans: Arc::new(PlanCache::new(plan_cap)),
             admission: AdmissionPolicy::Lru,
             sketch: None,
+            obs: Arc::new(Obs::for_store(
+                crate::obs::DEFAULT_SLOW_THRESHOLD_US,
+                crate::obs::DEFAULT_TRACE_RING,
+            )),
         }
+    }
+
+    /// Builder: wall-time threshold (µs) past which a finished request
+    /// span is retained in the slow ring (`--slow-threshold-us`; 0 retains
+    /// every traced request).
+    pub fn slow_threshold_us(self, us: u64) -> Self {
+        self.obs.set_slow_threshold_us(us);
+        self
+    }
+
+    /// Builder: slow-ring capacity (`--trace-ring N`; 0 disables
+    /// retention). Rebuilds the hub, so call before handing the store out.
+    pub fn trace_ring(mut self, cap: usize) -> Self {
+        self.obs = Arc::new(Obs::for_store(self.obs.slow_threshold_us(), cap));
+        self
+    }
+
+    /// The store's observability hub (`METRICS`/`SLOW` read through this).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Builder: worker threads handed to each model's batch predictor.
@@ -1084,6 +1119,8 @@ impl ModelStore {
         s.spill_bytes = self.spilled.load(Ordering::Relaxed);
         s.packed_bytes = self.packed.load(Ordering::Relaxed);
         s.inflight = self.inflight.load(Ordering::Relaxed);
+        s.p50_latency_us = self.obs.request_us().quantile(0.50);
+        s.p99_latency_us = self.obs.request_us().quantile(0.99);
         s
     }
 
@@ -1226,32 +1263,70 @@ impl ModelStore {
         }
         let start = std::time::Instant::now();
         let stored = self.get(model)?;
-        let flat: Vec<ObsValue> = rows.iter().flatten().copied().collect();
-        let ds = row_dataset(&stored.predictor, &flat, rows.len())?;
-        // batched path decodes each tree once when the batch is large enough
-        // to amortize it; small batches use the per-row prefix decode
-        let out = if rows.len() >= 8 {
-            match stored.predictor.predict_all(&ds)? {
-                crate::forest::forest::Predictions::Classes(cs) => {
-                    cs.into_iter().map(PredictOne::Class).collect()
-                }
-                crate::forest::forest::Predictions::Values(vs) => {
-                    vs.into_iter().map(PredictOne::Value).collect()
-                }
-            }
-        } else {
-            (0..rows.len())
-                .map(|r| stored.predictor.predict_row(&ds, r))
-                .collect::<Result<Vec<_>>>()?
-        };
+        let out = execute_rows(&stored, rows)?;
         self.record(start.elapsed().as_micros() as u64, rows.len() as u64, 1);
         Ok(out)
     }
 
+    /// [`Self::predict_batch`] with phase attribution: the lookup's cost
+    /// lands in `trace.reload_us` or `trace.pack_load_us` according to the
+    /// tier the model occupied when the call started (a warm model charges
+    /// neither), traversal in `trace.execute_us`, and plan-cache traffic
+    /// as a before/after delta of the shared cache counters (approximate
+    /// under concurrency — see [`BatchTrace`]). Same outputs and `STATS`
+    /// accounting as the untraced path.
+    pub fn predict_batch_traced(
+        &self,
+        model: &str,
+        rows: &[Vec<ObsValue>],
+        trace: &mut BatchTrace,
+    ) -> Result<Vec<PredictOne>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let start = std::time::Instant::now();
+        let spilled = self.is_spilled(model);
+        let packed = !spilled && self.is_packed(model);
+        let (h0, m0) = self.plans.counts();
+        let b0 = self.plans.build_us();
+        let stored = self.get(model)?;
+        let get_us = start.elapsed().as_micros() as u64;
+        if spilled {
+            trace.reload_us += get_us;
+        } else if packed {
+            trace.pack_load_us += get_us;
+        }
+        let t_exec = std::time::Instant::now();
+        let out = execute_rows(&stored, rows)?;
+        trace.execute_us += t_exec.elapsed().as_micros() as u64;
+        let (h1, m1) = self.plans.counts();
+        trace.plan_hits += h1.saturating_sub(h0);
+        trace.plan_misses += m1.saturating_sub(m0);
+        trace.plan_us += self.plans.build_us().saturating_sub(b0);
+        self.record(start.elapsed().as_micros() as u64, rows.len() as u64, 1);
+        Ok(out)
+    }
+
+    /// [`Self::predict`] with phase attribution — one row through the
+    /// traced batch path.
+    pub fn predict_traced(
+        &self,
+        model: &str,
+        values: &[ObsValue],
+        trace: &mut BatchTrace,
+    ) -> Result<PredictOne> {
+        let rows = [values.to_vec()];
+        let mut out = self.predict_batch_traced(model, &rows, trace)?;
+        Ok(out.pop().expect("one row in, one prediction out"))
+    }
+
     /// Per-request latency accounting: `us` is the wall time every one of
     /// the `requests` in this batch waited, so it is charged once per
-    /// request (see [`StoreStats`]).
+    /// request (see [`StoreStats`]). The same per-request charge feeds the
+    /// live `request_latency_us` histogram behind `p50_us`/`p99_us` and
+    /// the `METRICS` exposition.
     fn record(&self, us: u64, requests: u64, batches: u64) {
+        self.obs.record_latency(us, requests);
         let mut s = self.stats.lock().unwrap();
         s.requests += requests;
         s.batches += batches;
@@ -1281,6 +1356,28 @@ impl Drop for ModelStore {
                 }
             }
         }
+    }
+}
+
+/// Shared execute step of the (traced and untraced) batch paths: one
+/// schema check, then either the batched per-tree decode (large enough to
+/// amortize it) or the per-row prefix decode.
+fn execute_rows(stored: &StoredModel, rows: &[Vec<ObsValue>]) -> Result<Vec<PredictOne>> {
+    let flat: Vec<ObsValue> = rows.iter().flatten().copied().collect();
+    let ds = row_dataset(&stored.predictor, &flat, rows.len())?;
+    if rows.len() >= 8 {
+        Ok(match stored.predictor.predict_all(&ds)? {
+            crate::forest::forest::Predictions::Classes(cs) => {
+                cs.into_iter().map(PredictOne::Class).collect()
+            }
+            crate::forest::forest::Predictions::Values(vs) => {
+                vs.into_iter().map(PredictOne::Value).collect()
+            }
+        })
+    } else {
+        (0..rows.len())
+            .map(|r| stored.predictor.predict_row(&ds, r))
+            .collect::<Result<Vec<_>>>()
     }
 }
 

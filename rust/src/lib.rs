@@ -36,6 +36,9 @@
 //!   a health-checked shard router fanning one protocol out over a fleet
 //! * [`pack`]   — `RFPK` model packs: many-tenant archives with shared
 //!   cross-forest codebooks, served zero-copy as the store's third tier
+//! * [`obs`]    — in-process observability: lock-free metrics registry,
+//!   per-request phase spans, and the slow-request ring behind the
+//!   `METRICS`/`SLOW` verbs
 //! * [`util`]   — RNG, stats, CLI, thread pool
 //! * [`testing`] — in-tree property-testing mini-framework and the
 //!   deterministic fault-injection proxy behind the partition tests
@@ -65,6 +68,7 @@ pub mod data;
 pub mod forest;
 pub mod lossy;
 pub mod model;
+pub mod obs;
 pub mod pack;
 pub mod runtime;
 pub mod testing;

@@ -77,9 +77,11 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
              [--admission lru|tinylfu]
              [--inflight-cap N] [--request-timeout-ms MS]
+             [--slow-threshold-us US] [--trace-ring N]
   serve      --route --backends H:P[,H:P...] [--port P] [--replication R]
              [--hot-k K] [--max-tries N] [--probe-interval-ms MS]
              [--request-timeout-ms MS] [--inflight-cap N]
+             [--slow-threshold-us US] [--trace-ring N]
   loadgen    [--scenario NAME[,NAME...]|all] [--seed S] [--quick]
              [--tenants N] [--requests N] [--rate RPS] [--zipf-s Z]
              [--hot-set K] [--cohort C] [--admission lru|tinylfu]
@@ -394,6 +396,26 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
+    // observability knobs: the slow-request retention threshold and the
+    // trace-ring capacity behind the SLOW verb (see rust/OPERATIONS.md)
+    if let Some(s) = args.get("slow-threshold-us") {
+        match s.parse::<u64>() {
+            Ok(us) => store = store.slow_threshold_us(us),
+            Err(_) => {
+                eprintln!("serve: --slow-threshold-us expects a microsecond count, got {s:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("trace-ring") {
+        match s.parse::<usize>() {
+            Ok(n) => store = store.trace_ring(n),
+            Err(_) => {
+                eprintln!("serve: --trace-ring expects a capacity, got {s:?}");
+                return 2;
+            }
+        }
+    }
     let store = Arc::new(store);
     let mut coord = coordinator(args);
     for key in &keys {
@@ -498,12 +520,17 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     println!(
         "protocol: PREDICT <model> <v1,v2,...> | PIPE <id> PREDICT ... | LIST | STATS \
-         | BYTES | QUIT  (see rust/PROTOCOL.md)"
+         | BYTES | METRICS | SLOW | QUIT  (see rust/PROTOCOL.md)"
     );
     println!(
         "pipelining: up to {} in flight per connection, {} ms request timeout",
         server_cfg.inflight_cap,
         server_cfg.request_timeout.as_millis()
+    );
+    println!(
+        "tracing: requests ≥ {} µs retained in a {}-entry SLOW ring",
+        store.obs().slow_threshold_us(),
+        store.obs().ring().capacity()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -578,6 +605,26 @@ fn cmd_serve_route(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(s) = args.get("slow-threshold-us") {
+        match s.parse::<u64>() {
+            Ok(us) => cfg.slow_threshold_us = us,
+            Err(_) => {
+                eprintln!(
+                    "serve --route: --slow-threshold-us expects a microsecond count, got {s:?}"
+                );
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("trace-ring") {
+        match s.parse::<usize>() {
+            Ok(n) => cfg.trace_ring = n,
+            Err(_) => {
+                eprintln!("serve --route: --trace-ring expects a capacity, got {s:?}");
+                return 2;
+            }
+        }
+    }
     let probe_ms = cfg.health.probe_interval.as_millis();
     let (replication, hot_k, max_tries) = (cfg.replication, cfg.hot_k, cfg.max_tries);
     let router = match Router::start(&addrs, port, cfg) {
@@ -598,7 +645,7 @@ fn cmd_serve_route(args: &Args) -> i32 {
         probe_ms
     );
     println!(
-        "protocol: PREDICT | PIPE <id> PREDICT ... | LIST | STATS | QUIT \
+        "protocol: PREDICT | PIPE <id> PREDICT ... | LIST | STATS | METRICS | SLOW | QUIT \
          (routed; see rust/PROTOCOL.md § Routing)"
     );
     loop {
@@ -1507,6 +1554,7 @@ mod tests {
             "BENCH_stages.json",
             "BENCH_route.json",
             "BENCH_loadgen.json",
+            "BENCH_obs.json",
         ] {
             assert!(ops.contains(bench), "rust/OPERATIONS.md must explain {bench}");
         }

@@ -1,0 +1,370 @@
+//! Lock-free metrics primitives: an atomic log-bucketed latency
+//! [`Histogram`] and a sharded name → metric [`Registry`].
+//!
+//! Registration happens once, at hub construction (cold path); callers
+//! hold the returned `Arc` handles and increment plain atomics, so the
+//! request hot path never touches the shard maps. The registry exists for
+//! the cold paths: [`Registry::names`] feeds the protocol-doc drift guard
+//! and [`Registry::expose`] renders the Prometheus-style text the
+//! `METRICS` verb ships.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// 8 exact buckets + 8 per power-of-two region up to `2^63`.
+const BUCKETS: usize = 8 * 62;
+
+/// Log-bucketed latency histogram: exact below 8 µs, then eight
+/// sub-buckets per power of two (≤ 12.5% relative bucket width) — compact
+/// enough to share across threads, fine enough for honest p99s. Every
+/// cell is an atomic, so recording takes `&self` and no lock; this is the
+/// shared home of the histogram the loadgen client and the server-side
+/// request/route timers all use.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(v: u64) -> usize {
+        if v < 8 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        8 * (msb - 2) + ((v >> (msb - 3)) & 7) as usize
+    }
+
+    /// Upper edge of the bucket (conservative for tail quantiles).
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < 8 {
+            return idx as u64;
+        }
+        let msb = idx / 8 + 2;
+        let sub = (idx % 8) as u64;
+        ((8 + sub) << (msb - 3)) + (1 << (msb - 3)) - 1
+    }
+
+    /// Record one latency observation (µs).
+    pub fn record(&self, us: u64) {
+        self.record_n(us, 1);
+    }
+
+    /// Record `n` observations of the same value — a completed batch
+    /// charges every member request the batch latency in one call.
+    pub fn record_n(&self, us: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[Self::bucket_of(us)].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded observation (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`), reported at its bucket's
+    /// upper edge and capped at the exact max. Returns 0 when empty.
+    /// Concurrent recording can skew a readout by the in-flight samples;
+    /// the readout is for monitoring, not accounting.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let max = self.max();
+        let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i).min(max);
+            }
+        }
+        max
+    }
+
+    /// Occupied buckets as `(upper_edge_us, count)` pairs, ascending by
+    /// edge — the exposition renders cumulative `_bucket{le=...}` rows
+    /// from these.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((Self::bucket_value(i), c))
+            })
+            .collect()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One registered metric: the variant fixes the exposition `# TYPE`.
+#[derive(Clone)]
+pub enum Metric {
+    /// Monotonically increasing count.
+    Counter(Arc<AtomicU64>),
+    /// Point-in-time level (can go down).
+    Gauge(Arc<AtomicU64>),
+    /// Latency distribution.
+    Histogram(Arc<Histogram>),
+}
+
+const SHARDS: usize = 8;
+
+/// FNV-1a over the metric name — stable and dependency-free.
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % SHARDS as u64) as usize
+}
+
+/// Sharded name → metric map. Handles are registered once and held by
+/// their owners; by-name lookups (registration, exposition-time mirrors)
+/// take one shard's lock and never contend with increments.
+pub struct Registry {
+    shards: Vec<RwLock<BTreeMap<String, Metric>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Registry {
+        Registry {
+            shards: (0..SHARDS).map(|_| RwLock::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    /// Register (or fetch) the counter named `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut shard = self.shards[shard_of(name)].write().unwrap();
+        let m = shard
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(AtomicU64::new(0))));
+        match m {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) the gauge named `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn gauge(&self, name: &str) -> Arc<AtomicU64> {
+        let mut shard = self.shards[shard_of(name)].write().unwrap();
+        let m = shard
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(AtomicU64::new(0))));
+        match m {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) the histogram named `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut shard = self.shards[shard_of(name)].write().unwrap();
+        let m = shard
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match m {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with a different type"),
+        }
+    }
+
+    /// Store `value` into the counter or gauge named `name`, if
+    /// registered. Exposition-time mirror for stats an existing struct
+    /// (e.g. `StoreStats`) still owns — histograms are not settable.
+    pub fn set(&self, name: &str, value: u64) {
+        let shard = self.shards[shard_of(name)].read().unwrap();
+        match shard.get(name) {
+            Some(Metric::Counter(c)) | Some(Metric::Gauge(c)) => {
+                c.store(value, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    /// Every registered metric name, sorted — the protocol-doc drift
+    /// guard iterates this.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.read().unwrap().keys().cloned());
+        }
+        out.sort();
+        out
+    }
+
+    /// Render the Prometheus-style text exposition, one element per
+    /// output line: a `# TYPE` comment per metric, `name value` samples
+    /// for counters and gauges, and for histograms the cumulative
+    /// `_bucket{le="..."}` rows (occupied buckets plus `+Inf`), `_count`,
+    /// `_max`, and `{quantile="..."}` readouts for p50/p95/p99.
+    pub fn expose(&self) -> Vec<String> {
+        let mut metrics: Vec<(String, Metric)> = Vec::new();
+        for shard in &self.shards {
+            for (name, m) in shard.read().unwrap().iter() {
+                metrics.push((name.clone(), m.clone()));
+            }
+        }
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = Vec::new();
+        for (name, m) in &metrics {
+            match m {
+                Metric::Counter(c) => {
+                    out.push(format!("# TYPE {name} counter"));
+                    out.push(format!("{name} {}", c.load(Ordering::Relaxed)));
+                }
+                Metric::Gauge(g) => {
+                    out.push(format!("# TYPE {name} gauge"));
+                    out.push(format!("{name} {}", g.load(Ordering::Relaxed)));
+                }
+                Metric::Histogram(h) => {
+                    out.push(format!("# TYPE {name} histogram"));
+                    let mut cum = 0u64;
+                    for (edge, c) in h.nonzero_buckets() {
+                        cum += c;
+                        out.push(format!("{name}_bucket{{le=\"{edge}\"}} {cum}"));
+                    }
+                    out.push(format!("{name}_bucket{{le=\"+Inf\"}} {}", h.count()));
+                    out.push(format!("{name}_count {}", h.count()));
+                    out.push(format!("{name}_max {}", h.max()));
+                    for (q, label) in [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                        out.push(format!(
+                            "{name}{{quantile=\"{label}\"}} {}",
+                            h.quantile(q)
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Moved here with the histogram from `testing/loadgen.rs`: quantiles
+    /// land within one bucket width of the exact rank and stay ordered.
+    #[test]
+    fn histogram_quantiles_are_close_and_ordered() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let (p50, p95, p99) = (h.quantile(0.50), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "quantiles out of order: {p50} {p95} {p99}");
+        assert!((430..=575).contains(&p50), "p50 {p50} too far from 500");
+        assert!((850..=1000).contains(&p95), "p95 {p95} too far from 950");
+        assert!((930..=1000).contains(&p99), "p99 {p99} too far from 990");
+        assert_eq!(h.max(), 1000);
+        // bucket round-trip: the reported edge is ≥ the value and within
+        // 12.5% of it
+        for v in [0u64, 5, 7, 8, 100, 4096, 1 << 40] {
+            let bv = Histogram::bucket_value(Histogram::bucket_of(v));
+            assert!(bv >= v && bv <= v + v / 8 + 1, "bucket edge {bv} for {v}");
+        }
+    }
+
+    /// Property: for random samples, every reported pN sits within its
+    /// bucket's bounds — at or above the exact sorted quantile, and no
+    /// more than one bucket width (12.5%) past it.
+    #[test]
+    fn histogram_quantile_is_bounded_by_its_bucket() {
+        crate::testing::prop::forall("hist-quantile-bounds", |g| {
+            let n = g.usize_in(1, 512);
+            let h = Histogram::new();
+            let mut vals: Vec<u64> = (0..n).map(|_| g.u64_in(0, 2_000_000)).collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            for q in [0.5f64, 0.95, 0.99] {
+                let target = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = vals[target - 1];
+                let got = h.quantile(q);
+                if got < exact || got > (exact + exact / 8 + 1).min(h.max()) {
+                    return Err(format!("q={q} exact={exact} got={got} n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn record_n_matches_repeated_record() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_n(777, 5);
+        for _ in 0..5 {
+            b.record(777);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.max(), b.max());
+        assert_eq!(a.quantile(0.99), b.quantile(0.99));
+        assert_eq!(a.nonzero_buckets(), b.nonzero_buckets());
+    }
+
+    #[test]
+    fn registry_exposes_typed_counters_gauges_and_histograms() {
+        let r = Registry::new();
+        r.counter("requests").fetch_add(3, Ordering::Relaxed);
+        r.gauge("inflight").store(2, Ordering::Relaxed);
+        r.histogram("request_latency_us").record(100);
+        r.set("requests", 9); // exposition-time mirror overwrites
+        let text = r.expose().join("\n");
+        assert!(text.contains("# TYPE requests counter"));
+        assert!(text.contains("requests 9"));
+        assert!(text.contains("# TYPE inflight gauge"));
+        assert!(text.contains("inflight 2"));
+        assert!(text.contains("# TYPE request_latency_us histogram"));
+        assert!(text.contains("request_latency_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("request_latency_us_count 1"));
+        assert!(text.contains("request_latency_us{quantile=\"0.99\"}"));
+        let names = r.names();
+        assert_eq!(names, vec!["inflight", "request_latency_us", "requests"]);
+    }
+}

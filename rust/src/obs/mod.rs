@@ -1,0 +1,229 @@
+//! In-process observability: metrics registry, per-request trace spans,
+//! and the slow-request ring — zero external dependencies.
+//!
+//! One [`Obs`] hub lives on each process role: the model store owns one
+//! (request histogram + store/server counters) and the router owns its
+//! own (route histogram + routing counters). The hot path touches only pre-registered atomic handles;
+//! the `METRICS` verb renders [`Obs::expose`] and `SLOW [n]` dumps the
+//! ring. See `rust/PROTOCOL.md` for the wire grammar and
+//! `rust/OPERATIONS.md` for how to read the output.
+
+pub mod metrics;
+pub mod ring;
+pub mod trace;
+
+pub use metrics::{Histogram, Metric, Registry};
+pub use ring::SlowRing;
+pub use trace::{BatchTrace, Phase, Span};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Default `--slow-threshold-us`: requests slower than 100 ms retain
+/// their phase breakdown.
+pub const DEFAULT_SLOW_THRESHOLD_US: u64 = 100_000;
+/// Default `--trace-ring` capacity.
+pub const DEFAULT_TRACE_RING: usize = 128;
+
+/// `StoreStats` keys mirrored into a store-role registry at exposition
+/// time (monotonic counters).
+const STORE_COUNTERS: [&str; 13] = [
+    "requests",
+    "batches",
+    "evictions",
+    "spills",
+    "reloads",
+    "plan_hits",
+    "plan_misses",
+    "pack_loads",
+    "pack_releases",
+    "rejected_busy",
+    "timeouts",
+    "prefetches",
+    "admission_rejects",
+];
+/// `StoreStats` keys that are levels, not counts.
+const STORE_GAUGES: [&str; 2] = ["inflight", "spill_bytes"];
+
+/// `RouterStats` keys mirrored into a router-role registry (counters).
+const ROUTER_COUNTERS: [&str; 6] =
+    ["routed", "retries", "failovers", "ejections", "readmissions", "unavailable"];
+/// Router level metrics.
+const ROUTER_GAUGES: [&str; 1] = ["backends_up"];
+
+/// Per-role observability hub: the registry, a request-latency histogram
+/// handle, per-phase µs counters, the slow ring, and the on/off switch
+/// (`set_enabled(false)` is how the overhead bench measures the traced
+/// path against itself with recording elided).
+pub struct Obs {
+    registry: Registry,
+    request_us: Arc<Histogram>,
+    phase_us: [Arc<AtomicU64>; 8],
+    ring: SlowRing,
+    slow_threshold_us: AtomicU64,
+    enabled: AtomicBool,
+}
+
+impl Obs {
+    /// Build a hub with the given latency-histogram name and mirrored
+    /// counter/gauge names pre-registered.
+    fn new(
+        hist_name: &str,
+        counters: &[&str],
+        gauges: &[&str],
+        slow_threshold_us: u64,
+        ring_cap: usize,
+    ) -> Obs {
+        let registry = Registry::new();
+        for c in counters {
+            registry.counter(c);
+        }
+        for g in gauges {
+            registry.gauge(g);
+        }
+        let request_us = registry.histogram(hist_name);
+        let phase_us =
+            Phase::ALL.map(|p| registry.counter(&format!("phase_{}_us", p.name())));
+        Obs {
+            registry,
+            request_us,
+            phase_us,
+            ring: SlowRing::new(ring_cap),
+            slow_threshold_us: AtomicU64::new(slow_threshold_us),
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    /// Hub for a serving backend: `request_latency_us` histogram plus the
+    /// `STATS`-mirrored store counters.
+    pub fn for_store(slow_threshold_us: u64, ring_cap: usize) -> Obs {
+        Obs::new("request_latency_us", &STORE_COUNTERS, &STORE_GAUGES, slow_threshold_us, ring_cap)
+    }
+
+    /// Hub for a router: `route_latency_us` histogram plus the routing
+    /// counters.
+    pub fn for_router(slow_threshold_us: u64, ring_cap: usize) -> Obs {
+        Obs::new("route_latency_us", &ROUTER_COUNTERS, &ROUTER_GAUGES, slow_threshold_us, ring_cap)
+    }
+
+    /// The metric registry (exposition, drift guards, mirrors).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The role's latency histogram (`request_latency_us` /
+    /// `route_latency_us`).
+    pub fn request_us(&self) -> &Histogram {
+        &self.request_us
+    }
+
+    /// The slow-request ring.
+    pub fn ring(&self) -> &SlowRing {
+        &self.ring
+    }
+
+    /// Current slow threshold (µs). A finished span at or above it is
+    /// retained; 0 retains everything.
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us.load(Ordering::Relaxed)
+    }
+
+    /// Change the slow threshold (builder-time configuration; safe at
+    /// runtime too).
+    pub fn set_slow_threshold_us(&self, us: u64) {
+        self.slow_threshold_us.store(us, Ordering::Relaxed);
+    }
+
+    /// Whether recording is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording off (and back on). With recording off,
+    /// [`Obs::observe`] and the latency histogram feeds become no-ops —
+    /// the overhead bench's tracing-off leg.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record `n` request completions at `us` into the latency histogram.
+    pub fn record_latency(&self, us: u64, n: u64) {
+        if self.enabled() {
+            self.request_us.record_n(us, n);
+        }
+    }
+
+    /// Fold a finished span into the hub: phase totals into the
+    /// `phase_<name>_us` counters, and the rendered line into the ring
+    /// when the wall time crosses the threshold.
+    pub fn observe(&self, span: &Span) {
+        if !self.enabled() {
+            return;
+        }
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            let us = span.phase_us(*p);
+            if us > 0 {
+                self.phase_us[i].fetch_add(us, Ordering::Relaxed);
+            }
+        }
+        if span.wall_us() >= self.slow_threshold_us() {
+            self.ring.push(span.render());
+        }
+    }
+
+    /// Render the Prometheus-style exposition (sorted by metric name).
+    pub fn expose(&self) -> Vec<String> {
+        self.registry.expose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_feeds_phase_counters_and_slow_ring() {
+        let obs = Obs::for_store(0, 8); // threshold 0: everything is slow
+        let mut span = Span::begin("m1");
+        span.add(Phase::Reload, 900);
+        span.add(Phase::Execute, 50);
+        span.finish();
+        obs.observe(&span);
+        obs.record_latency(950, 1);
+        let text = obs.expose().join("\n");
+        assert!(text.contains("phase_reload_us 900"), "missing reload total in:\n{text}");
+        assert!(text.contains("phase_execute_us 50"));
+        assert!(text.contains("request_latency_us_count 1"));
+        assert_eq!(obs.ring().len(), 1);
+        assert!(obs.ring().dump(1)[0].contains("reload_us=900"));
+    }
+
+    #[test]
+    fn disabled_hub_records_nothing() {
+        let obs = Obs::for_store(0, 8);
+        obs.set_enabled(false);
+        let mut span = Span::begin("m1");
+        span.add(Phase::Execute, 10);
+        span.finish();
+        obs.observe(&span);
+        obs.record_latency(10, 1);
+        assert!(obs.ring().is_empty());
+        assert_eq!(obs.request_us().count(), 0);
+    }
+
+    #[test]
+    fn registries_name_every_mirrored_stat() {
+        let store = Obs::for_store(1, 1);
+        let names = store.registry().names();
+        for k in STORE_COUNTERS.iter().chain(STORE_GAUGES.iter()) {
+            assert!(names.iter().any(|n| n == k), "store registry missing {k}");
+        }
+        assert!(names.iter().any(|n| n == "request_latency_us"));
+        let router = Obs::for_router(1, 1);
+        let rnames = router.registry().names();
+        for k in ROUTER_COUNTERS.iter().chain(ROUTER_GAUGES.iter()) {
+            assert!(rnames.iter().any(|n| n == k), "router registry missing {k}");
+        }
+        assert!(rnames.iter().any(|n| n == "route_latency_us"));
+    }
+}

@@ -1,0 +1,78 @@
+//! Bounded slow-request ring: the last N rendered spans that crossed the
+//! slow threshold, oldest evicted first. `SLOW [n]` dumps it.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Fixed-capacity ring of rendered span lines. Pushes are rare by
+/// construction (only threshold-crossing requests), so one mutex is
+/// plenty; capacity 0 disables retention entirely.
+pub struct SlowRing {
+    inner: Mutex<VecDeque<String>>,
+    cap: usize,
+}
+
+impl SlowRing {
+    /// Ring holding at most `cap` entries.
+    pub fn new(cap: usize) -> SlowRing {
+        SlowRing { inner: Mutex::new(VecDeque::with_capacity(cap.min(1024))), cap }
+    }
+
+    /// Append a rendered span, evicting the oldest entry when full.
+    pub fn push(&self, line: String) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(line);
+    }
+
+    /// Up to `n` retained entries, newest first.
+    pub fn dump(&self, n: usize) -> Vec<String> {
+        let q = self.inner.lock().unwrap();
+        q.iter().rev().take(n).cloned().collect()
+    }
+
+    /// Entries currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Maximum entries retained.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_caps_at_capacity_and_evicts_oldest() {
+        let r = SlowRing::new(3);
+        for i in 0..5 {
+            r.push(format!("req{i}"));
+        }
+        assert_eq!(r.len(), 3);
+        // newest first; req0/req1 evicted
+        assert_eq!(r.dump(10), vec!["req4", "req3", "req2"]);
+        assert_eq!(r.dump(2), vec!["req4", "req3"]);
+    }
+
+    #[test]
+    fn zero_capacity_ring_retains_nothing() {
+        let r = SlowRing::new(0);
+        r.push("req".into());
+        assert!(r.is_empty());
+        assert!(r.dump(10).is_empty());
+    }
+}

@@ -1,0 +1,250 @@
+//! Per-request trace spans: where did this request's time go?
+//!
+//! A [`Span`] is created when a request line is parsed, rides the job
+//! through the batcher and the store, and is finished right after the
+//! reply is written (serial) or rendered (pipelined). Each [`Phase`] owns
+//! one microsecond slot; the router annotates spans with attempt count
+//! and the backend that answered. Finished spans feed the
+//! [`crate::obs::Obs`] hub: phase totals into `phase_<name>_us` counters,
+//! and the rendered line into the slow-request ring when the wall time
+//! crosses the threshold.
+
+use std::time::Instant;
+
+/// One timed segment of a request's life, in pipeline order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    /// Splitting the wire line into verb, model, and values.
+    Parse,
+    /// Pipelined admission: tracker bookkeeping under the in-flight cap.
+    Admit,
+    /// Flat-plan build on a plan-cache miss (hits spend ~0 here).
+    Plan,
+    /// Reloading spilled container bytes from the disk tier.
+    Reload,
+    /// Materializing a pack member on first touch.
+    PackLoad,
+    /// Sitting in the batch window waiting for the batcher to drain.
+    BatchWait,
+    /// Tree traversal itself (plan-build time on a miss is carved out
+    /// into [`Phase::Plan`]).
+    Execute,
+    /// Rendering and handing the reply off — the serial rendezvous send
+    /// or the pipelined outbox enqueue. The socket write itself runs on
+    /// the reader/writer thread after the span is observed and is not
+    /// attributed.
+    Write,
+}
+
+impl Phase {
+    /// Every phase, in pipeline order.
+    pub const ALL: [Phase; 8] = [
+        Phase::Parse,
+        Phase::Admit,
+        Phase::Plan,
+        Phase::Reload,
+        Phase::PackLoad,
+        Phase::BatchWait,
+        Phase::Execute,
+        Phase::Write,
+    ];
+
+    /// Stable lower-case name: `phase_<name>_us` registry counters and
+    /// `SLOW` line fields key off it.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Parse => "parse",
+            Phase::Admit => "admit",
+            Phase::Plan => "plan",
+            Phase::Reload => "reload",
+            Phase::PackLoad => "pack_load",
+            Phase::BatchWait => "batch_wait",
+            Phase::Execute => "execute",
+            Phase::Write => "write",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Phase timings one store call attributes back to the request(s) that
+/// rode it. The server copies these into each member job's [`Span`];
+/// plan-cache hit/miss counts come from a before/after delta of the
+/// shared cache counters, so under concurrency a neighbor batch's
+/// traffic can bleed in — attribution is approximate, totals are exact.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct BatchTrace {
+    /// µs spent reloading spilled bytes (zero unless the model was
+    /// spilled when the call started).
+    pub reload_us: u64,
+    /// µs spent materializing a pack member (zero unless packed-unloaded
+    /// at call start).
+    pub pack_load_us: u64,
+    /// µs in tree traversal, **including** any plan builds it triggered
+    /// ([`Span::absorb`] carves those out into [`Phase::Plan`]).
+    pub execute_us: u64,
+    /// µs spent building flat plans on cache misses during the call
+    /// (delta of the shared cache's build timer).
+    pub plan_us: u64,
+    /// Plan-cache hits observed across the call.
+    pub plan_hits: u64,
+    /// Plan-cache misses (each one paid a flat-plan build).
+    pub plan_misses: u64,
+}
+
+/// Phase-timed record of one request.
+pub struct Span {
+    started: Instant,
+    phase_us: [u64; 8],
+    wall_us: u64,
+    model: String,
+    /// Attempt legs a router spent on this request (0 = not routed; ≥ 2
+    /// means at least one failover/retry).
+    pub attempts: u32,
+    /// Backend that answered, when routed.
+    pub backend: Option<String>,
+    /// Plan-cache hits attributed to this request's store call.
+    pub plan_hits: u64,
+    /// Plan-cache misses attributed to this request's store call.
+    pub plan_misses: u64,
+}
+
+impl Span {
+    /// Start a span now, for a request against `model`.
+    pub fn begin(model: &str) -> Span {
+        Span::begin_at(Instant::now(), model)
+    }
+
+    /// Start a span whose clock began at `started` — for callers that did
+    /// timed work (parsing the request line) before the model name was
+    /// known, so the wall time still covers it.
+    pub fn begin_at(started: Instant, model: &str) -> Span {
+        Span {
+            started,
+            phase_us: [0; 8],
+            wall_us: 0,
+            model: model.to_string(),
+            attempts: 0,
+            backend: None,
+            plan_hits: 0,
+            plan_misses: 0,
+        }
+    }
+
+    /// The instant the span started (the batcher subtracts it to charge
+    /// [`Phase::BatchWait`]).
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
+    /// Add `us` to `phase` (accumulates; a retried request charges the
+    /// same phase more than once).
+    pub fn add(&mut self, phase: Phase, us: u64) {
+        self.phase_us[phase.idx()] += us;
+    }
+
+    /// Time `f` and charge its duration to `phase`.
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_micros() as u64);
+        out
+    }
+
+    /// Fold a store-call [`BatchTrace`] into this span. Plan-build time
+    /// is a sub-interval of the traced execute window, so it is carved
+    /// out of [`Phase::Execute`] into [`Phase::Plan`] — phases stay
+    /// non-overlapping and their sum stays within the wall time.
+    pub fn absorb(&mut self, t: &BatchTrace) {
+        self.add(Phase::Reload, t.reload_us);
+        self.add(Phase::PackLoad, t.pack_load_us);
+        self.add(Phase::Plan, t.plan_us.min(t.execute_us));
+        self.add(Phase::Execute, t.execute_us.saturating_sub(t.plan_us));
+        self.plan_hits += t.plan_hits;
+        self.plan_misses += t.plan_misses;
+    }
+
+    /// Stamp the wall time (start → now). Call once, after the reply is
+    /// out; phases recorded later would no longer be covered by the wall.
+    pub fn finish(&mut self) {
+        self.wall_us = self.started.elapsed().as_micros() as u64;
+    }
+
+    /// Wall time stamped by [`Span::finish`] (0 before it).
+    pub fn wall_us(&self) -> u64 {
+        self.wall_us
+    }
+
+    /// µs recorded for `phase`.
+    pub fn phase_us(&self, phase: Phase) -> u64 {
+        self.phase_us[phase.idx()]
+    }
+
+    /// Model the request targeted.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// One `key=value` line for the `SLOW` dump: wall time, model, every
+    /// phase (`<name>_us=`), plan hit/miss counts, and — when routed —
+    /// `attempts=` and `backend=`.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut line = format!("wall_us={} model={}", self.wall_us, self.model);
+        for p in Phase::ALL {
+            let _ = write!(line, " {}_us={}", p.name(), self.phase_us(p));
+        }
+        let _ = write!(line, " plan_hits={} plan_misses={}", self.plan_hits, self.plan_misses);
+        if self.attempts > 0 {
+            let _ = write!(line, " attempts={}", self.attempts);
+        }
+        if let Some(b) = &self.backend {
+            let _ = write!(line, " backend={b}");
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sanity: phases are sub-intervals of the request, so their sum
+    /// never exceeds the wall time the span stamps at finish.
+    #[test]
+    fn span_phase_sum_stays_within_wall() {
+        let mut s = Span::begin("m0");
+        s.time(Phase::Parse, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        s.time(Phase::Execute, || std::thread::sleep(std::time::Duration::from_millis(3)));
+        s.finish();
+        let sum: u64 = Phase::ALL.iter().map(|&p| s.phase_us(p)).sum();
+        assert!(sum > 0, "timed phases recorded nothing");
+        assert!(
+            sum <= s.wall_us(),
+            "phase sum {} exceeds wall {}",
+            sum,
+            s.wall_us()
+        );
+    }
+
+    #[test]
+    fn render_names_every_phase_and_router_legs() {
+        let mut s = Span::begin("tenant-7");
+        s.add(Phase::Reload, 812);
+        s.absorb(&BatchTrace { execute_us: 40, plan_misses: 1, ..Default::default() });
+        s.attempts = 2;
+        s.backend = Some("127.0.0.1:7001".into());
+        s.finish();
+        let line = s.render();
+        for p in Phase::ALL {
+            assert!(line.contains(&format!(" {}_us=", p.name())), "missing {}", p.name());
+        }
+        assert!(line.contains("model=tenant-7"));
+        assert!(line.contains(" reload_us=812"));
+        assert!(line.contains(" attempts=2"));
+        assert!(line.contains(" backend=127.0.0.1:7001"));
+        assert!(line.contains(" plan_misses=1"));
+    }
+}

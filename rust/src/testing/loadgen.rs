@@ -325,80 +325,12 @@ pub fn hot_hit_rate(hot_requests: u64, cold_requests: u64, promotions_delta: u64
     (1.0 - hot_misses as f64 / hot_requests as f64).clamp(0.0, 1.0)
 }
 
-/// Log-bucketed latency histogram: exact below 8 µs, then eight
-/// sub-buckets per power of two (≤ 12.5% relative bucket width) — compact
-/// enough to share across threads, fine enough for honest p99s.
-pub struct Histogram {
-    buckets: Vec<u64>,
-    count: u64,
-    max: u64,
-}
-
-impl Histogram {
-    /// Empty histogram.
-    pub fn new() -> Histogram {
-        // 8 exact buckets + 8 per power-of-two region up to 2^63
-        Histogram { buckets: vec![0; 8 * 62], count: 0, max: 0 }
-    }
-
-    fn bucket_of(v: u64) -> usize {
-        if v < 8 {
-            return v as usize;
-        }
-        let msb = 63 - v.leading_zeros() as usize;
-        8 * (msb - 2) + ((v >> (msb - 3)) & 7) as usize
-    }
-
-    fn bucket_value(idx: usize) -> u64 {
-        if idx < 8 {
-            return idx as u64;
-        }
-        let msb = idx / 8 + 2;
-        let sub = (idx % 8) as u64;
-        // upper edge of the bucket (conservative for tail quantiles)
-        ((8 + sub) << (msb - 3)) + (1 << (msb - 3)) - 1
-    }
-
-    /// Record one latency observation (µs).
-    pub fn record(&mut self, us: u64) {
-        self.buckets[Self::bucket_of(us)] += 1;
-        self.count += 1;
-        self.max = self.max.max(us);
-    }
-
-    /// Number of recorded observations.
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    /// Largest recorded observation (exact, not bucketed).
-    pub fn max(&self) -> u64 {
-        self.max
-    }
-
-    /// Approximate quantile (`q` in `[0, 1]`), reported at its bucket's
-    /// upper edge and capped at the exact max. Returns 0 when empty.
-    pub fn quantile(&self, q: f64) -> u64 {
-        if self.count == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Self::bucket_value(i).min(self.max);
-            }
-        }
-        self.max
-    }
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+/// Latency histogram, re-exported from the shared observability layer
+/// (one bucket scheme for loadgen reports and the server's `METRICS`
+/// exposition alike): exact below 8 µs, then eight sub-buckets per power
+/// of two (≤ 12.5% relative bucket width). Atomic, so reader threads
+/// record through a shared reference without a lock.
+pub use crate::obs::Histogram;
 
 /// How [`run_trace`] speaks to the server.
 #[derive(Debug, Clone)]
@@ -473,7 +405,8 @@ impl RunReport {
 struct RunShared {
     outstanding: Mutex<usize>,
     cv: Condvar,
-    hist: Mutex<Histogram>,
+    /// Atomic buckets: the reader thread records without a lock.
+    hist: Histogram,
     ok: AtomicU64,
     errors: AtomicU64,
     /// Reader exited before every reply arrived (connection died): the
@@ -530,7 +463,7 @@ fn run_pipelined(
     let shared = Arc::new(RunShared {
         outstanding: Mutex::new(0),
         cv: Condvar::new(),
-        hist: Mutex::new(Histogram::new()),
+        hist: Histogram::new(),
         ok: AtomicU64::new(0),
         errors: AtomicU64::new(0),
         dead: AtomicBool::new(false),
@@ -565,9 +498,8 @@ fn run_pipelined(
     let _ = writer.write_all(b"QUIT\n");
     let _ = reader.join();
     let elapsed_s = start.elapsed().as_secs_f64();
-    let hist = shared.hist.lock().unwrap();
     Ok(RunReport::from_hist(
-        &hist,
+        &shared.hist,
         trace.len() as u64,
         shared.ok.load(Ordering::Relaxed),
         shared.errors.load(Ordering::Relaxed),
@@ -591,7 +523,7 @@ fn reader_loop(
         match parse_pipe_reply(&line) {
             Ok(PipeReply::Ok { id, .. }) => {
                 let sched = at_us.get(id as usize).copied().unwrap_or(now);
-                shared.hist.lock().unwrap().record(now.saturating_sub(sched));
+                shared.hist.record(now.saturating_sub(sched));
                 shared.ok.fetch_add(1, Ordering::Relaxed);
             }
             // errors count but do not pollute the latency distribution
@@ -624,7 +556,7 @@ fn run_serial(
     let mut client =
         Client::connect_timeout(addr, opts.connect_timeout).context("loadgen connecting")?;
     client.set_deadlines(Some(opts.io_timeout), Some(opts.io_timeout))?;
-    let mut hist = Histogram::new();
+    let hist = Histogram::new();
     let (mut ok, mut errors) = (0u64, 0u64);
     let start = Instant::now();
     for req in trace {
@@ -730,26 +662,8 @@ mod tests {
         );
     }
 
-    #[test]
-    fn histogram_quantiles_are_close_and_ordered() {
-        let mut h = Histogram::new();
-        for v in 1..=1000u64 {
-            h.record(v);
-        }
-        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
-        assert!((430..=575).contains(&p50), "p50 {p50}");
-        assert!((850..=1000).contains(&p95), "p95 {p95}");
-        assert!((930..=1000).contains(&p99), "p99 {p99}");
-        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
-        assert_eq!(h.max(), 1000);
-        assert_eq!(h.count(), 1000);
-        assert_eq!(Histogram::new().quantile(0.99), 0, "empty histogram reads 0");
-        // exact region + bucket round trip
-        for v in [0u64, 5, 7, 8, 100, 4096, 1 << 40] {
-            let bv = Histogram::bucket_value(Histogram::bucket_of(v));
-            assert!(bv >= v && bv <= v + v / 8 + 1, "bucket edge of {v} is {bv}");
-        }
-    }
+    // histogram quantile tests live with the shared implementation in
+    // crate::obs::metrics
 
     #[test]
     fn hot_hit_rate_formula() {

@@ -343,6 +343,108 @@ fn spill_tier_serves_over_tcp_with_stats() {
 }
 
 #[test]
+fn slow_ring_captures_spill_reload_phase_over_tcp() {
+    // a spill-reload request is exactly what the SLOW ring exists to
+    // explain: with the threshold at 0 every request retains its trace,
+    // and the reloading request must carry a nonzero reload phase
+    let ds = synthetic::iris(99);
+    let mut coord = Coordinator::native_only();
+    let (_, cf, _) = coord.train_and_compress(&ds, 5, 14, &CompressOptions::default()).unwrap();
+    let one = cf.total_bytes();
+    let dir = temp_spill_dir("slowring");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(
+        ModelStore::with_budget(2 * one + one / 2)
+            .spill_dir(&dir)
+            .slow_threshold_us(0)
+            .trace_ring(32),
+    );
+    store.insert("m0", &cf).unwrap();
+    store.insert("m1", &cf).unwrap();
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // touch m0 so m1 is the LRU victim, then push m1 out to disk
+    let wire = values_to_wire(&row_values(&ds, 0));
+    assert!(client.request(&format!("PREDICT m0 {wire}")).unwrap().starts_with("OK"));
+    store.insert("m2", &cf).unwrap();
+    assert!(store.is_spilled("m1"));
+
+    // this PREDICT pays the reload; its trace must attribute it. The
+    // batcher observes the span just after handing the reply back, so the
+    // ring can trail the reply by an instant — poll briefly.
+    assert!(client.request(&format!("PREDICT m1 {wire}")).unwrap().starts_with("OK"));
+    let mut slow = client.request_block("SLOW").unwrap();
+    for _ in 0..100 {
+        if slow.iter().any(|l| l.contains("model=m1"))
+            && slow.iter().any(|l| l.contains("model=m0"))
+        {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        slow = client.request_block("SLOW").unwrap();
+    }
+    let m1 = slow
+        .iter()
+        .find(|l| l.contains("model=m1"))
+        .unwrap_or_else(|| panic!("no m1 trace in SLOW dump: {slow:?}"));
+    let reload_us: u64 = m1
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("reload_us="))
+        .expect("trace line carries reload_us=")
+        .parse()
+        .unwrap();
+    assert!(reload_us > 0, "the reloading request must show a nonzero reload phase: {m1}");
+    // the warm m0 request paid no reload
+    let m0 = slow.iter().find(|l| l.contains("model=m0")).expect("m0 trace retained");
+    assert!(m0.contains(" reload_us=0 "), "{m0}");
+    // SLOW <n> caps the dump at the n most recent traces
+    assert_eq!(client.request_block("SLOW 1").unwrap().len(), 1);
+
+    // METRICS exposes typed counters, phase totals, and the histogram
+    let metrics = client.request_block("METRICS").unwrap().join("\n");
+    assert!(metrics.contains("# TYPE requests counter"), "{metrics}");
+    assert!(metrics.contains("# TYPE request_latency_us histogram"), "{metrics}");
+    assert!(metrics.contains("request_latency_us_bucket"), "{metrics}");
+    assert!(metrics.contains("reloads 1"), "{metrics}");
+    // the phase totals include the reload the trace attributed
+    let phase_reload: u64 = metrics
+        .lines()
+        .find_map(|l| l.strip_prefix("phase_reload_us "))
+        .expect("phase_reload_us sample present")
+        .parse()
+        .unwrap();
+    assert!(phase_reload >= reload_us, "{metrics}");
+
+    // pipelined METRICS frames the same block under the request id
+    client.send("PIPE 11 METRICS").unwrap();
+    let piped = client.recv_block().unwrap();
+    assert!(piped.iter().any(|l| l.starts_with("# TYPE requests ")), "{piped:?}");
+
+    // STATS now reports histogram quantiles next to the mean
+    let stats = client.request("STATS").unwrap();
+    let p50: u64 = stats
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("p50_us="))
+        .expect("STATS carries p50_us=")
+        .parse()
+        .unwrap();
+    let p99: u64 = stats
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("p99_us="))
+        .expect("STATS carries p99_us=")
+        .parse()
+        .unwrap();
+    // p99 covers the reload request, which certainly took > 0 µs
+    assert!(p99 > 0 && p99 >= p50, "{stats}");
+
+    server.stop();
+    drop(server);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn spill_corrupted_file_is_an_error_over_the_wire() {
     let ds = synthetic::iris(98);
     let mut coord = Coordinator::native_only();

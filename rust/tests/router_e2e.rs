@@ -268,6 +268,89 @@ fn partition_midburst_ejects_resolves_every_id_and_readmits() {
     router.stop();
 }
 
+#[test]
+fn failover_request_trace_records_attempt_legs() {
+    // a PREDICT whose first-choice replica is severed fails over to the
+    // second; the router's request trace must record both legs
+    // (`attempts=2`) and annotate the backend that finally answered.
+    let ds = synthetic::iris(71);
+    let models = ["alpha", "beta", "gamma", "delta"];
+    let backends = fleet(2, &ds, &models);
+    let proxies: Vec<ChaosProxy> =
+        backends.iter().map(|b| ChaosProxy::start(b.addr()).unwrap()).collect();
+    let addrs: Vec<SocketAddr> = proxies.iter().map(|p| p.addr()).collect();
+    let mut cfg = test_router_cfg();
+    cfg.slow_threshold_us = 0; // retain every request trace
+    let router = Router::start(&addrs, 0, cfg).unwrap();
+
+    let mut client = Client::connect(router.addr()).unwrap();
+    client.set_deadlines(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+
+    // warm-up with both replicas healthy so every key enters the hot set
+    // (hot keys carry the R=2 replica list failover walks)
+    for round in 0..4 {
+        for model in &models {
+            let wire = values_to_wire(&row_values(&ds, round));
+            let reply = client.request(&format!("PREDICT {model} {wire}")).unwrap();
+            assert!(reply.starts_with("OK "), "warm-up failed: {reply}");
+        }
+    }
+
+    let has_failover_trace = |router: &Router| {
+        router
+            .obs()
+            .ring()
+            .dump(usize::MAX)
+            .iter()
+            .any(|l| attempts_of(l) >= 2 && l.contains(" backend="))
+    };
+
+    // sever one side and route every model: any key whose first-choice
+    // replica sat behind the severed proxy records a failover leg. If every
+    // key happened to prefer the survivor, the second round severs the
+    // other side, so one of the two rounds must force a failover.
+    for severed in 0..proxies.len() {
+        proxies[severed].sever();
+        for model in &models {
+            let wire = values_to_wire(&row_values(&ds, 5));
+            let reply = client.request(&format!("PREDICT {model} {wire}")).unwrap();
+            assert!(reply.starts_with("OK "), "failover round dropped {model}: {reply}");
+        }
+        proxies[severed].restore();
+        if has_failover_trace(&router) {
+            break;
+        }
+        // the failed legs may have ejected the severed side; wait for
+        // re-admission so the next round has both replicas in rotation
+        let healed = wait_for(Duration::from_secs(5), || {
+            router.backend_states()[severed] != HealthState::Ejected
+        });
+        assert!(healed, "backend {severed} was not re-admitted after restore");
+    }
+    assert!(has_failover_trace(&router), "no trace recorded a failover leg");
+
+    // the same trace is readable over the wire, and METRICS carries the
+    // router's exposition surface
+    let slow = client.request_block("SLOW").unwrap();
+    let legs = slow
+        .iter()
+        .find(|l| attempts_of(l) >= 2)
+        .unwrap_or_else(|| panic!("SLOW dump lost the failover trace: {slow:?}"));
+    assert!(legs.contains(" backend="), "failover trace lost its backend annotation: {legs}");
+    let metrics = client.request_block("METRICS").unwrap().join("\n");
+    assert!(metrics.contains("# TYPE routed counter"), "{metrics}");
+    assert!(metrics.contains("route_latency_us_count"), "{metrics}");
+    router.stop();
+}
+
+/// Parse the `attempts=` annotation off a rendered trace line (0 if absent).
+fn attempts_of(line: &str) -> u32 {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix("attempts="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 /// Poll `cond` every 10 ms until it holds or `limit` elapses.
 fn wait_for(limit: Duration, mut cond: impl FnMut() -> bool) -> bool {
     let deadline = Instant::now() + limit;
