@@ -17,7 +17,8 @@
 //! * model packs: bytes/model and member-reload p50/p99 of one `RFPK`
 //!   archive vs per-file spill at N × ≤4 KiB models (the ROADMAP's
 //!   page-granularity-waste scenario), after a bit-identical extraction
-//!   gate over every member; emits `BENCH_pack.json`
+//!   gate over every member; plus generation-chain read overhead at
+//!   depth 1/2/4 and after a merge compaction; emits `BENCH_pack.json`
 //! * shard router: per-request overhead vs a direct backend (p50/p99) and
 //!   a failover burst with one of three backends severed mid-volley via
 //!   the chaos proxy, gated on exactly-once resolution; emits
@@ -1236,6 +1237,76 @@ fn bench_pack(cfg: &rf_compress::util::bench::BenchConfig) {
     assert_eq!(s.evictions, 0, "pack members must release, never drop");
     assert_eq!(s.spills, 0, "pack members must never write spill files");
 
+    // chain-read overhead: the same cohort served through a generation
+    // chain at depth 1, 2, and 4 — what a stack of delta generations costs
+    // a read (newest-first resolution + parse), and that a merge
+    // compaction claws it back
+    use rf_compress::pack::{compact_chain, CompactMode, PackChain};
+    let keys: Vec<String> = (0..members).map(|i| format!("user-{i:04}")).collect();
+    let chain_sample = |chain: &PackChain| -> Vec<f64> {
+        let mut us = Vec::with_capacity(members * passes);
+        for _ in 0..passes {
+            for (i, key) in keys.iter().enumerate() {
+                let t0 = std::time::Instant::now();
+                let p = CompressedPredictor::new(chain.parse(key).unwrap()).unwrap();
+                assert_eq!(p.num_trees(), forests[i].num_trees());
+                us.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+        }
+        us
+    };
+    let mut chain_rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut deepest = None;
+    for depth in [1usize, 2, 4] {
+        let cdir = dir.join(format!("chain-{depth}"));
+        let mut chain = PackChain::create(&cdir).unwrap();
+        // round-robin the cohort into `depth` delta generations
+        for leg in 0..depth {
+            let batch: Vec<_> = cohort
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % depth == leg)
+                .map(|(i, cf)| (keys[i].clone(), cf.bytes.clone()))
+                .collect();
+            chain.append_members(&batch).unwrap();
+        }
+        assert_eq!(chain.generation_count(), depth);
+        assert_eq!(chain.live_len(), members, "every member stays live");
+        let us = chain_sample(&chain);
+        chain_rows.push((
+            format!("chain, {depth} generation(s)"),
+            quantile(&us, 0.5),
+            quantile(&us, 0.99),
+        ));
+        if depth == 4 {
+            deepest = Some(chain);
+        }
+    }
+    // compact the deepest chain in place: the depth overhead must not
+    // outlive the merge
+    let mut chain = deepest.unwrap();
+    let cstats = compact_chain(&mut chain, CompactMode::Merge).unwrap();
+    assert_eq!(chain.generation_count(), 1, "merge collapses the chain");
+    let us = chain_sample(&chain);
+    chain_rows.push(("chain, compacted 4 -> 1".to_string(), quantile(&us, 0.5), quantile(&us, 0.99)));
+    let mut t = Table::new(&["chain read (parse)", "p50", "p99", "p99 vs 1 gen"]);
+    let gen1_p99 = chain_rows[0].2;
+    for (label, p50, p99) in &chain_rows {
+        t.row(&[
+            label.clone(),
+            format!("{p50:.1} µs"),
+            format!("{p99:.1} µs"),
+            format!("{:.2}x", p99 / gen1_p99.max(1e-9)),
+        ]);
+    }
+    t.print();
+    println!(
+        "merge compaction: {} generations -> 1, {} -> {} archive bytes",
+        cstats.generations_before,
+        human_bytes(cstats.bytes_before),
+        human_bytes(cstats.bytes_after)
+    );
+
     let json = [
         "{".to_string(),
         "  \"bench\": \"hotpath pack\",".to_string(),
@@ -1262,10 +1333,28 @@ fn bench_pack(cfg: &rf_compress::util::bench::BenchConfig) {
         ),
         format!(
             "  \"store_sweep\": {{\"members_per_sec\": {:.1}, \"pack_loads\": {}, \
-             \"pack_releases\": {}}}",
+             \"pack_releases\": {}}},",
             members as f64 / sweep_s,
             s.pack_loads,
             s.pack_releases
+        ),
+        format!(
+            "  \"chain_read_us\": {{\"gen1\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"gen2\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"gen4\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"compacted\": {{\"p50\": {:.2}, \"p99\": {:.2}}}}},",
+            chain_rows[0].1,
+            chain_rows[0].2,
+            chain_rows[1].1,
+            chain_rows[1].2,
+            chain_rows[2].1,
+            chain_rows[2].2,
+            chain_rows[3].1,
+            chain_rows[3].2
+        ),
+        format!(
+            "  \"chain_p99_gen4_vs_gen1\": {:.3}",
+            chain_rows[2].2 / gen1_p99.max(1e-9)
         ),
         "}".to_string(),
     ]

@@ -1025,6 +1025,9 @@ fn metrics_lines(store: &Arc<ModelStore>) -> Vec<String> {
     reg.set("timeouts", s.timeouts);
     reg.set("prefetches", s.prefetches);
     reg.set("admission_rejects", s.admission_rejects);
+    reg.set("pack_generations", s.pack_generations);
+    reg.set("compactions", s.compactions);
+    reg.set("tombstones", s.tombstones);
     obs.expose()
 }
 
@@ -1039,7 +1042,8 @@ fn stats_payload(s: &StoreStats) -> String {
         "requests={} batches={} mean_us={} p50_us={} p99_us={} max_us={} evictions={} \
          spills={} reloads={} spill_bytes={} plan_hits={} plan_misses={} \
          pack_loads={} pack_releases={} inflight={} rejected_busy={} timeouts={} \
-         prefetches={} admission_rejects={}",
+         prefetches={} admission_rejects={} pack_generations={} compactions={} \
+         tombstones={}",
         s.requests,
         s.batches,
         s.mean_latency_us(),
@@ -1058,7 +1062,10 @@ fn stats_payload(s: &StoreStats) -> String {
         s.rejected_busy,
         s.timeouts,
         s.prefetches,
-        s.admission_rejects
+        s.admission_rejects,
+        s.pack_generations,
+        s.compactions,
+        s.tombstones
     )
 }
 
@@ -1304,6 +1311,11 @@ mod tests {
         );
         assert!(
             line.contains("prefetches=0") && line.contains("admission_rejects=0"),
+            "{line}"
+        );
+        assert!(
+            line.contains("pack_generations=0") && line.contains("compactions=0")
+                && line.contains("tombstones=0"),
             "{line}"
         );
         // and a populated window reports the true per-request mean

@@ -50,8 +50,8 @@ use crate::compress::flat::{PlanCache, DEFAULT_PLAN_CACHE_BYTES};
 use crate::compress::predict::PredictOne;
 use crate::compress::{CompressedForest, CompressedPredictor};
 use crate::data::{Column, Dataset, Feature, Target};
-use crate::obs::{BatchTrace, Obs};
-use crate::pack::PackArchive;
+use crate::obs::{BatchTrace, Obs, Phase, Span};
+use crate::pack::{compact_chain, CompactMode, PackArchive, PackChain};
 use crate::util::mmap::Mmap;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -128,6 +128,14 @@ pub struct StoreStats {
     /// resident tier because the LRU victim they would have displaced was
     /// estimated hotter (always 0 under the `lru` policy).
     pub admission_rejects: u64,
+    /// Generations across every mounted pack chain (a gauge: a lone
+    /// immutable base reads 1; compaction collapses a chain back to 1).
+    pub pack_generations: u64,
+    /// Chain compactions this store ran (threshold-triggered or forced).
+    pub compactions: u64,
+    /// Tombstone entries across every mounted chain (a gauge; compaction
+    /// clears a chain's tombstones to 0).
+    pub tombstones: u64,
     /// Median per-request latency in µs, read from the store's live
     /// request histogram at snapshot time (bucket upper edge, ≤ 12.5%
     /// relative error; 0 until the first request).
@@ -242,7 +250,23 @@ pub struct ModelStore {
     /// Observability hub: request-latency histogram, mirrored counters,
     /// and the slow-request ring. The server reads it for `METRICS`/`SLOW`.
     obs: Arc<Obs>,
+    /// Mounted generation chains ([`Self::attach_chain`]). Each chain has
+    /// its own mutex: mutations and compaction serialize per chain, while
+    /// request-path loads never touch these locks at all (a Packed entry
+    /// holds its generation's `Arc<PackArchive>` directly).
+    chains: Mutex<Vec<Arc<Mutex<PackChain>>>>,
+    /// Store-side compaction trigger: a mounted chain at or past this many
+    /// generations is compacted ([`DEFAULT_COMPACT_GENERATIONS`]).
+    compact_generations: usize,
+    /// Store-side compaction trigger: compact when tombstones reach this
+    /// fraction of a chain's entries (tombstones / (live + tombstones)).
+    compact_tombstone_ratio: f64,
 }
+
+/// Default generation-count threshold for store-side chain compaction.
+pub const DEFAULT_COMPACT_GENERATIONS: usize = 8;
+/// Default tombstone-ratio threshold for store-side chain compaction.
+pub const DEFAULT_COMPACT_TOMBSTONE_RATIO: f64 = 0.5;
 
 /// Source of per-store [`ModelStore::spill_token`] values.
 static NEXT_STORE_TOKEN: AtomicU64 = AtomicU64::new(0);
@@ -298,6 +322,9 @@ impl ModelStore {
                 crate::obs::DEFAULT_SLOW_THRESHOLD_US,
                 crate::obs::DEFAULT_TRACE_RING,
             )),
+            chains: Mutex::new(Vec::new()),
+            compact_generations: DEFAULT_COMPACT_GENERATIONS,
+            compact_tombstone_ratio: DEFAULT_COMPACT_TOMBSTONE_RATIO,
         }
     }
 
@@ -505,6 +532,139 @@ impl ModelStore {
             self.retire_replaced(old);
         }
         Ok(pack.member_count())
+    }
+
+    /// Builder: generation-count threshold past which a mounted chain is
+    /// compacted store-side (checked at attach and by
+    /// [`Self::compact_chains`]).
+    pub fn compact_generations(mut self, n: usize) -> Self {
+        self.compact_generations = n.max(2);
+        self
+    }
+
+    /// Builder: tombstone-ratio threshold for store-side compaction
+    /// (tombstones as a fraction of live + tombstoned entries).
+    pub fn compact_tombstone_ratio(mut self, r: f64) -> Self {
+        self.compact_tombstone_ratio = r.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Mount a pack **generation chain** ([`crate::pack::PackChain`]): every
+    /// live member (newest-first resolution — a delta entry shadows the
+    /// base, a tombstone hides a key) becomes a Packed-tier model served
+    /// zero-copy off whichever generation's mapping holds it. The chain is
+    /// retained for store-side compaction; the returned handle lets an
+    /// admin surface append/remove against the mounted chain (remount with
+    /// another `attach_chain` after mutating). If the chain arrives at or
+    /// past the compaction thresholds it is compacted immediately. Returns
+    /// the chain handle and the number of members mounted.
+    pub fn attach_chain(
+        &self,
+        chain: PackChain,
+    ) -> Result<(Arc<Mutex<PackChain>>, usize)> {
+        let mounted = self.mount_chain_members(&chain)?;
+        let handle = Arc::new(Mutex::new(chain));
+        self.chains.lock().unwrap().push(handle.clone());
+        self.compact_chains(false)?;
+        Ok((handle, mounted))
+    }
+
+    /// Insert a Packed-tier entry for every live chain member, pointing at
+    /// the generation archive that currently serves it.
+    fn mount_chain_members(&self, chain: &PackChain) -> Result<usize> {
+        // same up-front refusal as attach_pack: no member may be
+        // unloadable under the budget
+        if let Some(budget) = self.max_resident_bytes {
+            for key in chain.live_keys() {
+                let (pack, m) = chain.resolve(key).expect("live key resolves");
+                let bytes = pack.member_logical_bytes(m);
+                if bytes > budget {
+                    bail!(
+                        "chain member {key:?} ({bytes} container bytes) exceeds the \
+                         store budget ({budget} bytes) on its own"
+                    );
+                }
+            }
+        }
+        let mut mounted = 0;
+        for key in chain.live_keys() {
+            let (pack, m) = chain.resolve(key).expect("live key resolves");
+            let bytes = pack.member_logical_bytes(m);
+            let entry = Tier::Packed(PackedEntry {
+                pack: pack.clone(),
+                member: m,
+                bytes,
+                last_used: self.tick(),
+            });
+            self.packed.fetch_add(bytes, Ordering::Relaxed);
+            let old = self.shard(key).models.write().unwrap().insert(key.to_string(), entry);
+            self.retire_replaced(old);
+            mounted += 1;
+        }
+        Ok(mounted)
+    }
+
+    /// Whether a chain is past a store-side compaction trigger.
+    fn chain_needs_compaction(&self, chain: &PackChain) -> bool {
+        if chain.generation_count() >= self.compact_generations {
+            return true;
+        }
+        let tombstones = chain.tombstone_count();
+        if tombstones == 0 {
+            return false;
+        }
+        let entries = chain.live_len() as f64 + tombstones as f64;
+        tombstones as f64 / entries >= self.compact_tombstone_ratio
+    }
+
+    /// Compact mounted chains: every chain past a trigger (or every chain
+    /// with anything to merge, when `force` is set) is merged into a single
+    /// fresh base generation — byte-level, so each member's container stays
+    /// **bit-identical** — and its manifest atomically swapped. The live
+    /// members are remounted onto the new base; a request that raced the
+    /// swap either keeps serving off the old generation's `Arc`-held
+    /// mapping or retries its load against the new entry
+    /// ([`Self::load_packed`]) — never an error, and never an eviction
+    /// (replacement accounting, not [`StoreStats::evictions`]). The merge
+    /// is span-timed under [`Phase::Compact`] (`phase_compact_us`).
+    /// Returns the number of chains compacted.
+    pub fn compact_chains(&self, force: bool) -> Result<usize> {
+        let handles: Vec<Arc<Mutex<PackChain>>> =
+            self.chains.lock().unwrap().iter().cloned().collect();
+        let mut compacted = 0;
+        for handle in handles {
+            let mut chain = handle.lock().unwrap();
+            let mergeable = chain.generation_count() > 1 || chain.tombstone_count() > 0;
+            if !mergeable || !(force || self.chain_needs_compaction(&chain)) {
+                continue;
+            }
+            let mut span = Span::begin("pack-chain");
+            span.time(Phase::Compact, || compact_chain(&mut chain, CompactMode::Merge))?;
+            // remount while still holding the chain lock: the manifest on
+            // disk and the mounted tier entries move together
+            self.mount_chain_members(&chain)?;
+            drop(chain);
+            span.finish();
+            self.obs.observe(&span);
+            self.stats.lock().unwrap().compactions += 1;
+            compacted += 1;
+        }
+        Ok(compacted)
+    }
+
+    /// Sum of generation and tombstone counts across mounted chains (the
+    /// `pack_generations`/`tombstones` gauges).
+    fn chain_gauges(&self) -> (u64, u64) {
+        let handles: Vec<Arc<Mutex<PackChain>>> =
+            self.chains.lock().unwrap().iter().cloned().collect();
+        let mut gens = 0u64;
+        let mut tombs = 0u64;
+        for handle in handles {
+            let chain = handle.lock().unwrap();
+            gens += chain.generation_count() as u64;
+            tombs += chain.tombstone_count();
+        }
+        (gens, tombs)
     }
 
     /// Enforce `max_resident_bytes` over compressed bytes **plus** decoded
@@ -824,12 +984,29 @@ impl ModelStore {
     /// losers adopt it (the reload discipline). `gated` arms the TinyLFU
     /// admission comparison in the budget enforcement this load triggers.
     fn load_packed(&self, name: &str, gated: bool) -> Result<Arc<StoredModel>> {
+        // a chain compaction can atomically re-point this name's Packed
+        // entry at the merged base between snapshot and install; the
+        // retry re-snapshots and loads the same key (bit-identical bytes)
+        // off the new generation. A genuinely removed name fails in the
+        // retry's snapshot with the usual typed error.
+        for _ in 0..3 {
+            if let Some(model) = self.load_packed_once(name, gated)? {
+                return Ok(model);
+            }
+        }
+        bail!("model {name:?} kept changing during pack load");
+    }
+
+    /// One attempt of [`Self::load_packed`]: `Ok(None)` means the entry
+    /// was swapped (re-attach/compaction) between snapshot and install —
+    /// retryable; terminal states error in the snapshot probe.
+    fn load_packed_once(&self, name: &str, gated: bool) -> Result<Option<Arc<StoredModel>>> {
         let (pack, member, bytes) = {
             let models = self.shard(name).models.read().unwrap();
             match models.get(name) {
                 Some(Tier::Resident(m)) => {
                     m.last_used.store(self.tick(), Ordering::Relaxed);
-                    return Ok(m.clone());
+                    return Ok(Some(m.clone()));
                 }
                 Some(Tier::Packed(e)) => (e.pack.clone(), e.member, e.bytes),
                 // the name was replaced by a different (spilled) model in
@@ -881,16 +1058,17 @@ impl ModelStore {
             state
         };
         match outcome {
-            Outcome::LostRace(m) => return Ok(m),
-            // removed, or replaced by a different entry (e.g. a re-attached
-            // archive) mid-load: surface the transient race like reload does
-            Outcome::Gone => bail!("model {name:?} changed or was removed during pack load"),
+            Outcome::LostRace(m) => return Ok(Some(m)),
+            // removed, or replaced by a different entry (a re-attached
+            // archive or a chain compaction) mid-load: hand the race back
+            // to the caller's retry loop, which re-snapshots the entry
+            Outcome::Gone => return Ok(None),
             Outcome::Installed => {}
         }
         self.stats.lock().unwrap().pack_loads += 1;
         // the load grew the RAM tier; it may need to release/spill another
         self.enforce_budget_gated(name, gated);
-        Ok(model)
+        Ok(Some(model))
     }
 
     /// Reload a spilled model through an mmap-backed buffer. The map + parse
@@ -1119,6 +1297,9 @@ impl ModelStore {
         s.spill_bytes = self.spilled.load(Ordering::Relaxed);
         s.packed_bytes = self.packed.load(Ordering::Relaxed);
         s.inflight = self.inflight.load(Ordering::Relaxed);
+        let (gens, tombs) = self.chain_gauges();
+        s.pack_generations = gens;
+        s.tombstones = tombs;
         s.p50_latency_us = self.obs.request_us().quantile(0.50);
         s.p99_latency_us = self.obs.request_us().quantile(0.99);
         s

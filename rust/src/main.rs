@@ -10,9 +10,10 @@
 //! repro lossy      --dataset <key> [--trees N] [--bits B] [--keep N0]
 //! repro sweep-stages --dataset <key> [--trees N] [--quick]
 //!                  [--out BENCH_stages.json] [--tolerance 0.4]
-//! repro serve      --port P [--dataset <key>[,<key>...]] [--pack FILE,...]
+//! repro serve      --port P [--dataset <key>[,<key>...]] [--pack FILE|DIR,...]
 //!                  [--trees N] [--inflight-cap N] [--request-timeout-ms MS]
 //! repro pack       build|list|extract               # RFPK model packs
+//! repro pack       init|append|remove|compact       # mutable generation chains
 //! repro suite      [--trees N] [--paper-scale]      # Table-2 style report
 //! repro datasets                                    # list dataset keys
 //! ```
@@ -72,12 +73,13 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   lossy      --dataset KEY [--trees N] [--bits B] [--keep N0]
   sweep-stages --dataset KEY [--trees N] [--seed S] [--quick]
              [--out BENCH_stages.json] [--tolerance 0.4]
-  serve      --port P [--dataset KEY[,KEY...]] [--pack FILE[,FILE...]]
+  serve      --port P [--dataset KEY[,KEY...]] [--pack FILE|CHAINDIR[,...]]
              [--trees N] [--max-resident-bytes B] [--predict-workers W]
              [--plan-cache-bytes B] [--spill-dir DIR] [--spill-bytes B]
              [--admission lru|tinylfu]
              [--inflight-cap N] [--request-timeout-ms MS]
              [--slow-threshold-us US] [--trace-ring N]
+             [--compact-generations N] [--compact-tombstone-ratio R]
   serve      --route --backends H:P[,H:P...] [--port P] [--replication R]
              [--hot-k K] [--max-tries N] [--probe-interval-ms MS]
              [--request-timeout-ms MS] [--inflight-cap N]
@@ -95,8 +97,13 @@ const HELP: &str = "repro — lossless (and lossy) random-forest compression
   pack build   --out FILE (--inputs A.rfcz[,B.rfcz...] |
                            --dataset KEY --members N [--trees T])
                [--no-shared] [--seed S]
-  pack list    --in FILE
+  pack list    (--in FILE | --chain DIR)
   pack extract --in FILE (--key K --out FILE | --out-dir DIR)
+  pack init    --chain DIR
+  pack append  --chain DIR (--inputs A.rfcz[,...] |
+                            --dataset KEY --members N [--key-offset O])
+  pack remove  --chain DIR --keys K[,K...]
+  pack compact --chain DIR [--dataset KEY]   (--dataset re-shares codebooks)
   suite      [--trees N] [--paper-scale]
   bench-gate --baseline FILE --current FILE [--tolerance 0.25]
   bench-gate --current FILE --write-baseline [--baseline FILE]
@@ -416,6 +423,26 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
+    // store-side chain compaction triggers (see rust/OPERATIONS.md):
+    // generation-count and tombstone-ratio thresholds over mounted chains
+    if let Some(s) = args.get("compact-generations") {
+        match s.parse::<usize>() {
+            Ok(n) => store = store.compact_generations(n),
+            Err(_) => {
+                eprintln!("serve: --compact-generations expects a count, got {s:?}");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("compact-tombstone-ratio") {
+        match s.parse::<f64>() {
+            Ok(r) => store = store.compact_tombstone_ratio(r),
+            Err(_) => {
+                eprintln!("serve: --compact-tombstone-ratio expects a ratio, got {s:?}");
+                return 2;
+            }
+        }
+    }
     let store = Arc::new(store);
     let mut coord = coordinator(args);
     for key in &keys {
@@ -429,10 +456,37 @@ fn cmd_serve(args: &Args) -> i32 {
         println!("loaded {key}: {}", human_bytes(report.ours_bytes));
     }
     // model packs mount as the third tier: members stay unloaded (and cost
-    // no RAM) until their first request
+    // no RAM) until their first request. A directory is a generation chain
+    // (MANIFEST + gen-*.rfpk); a file is a single immutable archive.
     for path in &packs {
-        let pack = match rf_compress::pack::PackArchive::open(std::path::Path::new(path)) {
-            Ok(p) => Arc::new(p),
+        let p = std::path::Path::new(path);
+        if p.is_dir() {
+            let chain = match rf_compress::pack::PackChain::open(p) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("chain {path}: {e:#}");
+                    return 1;
+                }
+            };
+            let cs = chain.stats();
+            let (_handle, n) = match store.attach_chain(chain) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("chain {path}: {e:#}");
+                    return 1;
+                }
+            };
+            println!(
+                "attached chain {path}: {n} live members across {} generation(s), \
+                 {} tombstone(s), {} archive bytes",
+                cs.generations,
+                cs.tombstones,
+                human_bytes(cs.archive_bytes)
+            );
+            continue;
+        }
+        let pack = match rf_compress::pack::PackArchive::open(p) {
+            Ok(pa) => Arc::new(pa),
             Err(e) => {
                 eprintln!("pack {path}: {e:#}");
                 return 1;
@@ -1133,9 +1187,172 @@ fn cmd_pack(args: &Args) -> i32 {
                 }
             }
         }
+        "init" => {
+            let Some(dir) = args.get("chain") else {
+                eprintln!("pack init needs --chain DIR");
+                return 2;
+            };
+            match rf_compress::pack::PackChain::create(std::path::Path::new(dir)) {
+                Ok(_) => {
+                    println!("initialized empty chain at {dir}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("pack init: {e:#}");
+                    1
+                }
+            }
+        }
+        "append" => {
+            let Some(dir) = args.get("chain") else {
+                eprintln!("pack append needs --chain DIR");
+                return 2;
+            };
+            let Some(members) = chain_members_from_args(args) else { return 2 };
+            let mut chain = match rf_compress::pack::PackChain::open(std::path::Path::new(dir))
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("pack append: {e:#}");
+                    return 1;
+                }
+            };
+            match chain.append_members(&members) {
+                Ok(seq) => {
+                    println!(
+                        "appended {} member(s) as generation {seq} ({} generations, \
+                         {} live)",
+                        members.len(),
+                        chain.generation_count(),
+                        chain.live_len()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("pack append: {e:#}");
+                    1
+                }
+            }
+        }
+        "remove" => {
+            let Some(dir) = args.get("chain") else {
+                eprintln!("pack remove needs --chain DIR");
+                return 2;
+            };
+            let Some(keys) = args.get_list::<String>("keys") else {
+                eprintln!("pack remove needs --keys K[,K...]");
+                return 2;
+            };
+            let mut chain = match rf_compress::pack::PackChain::open(std::path::Path::new(dir))
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("pack remove: {e:#}");
+                    return 1;
+                }
+            };
+            match chain.remove_members(&keys) {
+                Ok(seq) => {
+                    println!(
+                        "tombstoned {} key(s) as generation {seq} ({} generations, \
+                         {} live, {} tombstones)",
+                        keys.len(),
+                        chain.generation_count(),
+                        chain.live_len(),
+                        chain.tombstone_count()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("pack remove: {e:#}");
+                    1
+                }
+            }
+        }
+        "compact" => {
+            let Some(dir) = args.get("chain") else {
+                eprintln!("pack compact needs --chain DIR");
+                return 2;
+            };
+            let mut chain = match rf_compress::pack::PackChain::open(std::path::Path::new(dir))
+            {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("pack compact: {e:#}");
+                    return 1;
+                }
+            };
+            // default: byte-level merge (bit-identical members). With
+            // --dataset: decode and re-run cohort clustering so members
+            // appended in separate delta cohorts re-share codebooks.
+            let result = if args.get("dataset").is_some() {
+                let Some(ds) = load_dataset(args) else { return 2 };
+                let opts = opts_from(args);
+                rf_compress::pack::compact_chain(
+                    &mut chain,
+                    rf_compress::pack::CompactMode::Recluster { ds: &ds, opts: &opts },
+                )
+            } else {
+                rf_compress::pack::compact_chain(&mut chain, rf_compress::pack::CompactMode::Merge)
+            };
+            match result {
+                Ok(s) if s.generations_before <= 1 && s.tombstones_cleared == 0 => {
+                    println!("chain {dir} is already compact ({} live member(s))", s.live_members);
+                    0
+                }
+                Ok(s) => {
+                    println!(
+                        "compacted {dir}: {} generation(s) → 1 (gen {}), {} live, \
+                         {} tombstone(s) cleared, {} → {}",
+                        s.generations_before,
+                        s.new_seq,
+                        s.live_members,
+                        s.tombstones_cleared,
+                        human_bytes(s.bytes_before),
+                        human_bytes(s.bytes_after)
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("pack compact: {e:#}");
+                    1
+                }
+            }
+        }
         "list" => {
+            if let Some(dir) = args.get("chain") {
+                let chain = match rf_compress::pack::PackChain::open(std::path::Path::new(dir))
+                {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("pack list: {e:#}");
+                        return 1;
+                    }
+                };
+                println!("{:<24} {:>12}  generation", "key", "container");
+                for key in chain.live_keys() {
+                    let (pack, m) = chain.resolve(key).expect("live key resolves");
+                    println!(
+                        "{:<24} {:>12}  {}",
+                        key,
+                        human_bytes(pack.member_logical_bytes(m)),
+                        chain.resolve_seq(key).unwrap_or(0)
+                    );
+                }
+                let s = chain.stats();
+                println!(
+                    "chain: {} generation(s), {} live of {} stored, {} tombstone(s), \
+                     {} archive bytes",
+                    s.generations,
+                    s.live_members,
+                    s.stored_members,
+                    s.tombstones,
+                    human_bytes(s.archive_bytes)
+                );
+                return 0;
+            }
             let Some(input) = args.get("in") else {
-                eprintln!("pack list needs --in FILE");
+                eprintln!("pack list needs --in FILE or --chain DIR");
                 return 2;
             };
             let pack = match PackArchive::open(std::path::Path::new(input)) {
@@ -1224,9 +1441,69 @@ fn cmd_pack(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown pack subcommand {other:?} (build | list | extract)");
+            eprintln!(
+                "unknown pack subcommand {other:?} \
+                 (build | list | extract | init | append | remove | compact)"
+            );
             2
         }
+    }
+}
+
+/// Collect the members a `pack append` adds, in either input mode:
+/// `--inputs A.rfcz[,...]` (keys are the file stems) or `--dataset KEY
+/// --members N` (a fresh cohort, compressed against its own shared
+/// codebooks; `--key-offset` shifts the `user-NNNN` numbering so appended
+/// cohorts don't collide with the base's keys — same-keyed members
+/// *replace* rather than add). Prints the usage error and returns `None`
+/// on misuse.
+fn chain_members_from_args(args: &Args) -> Option<Vec<(String, std::sync::Arc<[u8]>)>> {
+    if let Some(inputs) = args.get_list::<String>("inputs") {
+        let mut members = Vec::new();
+        for path in &inputs {
+            let p = std::path::Path::new(path);
+            let key = p.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
+            match std::fs::read(p) {
+                Ok(b) => members.push((key, std::sync::Arc::<[u8]>::from(b))),
+                Err(e) => {
+                    eprintln!("read {path}: {e}");
+                    return None;
+                }
+            }
+        }
+        Some(members)
+    } else if args.get("dataset").is_some() {
+        let ds = load_dataset(args)?;
+        let members = args.get_or("members", 4usize);
+        let trees = args.get_or("trees", 2usize);
+        let seed = args.get_or("seed", 7u64);
+        let offset = args.get_or("key-offset", 0usize);
+        let params = if ds.target.is_classification() {
+            rf_compress::forest::ForestParams::classification(trees)
+        } else {
+            rf_compress::forest::ForestParams::regression(trees)
+        };
+        let forests: Vec<rf_compress::forest::Forest> = (0..members)
+            .map(|i| rf_compress::forest::Forest::train(&ds, &params, seed + (offset + i) as u64))
+            .collect();
+        let cohort = match rf_compress::pack::compress_cohort(&forests, &ds, &opts_from(args)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("pack append: {e:#}");
+                return None;
+            }
+        };
+        let width = (offset + members).to_string().len().max(4);
+        Some(
+            cohort
+                .iter()
+                .enumerate()
+                .map(|(i, cf)| (format!("user-{:0width$}", offset + i), cf.bytes.clone()))
+                .collect(),
+        )
+    } else {
+        eprintln!("pack append needs --inputs FILES or --dataset KEY --members N");
+        None
     }
 }
 

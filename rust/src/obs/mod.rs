@@ -27,7 +27,7 @@ pub const DEFAULT_TRACE_RING: usize = 128;
 
 /// `StoreStats` keys mirrored into a store-role registry at exposition
 /// time (monotonic counters).
-const STORE_COUNTERS: [&str; 13] = [
+const STORE_COUNTERS: [&str; 14] = [
     "requests",
     "batches",
     "evictions",
@@ -41,9 +41,10 @@ const STORE_COUNTERS: [&str; 13] = [
     "timeouts",
     "prefetches",
     "admission_rejects",
+    "compactions",
 ];
 /// `StoreStats` keys that are levels, not counts.
-const STORE_GAUGES: [&str; 2] = ["inflight", "spill_bytes"];
+const STORE_GAUGES: [&str; 4] = ["inflight", "spill_bytes", "pack_generations", "tombstones"];
 
 /// `RouterStats` keys mirrored into a router-role registry (counters).
 const ROUTER_COUNTERS: [&str; 6] =
@@ -58,7 +59,7 @@ const ROUTER_GAUGES: [&str; 1] = ["backends_up"];
 pub struct Obs {
     registry: Registry,
     request_us: Arc<Histogram>,
-    phase_us: [Arc<AtomicU64>; 8],
+    phase_us: [Arc<AtomicU64>; 9],
     ring: SlowRing,
     slow_threshold_us: AtomicU64,
     enabled: AtomicBool,

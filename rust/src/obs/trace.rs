@@ -34,11 +34,15 @@ pub enum Phase {
     /// the reader/writer thread after the span is observed and is not
     /// attributed.
     Write,
+    /// Merging a pack generation chain into a fresh base (store-side
+    /// compaction; runs outside any one request but is span-timed so the
+    /// `phase_compact_us` counter attributes the maintenance cost).
+    Compact,
 }
 
 impl Phase {
     /// Every phase, in pipeline order.
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 9] = [
         Phase::Parse,
         Phase::Admit,
         Phase::Plan,
@@ -47,6 +51,7 @@ impl Phase {
         Phase::BatchWait,
         Phase::Execute,
         Phase::Write,
+        Phase::Compact,
     ];
 
     /// Stable lower-case name: `phase_<name>_us` registry counters and
@@ -61,6 +66,7 @@ impl Phase {
             Phase::BatchWait => "batch_wait",
             Phase::Execute => "execute",
             Phase::Write => "write",
+            Phase::Compact => "compact",
         }
     }
 
@@ -97,7 +103,7 @@ pub struct BatchTrace {
 /// Phase-timed record of one request.
 pub struct Span {
     started: Instant,
-    phase_us: [u64; 8],
+    phase_us: [u64; 9],
     wall_us: u64,
     model: String,
     /// Attempt legs a router spent on this request (0 = not routed; ≥ 2
@@ -123,7 +129,7 @@ impl Span {
     pub fn begin_at(started: Instant, model: &str) -> Span {
         Span {
             started,
-            phase_us: [0; 8],
+            phase_us: [0; 9],
             wall_us: 0,
             model: model.to_string(),
             attempts: 0,

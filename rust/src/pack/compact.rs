@@ -1,0 +1,292 @@
+//! Chain compaction: merge a generation chain back into one fresh base.
+//!
+//! A chain accretes delta generations and tombstones with every mutation;
+//! reads stay correct at any depth, but each generation is another mmap to
+//! probe and every shadowed/tombstoned member is dead weight on disk.
+//! Compaction collapses the chain to a single new base generation holding
+//! exactly the live membership, clearing every tombstone, with the same
+//! crash-safe manifest swap as any other commit — in-flight readers keep
+//! serving off the old generations' `Arc`-held mappings until they drop
+//! them (the unlinked files stay mapped; POSIX keeps the pages).
+//!
+//! Two modes:
+//!
+//! * [`CompactMode::Merge`] — byte-level: every live member is extracted
+//!   **bit-identically** and re-packed; the pack-level blob dedup still
+//!   collapses side-info spans that happen to match, but no member is
+//!   re-encoded. This is the store-side default (no dataset in hand) and
+//!   the mode the differential oracle in `tests/pack_chain_suite.rs` pins:
+//!   a compacted chain reads byte-for-byte like a from-scratch pack of the
+//!   same containers.
+//! * [`CompactMode::Recluster`] — semantic: decode every live member back
+//!   to its [`Forest`] and re-run [`super::compress_cohort`] over the
+//!   merged membership, re-sharing codebooks across members that were
+//!   appended in different delta cohorts and so never shared tables. Needs
+//!   the training [`Dataset`] (the codec plan collects value alphabets
+//!   from it), so it is CLI-only: `repro pack compact --chain DIR
+//!   --dataset KEY`. Lossless at the forest level (decode → identical
+//!   trees), not at the container-byte level.
+
+use crate::compress::pipeline::decompress_container;
+use crate::compress::CompressOptions;
+use crate::data::Dataset;
+use crate::forest::Forest;
+use crate::pack::format::PackBuilder;
+use crate::pack::generations::PackChain;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// How compaction rebuilds the merged membership.
+pub enum CompactMode<'a> {
+    /// Extract live containers bit-identically and re-pack them.
+    Merge,
+    /// Decode live members and re-run cohort compression over the union.
+    Recluster {
+        /// Training dataset the codec plan collects alphabets from.
+        ds: &'a Dataset,
+        /// Compression options for the re-run.
+        opts: &'a CompressOptions,
+    },
+}
+
+/// What a compaction did (logged by the CLI and folded into store stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Generations merged away.
+    pub generations_before: usize,
+    /// Live members carried into the new base.
+    pub live_members: usize,
+    /// Tombstone entries cleared.
+    pub tombstones_cleared: u64,
+    /// Archive bytes across the old generations.
+    pub bytes_before: u64,
+    /// Archive bytes of the new base (0 if the live set was empty).
+    pub bytes_after: u64,
+    /// The new base generation's sequence number.
+    pub new_seq: u64,
+}
+
+/// Merge `chain` into a single fresh base generation and atomically swap
+/// the manifest (old generation files are deleted after the swap; any
+/// reader still holding their `Arc`s is unaffected). A chain that is
+/// already a lone tombstone-free base is left untouched.
+pub fn compact_chain(chain: &mut PackChain, mode: CompactMode<'_>) -> Result<CompactStats> {
+    let before = chain.stats();
+    if before.generations <= 1 && before.tombstones == 0 {
+        return Ok(CompactStats {
+            generations_before: before.generations,
+            live_members: before.live_members,
+            bytes_before: before.archive_bytes,
+            bytes_after: before.archive_bytes,
+            ..CompactStats::default()
+        });
+    }
+
+    // collect the live membership in key order — deterministic, and the
+    // same insertion order a from-scratch PackBuilder over the sorted
+    // membership would see, which is what makes Merge bit-comparable to an
+    // immutable rebuild
+    let keys: Vec<String> = chain.live_keys().map(String::from).collect();
+    let bytes = match mode {
+        CompactMode::Merge => {
+            let mut builder = PackBuilder::new();
+            for key in &keys {
+                let container = chain
+                    .extract(key)
+                    .with_context(|| format!("extracting {key:?} for compaction"))?;
+                builder.add(key, Arc::<[u8]>::from(container))?;
+            }
+            if keys.is_empty() { Vec::new() } else { builder.build()?.0 }
+        }
+        CompactMode::Recluster { ds, opts } => {
+            let forests: Vec<Forest> = keys
+                .iter()
+                .map(|key| {
+                    let mut pc = chain
+                        .parse(key)
+                        .with_context(|| format!("parsing {key:?} for recompression"))?;
+                    if pc.needs_dataset() {
+                        pc.attach_dataset(ds).with_context(|| {
+                            format!("attaching dataset to {key:?} for recompression")
+                        })?;
+                    }
+                    decompress_container(&pc)
+                        .with_context(|| format!("decoding {key:?} for recompression"))
+                })
+                .collect::<Result<_>>()?;
+            let cohort = super::compress_cohort(&forests, ds, opts)
+                .context("re-running cohort compression over the merged membership")?;
+            let mut builder = PackBuilder::new();
+            for (key, cf) in keys.iter().zip(&cohort) {
+                builder.add(key, cf.bytes.clone())?;
+            }
+            if keys.is_empty() { Vec::new() } else { builder.build()?.0 }
+        }
+    };
+
+    let new_seq = chain.install_compacted(bytes)?;
+    let after = chain.stats();
+    Ok(CompactStats {
+        generations_before: before.generations,
+        live_members: after.live_members,
+        tombstones_cleared: before.tombstones,
+        bytes_before: before.archive_bytes,
+        bytes_after: after.archive_bytes,
+        new_seq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressedForest;
+    use crate::data::synthetic;
+    use crate::forest::ForestParams;
+    use crate::pack::format::PackBuilder;
+    use std::path::PathBuf;
+
+    fn cohort(n: usize, seed: u64) -> (Vec<CompressedForest>, Dataset) {
+        let ds = synthetic::iris(41);
+        let forests: Vec<Forest> = (0..n)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+            .collect();
+        let cfs =
+            crate::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        (cfs, ds)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rfc-compact-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn merge_compaction_matches_immutable_rebuild() {
+        let dir = temp_dir("merge");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cfs, _) = cohort(5, 600);
+        let mut chain = PackChain::create(&dir).unwrap();
+        chain
+            .append_members(&[
+                ("a".to_string(), cfs[0].bytes.clone()),
+                ("b".to_string(), cfs[1].bytes.clone()),
+            ])
+            .unwrap();
+        chain
+            .append_members(&[
+                ("c".to_string(), cfs[2].bytes.clone()),
+                ("b".to_string(), cfs[3].bytes.clone()), // replace b
+            ])
+            .unwrap();
+        chain.remove_members(&["a".to_string()]).unwrap();
+        chain
+            .append_members(&[("d".to_string(), cfs[4].bytes.clone())])
+            .unwrap();
+        assert_eq!(chain.generation_count(), 4);
+
+        let stats = compact_chain(&mut chain, CompactMode::Merge).unwrap();
+        assert_eq!(stats.generations_before, 4);
+        assert_eq!(stats.live_members, 3);
+        assert_eq!(stats.tombstones_cleared, 1);
+        assert_eq!(chain.generation_count(), 1);
+        assert_eq!(chain.tombstone_count(), 0);
+
+        // differential oracle: the compacted base is byte-identical to a
+        // from-scratch pack of the same membership in the same key order
+        let mut oracle = PackBuilder::new();
+        oracle.add("b", cfs[3].bytes.clone()).unwrap();
+        oracle.add("c", cfs[2].bytes.clone()).unwrap();
+        oracle.add("d", cfs[4].bytes.clone()).unwrap();
+        let (oracle_bytes, _) = oracle.build().unwrap();
+        let base = chain.generations()[0].archive().unwrap();
+        assert_eq!(
+            base.archive_bytes(),
+            oracle_bytes.len() as u64,
+            "compacted base differs in size from the immutable rebuild"
+        );
+        for (key, want) in [("b", &cfs[3]), ("c", &cfs[2]), ("d", &cfs[4])] {
+            assert_eq!(chain.extract(key).unwrap()[..], want.bytes[..]);
+        }
+        // old generation files are gone; reopen agrees
+        let reopened = PackChain::open(&dir).unwrap();
+        assert_eq!(reopened.generation_count(), 1);
+        assert_eq!(reopened.live_len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lone_base_compaction_is_a_noop() {
+        let dir = temp_dir("noop");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cfs, _) = cohort(2, 620);
+        let mut chain = PackChain::create(&dir).unwrap();
+        chain
+            .append_members(&[
+                ("a".to_string(), cfs[0].bytes.clone()),
+                ("b".to_string(), cfs[1].bytes.clone()),
+            ])
+            .unwrap();
+        let seq_before = chain.resolve_seq("a").unwrap();
+        let stats = compact_chain(&mut chain, CompactMode::Merge).unwrap();
+        assert_eq!(stats.new_seq, 0, "noop compaction mints no generation");
+        assert_eq!(chain.resolve_seq("a").unwrap(), seq_before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recluster_compaction_is_forest_lossless() {
+        let dir = temp_dir("recluster");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = synthetic::iris(41);
+        let forests: Vec<Forest> = (0..4)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(2), 640 + i as u64))
+            .collect();
+        let opts = CompressOptions::default();
+        // two separately-compressed delta cohorts: their codebooks differ
+        let c1 = crate::pack::compress_cohort(&forests[..2], &ds, &opts).unwrap();
+        let c2 = crate::pack::compress_cohort(&forests[2..], &ds, &opts).unwrap();
+        let mut chain = PackChain::create(&dir).unwrap();
+        chain
+            .append_members(&[
+                ("m0".to_string(), c1[0].bytes.clone()),
+                ("m1".to_string(), c1[1].bytes.clone()),
+            ])
+            .unwrap();
+        chain
+            .append_members(&[
+                ("m2".to_string(), c2[0].bytes.clone()),
+                ("m3".to_string(), c2[1].bytes.clone()),
+            ])
+            .unwrap();
+
+        let stats =
+            compact_chain(&mut chain, CompactMode::Recluster { ds: &ds, opts: &opts }).unwrap();
+        assert_eq!(stats.live_members, 4);
+        assert_eq!(chain.generation_count(), 1);
+        // lossless at the forest level: decode → identical trees
+        for (i, f) in forests.iter().enumerate() {
+            let pc = chain.parse(&format!("m{i}")).unwrap();
+            let decoded = decompress_container(&pc).unwrap();
+            assert!(decoded.identical(f), "member m{i} changed under recluster");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compacting_to_empty_live_set_drops_every_generation() {
+        let dir = temp_dir("empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cfs, _) = cohort(1, 660);
+        let mut chain = PackChain::create(&dir).unwrap();
+        chain
+            .append_members(&[("a".to_string(), cfs[0].bytes.clone())])
+            .unwrap();
+        chain.remove_members(&["a".to_string()]).unwrap();
+        let stats = compact_chain(&mut chain, CompactMode::Merge).unwrap();
+        assert_eq!(stats.live_members, 0);
+        assert_eq!(chain.generation_count(), 0);
+        assert_eq!(chain.tombstone_count(), 0);
+        let reopened = PackChain::open(&dir).unwrap();
+        assert_eq!(reopened.generation_count(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,773 @@
+//! Generation chains: mutable model packs without giving up bit-exact
+//! reconstruction.
+//!
+//! An immutable `RFPK` archive ([`super::format`]) is the right shape for a
+//! cohort that never changes — but the paper's subscriber setting churns:
+//! models are retrained and retired continuously, and paying a full
+//! re-clustering over the whole cohort for every membership change is
+//! exactly the rebuild cost Gieseke & Igel (2018) warn dominates at scale.
+//! A **chain** makes a pack mutable LSM-style:
+//!
+//! ```text
+//! <dir>/
+//!   MANIFEST            text manifest: generation list, in commit order
+//!   gen-00000001.rfpk   base generation  (immutable RFPK archive)
+//!   gen-00000002.rfpk   delta generation (new / replacing members)
+//!                       (a generation may instead carry only tombstones)
+//! ```
+//!
+//! * **Reads resolve newest-first.** Replaying the manifest builds the live
+//!   map: a delta entry shadows any same-keyed member of an earlier
+//!   generation, and a tombstone hides the key entirely (until a later
+//!   generation re-adds it). Every live member still extracts
+//!   **bit-identical** to the container it was appended as — deltas are
+//!   ordinary `RFPK` members, nothing is re-encoded on write.
+//! * **Mutations are new generations.** [`PackChain::append_members`] and
+//!   [`PackChain::remove_members`] never rewrite existing archives; they
+//!   write one new generation (delta pack and/or tombstones) plus a new
+//!   manifest. Generation sequence numbers are monotone and **never
+//!   reused** (the manifest carries the high-water mark), so a crashed
+//!   commit can never leave a stale file a later commit would trust.
+//! * **Commits are crash-safe.** Everything lands under a `.tmp` name
+//!   first; the single `MANIFEST` rename is the commit point. The commit
+//!   protocol passes the declared [`CrashPoint`]s in order, and
+//!   [`PackChain::open`] validates the manifest (magic, monotone seqs,
+//!   resolvable tombstones, parseable archives) and sweeps orphan `.tmp`
+//!   and unreferenced generation files — recovery is all-or-nothing by
+//!   construction, and the crash-injection matrix in
+//!   `tests/pack_chain_suite.rs` proves it at every point.
+//! * **Compaction** ([`super::compact`]) merges the chain back into a
+//!   single fresh base generation and clears every tombstone, swapping the
+//!   manifest atomically while readers holding `Arc`s onto old generation
+//!   mappings keep serving unharmed.
+
+use crate::compress::container::ParsedContainer;
+use crate::pack::format::{PackArchive, PackBuilder};
+use crate::testing::crashpoint::{CrashInjector, CrashPoint};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Manifest file name within a chain directory.
+pub const MANIFEST_NAME: &str = "MANIFEST";
+/// Manifest magic token (first line: `RFPM <version>`).
+pub const MANIFEST_MAGIC: &str = "RFPM";
+/// Manifest format version this build reads and writes.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Ceiling on manifest generations (a hostile manifest must not allocate
+/// unboundedly).
+const MAX_GENERATIONS: usize = 100_000;
+
+/// One generation of a chain: an optional delta archive plus the keys this
+/// generation tombstones.
+pub struct Generation {
+    /// Monotone sequence number (also baked into the file name).
+    pub seq: u64,
+    /// Archive file name relative to the chain directory (`None` for a
+    /// tombstone-only generation).
+    file: Option<String>,
+    /// The generation's parsed archive (one mmap; `None` iff `file` is).
+    pack: Option<Arc<PackArchive>>,
+    /// Keys this generation hides from every earlier generation.
+    tombstones: Vec<String>,
+}
+
+impl Generation {
+    /// The generation's archive, if it has one.
+    pub fn archive(&self) -> Option<&Arc<PackArchive>> {
+        self.pack.as_ref()
+    }
+
+    /// Keys this generation tombstones.
+    pub fn tombstones(&self) -> &[String] {
+        &self.tombstones
+    }
+}
+
+/// Point-in-time summary of a chain (printed by `repro pack list --chain`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChainStats {
+    /// Generations in the manifest.
+    pub generations: usize,
+    /// Live members after newest-first resolution.
+    pub live_members: usize,
+    /// Members stored across all generations (live + shadowed).
+    pub stored_members: usize,
+    /// Tombstone entries across all generations.
+    pub tombstones: u64,
+    /// Sum of the generations' archive bytes on disk.
+    pub archive_bytes: u64,
+}
+
+/// A mutable pack: the ordered generation list plus the resolved live view.
+pub struct PackChain {
+    dir: PathBuf,
+    gens: Vec<Generation>,
+    /// Next sequence number to assign — strictly greater than every seq
+    /// ever used by this chain, surviving compaction (the manifest
+    /// persists it), so generation file names are never reused.
+    next_seq: u64,
+    /// Newest-first resolution: key → (index into `gens`, member index).
+    live: BTreeMap<String, (usize, usize)>,
+    /// Crash-injection seam for the commit protocol (disarmed outside
+    /// tests; see [`crate::testing::crashpoint`]).
+    crash: CrashInjector,
+}
+
+fn gen_file_name(seq: u64) -> String {
+    format!("gen-{seq:08}.rfpk")
+}
+
+impl PackChain {
+    /// Create an empty chain: the directory is created and a zero-generation
+    /// manifest committed. Fails if a manifest already exists there.
+    pub fn create(dir: &Path) -> Result<PackChain> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating chain directory {}", dir.display()))?;
+        if dir.join(MANIFEST_NAME).exists() {
+            bail!("chain {} already has a manifest", dir.display());
+        }
+        let mut chain = PackChain {
+            dir: dir.to_path_buf(),
+            gens: Vec::new(),
+            next_seq: 1,
+            live: BTreeMap::new(),
+            crash: CrashInjector::new(),
+        };
+        chain.commit(None, Vec::new())?;
+        Ok(chain)
+    }
+
+    /// Open and validate a chain directory: parse the manifest, open every
+    /// generation archive, replay the generations into the live view, and
+    /// sweep crash leftovers (`.tmp` files and generation files the
+    /// manifest no longer references). Every structural defect — missing
+    /// or truncated generation file, duplicate or non-monotone sequence
+    /// numbers, a tombstone for a key that is not live at its point in the
+    /// chain — surfaces as a typed error here, never a panic downstream.
+    pub fn open(dir: &Path) -> Result<PackChain> {
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading chain manifest {}", manifest_path.display()))?;
+        let (entries, next_seq) = parse_manifest(&text)
+            .with_context(|| format!("parsing chain manifest {}", manifest_path.display()))?;
+
+        let mut gens = Vec::with_capacity(entries.len());
+        for e in entries {
+            let pack = match &e.file {
+                None => None,
+                Some(name) => {
+                    let path = dir.join(name);
+                    if !path.is_file() {
+                        bail!(
+                            "manifest references missing generation file {} (generation {})",
+                            path.display(),
+                            e.seq
+                        );
+                    }
+                    Some(Arc::new(PackArchive::open(&path).with_context(|| {
+                        format!("opening generation {} archive {name}", e.seq)
+                    })?))
+                }
+            };
+            gens.push(Generation { seq: e.seq, file: e.file, pack, tombstones: e.tombstones });
+        }
+        let live = replay(&gens)?;
+        let chain = PackChain {
+            dir: dir.to_path_buf(),
+            gens,
+            next_seq,
+            live,
+            crash: CrashInjector::new(),
+        };
+        chain.sweep_orphans();
+        Ok(chain)
+    }
+
+    /// Remove crash leftovers: every `.tmp` file, and every `gen-*.rfpk`
+    /// the manifest does not reference. Both are inert — sequence numbers
+    /// are never reused, so no future commit could collide with them — but
+    /// leaving them would leak disk forever.
+    fn sweep_orphans(&self) {
+        let referenced: Vec<&str> =
+            self.gens.iter().filter_map(|g| g.file.as_deref()).collect();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name == MANIFEST_NAME || referenced.contains(&name) {
+                continue;
+            }
+            let orphan_tmp = name.ends_with(".tmp");
+            let orphan_gen = name.starts_with("gen-") && name.ends_with(".rfpk");
+            if orphan_tmp || orphan_gen {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+
+    /// The chain's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The crash-injection seam (tests arm it; production never touches it).
+    pub fn crash(&self) -> &CrashInjector {
+        &self.crash
+    }
+
+    /// Generations, oldest first.
+    pub fn generations(&self) -> &[Generation] {
+        &self.gens
+    }
+
+    /// Number of generations in the manifest.
+    pub fn generation_count(&self) -> usize {
+        self.gens.len()
+    }
+
+    /// Tombstone entries across all generations (compaction resets to 0).
+    pub fn tombstone_count(&self) -> u64 {
+        self.gens.iter().map(|g| g.tombstones.len() as u64).sum()
+    }
+
+    /// Number of live members after newest-first resolution.
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Live member keys, sorted.
+    pub fn live_keys(&self) -> impl Iterator<Item = &str> {
+        self.live.keys().map(|k| k.as_str())
+    }
+
+    /// Whether `key` is currently live (not tombstoned, present somewhere).
+    pub fn contains(&self, key: &str) -> bool {
+        self.live.contains_key(key)
+    }
+
+    /// Resolve a live key to the generation archive and member index that
+    /// currently serve it (the newest generation holding the key). The
+    /// returned `Arc` keeps that generation's mapping alive across any
+    /// concurrent compaction — in-flight readers are never torn down.
+    pub fn resolve(&self, key: &str) -> Option<(&Arc<PackArchive>, usize)> {
+        let &(g, m) = self.live.get(key)?;
+        Some((self.gens[g].pack.as_ref().expect("live member in archive-less generation"), m))
+    }
+
+    /// The generation sequence number currently serving a live key.
+    pub fn resolve_seq(&self, key: &str) -> Option<u64> {
+        let &(g, _) = self.live.get(key)?;
+        Some(self.gens[g].seq)
+    }
+
+    /// Reconstruct a live member's standalone `RFCZ` container bytes —
+    /// bit-identical to what was appended, resolved newest-first.
+    pub fn extract(&self, key: &str) -> Result<Vec<u8>> {
+        let (pack, m) = self
+            .resolve(key)
+            .with_context(|| format!("unknown or tombstoned chain member {key:?}"))?;
+        pack.extract_member(m)
+    }
+
+    /// Parse a live member zero-copy off its generation's mapping.
+    pub fn parse(&self, key: &str) -> Result<ParsedContainer> {
+        let (pack, m) = self
+            .resolve(key)
+            .with_context(|| format!("unknown or tombstoned chain member {key:?}"))?;
+        pack.parse_member(m)
+    }
+
+    /// Chain summary across generations.
+    pub fn stats(&self) -> ChainStats {
+        ChainStats {
+            generations: self.gens.len(),
+            live_members: self.live.len(),
+            stored_members: self
+                .gens
+                .iter()
+                .filter_map(|g| g.pack.as_ref())
+                .map(|p| p.member_count())
+                .sum(),
+            tombstones: self.tombstone_count(),
+            archive_bytes: self
+                .gens
+                .iter()
+                .filter_map(|g| g.pack.as_ref())
+                .map(|p| p.archive_bytes())
+                .sum(),
+        }
+    }
+
+    /// Append (or replace) members as one new delta generation. Each
+    /// `(key, container)` pair is validated like [`PackBuilder::add`]; a
+    /// key already live in an earlier generation is **shadowed**, not
+    /// rewritten. Returns the new generation's sequence number. For the
+    /// shared-codebook win, compress the batch as one cohort
+    /// ([`crate::pack::compress_cohort`]) before appending — the delta
+    /// pack dedups side information within the batch exactly like a base
+    /// archive does.
+    pub fn append_members(&mut self, members: &[(String, Arc<[u8]>)]) -> Result<u64> {
+        if members.is_empty() {
+            bail!("append_members needs at least one member");
+        }
+        let mut builder = PackBuilder::new();
+        for (key, bytes) in members {
+            builder.add(key, bytes.clone())?;
+        }
+        let (bytes, _) = builder.build()?;
+        let seq = self.next_seq;
+        self.commit(Some((seq, bytes, Vec::new())), Vec::new())?;
+        Ok(seq)
+    }
+
+    /// Tombstone members as one new (archive-less) generation: every key
+    /// must currently be live, and duplicates are refused. Returns the new
+    /// generation's sequence number. The member's bytes stay in their old
+    /// generation until a compaction merges them away — removal is a
+    /// manifest-only commit.
+    pub fn remove_members(&mut self, keys: &[String]) -> Result<u64> {
+        if keys.is_empty() {
+            bail!("remove_members needs at least one key");
+        }
+        let mut seen = BTreeMap::new();
+        for key in keys {
+            if !self.live.contains_key(key) {
+                bail!("cannot tombstone {key:?}: not a live chain member");
+            }
+            if seen.insert(key, ()).is_some() {
+                bail!("duplicate tombstone key {key:?}");
+            }
+        }
+        let seq = self.next_seq;
+        self.commit(Some((seq, Vec::new(), keys.to_vec())), Vec::new())?;
+        Ok(seq)
+    }
+
+    /// Install a compacted base: one fresh generation holding `bytes`
+    /// replaces every existing generation, and the old generation files are
+    /// cleaned up after the manifest swap. `bytes` empty means the live
+    /// set is empty — the chain compacts to zero generations. Used by
+    /// [`super::compact::compact_chain`].
+    pub(crate) fn install_compacted(&mut self, bytes: Vec<u8>) -> Result<u64> {
+        let seq = self.next_seq;
+        let cleanup: Vec<String> = self.gens.iter().filter_map(|g| g.file.clone()).collect();
+        let replace = if bytes.is_empty() { None } else { Some((seq, bytes, Vec::new())) };
+        self.commit_replacing(replace, cleanup)?;
+        Ok(seq)
+    }
+
+    /// Commit one additional generation (see [`Self::commit_replacing`]).
+    fn commit(
+        &mut self,
+        new_gen: Option<(u64, Vec<u8>, Vec<String>)>,
+        cleanup: Vec<String>,
+    ) -> Result<()> {
+        self.commit_inner(new_gen, cleanup, false)
+    }
+
+    /// Commit a generation that REPLACES the whole chain (compaction).
+    fn commit_replacing(
+        &mut self,
+        new_gen: Option<(u64, Vec<u8>, Vec<String>)>,
+        cleanup: Vec<String>,
+    ) -> Result<()> {
+        self.commit_inner(new_gen, cleanup, true)
+    }
+
+    /// The crash-safe commit protocol. `new_gen` is `(seq, archive bytes,
+    /// tombstones)` — empty bytes mean a tombstone-only generation.
+    /// Ordering (each [`CrashPoint`] is a declared crash window):
+    ///
+    /// 1. *pre-tmp* — nothing written yet; a crash is a pure no-op.
+    /// 2. write `gen-<seq>.rfpk.tmp` and `MANIFEST.tmp` → *post-tmp* —
+    ///    tmp files exist; open ignores and sweeps them.
+    /// 3. rename the generation file into place → *pre-rename* — the new
+    ///    archive exists but the manifest still describes the old chain;
+    ///    open serves the old set and sweeps the unreferenced file.
+    /// 4. rename `MANIFEST.tmp` over `MANIFEST` (**the commit point**;
+    ///    rename is atomic on POSIX) → *post-rename* — the new set is
+    ///    durable; only cleanup of old files is pending.
+    /// 5. delete `cleanup` files (compaction's merged-away generations)
+    ///    → *post-cleanup*.
+    ///
+    /// Only after the protocol finishes does the in-memory chain adopt the
+    /// new state; on any error the in-memory view still describes the
+    /// *old* committed state unless the manifest rename already landed, in
+    /// which case reopening the directory recovers the new one — either
+    /// way the disk is exactly one of the two sets, never a mix.
+    fn commit_inner(
+        &mut self,
+        new_gen: Option<(u64, Vec<u8>, Vec<String>)>,
+        cleanup: Vec<String>,
+        replace: bool,
+    ) -> Result<()> {
+        let manifest_path = self.dir.join(MANIFEST_NAME);
+        let manifest_tmp = self.dir.join(format!("{MANIFEST_NAME}.tmp"));
+
+        // assemble the post-commit generation list (entries only; the
+        // archive is opened after the protocol lands)
+        let mut entries: Vec<(u64, Option<String>, Vec<String>)> = if replace {
+            Vec::new()
+        } else {
+            self.gens
+                .iter()
+                .map(|g| (g.seq, g.file.clone(), g.tombstones.clone()))
+                .collect()
+        };
+        let mut next_seq = self.next_seq;
+        let mut pack_file: Option<(PathBuf, PathBuf, String)> = None; // (tmp, final, name)
+        let mut pack_bytes: Option<Vec<u8>> = None;
+        if let Some((seq, bytes, tombstones)) = new_gen {
+            debug_assert_eq!(seq, self.next_seq, "generation seqs are assigned in order");
+            let file = if bytes.is_empty() {
+                if tombstones.is_empty() {
+                    bail!("a generation needs an archive or at least one tombstone");
+                }
+                None
+            } else {
+                let name = gen_file_name(seq);
+                pack_file = Some((
+                    self.dir.join(format!("{name}.tmp")),
+                    self.dir.join(&name),
+                    name.clone(),
+                ));
+                pack_bytes = Some(bytes);
+                Some(name)
+            };
+            entries.push((seq, file, tombstones));
+            next_seq = seq + 1;
+        }
+        let text = render_manifest(&entries, next_seq);
+
+        // ---- the declared crash windows, in order ----
+        self.crash.check(CrashPoint::PreTmp)?;
+        if let (Some((tmp, _, _)), Some(bytes)) = (&pack_file, &pack_bytes) {
+            std::fs::write(tmp, bytes)
+                .with_context(|| format!("writing generation tmp {}", tmp.display()))?;
+        }
+        std::fs::write(&manifest_tmp, &text)
+            .with_context(|| format!("writing manifest tmp {}", manifest_tmp.display()))?;
+        self.crash.check(CrashPoint::PostTmp)?;
+        if let Some((tmp, final_path, _)) = &pack_file {
+            std::fs::rename(tmp, final_path)
+                .with_context(|| format!("installing generation {}", final_path.display()))?;
+        }
+        self.crash.check(CrashPoint::PreRename)?;
+        std::fs::rename(&manifest_tmp, &manifest_path)
+            .with_context(|| format!("committing manifest {}", manifest_path.display()))?;
+        self.crash.check(CrashPoint::PostRename)?;
+        for name in &cleanup {
+            let _ = std::fs::remove_file(self.dir.join(name));
+        }
+        self.crash.check(CrashPoint::PostCleanup)?;
+
+        // ---- adopt the committed state in memory ----
+        let mut gens = Vec::with_capacity(entries.len());
+        for (seq, file, tombstones) in entries {
+            // unchanged generations keep their already-open archive (and
+            // any Arc a reader holds); only the new file is opened
+            let existing = self
+                .gens
+                .iter()
+                .find(|g| g.seq == seq && g.file == file)
+                .and_then(|g| g.pack.clone());
+            let pack = match (&file, existing) {
+                (None, _) => None,
+                (Some(_), Some(p)) => Some(p),
+                (Some(name), None) => Some(Arc::new(
+                    PackArchive::open(&self.dir.join(name))
+                        .with_context(|| format!("reopening committed generation {name}"))?,
+                )),
+            };
+            gens.push(Generation { seq, file, pack, tombstones });
+        }
+        self.live = replay(&gens)?;
+        self.gens = gens;
+        self.next_seq = next_seq;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for PackChain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PackChain")
+            .field("dir", &self.dir)
+            .field("generations", &self.gens.len())
+            .field("live", &self.live.len())
+            .field("tombstones", &self.tombstone_count())
+            .finish()
+    }
+}
+
+/// Replay generations oldest→newest into the live view, validating that
+/// every tombstone hides a key that is live at its point in the chain.
+fn replay(gens: &[Generation]) -> Result<BTreeMap<String, (usize, usize)>> {
+    let mut live: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (gi, g) in gens.iter().enumerate() {
+        for key in &g.tombstones {
+            if live.remove(key).is_none() {
+                bail!(
+                    "generation {} tombstones {key:?}, which is not live at that \
+                     point in the chain",
+                    g.seq
+                );
+            }
+        }
+        if let Some(pack) = &g.pack {
+            for m in 0..pack.member_count() {
+                live.insert(pack.key(m).to_string(), (gi, m));
+            }
+        }
+    }
+    Ok(live)
+}
+
+/// One parsed manifest generation line.
+struct ManifestEntry {
+    seq: u64,
+    file: Option<String>,
+    tombstones: Vec<String>,
+}
+
+/// Parse the manifest text. Grammar (line-oriented, space-delimited — pack
+/// keys can never contain whitespace, [`super::format`] enforces it):
+///
+/// ```text
+/// RFPM 1
+/// next <seq>
+/// gen <seq> <file|-> [tombstone-key ...]
+/// ```
+fn parse_manifest(text: &str) -> Result<(Vec<ManifestEntry>, u64)> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty manifest")?;
+    let expected = format!("{MANIFEST_MAGIC} {MANIFEST_VERSION}");
+    if header.trim() != expected {
+        bail!("bad manifest header {header:?} (expected {expected:?})");
+    }
+    let next_line = lines.next().context("manifest missing `next` line")?;
+    let next_seq: u64 = next_line
+        .strip_prefix("next ")
+        .with_context(|| format!("bad manifest line {next_line:?} (expected `next <seq>`)"))?
+        .trim()
+        .parse()
+        .with_context(|| format!("bad next-seq in {next_line:?}"))?;
+
+    let mut entries = Vec::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        match toks.next() {
+            Some("gen") => {}
+            other => bail!("unknown manifest line {line:?} (token {other:?})"),
+        }
+        let seq: u64 = toks
+            .next()
+            .context("gen line missing seq")?
+            .parse()
+            .with_context(|| format!("bad generation seq in {line:?}"))?;
+        let file_tok = toks.next().context("gen line missing file")?;
+        let file = if file_tok == "-" {
+            None
+        } else {
+            if file_tok.contains('/') || file_tok.contains('\\') || file_tok == ".." {
+                bail!("generation file name {file_tok:?} may not contain path separators");
+            }
+            Some(file_tok.to_string())
+        };
+        let tombstones: Vec<String> = toks.map(|t| t.to_string()).collect();
+        if file.is_none() && tombstones.is_empty() {
+            bail!("generation {seq} has neither an archive nor tombstones");
+        }
+        if let Some(prev) = entries.last().map(|e: &ManifestEntry| e.seq) {
+            if seq == prev {
+                bail!("duplicate generation sequence number {seq}");
+            }
+            if seq < prev {
+                bail!("generation sequence numbers must be monotone ({seq} after {prev})");
+            }
+        }
+        entries.push(ManifestEntry { seq, file, tombstones });
+        if entries.len() > MAX_GENERATIONS {
+            bail!("implausible manifest: more than {MAX_GENERATIONS} generations");
+        }
+    }
+    if let Some(last) = entries.last() {
+        if next_seq <= last.seq {
+            bail!(
+                "manifest next-seq {next_seq} is not past the last generation ({}) — \
+                 sequence numbers would be reused",
+                last.seq
+            );
+        }
+    }
+    if next_seq == 0 {
+        bail!("manifest next-seq must be positive");
+    }
+    Ok((entries, next_seq))
+}
+
+/// Render the manifest text for a generation list (inverse of
+/// [`parse_manifest`]).
+fn render_manifest(entries: &[(u64, Option<String>, Vec<String>)], next_seq: u64) -> String {
+    let mut out = format!("{MANIFEST_MAGIC} {MANIFEST_VERSION}\nnext {next_seq}\n");
+    for (seq, file, tombstones) in entries {
+        out.push_str("gen ");
+        out.push_str(&seq.to_string());
+        out.push(' ');
+        out.push_str(file.as_deref().unwrap_or("-"));
+        for t in tombstones {
+            out.push(' ');
+            out.push_str(t);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{CompressOptions, CompressedForest};
+    use crate::data::synthetic;
+    use crate::forest::{Forest, ForestParams};
+
+    fn cohort(n: usize, seed: u64) -> (Vec<CompressedForest>, Vec<Forest>) {
+        let ds = synthetic::iris(41);
+        let forests: Vec<Forest> = (0..n)
+            .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+            .collect();
+        let cfs =
+            crate::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap();
+        (cfs, forests)
+    }
+
+    fn temp_chain_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rfc-chain-{tag}-{}", std::process::id()))
+    }
+
+    fn members(cfs: &[CompressedForest], keys: &[&str]) -> Vec<(String, Arc<[u8]>)> {
+        keys.iter()
+            .zip(cfs)
+            .map(|(k, cf)| (k.to_string(), cf.bytes.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn chain_append_remove_resolves_newest_first() {
+        let dir = temp_chain_dir("resolve");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cfs, _) = cohort(4, 500);
+        let mut chain = PackChain::create(&dir).unwrap();
+        assert_eq!(chain.generation_count(), 0);
+        assert_eq!(chain.live_len(), 0);
+
+        // base generation: a, b
+        let g1 = chain
+            .append_members(&members(&cfs[..2], &["a", "b"]))
+            .unwrap();
+        // delta: c new, b replaced by a different container
+        let g2 = chain
+            .append_members(&members(&cfs[2..4], &["c", "b"]))
+            .unwrap();
+        assert!(g2 > g1);
+        assert_eq!(chain.generation_count(), 2);
+        assert_eq!(chain.live_len(), 3);
+        // the delta entry shadows the base
+        assert_eq!(chain.extract("b").unwrap()[..], cfs[3].bytes[..]);
+        assert_eq!(chain.resolve_seq("b"), Some(g2));
+        assert_eq!(chain.resolve_seq("a"), Some(g1));
+        assert_eq!(chain.extract("a").unwrap()[..], cfs[0].bytes[..]);
+        assert_eq!(chain.extract("c").unwrap()[..], cfs[2].bytes[..]);
+
+        // tombstone hides a; the key is gone until re-added
+        chain.remove_members(&["a".to_string()]).unwrap();
+        assert_eq!(chain.generation_count(), 3);
+        assert!(!chain.contains("a"));
+        assert!(chain.extract("a").is_err());
+        assert_eq!(chain.tombstone_count(), 1);
+        // re-append revives it with new bytes
+        chain.append_members(&members(&cfs[1..2], &["a"])).unwrap();
+        assert_eq!(chain.extract("a").unwrap()[..], cfs[1].bytes[..]);
+
+        // reopening from disk reproduces the same view exactly
+        let reopened = PackChain::open(&dir).unwrap();
+        assert_eq!(reopened.generation_count(), 4);
+        assert_eq!(
+            reopened.live_keys().collect::<Vec<_>>(),
+            chain.live_keys().collect::<Vec<_>>()
+        );
+        for key in ["a", "b", "c"] {
+            assert_eq!(reopened.extract(key).unwrap(), chain.extract(key).unwrap());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chain_mutations_are_validated() {
+        let dir = temp_chain_dir("validate");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cfs, _) = cohort(2, 520);
+        let mut chain = PackChain::create(&dir).unwrap();
+        assert!(PackChain::create(&dir).is_err(), "double create is refused");
+        assert!(chain.append_members(&[]).is_err());
+        assert!(chain.remove_members(&[]).is_err());
+        assert!(
+            chain.remove_members(&["ghost".to_string()]).is_err(),
+            "tombstoning a non-member is refused"
+        );
+        chain.append_members(&members(&cfs, &["a", "b"])).unwrap();
+        assert!(
+            chain
+                .remove_members(&["a".to_string(), "a".to_string()])
+                .is_err(),
+            "duplicate tombstones are refused"
+        );
+        // a failed commit leaves the chain intact
+        assert_eq!(chain.live_len(), 2);
+        assert!(
+            chain
+                .append_members(&[("junk".to_string(), vec![1u8, 2, 3].into())])
+                .is_err(),
+            "non-RFCZ members are refused"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_defects() {
+        let entries = vec![
+            (1, Some("gen-00000001.rfpk".to_string()), vec![]),
+            (3, None, vec!["user-1".to_string(), "user-2".to_string()]),
+        ];
+        let text = render_manifest(&entries, 4);
+        let (parsed, next) = parse_manifest(&text).unwrap();
+        assert_eq!(next, 4);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].seq, 1);
+        assert_eq!(parsed[0].file.as_deref(), Some("gen-00000001.rfpk"));
+        assert_eq!(parsed[1].file, None);
+        assert_eq!(parsed[1].tombstones, vec!["user-1", "user-2"]);
+
+        for (bad, why) in [
+            ("", "empty"),
+            ("RFXX 1\nnext 1\n", "bad magic"),
+            ("RFPM 9\nnext 1\n", "bad version"),
+            ("RFPM 1\n", "missing next"),
+            ("RFPM 1\nnext 0\n", "zero next"),
+            ("RFPM 1\nnext 2\ngen 1 a.rfpk\ngen 1 b.rfpk", "duplicate seq"),
+            ("RFPM 1\nnext 3\ngen 2 a.rfpk\ngen 1 b.rfpk", "non-monotone"),
+            ("RFPM 1\nnext 1\ngen 1 a.rfpk", "next not past last"),
+            ("RFPM 1\nnext 2\ngen 1 -", "tombstone-less empty gen"),
+            ("RFPM 1\nnext 2\ngen 1 ../escape.rfpk", "traversal file"),
+            ("RFPM 1\nnext 2\nbogus line", "unknown line"),
+        ] {
+            assert!(parse_manifest(bad).is_err(), "{why} must be rejected");
+        }
+    }
+}

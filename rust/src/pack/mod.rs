@@ -27,8 +27,16 @@
 //! *releasing* back to the pack — no disk write, the archive keeps the bytes
 //! ([`crate::coordinator::store::ModelStore::attach_pack`]).
 
+//! Mutability: a pack can also live as a **generation chain** ([`generations`])
+//! — the immutable base plus delta packs and tombstones under a crash-safe
+//! manifest — with [`compact`] merging the chain back into a fresh base.
+
+pub mod compact;
 pub mod format;
+pub mod generations;
 pub mod shared;
 
+pub use compact::{compact_chain, CompactMode, CompactStats};
 pub use format::{PackArchive, PackBuilder, PackStats};
+pub use generations::{ChainStats, PackChain};
 pub use shared::{compress_cohort, compress_cohort_with_engine};

@@ -1,0 +1,162 @@
+//! Crash-injection seam for multi-file commit protocols.
+//!
+//! The generation-chain manifest ([`crate::pack::generations`]) promises
+//! all-or-nothing mutations: a crash at *any* instant of an
+//! append/remove/compact leaves the chain readable as exactly the old or
+//! exactly the new generation set. Code cannot be trusted to keep that
+//! promise by inspection — it has to be driven through every crash window
+//! and reopened. This module is the seam that makes those windows
+//! reachable from tests without actually killing the process.
+//!
+//! A commit declares its crash points in protocol order
+//! ([`CrashPoint::ALL`]) and calls [`CrashInjector::check`] as it passes
+//! each one. A disarmed injector (the default, and the only state
+//! production code ever sees) costs a single relaxed atomic load per
+//! point. A test arms one point; the next commit that reaches it fails
+//! with a typed error *right there*, leaving the filesystem in whatever
+//! intermediate state the protocol had produced — exactly what a power
+//! cut at that instant leaves behind. Firing disarms the injector
+//! (one-shot), so the recovery path that reopens and retries runs clean.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The declared crash windows of a write-tmp-then-rename commit, in
+/// protocol order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Before anything is written: the commit must be a pure no-op.
+    PreTmp,
+    /// Every `.tmp` file is written; nothing has been renamed into place.
+    PostTmp,
+    /// Payload files (e.g. a new generation pack) are renamed into place;
+    /// the manifest rename — the commit point — has not happened.
+    PreRename,
+    /// The manifest rename landed: the new state is durable, but
+    /// now-unreferenced old files have not been cleaned up yet.
+    PostRename,
+    /// Cleanup ran; the crash hits after the protocol finished.
+    PostCleanup,
+}
+
+impl CrashPoint {
+    /// Every crash point, in the order a commit traverses them.
+    pub const ALL: [CrashPoint; 5] = [
+        CrashPoint::PreTmp,
+        CrashPoint::PostTmp,
+        CrashPoint::PreRename,
+        CrashPoint::PostRename,
+        CrashPoint::PostCleanup,
+    ];
+
+    /// Stable name, used in the injected error and test diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            CrashPoint::PreTmp => "pre-tmp",
+            CrashPoint::PostTmp => "post-tmp",
+            CrashPoint::PreRename => "pre-rename",
+            CrashPoint::PostRename => "post-rename",
+            CrashPoint::PostCleanup => "post-cleanup",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            CrashPoint::PreTmp => 1,
+            CrashPoint::PostTmp => 2,
+            CrashPoint::PreRename => 3,
+            CrashPoint::PostRename => 4,
+            CrashPoint::PostCleanup => 5,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<CrashPoint> {
+        CrashPoint::ALL.iter().copied().find(|p| p.code() == code)
+    }
+}
+
+/// A one-shot crash trigger owned by the structure whose commits it can
+/// interrupt (per-owner state, so parallel tests never race on a global).
+#[derive(Debug, Default)]
+pub struct CrashInjector {
+    /// 0 = disarmed; otherwise the armed point's code.
+    armed: AtomicU8,
+}
+
+impl CrashInjector {
+    /// A disarmed injector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm `point`: the next commit that reaches it fails there.
+    pub fn arm(&self, point: CrashPoint) {
+        self.armed.store(point.code(), Ordering::Relaxed);
+    }
+
+    /// Disarm without firing.
+    pub fn disarm(&self) {
+        self.armed.store(0, Ordering::Relaxed);
+    }
+
+    /// The currently armed point, if any.
+    pub fn armed(&self) -> Option<CrashPoint> {
+        CrashPoint::from_code(self.armed.load(Ordering::Relaxed))
+    }
+
+    /// Pass a declared crash point: `Err` (and disarm — one-shot) iff this
+    /// exact point is armed. The error is typed and carries the point
+    /// name, so tests can assert the simulated crash is the failure they
+    /// injected and not a genuine bug on the same path.
+    pub fn check(&self, point: CrashPoint) -> Result<()> {
+        // a plain load first: the disarmed fast path never does a RMW
+        if self.armed.load(Ordering::Relaxed) != point.code() {
+            return Ok(());
+        }
+        if self
+            .armed
+            .compare_exchange(point.code(), 0, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            bail!("injected crash at {}", point.name());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_injector_passes_every_point() {
+        let inj = CrashInjector::new();
+        for p in CrashPoint::ALL {
+            inj.check(p).unwrap();
+        }
+        assert_eq!(inj.armed(), None);
+    }
+
+    #[test]
+    fn armed_point_fires_once_and_only_there() {
+        let inj = CrashInjector::new();
+        inj.arm(CrashPoint::PreRename);
+        assert_eq!(inj.armed(), Some(CrashPoint::PreRename));
+        // earlier points pass untouched
+        inj.check(CrashPoint::PreTmp).unwrap();
+        inj.check(CrashPoint::PostTmp).unwrap();
+        let err = inj.check(CrashPoint::PreRename).unwrap_err().to_string();
+        assert!(err.contains("injected crash at pre-rename"), "{err}");
+        // one-shot: the retry passes clean
+        assert_eq!(inj.armed(), None);
+        inj.check(CrashPoint::PreRename).unwrap();
+    }
+
+    #[test]
+    fn disarm_without_firing() {
+        let inj = CrashInjector::new();
+        inj.arm(CrashPoint::PostCleanup);
+        inj.disarm();
+        inj.check(CrashPoint::PostCleanup).unwrap();
+    }
+}

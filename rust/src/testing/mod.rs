@@ -1,11 +1,14 @@
 //! In-tree test harnesses: property-testing mini-framework (no `proptest`
 //! offline), the deterministic fault-injection proxy the router's
-//! partition tests drive, and the seed-replayable multi-tenant workload
-//! generator behind `repro loadgen`.
+//! partition tests drive, the crash-injection seam the generation-chain
+//! commit protocol is proven against, and the seed-replayable
+//! multi-tenant workload generator behind `repro loadgen`.
 
 pub mod chaos;
+pub mod crashpoint;
 pub mod loadgen;
 pub mod prop;
 
 pub use chaos::{ChaosProxy, ChaosSchedule, Fault};
+pub use crashpoint::{CrashInjector, CrashPoint};
 pub use prop::{forall, Gen};

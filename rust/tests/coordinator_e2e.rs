@@ -6,7 +6,7 @@ mod common;
 use common::{row_values, values_to_wire};
 use rf_compress::compress::predict::PredictOne;
 use rf_compress::compress::CompressOptions;
-use rf_compress::coordinator::server::{Client, Server};
+use rf_compress::coordinator::server::{Client, PipeReply, Server};
 use rf_compress::coordinator::store::{ModelStore, ObsValue};
 use rf_compress::coordinator::Coordinator;
 use rf_compress::data::{synthetic, Column, Dataset};
@@ -652,4 +652,95 @@ fn pack_file_round_trip_through_cli_surfaces() {
     let got = store.predict("user-0", &row_values(&ds, 5)).unwrap();
     assert_eq!(got, PredictOne::Class(forests[0].predict_class(&ds, 5)));
     std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn pack_compaction_under_load_over_tcp() {
+    // the chain acceptance drill: a three-generation chain serves a
+    // pipelined burst while a forced compaction swaps the manifest
+    // mid-burst. Required: every request answers OK bit-identically (the
+    // retry in the pack-load path absorbs the swap), STATS reports the
+    // compaction, and the remount is replacement — not an eviction storm.
+    use rf_compress::forest::{Forest, ForestParams};
+    use rf_compress::pack::PackChain;
+
+    let ds = synthetic::iris(90);
+    let forests: Vec<Forest> = (0..6)
+        .map(|i| Forest::train(&ds, &ForestParams::classification(2), 33 + i as u64))
+        .collect();
+    let opts = CompressOptions::default();
+    let batch = |range: std::ops::Range<usize>| -> Vec<(String, Arc<[u8]>)> {
+        let cohort =
+            rf_compress::pack::compress_cohort(&forests[range.clone()], &ds, &opts).unwrap();
+        range.zip(&cohort).map(|(i, cf)| (format!("user-{i}"), cf.bytes.clone())).collect()
+    };
+    let dir = std::env::temp_dir()
+        .join(format!("rfc-e2e-chain-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // three delta generations, each its own compressed cohort
+    let mut chain = PackChain::create(&dir).unwrap();
+    chain.append_members(&batch(0..3)).unwrap();
+    chain.append_members(&batch(3..5)).unwrap();
+    chain.append_members(&batch(5..6)).unwrap();
+    assert_eq!(chain.generation_count(), 3);
+
+    let store = Arc::new(ModelStore::new());
+    let (_handle, mounted) = store.attach_chain(chain).unwrap();
+    assert_eq!(mounted, 6, "every live chain member mounts");
+    let server = Server::start(store.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.contains("pack_generations=3"), "{stats}");
+    assert!(stats.contains("compactions=0"), "{stats}");
+
+    // first half of the burst, then force the compaction from another
+    // thread while the rest is issued — the swap lands mid-traffic
+    const BURST: usize = 48;
+    let plan: Vec<(usize, usize)> =
+        (0..BURST).map(|id| (id % 6, id % ds.num_rows())).collect();
+    for (id, (member, row)) in plan.iter().enumerate().take(BURST / 2) {
+        let wire = values_to_wire(&row_values(&ds, *row));
+        client.pipe_predict(id as u64, &format!("user-{member}"), &wire).unwrap();
+    }
+    let compactor = {
+        let store = store.clone();
+        std::thread::spawn(move || store.compact_chains(true))
+    };
+    for (id, (member, row)) in plan.iter().enumerate().skip(BURST / 2) {
+        let wire = values_to_wire(&row_values(&ds, *row));
+        client.pipe_predict(id as u64, &format!("user-{member}"), &wire).unwrap();
+    }
+    let replies = client.collect_pipelined(BURST).unwrap();
+    assert_eq!(compactor.join().unwrap().unwrap(), 1, "one chain compacted");
+
+    // every id answered exactly once with the forest's own prediction
+    let mut seen = vec![false; BURST];
+    for r in &replies {
+        let PipeReply::Ok { id, value } = r else { panic!("mid-compaction failure: {r:?}") };
+        let id = *id as usize;
+        assert!(!seen[id], "id {id} answered twice");
+        seen[id] = true;
+        let (member, row) = plan[id];
+        assert_eq!(
+            *value,
+            format!("{}", forests[member].predict_class(&ds, row)),
+            "id {id}: wrong payload across the compaction swap"
+        );
+    }
+    assert!(seen.iter().all(|&s| s), "some ids never resolved");
+
+    // the chain is one generation now; replacement, not eviction
+    let stats = client.request("STATS").unwrap();
+    assert!(stats.contains("compactions=1"), "{stats}");
+    assert!(stats.contains("pack_generations=1"), "{stats}");
+    assert!(stats.contains("tombstones=0"), "{stats}");
+    assert!(stats.contains("evictions=0"), "remount must not storm evictions: {stats}");
+    // and the compacted chain still serves fresh loads correctly
+    for (m, forest) in forests.iter().enumerate() {
+        let wire = values_to_wire(&row_values(&ds, m));
+        let reply = client.request(&format!("PREDICT user-{m} {wire}")).unwrap();
+        assert_eq!(reply, format!("OK {}", forest.predict_class(&ds, m)));
+    }
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,408 @@
+//! Generation-chain integration suite.
+//!
+//! Three pillars, matching the chain's three promises
+//! (`rust/src/pack/generations.rs`):
+//!
+//! 1. **Crash safety** — every mutation (first append, delta append,
+//!    remove, compact) is driven through every declared [`CrashPoint`];
+//!    reopening after the simulated crash must recover exactly the old or
+//!    exactly the new generation set (never a mix), sweep every leftover,
+//!    and accept a clean retry.
+//! 2. **Differential correctness** — random append/replace/remove/compact
+//!    schedules read bit-identically to a plain `BTreeMap` oracle at every
+//!    step, and a merge-compacted chain is **byte-identical** on disk to a
+//!    from-scratch [`PackBuilder`] archive over the same membership.
+//! 3. **Typed failure** — corrupt chains (truncated or missing generation
+//!    files, duplicate sequence numbers, tombstones for unknown keys)
+//!    surface as typed errors from [`PackChain::open`], never panics.
+
+use rf_compress::compress::{CompressOptions, CompressedForest};
+use rf_compress::data::synthetic;
+use rf_compress::forest::{Forest, ForestParams};
+use rf_compress::pack::{compact_chain, CompactMode, PackBuilder, PackChain};
+use rf_compress::testing::prop::{forall_cases, Gen};
+use rf_compress::testing::CrashPoint;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Train `n` tiny per-user forests once and compress them as one cohort.
+fn cohort(n: usize, seed: u64) -> Vec<CompressedForest> {
+    let ds = synthetic::iris(41);
+    let forests: Vec<Forest> = (0..n)
+        .map(|i| Forest::train(&ds, &ForestParams::classification(2), seed + i as u64))
+        .collect();
+    rf_compress::pack::compress_cohort(&forests, &ds, &CompressOptions::default()).unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rfc-chain-suite-{tag}-{}", std::process::id()))
+}
+
+fn members(cfs: &[CompressedForest], keys: &[&str]) -> Vec<(String, Arc<[u8]>)> {
+    keys.iter().zip(cfs).map(|(k, cf)| (k.to_string(), cf.bytes.clone())).collect()
+}
+
+/// The on-disk file name of generation `seq` (mirrors the chain's naming).
+fn gen_file(seq: u64) -> String {
+    format!("gen-{seq:08}.rfpk")
+}
+
+/// Every live key with its extracted (bit-exact) container bytes.
+fn snapshot(chain: &PackChain) -> BTreeMap<String, Vec<u8>> {
+    let keys: Vec<String> = chain.live_keys().map(String::from).collect();
+    keys.into_iter().map(|k| {
+        let bytes = chain.extract(&k).unwrap();
+        (k, bytes)
+    }).collect()
+}
+
+/// After a reopen, the directory must hold exactly the manifest plus the
+/// referenced generation files — no `.tmp`, no unreferenced `gen-*.rfpk`.
+fn assert_no_crash_leftovers(dir: &Path, chain: &PackChain) {
+    let referenced: Vec<String> = chain
+        .generations()
+        .iter()
+        .filter(|g| g.archive().is_some())
+        .map(|g| gen_file(g.seq))
+        .collect();
+    for entry in std::fs::read_dir(dir).unwrap().flatten() {
+        let name = entry.file_name().into_string().unwrap();
+        assert!(
+            name == "MANIFEST" || referenced.contains(&name),
+            "crash leftover {name:?} survived the reopen sweep"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. crash-injection matrix
+// ---------------------------------------------------------------------------
+
+/// Drive one mutation through one crash point and verify all-or-nothing
+/// recovery plus a clean retry.
+fn crash_case(op: &str, point: CrashPoint, cfs: &[CompressedForest]) {
+    let dir = temp_dir(&format!("crash-{op}-{}", point.name()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut chain = PackChain::create(&dir).unwrap();
+
+    // precondition state the op mutates
+    match op {
+        "first-append" => {}
+        "delta-append" | "remove" => {
+            chain.append_members(&members(&cfs[..2], &["a", "b"])).unwrap();
+        }
+        "compact" => {
+            chain.append_members(&members(&cfs[..2], &["a", "b"])).unwrap();
+            chain.append_members(&members(&cfs[2..4], &["c", "b"])).unwrap();
+            chain.remove_members(&["a".to_string()]).unwrap();
+        }
+        other => unreachable!("{other}"),
+    }
+    let old_state = snapshot(&chain);
+    let old_gens = chain.generation_count();
+
+    // what a *successful* op would leave live
+    let pair = |cf: &CompressedForest| -> Vec<u8> { cf.bytes.to_vec() };
+    let new_state: BTreeMap<String, Vec<u8>> = match op {
+        "first-append" => {
+            BTreeMap::from([("a".into(), pair(&cfs[0])), ("b".into(), pair(&cfs[1]))])
+        }
+        "delta-append" => BTreeMap::from([
+            ("a".into(), pair(&cfs[0])),
+            ("b".into(), pair(&cfs[3])), // the delta shadows the base's b
+            ("c".into(), pair(&cfs[2])),
+        ]),
+        "remove" => BTreeMap::from([("b".into(), pair(&cfs[1]))]),
+        "compact" => old_state.clone(), // compaction changes layout, never content
+        other => unreachable!("{other}"),
+    };
+    let new_gens = match op {
+        "first-append" | "compact" => 1,
+        "delta-append" | "remove" => 2,
+        other => unreachable!("{other}"),
+    };
+
+    // arm, mutate, and require the failure to be OUR injected crash —
+    // not a genuine bug on the same path
+    chain.crash().arm(point);
+    let err = match op {
+        "first-append" => chain.append_members(&members(&cfs[..2], &["a", "b"])).unwrap_err(),
+        "delta-append" => chain.append_members(&members(&cfs[2..4], &["c", "b"])).unwrap_err(),
+        "remove" => chain.remove_members(&["a".to_string()]).unwrap_err(),
+        "compact" => compact_chain(&mut chain, CompactMode::Merge).unwrap_err(),
+        other => unreachable!("{other}"),
+    };
+    let rendered = format!("{err:#}");
+    assert!(
+        rendered.contains(&format!("injected crash at {}", point.name())),
+        "{op} at {}: unexpected failure {rendered}",
+        point.name()
+    );
+
+    // recovery: reopen must land on exactly one of the two sets
+    let reopened = PackChain::open(&dir)
+        .unwrap_or_else(|e| panic!("{op} crashed at {}: reopen failed: {e:#}", point.name()));
+    let committed = matches!(point, CrashPoint::PostRename | CrashPoint::PostCleanup);
+    let recovered = snapshot(&reopened);
+    if committed {
+        assert_eq!(
+            recovered,
+            new_state,
+            "{op} at {}: the manifest rename landed, recovery must be the new set",
+            point.name()
+        );
+        assert_eq!(reopened.generation_count(), new_gens, "{op} at {}", point.name());
+        match op {
+            "remove" => assert_eq!(reopened.tombstone_count(), 1),
+            "compact" => assert_eq!(reopened.tombstone_count(), 0),
+            _ => {}
+        }
+    } else {
+        assert_eq!(
+            recovered,
+            old_state,
+            "{op} at {}: the commit point was not reached, recovery must be the old set",
+            point.name()
+        );
+        assert_eq!(reopened.generation_count(), old_gens, "{op} at {}", point.name());
+    }
+    assert_no_crash_leftovers(&dir, &reopened);
+
+    // the one-shot injector is spent: retrying the interrupted op on the
+    // recovered chain must succeed and land the new set
+    if !committed {
+        let mut retry = reopened;
+        match op {
+            "first-append" => {
+                retry.append_members(&members(&cfs[..2], &["a", "b"])).unwrap();
+            }
+            "delta-append" => {
+                retry.append_members(&members(&cfs[2..4], &["c", "b"])).unwrap();
+            }
+            "remove" => {
+                retry.remove_members(&["a".to_string()]).unwrap();
+            }
+            "compact" => {
+                compact_chain(&mut retry, CompactMode::Merge).unwrap();
+            }
+            other => unreachable!("{other}"),
+        }
+        assert_eq!(snapshot(&retry), new_state, "{op}: retry after {}", point.name());
+        assert_eq!(retry.generation_count(), new_gens);
+        assert_no_crash_leftovers(&dir, &retry);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crash_matrix_every_point_recovers_all_or_nothing() {
+    let cfs = cohort(4, 700);
+    for op in ["first-append", "delta-append", "remove", "compact"] {
+        for point in CrashPoint::ALL {
+            crash_case(op, point, &cfs);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. differential property
+// ---------------------------------------------------------------------------
+
+/// Candidate key space for the random schedules.
+const KEY_SPACE: usize = 10;
+
+/// Chain view == oracle view: same live keys, bit-identical extraction,
+/// and every absent key (tombstoned or never appended) stays invisible.
+fn check_against_oracle(
+    chain: &PackChain,
+    oracle: &BTreeMap<String, Arc<[u8]>>,
+) -> Result<(), String> {
+    let live: Vec<String> = chain.live_keys().map(String::from).collect();
+    let want: Vec<String> = oracle.keys().cloned().collect();
+    if live != want {
+        return Err(format!("live set {live:?} != oracle {want:?}"));
+    }
+    for (k, bytes) in oracle {
+        let got = chain.extract(k).map_err(|e| format!("extract {k:?}: {e:#}"))?;
+        if got[..] != bytes[..] {
+            return Err(format!("member {k:?} no longer bit-identical"));
+        }
+    }
+    for i in 0..KEY_SPACE {
+        let k = format!("user-{i}");
+        if !oracle.contains_key(&k) {
+            if chain.contains(&k) {
+                return Err(format!("absent key {k:?} reported live"));
+            }
+            if chain.extract(&k).is_ok() {
+                return Err(format!("absent key {k:?} extracted"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_generation_chain_reads_match_rebuilt_pack() {
+    // one container pool, trained once; schedules only shuffle membership
+    let pool: Vec<Arc<[u8]>> = cohort(6, 720).iter().map(|cf| cf.bytes.clone()).collect();
+    static CASE: AtomicU64 = AtomicU64::new(0);
+
+    forall_cases("chain reads == rebuilt pack", 24, &mut |g: &mut Gen| {
+        let dir = temp_dir(&format!("prop-{}", CASE.fetch_add(1, Ordering::Relaxed)));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut chain = PackChain::create(&dir).map_err(|e| format!("{e:#}"))?;
+        let mut oracle: BTreeMap<String, Arc<[u8]>> = BTreeMap::new();
+
+        let ops = g.usize_in(3, 8);
+        for _ in 0..ops {
+            match g.usize_in(0, 3) {
+                // append 1–3 members: fresh keys or replacements. Batches
+                // are sorted so a lone uncompacted base generation has the
+                // same member order a from-scratch rebuild would.
+                0 | 1 => {
+                    let n = g.usize_in(1, 3);
+                    let mut batch: Vec<(String, Arc<[u8]>)> = Vec::new();
+                    for _ in 0..n {
+                        let key = format!("user-{}", g.usize_in(0, KEY_SPACE - 1));
+                        if batch.iter().any(|(k, _)| *k == key) {
+                            continue; // pack keys are unique within a build
+                        }
+                        let bytes = pool[g.usize_in(0, pool.len() - 1)].clone();
+                        batch.push((key, bytes));
+                    }
+                    batch.sort_by(|a, b| a.0.cmp(&b.0));
+                    chain.append_members(&batch).map_err(|e| format!("{e:#}"))?;
+                    for (k, b) in batch {
+                        oracle.insert(k, b);
+                    }
+                }
+                // tombstone one live member, if any
+                2 => {
+                    if oracle.is_empty() {
+                        continue;
+                    }
+                    let keys: Vec<String> = oracle.keys().cloned().collect();
+                    let key = keys[g.usize_in(0, keys.len() - 1)].clone();
+                    chain.remove_members(&[key.clone()]).map_err(|e| format!("{e:#}"))?;
+                    oracle.remove(&key);
+                }
+                // merge-compact mid-schedule
+                _ => {
+                    compact_chain(&mut chain, CompactMode::Merge)
+                        .map_err(|e| format!("{e:#}"))?;
+                }
+            }
+            check_against_oracle(&chain, &oracle)?;
+        }
+
+        // final differential: a merge-compacted chain is BYTE-identical on
+        // disk to a from-scratch pack of the sorted final membership
+        compact_chain(&mut chain, CompactMode::Merge).map_err(|e| format!("{e:#}"))?;
+        if oracle.is_empty() {
+            if chain.generation_count() != 0 {
+                return Err("empty live set must compact to zero generations".into());
+            }
+        } else {
+            if chain.generation_count() != 1 {
+                return Err(format!(
+                    "compaction left {} generations",
+                    chain.generation_count()
+                ));
+            }
+            let mut builder = PackBuilder::new();
+            for (k, b) in &oracle {
+                builder.add(k, b.clone()).map_err(|e| format!("{e:#}"))?;
+            }
+            let (want, _) = builder.build().map_err(|e| format!("{e:#}"))?;
+            let seq = chain.generations()[0].seq;
+            let got = std::fs::read(dir.join(gen_file(seq))).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(
+                    "compacted chain differs byte-for-byte from the immutable rebuild".into()
+                );
+            }
+        }
+        // a cold reopen reproduces the identical view
+        let reopened = PackChain::open(&dir).map_err(|e| format!("{e:#}"))?;
+        check_against_oracle(&reopened, &oracle)?;
+        if chain.tombstone_count() != 0 {
+            return Err("compaction must clear every tombstone".into());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. corrupt chains answer typed errors
+// ---------------------------------------------------------------------------
+
+/// A healthy two-generation chain to corrupt: base {a, b} + delta {c}.
+fn build_template(dir: &Path, cfs: &[CompressedForest]) -> PackChain {
+    let _ = std::fs::remove_dir_all(dir);
+    let mut chain = PackChain::create(dir).unwrap();
+    chain.append_members(&members(&cfs[..2], &["a", "b"])).unwrap();
+    chain.append_members(&members(&cfs[2..3], &["c"])).unwrap();
+    chain
+}
+
+#[test]
+fn corrupt_chains_surface_typed_errors_not_panics() {
+    let cfs = cohort(3, 760);
+
+    // truncated delta pack: the archive parse fails with generation context
+    let dir = temp_dir("corrupt-trunc");
+    let chain = build_template(&dir, &cfs);
+    let victim = dir.join(gen_file(chain.generations()[1].seq));
+    drop(chain);
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+    let err = format!("{:#}", PackChain::open(&dir).unwrap_err());
+    assert!(err.contains("generation"), "truncated archive: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // missing generation file: named, typed, no panic
+    let dir = temp_dir("corrupt-missing");
+    let chain = build_template(&dir, &cfs);
+    let victim = dir.join(gen_file(chain.generations()[1].seq));
+    drop(chain);
+    std::fs::remove_file(&victim).unwrap();
+    let err = format!("{:#}", PackChain::open(&dir).unwrap_err());
+    assert!(err.contains("missing generation file"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // duplicate sequence numbers in a hand-corrupted manifest
+    let dir = temp_dir("corrupt-dupseq");
+    build_template(&dir, &cfs);
+    std::fs::write(
+        dir.join("MANIFEST"),
+        "RFPM 1\nnext 3\ngen 1 gen-00000001.rfpk\ngen 1 gen-00000001.rfpk\n",
+    )
+    .unwrap();
+    let err = format!("{:#}", PackChain::open(&dir).unwrap_err());
+    assert!(err.contains("duplicate generation sequence"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // a tombstone for a key no generation ever held
+    let dir = temp_dir("corrupt-ghost");
+    build_template(&dir, &cfs);
+    std::fs::write(
+        dir.join("MANIFEST"),
+        "RFPM 1\nnext 4\ngen 1 gen-00000001.rfpk\ngen 3 - ghost\n",
+    )
+    .unwrap();
+    let err = format!("{:#}", PackChain::open(&dir).unwrap_err());
+    assert!(err.contains("ghost") && err.contains("not live"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // no manifest at all (not a chain directory)
+    let dir = temp_dir("corrupt-nochain");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = format!("{:#}", PackChain::open(&dir).unwrap_err());
+    assert!(err.contains("reading chain manifest"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
